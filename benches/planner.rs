@@ -1,0 +1,83 @@
+//! Bench/ablation: the allocator itself.
+//!
+//! * Heuristic ablation (frontier-fwd / frontier-bwd / size-desc /
+//!   pair-frontier) × serialisation (eager/lazy) — which configuration
+//!   wins where, and what each costs. This backs the §IV claim that the
+//!   heap order is a heuristic with no optimality guarantee (Fig 9's
+//!   DenseNet anomaly appears here as heuristic-dependent peaks).
+//! * Planner throughput on the largest graphs (NasNet ~600 ops).
+//! * §II-A operation splitting and §II-C concat removal reports.
+
+use dmo::models;
+use dmo::planner::removal::{find_removals, removable_bytes};
+use dmo::planner::split::best_split;
+use dmo::planner::{allocate, analyse, serialise, OsTable, PlanOptions, HEURISTICS, STRATEGIES};
+use dmo::util::bench::{fmt_dur, time};
+use std::time::Instant;
+
+fn main() {
+    println!("=== Allocation heuristic ablation (DMO on) ===\n");
+    for name in [
+        "mobilenet_v1_1.0_224",
+        "mobilenet_v2_1.0_224",
+        "densenet_121",
+        "nasnet_mobile",
+    ] {
+        let g = models::build(name).unwrap();
+        let os = OsTable::build(&g, dmo::overlap::Method::Algorithmic);
+        println!("-- {name}");
+        for strat in STRATEGIES {
+            let ord = serialise(&g, strat);
+            let sc = analyse(&g, &ord);
+            for h in HEURISTICS {
+                let t0 = Instant::now();
+                let a = allocate(&g, &sc, &os, h);
+                let dt = t0.elapsed();
+                println!(
+                    "  {:6} + {:13} peak {:>8} KB   alloc {}",
+                    strat.name(),
+                    h.name(),
+                    a.peak / 1024,
+                    fmt_dur(dt)
+                );
+            }
+        }
+    }
+
+    println!("\n=== Planner throughput ===\n");
+    for name in ["tiny", "mobilenet_v1_1.0_224", "densenet_121", "nasnet_mobile"] {
+        let g = models::build(name).unwrap();
+        let m = time(
+            &format!("plan_graph dmo {name} ({} ops)", g.ops.len()),
+            3,
+            || {
+                std::hint::black_box(dmo::planner::plan_graph(&g, PlanOptions::dmo()));
+            },
+        );
+        dmo::util::bench::report(&m);
+    }
+
+    println!("\n=== §II-A operation splitting (memory ↔ compute trade) ===\n");
+    let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
+    for parts in [2usize, 4, 8] {
+        if let Some(r) = best_split(&g, parts) {
+            println!(
+                "best ≤{parts}-way split: {} KB → {} KB pair peak, {} elems recomputed",
+                r.peak_before / 1024,
+                r.peak_after / 1024,
+                r.recomputed_elems
+            );
+        }
+    }
+
+    println!("\n=== §II-C concat removal potential ===\n");
+    for name in ["densenet_121", "inception_v4", "nasnet_mobile"] {
+        let g = models::build(name).unwrap();
+        let plan = find_removals(&g);
+        println!(
+            "{name}: {} concats removable, {} KB of duplicate storage",
+            plan.removed.len(),
+            removable_bytes(&g, &plan) / 1024
+        );
+    }
+}

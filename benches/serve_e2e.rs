@@ -1,0 +1,96 @@
+//! Bench: end-to-end serving — the three-layer stack under load.
+//!
+//! Sweeps arrival rate and batch policy over the AOT'd tiny model,
+//! reporting throughput, latency percentiles and batch efficiency.
+//! Requires `make artifacts`.
+
+use dmo::coordinator::{serve, BatchPolicy, ServeConfig};
+use std::time::Duration;
+
+fn main() {
+    if !dmo::runtime::default_artifacts_dir()
+        .join("model.meta.json")
+        .exists()
+    {
+        eprintln!("artifacts missing — run `make artifacts` first; skipping serve bench");
+        return;
+    }
+
+    println!("=== serving rate sweep (batch ≤8, 2 ms window) ===\n");
+    println!(
+        "{:>9} {:>9} {:>6} {:>10} {:>9} {:>9} {:>9} {:>8} {:>6}",
+        "rate", "done", "shed", "thr(rps)", "p50(µs)", "p95(µs)", "p99(µs)", "batch", "eff"
+    );
+    for rate in [100.0, 300.0, 1000.0, 3000.0] {
+        let cfg = ServeConfig {
+            requests: 256,
+            rate,
+            queue_capacity: 128,
+            policy: BatchPolicy {
+                max_batch: 8,
+                window: Duration::from_millis(2),
+            },
+            seed: 11,
+            ..Default::default()
+        };
+        match serve(&cfg) {
+            Ok(r) => {
+                let l = r.metrics.latency();
+                println!(
+                    "{:>9.0} {:>9} {:>6} {:>10.1} {:>9.0} {:>9.0} {:>9.0} {:>8.2} {:>5.0}%",
+                    rate,
+                    r.completed,
+                    r.shed,
+                    r.throughput_rps,
+                    l.p50_us,
+                    l.p95_us,
+                    l.p99_us,
+                    r.metrics.mean_batch(),
+                    100.0 * r.metrics.batch_efficiency()
+                );
+            }
+            Err(e) => {
+                eprintln!("serve failed at rate {rate}: {e:#}");
+                return;
+            }
+        }
+    }
+
+    println!("\n=== batch policy sweep at 1000 req/s ===\n");
+    println!(
+        "{:>6} {:>10} {:>10} {:>9} {:>9} {:>8} {:>6}",
+        "batch", "window", "thr(rps)", "p50(µs)", "p99(µs)", "avg b", "eff"
+    );
+    for (max_batch, window_ms) in [(1usize, 0u64), (4, 1), (8, 2), (8, 8)] {
+        let cfg = ServeConfig {
+            requests: 256,
+            rate: 1000.0,
+            queue_capacity: 128,
+            policy: BatchPolicy {
+                max_batch,
+                window: Duration::from_millis(window_ms),
+            },
+            seed: 12,
+            ..Default::default()
+        };
+        match serve(&cfg) {
+            Ok(r) => {
+                let l = r.metrics.latency();
+                println!(
+                    "{:>6} {:>9}ms {:>10.1} {:>9.0} {:>9.0} {:>8.2} {:>5.0}%",
+                    max_batch,
+                    window_ms,
+                    r.throughput_rps,
+                    l.p50_us,
+                    l.p99_us,
+                    r.metrics.mean_batch(),
+                    100.0 * r.metrics.batch_efficiency()
+                );
+            }
+            Err(e) => {
+                eprintln!("serve failed: {e:#}");
+                return;
+            }
+        }
+    }
+}

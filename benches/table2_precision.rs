@@ -1,0 +1,63 @@
+//! Bench: paper Table II — precision of the analytic `O_s` method.
+//!
+//! Regenerates the table (exact algorithmic value vs analytic lower
+//! bound, error normalised both ways) and measures the cost of each
+//! method on the peak-defining op of each model — the motivation for the
+//! analytic method (§III-D: "without needing to loop through a large
+//! simulated tensor operation, potentially taking millions of
+//! iterations").
+
+use dmo::models;
+use dmo::overlap::{compute_os, Method};
+use dmo::planner::saving_row;
+use dmo::report::precision_row;
+use dmo::util::bench::{report, time};
+
+fn main() {
+    println!("=== Table II: estimation error of safe overlap (O_s) ===\n");
+    println!(
+        "{:28} {:>14} {:>14} {:>9} {:>12}",
+        "model", "exact O_s", "analytic O_s", "err/O_s", "err/peak"
+    );
+    for name in [
+        "mobilenet_v1_1.0_224",
+        "mobilenet_v2_1.0_224",
+        "inception_resnet_v2",
+    ] {
+        let g = models::build(name).unwrap();
+        let r = precision_row(&g);
+        let (_b, _d, row) = saving_row(&g);
+        println!(
+            "{:28} {:>14} {:>14} {:>8.2}% {:>11.2}%",
+            name,
+            r.exact,
+            r.estimate,
+            r.error_pct(),
+            r.error_vs_peak_pct(row.original)
+        );
+    }
+    println!("\npaper: 1204224 / 1193376 / 0.18% for the §III-E worked op;");
+    println!("       0% error rows are peak ops whose bound is tight.\n");
+
+    println!("=== Method cost on the Table-I op (112×112×96 dw s2) ===\n");
+    let x = dmo::ir::Shape::hwc(112, 112, 96);
+    let k = dmo::ir::OpKind::DepthwiseConv2D(dmo::ir::op::DepthwiseParams {
+        kernel: (3, 3),
+        stride: (2, 2),
+        dilation: (1, 1),
+        padding: dmo::ir::Padding::Same,
+        depth_multiplier: 1,
+        act: dmo::ir::Activation::None,
+    });
+    let out = dmo::ops::infer_output(&k, &[&x]).unwrap();
+    for (m, iters) in [
+        (Method::Analytic, 1000),
+        (Method::Algorithmic, 10),
+        (Method::BottomUp, 3),
+    ] {
+        let meas = time(&format!("O_s via {:12}", m.name()), iters, || {
+            std::hint::black_box(compute_os(m, &k, &[&x], &out, dmo::ir::DType::F32));
+        });
+        report(&meas);
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench: paper Table III — memory saving using diagonal optimisation on
+//! all eleven catalog models, side by side with the paper's numbers,
+//! plus end-to-end planning cost per model.
+
+use dmo::models;
+use dmo::planner::{plan_graph, PlanOptions};
+use dmo::report::paper_table3;
+use std::time::Instant;
+
+fn main() {
+    println!("=== Table III: memory saving using diagonal optimisation ===\n");
+    println!(
+        "{:30} {:>9} {:>9} {:>8} | {:>9} {:>9} {:>8} | {:>9}",
+        "model", "orig KB", "DMO KB", "saving", "paper", "paper", "paper", "plan time"
+    );
+    let mut total_orig = 0usize;
+    let mut total_opt = 0usize;
+    for (name, p_orig, p_opt) in paper_table3() {
+        let g = models::build(name).unwrap();
+        let t0 = Instant::now();
+        let base = plan_graph(&g, PlanOptions::baseline());
+        let opt = plan_graph(&g, PlanOptions::dmo());
+        let dt = t0.elapsed();
+        let orig = base.peak();
+        let o = opt.peak().min(orig);
+        let saving = 100.0 * (orig - o) as f64 / orig as f64;
+        let p_saving = if p_orig == p_opt {
+            "None".to_string()
+        } else {
+            format!("{:.1}%", 100.0 * (p_orig - p_opt) as f64 / p_orig as f64)
+        };
+        println!(
+            "{:30} {:>9} {:>9} {:>7.1}% | {:>9} {:>9} {:>8} | {:>8.2}s",
+            name,
+            orig / 1024,
+            o / 1024,
+            saving,
+            p_orig,
+            p_opt,
+            p_saving,
+            dt.as_secs_f64()
+        );
+        total_orig += orig;
+        total_opt += o;
+    }
+    println!(
+        "\ntotal: {} KB → {} KB ({:.1}% overall saving across the catalog)",
+        total_orig / 1024,
+        total_opt / 1024,
+        100.0 * (total_orig - total_opt) as f64 / total_orig as f64
+    );
+    println!("(MobileNet rows should match the paper exactly; the complex");
+    println!(" nets match in shape — see EXPERIMENTS.md §Deviations.)");
+}

@@ -1,0 +1,76 @@
+//! Memory-trace tour: regenerate the paper's instrumentation artefacts
+//! for one model — the Fig 1 allocation map, the Fig 2 access-pattern
+//! rasters (original vs DMO), and the Fig 3 per-op traces — then print a
+//! compact ASCII version of each.
+//!
+//! ```sh
+//! cargo run --release --example trace_model [model]
+//! ```
+
+use dmo::ir::op::{Activation, DepthwiseParams, OpKind, Padding, UnaryKind};
+use dmo::ir::{DType, Shape};
+use dmo::models;
+use dmo::planner::{plan_graph, PlanOptions};
+use dmo::report::fmt_bytes;
+use dmo::trace::render::{alloc_map_ascii, model_raster, op_raster};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "mobilenet_v1_0.25_128_int8".to_string());
+    let g = models::build(&name)?;
+
+    let base = plan_graph(&g, PlanOptions::baseline());
+    let opt = plan_graph(&g, PlanOptions::dmo());
+
+    println!("== Fig 1: heap allocation map ({name}) ==");
+    println!("{}", alloc_map_ascii(&g, &base, 96));
+
+    println!("== Fig 2a: access pattern, original layout ({}) ==", fmt_bytes(base.peak()));
+    let ra = model_raster(&g, &base, 7, 36, 96)?;
+    println!("{}", ra.to_ascii());
+
+    println!("== Fig 2b: access pattern, DMO layout ({}) ==", fmt_bytes(opt.peak()));
+    let rb = model_raster(&g, &opt, 7, 36, 96)?;
+    println!("{}", rb.to_ascii());
+
+    println!("== Fig 3a: relu (perfectly diagonal) ==");
+    let relu = op_raster(
+        &OpKind::Unary(UnaryKind::Relu),
+        &[&Shape::hwc(16, 16, 4)],
+        DType::F32,
+        24,
+        72,
+    )?;
+    println!("{}", relu.to_ascii());
+
+    println!("== Fig 3c: depthwise conv (diagonal with halo) ==");
+    let dw = op_raster(
+        &OpKind::DepthwiseConv2D(DepthwiseParams {
+            kernel: (3, 3),
+            stride: (1, 1),
+            dilation: (1, 1),
+            padding: Padding::Same,
+            depth_multiplier: 1,
+            act: Activation::None,
+        }),
+        &[&Shape::hwc(16, 16, 4)],
+        DType::F32,
+        24,
+        72,
+    )?;
+    println!("{}", dw.to_ascii());
+
+    println!("== Fig 3b: accumulating matmul (no overlap possible) ==");
+    let mm = op_raster(
+        &OpKind::MatMulAccum { out_features: 48 },
+        &[&Shape::new(&[1, 64])],
+        DType::F32,
+        24,
+        72,
+    )?;
+    println!("{}", mm.to_ascii());
+
+    println!("legend: L load, S store, U update, . untouched (time ↓, memory →)");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+"""AOT: lower the L2 model (with its L1 Pallas kernels) to HLO text.
+
+HLO *text* is the interchange format — NOT `lowered.compile()` output or
+serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction
+ids which the Rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids cleanly. See
+/opt/xla-example/README.md.
+
+Emits, per compiled batch size B:
+    artifacts/model_b{B}.hlo.txt
+plus a metadata sidecar the Rust runtime/planner reads:
+    artifacts/model.meta.json
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import CLASSES, RES, init_params, make_batched
+
+BATCH_SIZES = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple convention)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="primary artifact path; siblings are derived from it")
+    ap.add_argument("--batches", default=",".join(map(str, BATCH_SIZES)))
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",")]
+
+    params = init_params()
+    fn = make_batched(params, use_pallas=True)
+
+    for b in batches:
+        spec = jax.ShapeDtypeStruct((b, RES, RES, 3), jnp.float32)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"model_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # primary artifact = batch-1 copy at the requested path (Makefile stamp)
+    with open(os.path.join(out_dir, "model_b1.hlo.txt")) as f:
+        primary = f.read()
+    with open(args.out, "w") as f:
+        f.write(primary)
+
+    meta = {
+        "input_shape": [RES, RES, 3],
+        "output_features": CLASSES,
+        "batch_sizes": batches,
+        "model": "tiny",
+        "kernels": ["pallas dwconv2d (interpret)", "pallas pointwise_conv (interpret)"],
+    }
+    meta_path = os.path.join(out_dir, "model.meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: depthwise 2-D convolution.
+
+The paper's analytic `O_s` derivation (§III-D) is built on exactly this
+op's low-to-high sweep; the kernel keeps that *diagonal* schedule on TPU:
+the grid walks output rows in increasing order, each step consuming an
+input row-band (the window halo) and producing one output row. That
+HBM→VMEM block schedule is the TPU analogue of the MCU loop nest the
+paper instruments — reads lead writes by the halo, which is precisely
+what makes the buffers overlappable (DESIGN.md §Hardware-Adaptation).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so correctness runs through the interpreter and real-TPU
+performance is estimated from the block working set (EXPERIMENTS.md
+§Perf-L1).
+
+VMEM working set per grid step (f32):
+    input band  K_eff × Wp × C
+    weights     Kh × Kw × C
+    output row  OW × C
+e.g. the tiny serving model's 16×16×8 dw3x3 s1 step holds
+3×18×8 + 3×3×8 + 16×8 ≈ 2.7 KB — far under the ~16 MB VMEM budget, so
+rows could be aggregated into multi-row blocks on real hardware; the
+row-granular schedule is kept because it maximises the overlap window.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import out_dim
+
+
+def _pad_amounts(i: int, o: int, k: int, s: int):
+    """TFLite SAME padding split (Eqs 5/6 of the paper)."""
+    total = max(0, (o - 1) * s + k - i)
+    before = total // 2
+    return before, total - before
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def dwconv2d(x, w, stride=(1, 1), padding="SAME"):
+    """Depthwise conv via Pallas: x (H, W, C), w (Kh, Kw, C) → (OH, OW, C)."""
+    h, wd, c = x.shape
+    kh, kw, wc = w.shape
+    assert wc == c, f"filter channels {wc} != input channels {c}"
+    sh, sw = stride
+    oh = out_dim(h, kh, sh, padding)
+    ow = out_dim(wd, kw, sw, padding)
+
+    if padding == "SAME":
+        pt, pb = _pad_amounts(h, oh, kh, sh)
+        plf, prt = _pad_amounts(wd, ow, kw, sw)
+        xp = jnp.pad(x, ((pt, pb), (plf, prt), (0, 0)))
+    else:
+        xp = x
+    hp, wp, _ = xp.shape
+    # guarantee the last window fits (defensive for VALID + stride tails)
+    need_h = (oh - 1) * sh + kh
+    need_w = (ow - 1) * sw + kw
+    if need_h > hp or need_w > wp:
+        xp = jnp.pad(xp, ((0, max(0, need_h - hp)), (0, max(0, need_w - wp)), (0, 0)))
+        hp, wp, _ = xp.shape
+
+    def kernel(x_ref, w_ref, o_ref):
+        oy = pl.program_id(0)
+        acc = jnp.zeros((ow, c), dtype=x_ref.dtype)
+        for ky in range(kh):  # static unroll over the filter window
+            # one padded input row: (wp, c)
+            row = x_ref[pl.ds(oy * sh + ky, 1), :, :][0]
+            for kx in range(kw):
+                # strided column gather for every output x at once
+                cols = jax.lax.slice(row, (kx, 0), (kx + (ow - 1) * sw + 1, c), (sw, 1))
+                acc = acc + cols * w_ref[ky, kx]
+        o_ref[pl.ds(oy, 1), :, :] = acc[None]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), x.dtype),
+        grid=(oh,),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, w)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: straightforward, obviously-right
+implementations (lax convolutions / einsums) that the Pallas kernels are
+checked against element-wise in `python/tests/test_kernel.py`.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def out_dim(i: int, k: int, s: int, padding: str) -> int:
+    """TFLite/XLA output size for one spatial axis."""
+    if padding == "SAME":
+        return -(-i // s)
+    return -(-(i - k + 1) // s)
+
+
+def dwconv2d_ref(x, w, stride=(1, 1), padding="SAME"):
+    """Depthwise 2-D convolution oracle.
+
+    x: (H, W, C) input; w: (Kh, Kw, C) per-channel filters.
+    Returns (OH, OW, C).
+    """
+    xb = x[None, ...]  # NHWC batch 1
+    # lax expects HWIO with feature_group_count = C: (Kh, Kw, 1, C)
+    wf = w[:, :, None, :]
+    out = lax.conv_general_dilated(
+        xb,
+        wf,
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out[0]
+
+
+def pointwise_conv_ref(x, w, b=None):
+    """1x1 convolution oracle: x (H, W, Cin) @ w (Cin, Cout)."""
+    out = jnp.einsum("hwi,io->hwo", x, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv2d_ref(x, w, stride=(1, 1), padding="SAME", b=None):
+    """Standard 2-D convolution oracle: x (H, W, Cin), w (Kh, Kw, Cin, Cout)."""
+    out = lax.conv_general_dilated(
+        x[None, ...],
+        w,
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if b is not None:
+        out = out + b
+    return out
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)

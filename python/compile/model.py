@@ -1,0 +1,87 @@
+"""L2: the tiny serving model, in JAX, calling the L1 Pallas kernels.
+
+Architecture mirrors `rust/src/models/tiny.rs` exactly (the Rust planner
+plans the on-device arena from that definition):
+
+    input 32×32×3
+    conv 3×3 s2 → 8   (relu6)          — lax conv (first layer, 3 ch)
+    dwconv 3×3 s1     (relu6, Pallas)
+    pointwise → 16    (relu6, Pallas)
+    dwconv 3×3 s2     (relu6, Pallas)
+    pointwise → 32    (relu6, Pallas)
+    global avg pool → fc 10 → softmax
+
+Weights are deterministic (PRNGKey(0)) and baked into the traced graph as
+constants, so the AOT artifacts are self-contained — the Rust side feeds
+activations only.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dwconv import dwconv2d
+from .kernels.pointwise import pointwise_conv
+from .kernels.ref import conv2d_ref, relu6
+
+RES = 32
+CLASSES = 10
+
+
+def init_params(key=None):
+    """Deterministic parameters for every layer."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 12)
+    scale = 0.3
+
+    def mk(k, shape):
+        return scale * jax.random.normal(k, shape, dtype=jnp.float32)
+
+    return {
+        "conv1_w": mk(ks[0], (3, 3, 3, 8)),
+        "conv1_b": mk(ks[1], (8,)),
+        "dw1_w": mk(ks[2], (3, 3, 8)),
+        "pw1_w": mk(ks[3], (8, 16)),
+        "pw1_b": mk(ks[4], (16,)),
+        "dw2_w": mk(ks[5], (3, 3, 16)),
+        "pw2_w": mk(ks[6], (16, 32)),
+        "pw2_b": mk(ks[7], (32,)),
+        "fc_w": mk(ks[8], (32, CLASSES)),
+        "fc_b": mk(ks[9], (CLASSES,)),
+    }
+
+
+def forward_one(params, x, use_pallas=True):
+    """Single-example forward pass: x (32, 32, 3) → (CLASSES,) probs."""
+    dw = dwconv2d if use_pallas else _dw_ref
+    pw = pointwise_conv if use_pallas else _pw_ref
+
+    h = relu6(conv2d_ref(x, params["conv1_w"], stride=(2, 2), b=params["conv1_b"]))
+    h = relu6(dw(h, params["dw1_w"], stride=(1, 1)))
+    h = relu6(pw(h, params["pw1_w"], params["pw1_b"]))
+    h = relu6(dw(h, params["dw2_w"], stride=(2, 2)))
+    h = relu6(pw(h, params["pw2_w"], params["pw2_b"]))
+    h = jnp.mean(h, axis=(0, 1))  # global average pool → (32,)
+    logits = h @ params["fc_w"] + params["fc_b"]
+    return jax.nn.softmax(logits)
+
+
+def _dw_ref(x, w, stride=(1, 1)):
+    from .kernels.ref import dwconv2d_ref
+
+    return dwconv2d_ref(x, w, stride=stride)
+
+
+def _pw_ref(x, w, b=None):
+    from .kernels.ref import pointwise_conv_ref
+
+    return pointwise_conv_ref(x, w, b)
+
+
+def make_batched(params, use_pallas=True):
+    """Batched forward: (B, 32, 32, 3) → (B, CLASSES). Returns a 1-tuple,
+    matching the HLO interchange convention (return_tuple=True)."""
+
+    def fn(xb):
+        return (jax.vmap(lambda x: forward_one(params, x, use_pallas))(xb),)
+
+    return fn

@@ -1,0 +1,54 @@
+"""AOT path: HLO-text lowering sanity (format, determinism, metadata)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import to_hlo_text
+from compile.model import RES, init_params, make_batched
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _lower(batch):
+    params = init_params()
+    fn = make_batched(params)
+    spec = jax.ShapeDtypeStruct((batch, RES, RES, 3), jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def test_hlo_text_wellformed():
+    text = to_hlo_text(_lower(1))
+    assert "ENTRY" in text, "must be parseable HLO text"
+    assert "f32[1,32,32,3]" in text, "entry parameter shape"
+    assert "f32[1,10]" in text, "output shape"
+
+
+def test_hlo_text_deterministic():
+    a = to_hlo_text(_lower(2))
+    b = to_hlo_text(_lower(2))
+    assert a == b
+
+
+def test_aot_writes_artifacts(tmp_path):
+    out = tmp_path / "model.hlo.txt"
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--batches", "1,2"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert out.exists()
+    meta = json.loads((tmp_path / "model.meta.json").read_text())
+    assert meta["input_shape"] == [RES, RES, 3]
+    assert meta["batch_sizes"] == [1, 2]
+    for b in (1, 2):
+        assert (tmp_path / f"model_b{b}.hlo.txt").exists()

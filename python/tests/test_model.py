@@ -1,0 +1,61 @@
+"""L2 correctness: the tiny model with Pallas kernels vs the pure-jnp
+reference path, plus the batching semantics the serving layer relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import CLASSES, RES, forward_one, init_params, make_batched
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _x(seed, batch=None):
+    shape = (batch, RES, RES, 3) if batch else (RES, RES, 3)
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+def test_forward_shape_and_softmax():
+    params = init_params()
+    probs = forward_one(params, _x(0))
+    assert probs.shape == (CLASSES,)
+    np.testing.assert_allclose(float(probs.sum()), 1.0, rtol=1e-5)
+    assert (np.asarray(probs) >= 0).all()
+
+
+def test_pallas_path_matches_reference_path():
+    params = init_params()
+    x = _x(1)
+    got = forward_one(params, x, use_pallas=True)
+    want = forward_one(params, x, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_batched_rows_match_single():
+    params = init_params()
+    fn = make_batched(params)
+    xb = _x(2, batch=4)
+    (out,) = fn(xb)
+    assert out.shape == (4, CLASSES)
+    for i in range(4):
+        single = forward_one(params, xb[i])
+        np.testing.assert_allclose(out[i], single, rtol=1e-5, atol=1e-6)
+
+
+def test_padding_lanes_are_independent():
+    """Zero-padded batch lanes must not change real lanes' results —
+    the batcher pads every batch to a compiled variant size."""
+    params = init_params()
+    fn = make_batched(params)
+    x1 = _x(3, batch=1)
+    (single,) = fn(x1)
+    padded = jnp.concatenate([x1, jnp.zeros((3, RES, RES, 3))], axis=0)
+    (out,) = fn(padded)
+    np.testing.assert_allclose(out[0], single[0], rtol=1e-5, atol=1e-6)
+
+
+def test_params_deterministic():
+    a = init_params()
+    b = init_params()
+    for k in a:
+        assert (np.asarray(a[k]) == np.asarray(b[k])).all(), k

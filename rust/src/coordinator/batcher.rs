@@ -1,0 +1,117 @@
+//! Dynamic batching policy: group queued requests into the batch sizes
+//! the AOT artifacts were compiled for.
+
+use super::queue::BoundedQueue;
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest compiled batch variant.
+    pub max_batch: usize,
+    /// How long to hold the first request while waiting for companions.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Pulls batches off a queue according to a [`BatchPolicy`].
+pub struct Batcher {
+    pub policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy }
+    }
+
+    /// Block for the first request, then gather up to `max_batch` within
+    /// the window. `None` when the queue is closed and drained.
+    pub fn next_batch<T>(&self, queue: &BoundedQueue<T>) -> Option<Vec<T>> {
+        let first = queue.pop()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.window;
+        while batch.len() < self.policy.max_batch {
+            match queue.pop_until(deadline) {
+                Some(x) => batch.push(x),
+                None => break,
+            }
+        }
+        Some(batch)
+    }
+
+    /// Round `n` up to the smallest compiled variant in `sizes`
+    /// (ascending); the tail is padding.
+    pub fn padded_size(n: usize, sizes: &[usize]) -> usize {
+        sizes
+            .iter()
+            .copied()
+            .find(|&s| s >= n)
+            .unwrap_or_else(|| *sizes.last().expect("no batch sizes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn gathers_up_to_max() {
+        let q = Arc::new(BoundedQueue::new(16));
+        for i in 0..5 {
+            q.push(i);
+        }
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            window: Duration::from_millis(5),
+        });
+        let batch = b.next_batch(&q).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = b.next_batch(&q).unwrap();
+        assert_eq!(batch, vec![4]);
+    }
+
+    #[test]
+    fn window_collects_latecomers() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.push(0u32);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            q2.push(1);
+        });
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            window: Duration::from_millis(50),
+        });
+        let batch = b.next_batch(&q).unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2, "latecomer inside window joins the batch");
+    }
+
+    #[test]
+    fn padding_rounds_up() {
+        let sizes = [1, 2, 4, 8];
+        assert_eq!(Batcher::padded_size(1, &sizes), 1);
+        assert_eq!(Batcher::padded_size(3, &sizes), 4);
+        assert_eq!(Batcher::padded_size(8, &sizes), 8);
+        assert_eq!(Batcher::padded_size(9, &sizes), 8); // clamped to largest
+    }
+
+    #[test]
+    fn closed_queue_ends_batching() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        q.close();
+        let b = Batcher::new(BatchPolicy::default());
+        assert!(b.next_batch(&q).is_none());
+    }
+}

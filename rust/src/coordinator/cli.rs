@@ -1,0 +1,54 @@
+//! `dmo serve` — CLI front-end for the serving loop.
+
+use super::server::{serve, ServeConfig};
+use super::BatchPolicy;
+use anyhow::Result;
+use std::time::Duration;
+
+fn opt<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> T {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Entry point used by `main.rs`.
+pub fn serve_main(args: &[String]) -> Result<()> {
+    let cfg = ServeConfig {
+        requests: opt(args, "--requests", 256u64),
+        rate: opt(args, "--rate", 500.0f64),
+        queue_capacity: opt(args, "--queue", 64usize),
+        policy: BatchPolicy {
+            max_batch: opt(args, "--batch", 8usize),
+            window: Duration::from_micros(opt(args, "--window-us", 2000u64)),
+        },
+        seed: opt(args, "--seed", 42u64),
+        ..Default::default()
+    };
+    println!(
+        "serving {} requests at {} req/s (queue {}, batch ≤{}, window {:?})",
+        cfg.requests, cfg.rate, cfg.queue_capacity, cfg.policy.max_batch, cfg.policy.window
+    );
+    let report = serve(&cfg)?;
+    let l = report.metrics.latency();
+    println!("platform        : {}", report.platform);
+    println!("completed       : {} ({} shed)", report.completed, report.shed);
+    println!("wall time       : {:.3} s", report.wall.as_secs_f64());
+    println!("throughput      : {:.1} req/s", report.throughput_rps);
+    println!(
+        "latency         : mean {:.0} µs  p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}",
+        l.mean_us, l.p50_us, l.p95_us, l.p99_us, l.max_us
+    );
+    println!(
+        "batching        : mean {:.2} req/batch, lane efficiency {:.0}%",
+        report.metrics.mean_batch(),
+        100.0 * report.metrics.batch_efficiency()
+    );
+    println!(
+        "on-device arena : {} original → {} with DMO",
+        crate::report::fmt_bytes(report.arena_original),
+        crate::report::fmt_bytes(report.arena_dmo)
+    );
+    Ok(())
+}

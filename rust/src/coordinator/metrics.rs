@@ -1,0 +1,117 @@
+//! Serving metrics: latency distribution, throughput, batch efficiency.
+
+use std::time::Duration;
+
+/// Latency percentiles over a completed run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl LatencyStats {
+    /// Compute from raw samples (any order).
+    pub fn from_samples(samples: &[Duration]) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats {
+                count: 0,
+                mean_us: 0.0,
+                p50_us: 0.0,
+                p95_us: 0.0,
+                p99_us: 0.0,
+                max_us: 0.0,
+            };
+        }
+        let mut us: Vec<f64> = samples.iter().map(|d| d.as_secs_f64() * 1e6).collect();
+        us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((us.len() as f64 - 1.0) * p).round() as usize;
+            us[idx]
+        };
+        LatencyStats {
+            count: us.len(),
+            mean_us: us.iter().sum::<f64>() / us.len() as f64,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            max_us: *us.last().unwrap(),
+        }
+    }
+}
+
+/// Accumulated run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub latencies: Vec<Duration>,
+    pub batches: Vec<usize>,
+    pub padded: Vec<usize>,
+    pub shed: usize,
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency: Duration) {
+        self.latencies.push(latency);
+    }
+
+    pub fn record_batch(&mut self, actual: usize, padded: usize) {
+        self.batches.push(actual);
+        self.padded.push(padded);
+    }
+
+    pub fn latency(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.latencies)
+    }
+
+    /// Mean requests per executed batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches.is_empty() {
+            return 0.0;
+        }
+        self.batches.iter().sum::<usize>() as f64 / self.batches.len() as f64
+    }
+
+    /// Fraction of executed lanes that carried real requests.
+    pub fn batch_efficiency(&self) -> f64 {
+        let real: usize = self.batches.iter().sum();
+        let lanes: usize = self.padded.iter().sum();
+        if lanes == 0 {
+            return 1.0;
+        }
+        real as f64 / lanes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = LatencyStats::from_samples(&samples);
+        assert_eq!(s.count, 100);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+        assert!((s.mean_us - 50.5).abs() < 0.6);
+        assert_eq!(s.max_us, 100.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = LatencyStats::from_samples(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.max_us, 0.0);
+    }
+
+    #[test]
+    fn batch_efficiency() {
+        let mut m = Metrics::default();
+        m.record_batch(3, 4);
+        m.record_batch(4, 4);
+        assert!((m.batch_efficiency() - 7.0 / 8.0).abs() < 1e-9);
+        assert!((m.mean_batch() - 3.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 serving coordinator.
+//!
+//! The paper's system contribution is the memory *planner*; serving it on
+//! a real runtime needs the surrounding coordination: a bounded request
+//! queue with backpressure, a dynamic batcher that groups requests into
+//! the AOT-compiled batch variants, a worker owning the PJRT engine, and
+//! latency/throughput metrics. Rust owns the event loop and process
+//! topology; Python exists only in the compile path.
+//!
+//! Threading: `std::thread` + `Mutex`/`Condvar` (the vendored dependency
+//! set has no tokio; the queue provides the same bounded-channel
+//! semantics — see DESIGN.md §Substitutions).
+
+pub mod batcher;
+pub mod cli;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+pub mod workload;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{LatencyStats, Metrics};
+pub use queue::BoundedQueue;
+pub use server::{serve, Reply, Request, ServeConfig, ServeReport};
+pub use workload::Workload;

@@ -1,0 +1,186 @@
+//! The serving loop: workload → bounded queue → dynamic batcher → PJRT
+//! worker → replies, with end-to-end latency accounting.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+use super::workload::Workload;
+use crate::runtime::Engine;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// An in-flight inference request.
+pub struct Request {
+    pub id: u64,
+    pub data: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Reply>,
+}
+
+/// A completed inference.
+pub struct Reply {
+    pub id: u64,
+    pub probs: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts: PathBuf,
+    pub requests: u64,
+    /// open-loop arrival rate, req/s
+    pub rate: f64,
+    pub queue_capacity: usize,
+    pub policy: BatchPolicy,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts: crate::runtime::default_artifacts_dir(),
+            requests: 256,
+            rate: 500.0,
+            queue_capacity: 64,
+            policy: BatchPolicy::default(),
+            seed: 42,
+        }
+    }
+}
+
+/// Run summary.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub shed: usize,
+    pub wall: Duration,
+    pub throughput_rps: f64,
+    pub metrics: Metrics,
+    pub platform: String,
+    /// DMO-planned on-device arena of the served model, for the report
+    pub arena_original: usize,
+    pub arena_dmo: usize,
+}
+
+/// Run the full loop: a producer thread emits a Poisson stream of
+/// `cfg.requests` requests, a worker thread owns the PJRT engine (it is
+/// not `Send`; it never leaves its thread) and executes padded batches.
+pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    let queue: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+
+    // --- worker: owns Engine, batches, executes ----------------------
+    let wq = queue.clone();
+    let policy = cfg.policy;
+    let artifacts = cfg.artifacts.clone();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+    let worker = thread::Builder::new()
+        .name("dmo-worker".into())
+        .spawn(move || -> Result<(Metrics, String)> {
+            let engine = match Engine::load(&artifacts).context("loading AOT artifacts") {
+                Ok(e) => {
+                    // warm every variant so steady-state latency is measured
+                    let per = e.meta.elements_per_request();
+                    for v in &e.variants {
+                        let _ = e.run(v, &vec![0.0; v.batch * per]);
+                    }
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(err) => {
+                    let _ = ready_tx.send(Err(format!("{err:#}")));
+                    return Err(err);
+                }
+            };
+            let platform = engine.platform();
+            let per = engine.meta.elements_per_request();
+            let sizes = engine.meta.batch_sizes.clone();
+            let batcher = Batcher::new(policy);
+            let mut metrics = Metrics::default();
+            while let Some(batch) = batcher.next_batch(&wq) {
+                let padded = Batcher::padded_size(batch.len(), &sizes);
+                let variant = engine.variant_for(batch.len());
+                let mut flat = vec![0.0f32; padded * per];
+                for (i, r) in batch.iter().enumerate() {
+                    flat[i * per..(i + 1) * per].copy_from_slice(&r.data);
+                }
+                let out = engine.run(variant, &flat)?;
+                let done = Instant::now();
+                let of = engine.meta.output_features;
+                metrics.record_batch(batch.len(), padded);
+                for (i, r) in batch.into_iter().enumerate() {
+                    let latency = done.duration_since(r.enqueued);
+                    metrics.record(latency);
+                    let _ = r.reply.send(Reply {
+                        id: r.id,
+                        probs: out[i * of..(i + 1) * of].to_vec(),
+                        latency,
+                    });
+                }
+            }
+            Ok((metrics, platform))
+        })?;
+
+    // --- producer: open-loop Poisson arrivals ------------------------
+    // wait for the engine to compile + warm up before opening the tap
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("worker died before ready"))?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let meta = crate::runtime::ArtifactMeta::load(&cfg.artifacts.join("model.meta.json"))?;
+    let mut workload = Workload::new(cfg.seed, cfg.rate, meta.elements_per_request());
+    let t0 = Instant::now();
+    let mut shed = 0usize;
+    for id in 0..cfg.requests {
+        thread::sleep(workload.next_gap());
+        let req = Request {
+            id,
+            data: workload.payload(id),
+            enqueued: Instant::now(),
+            reply: reply_tx.clone(),
+        };
+        // shed load instead of blocking forever if the queue is saturated
+        if queue.try_push(req).is_err() {
+            shed += 1;
+        }
+    }
+    queue.close();
+    drop(reply_tx);
+
+    // --- collect ------------------------------------------------------
+    let mut completed = 0usize;
+    let mut checksum = 0.0f64;
+    for reply in reply_rx.iter() {
+        completed += 1;
+        checksum += reply.probs.iter().map(|p| *p as f64).sum::<f64>();
+    }
+    let (metrics, platform) = worker.join().expect("worker panicked")?;
+    let wall = t0.elapsed();
+
+    // sanity: softmax outputs sum to ~1 per request
+    let expect = completed as f64;
+    anyhow::ensure!(
+        (checksum - expect).abs() < expect * 0.01 + 1.0,
+        "output checksum {checksum} far from {expect} — model output is not a distribution"
+    );
+
+    // the on-device arena story for the served model (report context)
+    let g = crate::models::build("tiny")?;
+    let (_b, _d, row) = crate::planner::saving_row(&g);
+
+    Ok(ServeReport {
+        completed,
+        shed,
+        wall,
+        throughput_rps: completed as f64 / wall.as_secs_f64(),
+        metrics,
+        platform,
+        arena_original: row.original,
+        arena_dmo: row.optimised,
+    })
+}

@@ -1,0 +1,168 @@
+//! Arena interpreter: execute a planned graph *in its planned layout*,
+//! overlapped buffers and all.
+//!
+//! This is the proof-of-safety layer: a DMO plan claims that clobbering
+//! an op's input while writing its output never destroys a value that is
+//! still needed. [`validate_plan`] executes the model twice — once with
+//! every buffer disjoint (reference) and once inside the planned arena —
+//! and demands bit-identical outputs. TFMin performed the same check by
+//! generating C with fixed pre-allocated offsets (§I); here it is a
+//! library call used by the test suite on every model.
+
+use crate::ir::graph::{Graph, TensorId};
+use crate::ops::exec::{execute_op, gen_weights, Arena, OpIo, Region};
+use crate::planner::Plan;
+use anyhow::{ensure, Context, Result};
+
+/// Deterministic synthetic input for a tensor.
+pub fn gen_input(graph: &Graph, t: TensorId, seed: u64) -> Vec<f32> {
+    let info = graph.tensor(t);
+    let mut rng = crate::util::rng::Rng::new(seed ^ ((t.0 as u64) << 32) ^ 0x1A9F_0007);
+    (0..info.shape.num_elements())
+        .map(|_| (rng.range(0, 8) as f32) - 4.0)
+        .collect()
+}
+
+/// Execute `graph` in `plan`'s layout on `plan.order`. Returns the model
+/// outputs (as f32, whatever the dtype).
+pub fn run_plan(graph: &Graph, plan: &Plan, inputs: &[Vec<f32>], seed: u64) -> Result<Vec<Vec<f32>>> {
+    let regions: Vec<Option<Region>> = (0..graph.tensors.len())
+        .map(|t| {
+            plan.alloc.offsets[t]
+                .map(|off| Region::new(off, graph.tensor(TensorId(t)).size_bytes()))
+        })
+        .collect();
+    run_with_regions(graph, &plan.order.0, &regions, plan.peak(), inputs, seed)
+}
+
+/// Execute with every live tensor in its own disjoint buffer (reference).
+pub fn run_reference(graph: &Graph, inputs: &[Vec<f32>], seed: u64) -> Result<Vec<Vec<f32>>> {
+    let order: Vec<crate::ir::graph::OpId> =
+        crate::planner::serialise(graph, crate::planner::Strategy::Eager).0;
+    let mut base = 0usize;
+    let regions: Vec<Option<Region>> = (0..graph.tensors.len())
+        .map(|t| {
+            let r = Region::new(base, graph.tensor(TensorId(t)).size_bytes());
+            base += r.len;
+            Some(r)
+        })
+        .collect();
+    run_with_regions(graph, &order, &regions, base, inputs, seed)
+}
+
+fn run_with_regions(
+    graph: &Graph,
+    order: &[crate::ir::graph::OpId],
+    regions: &[Option<Region>],
+    arena_size: usize,
+    inputs: &[Vec<f32>],
+    seed: u64,
+) -> Result<Vec<Vec<f32>>> {
+    ensure!(inputs.len() == graph.inputs.len(), "wrong input count");
+    let mut arena = Arena::new(arena_size);
+    for (&t, data) in graph.inputs.iter().zip(inputs) {
+        let info = graph.tensor(t);
+        ensure!(
+            data.len() == info.shape.num_elements(),
+            "input {} wrong length",
+            info.name
+        );
+        let r = regions[t.0].context("input tensor unplaced")?;
+        arena.write_tensor(info.dtype, r, data);
+    }
+    for &opid in order {
+        let op = graph.op(opid);
+        let in_shapes: Vec<&crate::ir::Shape> =
+            op.inputs.iter().map(|&t| &graph.tensor(t).shape).collect();
+        let in_regions: Vec<Region> = op
+            .inputs
+            .iter()
+            .map(|&t| regions[t.0].context("op input unplaced"))
+            .collect::<Result<_>>()?;
+        let out_region = regions[op.output.0].context("op output unplaced")?;
+        let weights = gen_weights(op, seed ^ opid.0 as u64);
+        let io = OpIo {
+            in_shapes: &in_shapes,
+            in_regions: &in_regions,
+            out_shape: &graph.tensor(op.output).shape,
+            out_region,
+            dtype: graph.tensor(op.output).dtype,
+            weights: &weights,
+        };
+        execute_op(&op.kind, &io, &mut arena)
+            .with_context(|| format!("executing {}", op.name))?;
+    }
+    Ok(graph
+        .outputs
+        .iter()
+        .map(|&t| {
+            let info = graph.tensor(t);
+            arena.read_tensor(info.dtype, regions[t.0].unwrap(), info.shape.num_elements())
+        })
+        .collect())
+}
+
+/// Execute `graph` under `plan` and under the disjoint reference layout
+/// with identical inputs/weights; fail unless outputs are bit-identical.
+pub fn validate_plan(graph: &Graph, plan: &Plan, seed: u64) -> Result<()> {
+    let inputs: Vec<Vec<f32>> = graph
+        .inputs
+        .iter()
+        .map(|&t| gen_input(graph, t, seed))
+        .collect();
+    let got = run_plan(graph, plan, &inputs, seed)?;
+    let want = run_reference(graph, &inputs, seed)?;
+    ensure!(got.len() == want.len());
+    for (o, (g, w)) in got.iter().zip(&want).enumerate() {
+        ensure!(g.len() == w.len(), "output {o} length mismatch");
+        for (i, (a, b)) in g.iter().zip(w).enumerate() {
+            ensure!(
+                a.to_bits() == b.to_bits(),
+                "output {o}[{i}]: planned {a} != reference {b} — overlap clobbered a live value"
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+    use crate::models;
+    use crate::planner::{plan_graph, PlanOptions};
+
+    #[test]
+    fn tiny_model_dmo_plan_is_safe_f32() {
+        let g = models::build("tiny").unwrap();
+        let plan = plan_graph(&g, PlanOptions::dmo());
+        assert!(!plan.alloc.applied.is_empty(), "expect overlaps on tiny");
+        validate_plan(&g, &plan, 42).unwrap();
+    }
+
+    #[test]
+    fn tiny_model_dmo_plan_is_safe_i8() {
+        let g = models::tiny::build(DType::I8);
+        let plan = plan_graph(&g, PlanOptions::dmo());
+        validate_plan(&g, &plan, 7).unwrap();
+    }
+
+    #[test]
+    fn baseline_plan_is_safe() {
+        let g = models::build("tiny").unwrap();
+        let plan = plan_graph(&g, PlanOptions::baseline());
+        validate_plan(&g, &plan, 3).unwrap();
+    }
+
+    #[test]
+    fn corrupted_plan_is_caught() {
+        // force an illegal overlap: shift a mid-graph tensor onto a live one
+        let g = models::build("tiny").unwrap();
+        let mut plan = plan_graph(&g, PlanOptions::dmo());
+        // tensor 1 = conv1 out; slam it onto tensor 2's offset
+        let o2 = plan.alloc.offsets[2];
+        plan.alloc.offsets[1] = o2;
+        let r = validate_plan(&g, &plan, 42);
+        assert!(r.is_err(), "clobbering layout must be detected");
+    }
+}

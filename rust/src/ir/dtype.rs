@@ -1,0 +1,75 @@
+//! Element data types.
+//!
+//! The paper evaluates both float32 models and 8-bit quantised variants
+//! (Table III); the only property the planner needs is the element size,
+//! while the interpreter needs real arithmetic for both.
+
+use std::fmt;
+
+/// Tensor element type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// IEEE-754 single precision.
+    F32,
+    /// 8-bit signed quantised (TFLite-style, symmetric per-tensor scale).
+    I8,
+    /// 32-bit signed integer (bias / accumulator tensors).
+    I32,
+}
+
+impl DType {
+    /// Size of one element in bytes — the paper's `T_s`.
+    #[inline]
+    pub const fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::I8 => 1,
+            DType::I32 => 4,
+        }
+    }
+
+    /// Short lowercase name used in reports and JSON sidecars.
+    pub const fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+            DType::I32 => "i32",
+        }
+    }
+
+    /// Parse from the name produced by [`DType::name`].
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" | "float32" => Some(DType::F32),
+            "i8" | "int8" => Some(DType::I8),
+            "i32" | "int32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::I8.size_bytes(), 1);
+        assert_eq!(DType::I32.size_bytes(), 4);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in [DType::F32, DType::I8, DType::I32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("f16"), None);
+    }
+}

@@ -1,0 +1,426 @@
+//! Tensor-op graph and builder.
+
+use super::dtype::DType;
+use super::op::{Activation, Conv2DParams, DepthwiseParams, OpKind, Padding, PoolKind, PoolParams};
+use super::shape::Shape;
+use crate::ops::infer_output;
+
+/// Index of a tensor in [`Graph::tensors`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub usize);
+
+/// Index of an op in [`Graph::ops`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub usize);
+
+/// Whether a tensor lives in the tensor arena and how it is produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Model input — materialised in the arena before the first op runs.
+    Input,
+    /// Produced and consumed inside the graph; lives in the arena.
+    Intermediate,
+    /// Graph output; lives in the arena until inference completes.
+    Output,
+}
+
+/// Static description of one tensor.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub kind: TensorKind,
+}
+
+impl TensorInfo {
+    /// Buffer size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.shape.num_elements() * self.dtype.size_bytes()
+    }
+}
+
+/// Weight / bias attribute of an op (stored in flash, not the arena).
+#[derive(Debug, Clone)]
+pub struct WeightInfo {
+    pub shape: Shape,
+    pub dtype: DType,
+}
+
+impl WeightInfo {
+    pub fn size_bytes(&self) -> usize {
+        self.shape.num_elements() * self.dtype.size_bytes()
+    }
+}
+
+/// One operation node.
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub name: String,
+    pub kind: OpKind,
+    /// Activation inputs, in op-defined order.
+    pub inputs: Vec<TensorId>,
+    /// Single activation output (TFLite reference kernels are all SISO on
+    /// the activation path).
+    pub output: TensorId,
+    /// Flash-resident weights/biases.
+    pub weights: Vec<WeightInfo>,
+}
+
+/// A tensor-op graph. `ops` is stored in a valid execution order
+/// (the order the builder emitted), which [`crate::planner::order`]
+/// may re-serialise.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<TensorInfo>,
+    pub ops: Vec<OpNode>,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+impl Graph {
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id.0]
+    }
+
+    pub fn op(&self, id: OpId) -> &OpNode {
+        &self.ops[id.0]
+    }
+
+    /// Ops that consume tensor `t`.
+    pub fn consumers(&self, t: TensorId) -> Vec<OpId> {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| op.inputs.contains(&t))
+            .map(|(i, _)| OpId(i))
+            .collect()
+    }
+
+    /// Op producing tensor `t`, if any (inputs have no producer).
+    pub fn producer(&self, t: TensorId) -> Option<OpId> {
+        self.ops
+            .iter()
+            .enumerate()
+            .find(|(_, op)| op.output == t)
+            .map(|(i, _)| OpId(i))
+    }
+
+    /// Total weight bytes — the flash footprint discussed in §IV.
+    pub fn weight_bytes(&self) -> usize {
+        self.ops
+            .iter()
+            .flat_map(|op| op.weights.iter())
+            .map(|w| w.size_bytes())
+            .sum()
+    }
+
+    /// Sum of all arena tensor sizes (upper bound on any allocation).
+    pub fn total_tensor_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Sanity-check structural invariants; used by tests and the builders.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, op) in self.ops.iter().enumerate() {
+            if let Some(n) = op.kind.arity() {
+                anyhow::ensure!(
+                    op.inputs.len() == n,
+                    "op {i} `{}` expects {n} inputs, has {}",
+                    op.name,
+                    op.inputs.len()
+                );
+            }
+            for &t in &op.inputs {
+                anyhow::ensure!(t.0 < self.tensors.len(), "op {i} input out of range");
+                // producer must come before consumer in builder order
+                if let Some(p) = self.producer(t) {
+                    anyhow::ensure!(p.0 < i, "op {i} `{}` consumes tensor produced later", op.name);
+                }
+            }
+            anyhow::ensure!(op.output.0 < self.tensors.len(), "op {i} output out of range");
+            let inferred = infer_output(&op.kind, &op.inputs.iter().map(|&t| &self.tensor(t).shape).collect::<Vec<_>>())?;
+            anyhow::ensure!(
+                inferred == self.tensor(op.output).shape,
+                "op {i} `{}`: inferred shape {} != stored {}",
+                op.name,
+                inferred,
+                self.tensor(op.output).shape
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Convenience builder used by the model zoo.
+pub struct GraphBuilder {
+    graph: Graph,
+    dtype: DType,
+    counter: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, dtype: DType) -> Self {
+        GraphBuilder {
+            graph: Graph {
+                name: name.to_string(),
+                tensors: Vec::new(),
+                ops: Vec::new(),
+                inputs: Vec::new(),
+                outputs: Vec::new(),
+            },
+            dtype,
+            counter: 0,
+        }
+    }
+
+    /// Element dtype this builder emits.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Read access to the graph under construction.
+    pub fn graph_ref(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Shape of a tensor already added to the graph.
+    pub fn shape_of(&self, t: TensorId) -> Shape {
+        self.graph.tensor(t).shape.clone()
+    }
+
+    fn fresh_name(&mut self, base: &str) -> String {
+        let n = self.counter;
+        self.counter += 1;
+        format!("{base}_{n}")
+    }
+
+    fn add_tensor(&mut self, name: String, shape: Shape, kind: TensorKind) -> TensorId {
+        let id = TensorId(self.graph.tensors.len());
+        self.graph.tensors.push(TensorInfo {
+            name,
+            shape,
+            dtype: self.dtype,
+            kind,
+        });
+        id
+    }
+
+    /// Declare a model input.
+    pub fn input(&mut self, shape: Shape) -> TensorId {
+        let name = self.fresh_name("input");
+        let id = self.add_tensor(name, shape, TensorKind::Input);
+        self.graph.inputs.push(id);
+        id
+    }
+
+    /// Append an op with explicit kind; returns its output tensor.
+    pub fn add_op(&mut self, kind: OpKind, inputs: &[TensorId], weights: Vec<WeightInfo>) -> TensorId {
+        let name = self.fresh_name(kind.name());
+        let in_shapes: Vec<&Shape> = inputs.iter().map(|&t| &self.graph.tensor(t).shape).collect();
+        let out_shape = infer_output(&kind, &in_shapes).expect("shape inference failed");
+        let out = self.add_tensor(format!("{name}_out"), out_shape, TensorKind::Intermediate);
+        self.graph.ops.push(OpNode {
+            name,
+            kind,
+            inputs: inputs.to_vec(),
+            output: out,
+            weights,
+        });
+        out
+    }
+
+    /// 2-D convolution with fused activation. Weights `[Kh, Kw, Cin, Cout]`
+    /// plus bias `[Cout]`.
+    pub fn conv2d(
+        &mut self,
+        x: TensorId,
+        out_channels: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        act: Activation,
+    ) -> TensorId {
+        let cin = self.graph.tensor(x).shape.c();
+        let weights = vec![
+            WeightInfo {
+                shape: Shape::new(&[kernel.0, kernel.1, cin, out_channels]),
+                dtype: self.dtype,
+            },
+            WeightInfo {
+                shape: Shape::vec1(out_channels),
+                dtype: if self.dtype == DType::I8 { DType::I32 } else { self.dtype },
+            },
+        ];
+        self.add_op(
+            OpKind::Conv2D(Conv2DParams {
+                kernel,
+                stride,
+                dilation: (1, 1),
+                padding,
+                out_channels,
+                act,
+            }),
+            &[x],
+            weights,
+        )
+    }
+
+    /// Depthwise convolution with fused activation.
+    pub fn dwconv2d(
+        &mut self,
+        x: TensorId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        act: Activation,
+    ) -> TensorId {
+        let cin = self.graph.tensor(x).shape.c();
+        let weights = vec![
+            WeightInfo {
+                shape: Shape::new(&[kernel.0, kernel.1, cin, 1]),
+                dtype: self.dtype,
+            },
+            WeightInfo {
+                shape: Shape::vec1(cin),
+                dtype: if self.dtype == DType::I8 { DType::I32 } else { self.dtype },
+            },
+        ];
+        self.add_op(
+            OpKind::DepthwiseConv2D(DepthwiseParams {
+                kernel,
+                stride,
+                dilation: (1, 1),
+                padding,
+                depth_multiplier: 1,
+                act,
+            }),
+            &[x],
+            weights,
+        )
+    }
+
+    /// Max pooling.
+    pub fn maxpool(&mut self, x: TensorId, kernel: (usize, usize), stride: (usize, usize), padding: Padding) -> TensorId {
+        self.add_op(
+            OpKind::Pool(PoolParams {
+                kind: PoolKind::Max,
+                kernel,
+                stride,
+                padding,
+            }),
+            &[x],
+            vec![],
+        )
+    }
+
+    /// Average pooling.
+    pub fn avgpool(&mut self, x: TensorId, kernel: (usize, usize), stride: (usize, usize), padding: Padding) -> TensorId {
+        self.add_op(
+            OpKind::Pool(PoolParams {
+                kind: PoolKind::Avg,
+                kernel,
+                stride,
+                padding,
+            }),
+            &[x],
+            vec![],
+        )
+    }
+
+    /// Global average pooling.
+    pub fn global_avg_pool(&mut self, x: TensorId) -> TensorId {
+        self.add_op(OpKind::GlobalAvgPool, &[x], vec![])
+    }
+
+    /// Residual / element-wise add.
+    pub fn add(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        self.add_op(OpKind::Binary(crate::ir::op::BinaryKind::Add), &[a, b], vec![])
+    }
+
+    /// Standalone relu (models without fused activations).
+    pub fn relu(&mut self, x: TensorId) -> TensorId {
+        self.add_op(OpKind::Unary(crate::ir::op::UnaryKind::Relu), &[x], vec![])
+    }
+
+    /// Channel-axis concatenation.
+    pub fn concat(&mut self, xs: &[TensorId]) -> TensorId {
+        self.add_op(OpKind::Concat, xs, vec![])
+    }
+
+    /// Fully connected layer.
+    pub fn fully_connected(&mut self, x: TensorId, out_features: usize, act: Activation) -> TensorId {
+        let cin = self.graph.tensor(x).shape.num_elements();
+        let weights = vec![
+            WeightInfo {
+                shape: Shape::new(&[cin, out_features]),
+                dtype: self.dtype,
+            },
+            WeightInfo {
+                shape: Shape::vec1(out_features),
+                dtype: if self.dtype == DType::I8 { DType::I32 } else { self.dtype },
+            },
+        ];
+        self.add_op(OpKind::FullyConnected { out_features, act }, &[x], weights)
+    }
+
+    /// Row-wise softmax.
+    pub fn softmax(&mut self, x: TensorId) -> TensorId {
+        self.add_op(OpKind::Softmax, &[x], vec![])
+    }
+
+    /// Spatial zero-pad `(top, bottom, left, right)`.
+    pub fn pad(&mut self, x: TensorId, pad: (usize, usize, usize, usize)) -> TensorId {
+        self.add_op(OpKind::Pad { pad }, &[x], vec![])
+    }
+
+    /// Reshape (element order preserved).
+    pub fn reshape(&mut self, x: TensorId, to: Shape) -> TensorId {
+        self.add_op(OpKind::Reshape { to }, &[x], vec![])
+    }
+
+    /// Finish: mark `outputs`, fix tensor kinds, validate.
+    pub fn finish(mut self, outputs: &[TensorId]) -> Graph {
+        for &t in outputs {
+            self.graph.tensors[t.0].kind = TensorKind::Output;
+            self.graph.outputs.push(t);
+        }
+        self.graph.validate().expect("graph invalid");
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_tiny_graph() {
+        let mut b = GraphBuilder::new("tiny", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 3));
+        let c = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let p = b.maxpool(c, (2, 2), (2, 2), Padding::Valid);
+        let f = b.fully_connected(p, 10, Activation::None);
+        let s = b.softmax(f);
+        let g = b.finish(&[s]);
+        assert_eq!(g.ops.len(), 4);
+        assert_eq!(g.tensor(c).shape, Shape::hwc(8, 8, 4));
+        assert_eq!(g.tensor(p).shape, Shape::hwc(4, 4, 4));
+        assert_eq!(g.tensor(f).shape, Shape::new(&[1, 10]));
+        assert_eq!(g.consumers(c), vec![OpId(1)]);
+        assert_eq!(g.producer(x), None);
+        assert!(g.weight_bytes() > 0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_shape() {
+        let mut b = GraphBuilder::new("bad", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 3));
+        let c = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let mut g = b.finish(&[c]);
+        // corrupt the stored output shape
+        g.tensors[c.0].shape = Shape::hwc(5, 5, 4);
+        assert!(g.validate().is_err());
+    }
+}

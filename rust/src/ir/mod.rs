@@ -1,0 +1,18 @@
+//! Intermediate representation of tensor-op graphs.
+//!
+//! A [`Graph`] is a flat list of [`OpNode`]s in *builder* order (a valid
+//! execution order), plus a table of [`TensorInfo`] values they produce and
+//! consume. The planner may re-serialise ops into other valid orders
+//! (see [`crate::planner::order`]); everything downstream (scope analysis,
+//! allocation, execution, tracing) works from an explicit
+//! [`ExecOrder`](crate::planner::order::ExecOrder).
+
+pub mod dtype;
+pub mod graph;
+pub mod op;
+pub mod shape;
+
+pub use dtype::DType;
+pub use graph::{Graph, GraphBuilder, OpId, OpNode, TensorId, TensorInfo, TensorKind, WeightInfo};
+pub use op::{Activation, OpKind, Padding};
+pub use shape::Shape;

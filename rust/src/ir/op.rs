@@ -1,0 +1,226 @@
+//! Operation kinds and their static parameters.
+//!
+//! The set mirrors the TFLite reference kernels the paper analyses
+//! (§III, Fig 3): convolutions, pooling, element-wise ops, fully
+//! connected / matmul, plus the re-arrangement ops (concat, pad,
+//! reshape) that §II-C's *operation removal* targets.
+//!
+//! Behaviour (shape inference, memory-access patterns, numerics) lives in
+//! [`crate::ops`]; this module is pure data so graphs stay cheap to build,
+//! clone and serialise.
+
+use super::shape::Shape;
+
+/// Spatial padding scheme (TFLite semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Padding {
+    /// Output = ceil(input / stride); zero padding split per Eqs (5)/(6).
+    Same,
+    /// No padding; output = ceil((input − (k−1)·d) / stride).
+    Valid,
+}
+
+/// Activation fused into a producing op (TFLite fuses these, so no
+/// intermediate tensor exists between e.g. a conv and its relu).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    None,
+    Relu,
+    Relu6,
+}
+
+/// Parameters shared by 2-D convolution-family ops.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Conv2DParams {
+    /// Kernel size (h, w) — the paper's `K_h`, `K_w`.
+    pub kernel: (usize, usize),
+    /// Stride (h, w) — `S_h`, `S_w`.
+    pub stride: (usize, usize),
+    /// Dilation (h, w) — `D_h`, `D_w`.
+    pub dilation: (usize, usize),
+    /// Padding scheme.
+    pub padding: Padding,
+    /// Output channels (`O_d`).
+    pub out_channels: usize,
+    /// Fused activation.
+    pub act: Activation,
+}
+
+/// Parameters for depthwise 2-D convolution.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct DepthwiseParams {
+    /// Kernel size (h, w).
+    pub kernel: (usize, usize),
+    /// Stride (h, w).
+    pub stride: (usize, usize),
+    /// Dilation (h, w).
+    pub dilation: (usize, usize),
+    /// Padding scheme.
+    pub padding: Padding,
+    /// Channel multiplier — the paper's `filterC` / `K_c`.
+    pub depth_multiplier: usize,
+    /// Fused activation.
+    pub act: Activation,
+}
+
+/// Pooling flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Parameters for spatial pooling.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PoolParams {
+    pub kind: PoolKind,
+    /// Window size (h, w).
+    pub kernel: (usize, usize),
+    /// Stride (h, w).
+    pub stride: (usize, usize),
+    pub padding: Padding,
+}
+
+/// Binary element-wise flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinaryKind {
+    Add,
+    Mul,
+}
+
+/// Unary element-wise flavour (standalone, i.e. not fused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnaryKind {
+    Relu,
+    Relu6,
+    /// Identity copy (also models quantize/dequantize for planning).
+    Copy,
+}
+
+/// An operation kind with its static parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Standard 2-D convolution (one activation input; weights are op
+    /// attributes and live in flash, not the tensor arena).
+    Conv2D(Conv2DParams),
+    /// Depthwise 2-D convolution — the op the paper derives `O_s` for
+    /// analytically (§III-D).
+    DepthwiseConv2D(DepthwiseParams),
+    /// Max / average pooling.
+    Pool(PoolParams),
+    /// Global average pooling over H×W, output `[1, 1, 1, C]`.
+    GlobalAvgPool,
+    /// Standalone unary element-wise op (Fig 3a).
+    Unary(UnaryKind),
+    /// Binary element-wise op over two equal-shaped inputs (residual adds).
+    Binary(BinaryKind),
+    /// Fully connected layer, TFLite reference loop order
+    /// (per-output-element accumulate in a register, single store).
+    FullyConnected {
+        out_features: usize,
+        act: Activation,
+    },
+    /// Matrix multiply with *accumulate-in-output* loop order — the
+    /// worst-case access pattern of Fig 3b where `O_s ≈ 0`.
+    MatMulAccum {
+        out_features: usize,
+    },
+    /// Concatenate along the channel axis (NHWC axis 3) — the op that §II-C
+    /// operation removal elides.
+    Concat,
+    /// Spatial zero padding: `(top, bottom, left, right)`.
+    Pad {
+        pad: (usize, usize, usize, usize),
+    },
+    /// Row-wise softmax over the last axis.
+    Softmax,
+    /// Shape change without element movement.
+    Reshape {
+        to: Shape,
+    },
+}
+
+impl OpKind {
+    /// Short name for reports and traces.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Conv2D(_) => "conv2d",
+            OpKind::DepthwiseConv2D(_) => "dwconv2d",
+            OpKind::Pool(p) => match p.kind {
+                PoolKind::Max => "maxpool",
+                PoolKind::Avg => "avgpool",
+            },
+            OpKind::GlobalAvgPool => "gavgpool",
+            OpKind::Unary(u) => match u {
+                UnaryKind::Relu => "relu",
+                UnaryKind::Relu6 => "relu6",
+                UnaryKind::Copy => "copy",
+            },
+            OpKind::Binary(b) => match b {
+                BinaryKind::Add => "add",
+                BinaryKind::Mul => "mul",
+            },
+            OpKind::FullyConnected { .. } => "fc",
+            OpKind::MatMulAccum { .. } => "matmul",
+            OpKind::Concat => "concat",
+            OpKind::Pad { .. } => "pad",
+            OpKind::Softmax => "softmax",
+            OpKind::Reshape { .. } => "reshape",
+        }
+    }
+
+    /// Number of activation inputs this kind consumes (Concat is variadic
+    /// and returns `None`).
+    pub fn arity(&self) -> Option<usize> {
+        match self {
+            OpKind::Binary(_) => Some(2),
+            OpKind::Concat => None,
+            _ => Some(1),
+        }
+    }
+}
+
+/// Resolved padding amounts before the start of each spatial axis —
+/// the paper's `P_h` / `P_w` (Eqs 5, 6), matching TFLite:
+/// `pad_before = max(0, ((O−1)·S + (K−1)·D + 1 − I) / 2)` (floor).
+pub fn pad_before(input: usize, output: usize, kernel: usize, stride: usize, dilation: usize) -> usize {
+    let total = (output as isize - 1) * stride as isize + ((kernel as isize - 1) * dilation as isize + 1)
+        - input as isize;
+    (total.max(0) / 2) as usize
+}
+
+/// TFLite output size for one spatial axis.
+pub fn out_dim(input: usize, kernel: usize, stride: usize, dilation: usize, padding: Padding) -> usize {
+    let eff_k = (kernel - 1) * dilation + 1;
+    match padding {
+        Padding::Same => input.div_ceil(stride),
+        Padding::Valid => (input.saturating_sub(eff_k - 1)).div_ceil(stride),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dims_match_tflite() {
+        // 224 -> 112 with k3 s2 SAME
+        assert_eq!(out_dim(224, 3, 2, 1, Padding::Same), 112);
+        // 112 -> 56 with k3 s2 SAME
+        assert_eq!(out_dim(112, 3, 2, 1, Padding::Same), 56);
+        // 147 -> 73 with k3 s2 VALID
+        assert_eq!(out_dim(147, 3, 2, 1, Padding::Valid), 73);
+        // 149 -> 147 with k3 s1 VALID
+        assert_eq!(out_dim(149, 3, 1, 1, Padding::Valid), 147);
+    }
+
+    #[test]
+    fn pad_before_matches_eq5() {
+        // Table I op: in 112, out 56, k3, s2 -> P_h = 0
+        assert_eq!(pad_before(112, 56, 3, 2, 1), 0);
+        // in 224, out 112, k3, s2 -> total = 111*2+3-224 = 1 -> before 0
+        assert_eq!(pad_before(224, 112, 3, 2, 1), 0);
+        // in 112, out 112, k3, s1 -> total = 2 -> before 1
+        assert_eq!(pad_before(112, 112, 3, 1, 1), 1);
+    }
+}

@@ -1,0 +1,114 @@
+//! Tensor shapes.
+//!
+//! Shapes follow the TFLite convention used throughout the paper:
+//! 4-D activation tensors are NHWC (`[batch, height, width, channels]`)
+//! and all models here run with `batch == 1`. Lower-rank tensors (FC
+//! activations, softmax rows) are stored as-is.
+
+use std::fmt;
+
+/// A tensor shape (row-major / last-axis-fastest, as in TFLite).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    /// New shape from dims.
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    /// NHWC activation shape with batch 1.
+    pub fn hwc(h: usize, w: usize, c: usize) -> Self {
+        Shape(vec![1, h, w, c])
+    }
+
+    /// Rank-1 vector.
+    pub fn vec1(n: usize) -> Self {
+        Shape(vec![n])
+    }
+
+    /// Number of axes.
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Total element count.
+    pub fn num_elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Dim at axis `i`.
+    #[inline]
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+
+    /// Height of an NHWC activation.
+    #[inline]
+    pub fn h(&self) -> usize {
+        debug_assert_eq!(self.rank(), 4, "h() needs NHWC");
+        self.0[1]
+    }
+
+    /// Width of an NHWC activation.
+    #[inline]
+    pub fn w(&self) -> usize {
+        debug_assert_eq!(self.rank(), 4, "w() needs NHWC");
+        self.0[2]
+    }
+
+    /// Channels of an NHWC activation.
+    #[inline]
+    pub fn c(&self) -> usize {
+        debug_assert_eq!(self.rank(), 4, "c() needs NHWC");
+        self.0[3]
+    }
+
+    /// Row-major element offset of NHWC coordinate `(y, x, c)` (batch 0).
+    ///
+    /// This is the paper's `Offset(r, c, d) = (r·I_w + c)·I_d + d` (Eq 4).
+    #[inline]
+    pub fn offset_hwc(&self, y: usize, x: usize, c: usize) -> usize {
+        (y * self.w() + x) * self.c() + c
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elements_and_accessors() {
+        let s = Shape::hwc(112, 96, 32);
+        assert_eq!(s.rank(), 4);
+        assert_eq!(s.num_elements(), 112 * 96 * 32);
+        assert_eq!((s.h(), s.w(), s.c()), (112, 96, 32));
+    }
+
+    #[test]
+    fn offset_matches_eq4() {
+        let s = Shape::hwc(8, 5, 3);
+        // Offset(r, c, d) = (r*I_w + c)*I_d + d
+        assert_eq!(s.offset_hwc(2, 3, 1), (2 * 5 + 3) * 3 + 1);
+        assert_eq!(s.offset_hwc(0, 0, 0), 0);
+        assert_eq!(s.offset_hwc(7, 4, 2), s.num_elements() - 1);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::new(&[2, 3]).to_string(), "[2, 3]");
+    }
+}

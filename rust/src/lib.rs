@@ -1,0 +1,31 @@
+//! # DMO — Diagonal Memory Optimisation
+//!
+//! A full reproduction of *“Diagonal Memory Optimisation for Machine
+//! Learning on Micro-controllers”* (Blacker, Bridges, Hadfield, 2020):
+//! a tensor-graph IR with TFLite-reference op semantics, the three safe
+//! buffer-overlap (`O_s`) engines (§III), the reverse-order DMO
+//! pre-allocator and the baseline modified-heap allocator (§II/§IV), an
+//! arena interpreter that *executes* planned (overlapping) layouts to
+//! prove them safe, memory-trace instrumentation and figure rendering,
+//! the 11-network model zoo of Table III, an MCU deployment-fit catalog,
+//! and a serving stack (PJRT runtime + request coordinator) that runs
+//! AOT-compiled JAX/Pallas models with DMO-planned host arenas.
+//!
+//! Entry points:
+//! * [`models`] — the paper's networks by name.
+//! * [`planner`] — buffer pre-allocation with/without DMO.
+//! * [`overlap::compute_os`] — `O_s` via any of the three methods.
+//! * [`interp`] — execute a planned graph and validate overlap safety.
+
+pub mod coordinator;
+pub mod interp;
+pub mod ir;
+pub mod mcu;
+pub mod models;
+pub mod ops;
+pub mod overlap;
+pub mod planner;
+pub mod report;
+pub mod runtime;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,304 @@
+//! `dmo` — command-line driver for the DMO reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's artefacts:
+//! `table2`, `table3`, `figures`, `fit`, `plan`, `split`, `validate`,
+//! `trace-op`, `serve` (see `dmo help`).
+
+use anyhow::{bail, Context, Result};
+use dmo::ir::{DType, Shape};
+use dmo::planner::{plan_graph, saving_row, PlanOptions};
+use dmo::{interp, mcu, models, report, trace};
+use std::fs;
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn out_dir(args: &[String]) -> String {
+    opt_value(args, "--out").unwrap_or("results").to_string()
+}
+
+fn write_out(dir: &str, file: &str, content: &str) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let path = Path::new(dir).join(file);
+    fs::write(&path, content).with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        None | Some("help") | Some("--help") => {
+            print_help();
+            Ok(())
+        }
+        Some("models") => {
+            for n in models::all_names() {
+                let g = models::build(n)?;
+                println!(
+                    "{n:32} {:4} ops  {:5} tensors  weights {}",
+                    g.ops.len(),
+                    g.tensors.len(),
+                    report::fmt_bytes(g.weight_bytes())
+                );
+            }
+            Ok(())
+        }
+        Some("plan") => {
+            let name = args.get(1).context("usage: dmo plan <model> [--baseline] [--map]")?;
+            let g = models::build(name)?;
+            let opts = if flag(args, "--baseline") {
+                PlanOptions::baseline()
+            } else {
+                PlanOptions::dmo()
+            };
+            let plan = plan_graph(&g, opts);
+            println!(
+                "{name}: peak {} ({} strategy, {} heuristic, {} overlaps applied)",
+                report::fmt_bytes(plan.peak()),
+                plan.strategy.name(),
+                plan.heuristic.name(),
+                plan.alloc.applied.len()
+            );
+            for a in &plan.alloc.applied {
+                println!(
+                    "  overlap {} ⇢ {}: {}",
+                    g.tensor(a.input).name,
+                    g.tensor(a.output).name,
+                    report::fmt_bytes(a.bytes)
+                );
+            }
+            if flag(args, "--map") {
+                println!("{}", trace::render::alloc_map_ascii(&g, &plan, 100));
+            }
+            Ok(())
+        }
+        Some("table2") => {
+            let md = report::table2_markdown()?;
+            println!("{md}");
+            write_out(&out_dir(args), "table2.md", &md)
+        }
+        Some("table3") => {
+            let (md, rows) = report::table3_markdown()?;
+            println!("{md}");
+            let dir = out_dir(args);
+            write_out(&dir, "table3.md", &md)?;
+            write_out(&dir, "table3.csv", &report::table3_csv(&rows))
+        }
+        Some("figures") => figures(args),
+        Some("fit") => {
+            let names: Vec<&str> = match args.get(1).filter(|a| !a.starts_with("--")) {
+                Some(n) => vec![n.as_str()],
+                None => models::table3_names(),
+            };
+            println!(
+                "{:32} {:20} {:>9} {:>9}  deploy(orig) deploy(DMO)",
+                "model", "mcu", "arena0", "arenaD"
+            );
+            for name in names {
+                let g = models::build(name)?;
+                let (_b, _d, row) = saving_row(&g);
+                for m in mcu::catalog() {
+                    let f0 = mcu::fit(&g, &m, row.original);
+                    let f1 = mcu::fit(&g, &m, row.optimised);
+                    println!(
+                        "{:32} {:20} {:>9} {:>9}  {:12} {}",
+                        name,
+                        m.name,
+                        report::fmt_bytes(row.original),
+                        report::fmt_bytes(row.optimised),
+                        if f0.deployable() { "yes" } else { "no" },
+                        if f1.deployable() { "yes" } else { "no" },
+                    );
+                }
+            }
+            Ok(())
+        }
+        Some("split") => {
+            let name = args.get(1).context("usage: dmo split <model>")?;
+            let g = models::build(name)?;
+            match dmo::planner::split::best_split(&g, 8) {
+                Some(r) => {
+                    println!(
+                        "{name}: split ops {}→{} into {} parts: {} → {} pair peak, {} elems recomputed",
+                        r.first.0,
+                        r.second.0,
+                        r.parts,
+                        report::fmt_bytes(r.peak_before),
+                        report::fmt_bytes(r.peak_after),
+                        r.recomputed_elems
+                    );
+                }
+                None => println!("{name}: no profitable split found"),
+            }
+            Ok(())
+        }
+        Some("validate") => {
+            let name = args.get(1).context("usage: dmo validate <model>")?;
+            let g = models::build(name)?;
+            let plan = plan_graph(&g, PlanOptions::dmo());
+            interp::validate_plan(&g, &plan, 42)?;
+            println!(
+                "{name}: DMO plan ({} with {} overlaps) executes bit-identically to the reference — safe",
+                report::fmt_bytes(plan.peak()),
+                plan.alloc.applied.len()
+            );
+            Ok(())
+        }
+        Some("trace-op") => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or("dwconv");
+            let (kind, shape) = trace_op_spec(which)?;
+            let r = trace::render::op_raster(&kind, &[&shape], DType::F32, 48, 96)?;
+            println!("{}", r.to_ascii());
+            Ok(())
+        }
+        Some("serve") => dmo::coordinator::cli::serve_main(args),
+        Some(other) => bail!("unknown command `{other}` — try `dmo help`"),
+    }
+}
+
+fn trace_op_spec(which: &str) -> Result<(dmo::ir::OpKind, Shape)> {
+    use dmo::ir::op::*;
+    Ok(match which {
+        "relu" => (OpKind::Unary(UnaryKind::Relu), Shape::hwc(24, 24, 4)),
+        "matmul" => (OpKind::MatMulAccum { out_features: 64 }, Shape::new(&[1, 96])),
+        "dwconv" => (
+            OpKind::DepthwiseConv2D(DepthwiseParams {
+                kernel: (3, 3),
+                stride: (1, 1),
+                dilation: (1, 1),
+                padding: Padding::Same,
+                depth_multiplier: 1,
+                act: Activation::None,
+            }),
+            Shape::hwc(24, 24, 4),
+        ),
+        "conv" => (
+            OpKind::Conv2D(Conv2DParams {
+                kernel: (3, 3),
+                stride: (1, 1),
+                dilation: (1, 1),
+                padding: Padding::Same,
+                out_channels: 8,
+                act: Activation::None,
+            }),
+            Shape::hwc(24, 24, 4),
+        ),
+        other => bail!("unknown op `{other}` (relu|matmul|dwconv|conv)"),
+    })
+}
+
+fn figures(args: &[String]) -> Result<()> {
+    let dir = out_dir(args);
+    let which: Option<usize> = opt_value(args, "--fig").map(|v| v.parse()).transpose()?;
+    let all = which.is_none();
+    let fig = |n: usize| all || which == Some(n);
+
+    // Figs 1 & 2 use the paper's example model: MobileNet v1 0.25 128 8-bit
+    let g = models::build("mobilenet_v1_0.25_128_int8")?;
+    let base = plan_graph(&g, PlanOptions::baseline());
+    let opt = plan_graph(&g, PlanOptions::dmo());
+
+    if fig(1) {
+        write_out(&dir, "fig1_alloc_original.txt", &trace::render::alloc_map_ascii(&g, &base, 100))?;
+        write_out(&dir, "fig1_alloc_original.csv", &trace::render::alloc_map_csv(&g, &base))?;
+    }
+    if fig(2) {
+        let ra = trace::render::model_raster(&g, &base, 1, 120, 160)?;
+        write_out(&dir, "fig2a_trace_original.pgm", &ra.to_pgm())?;
+        let rb = trace::render::model_raster(&g, &opt, 1, 120, 160)?;
+        write_out(&dir, "fig2b_trace_dmo.pgm", &rb.to_pgm())?;
+        println!(
+            "fig2: arena original {} vs DMO {}",
+            report::fmt_bytes(base.peak()),
+            report::fmt_bytes(opt.peak())
+        );
+    }
+    if fig(3) {
+        for op in ["relu", "matmul", "dwconv", "conv"] {
+            let (kind, shape) = trace_op_spec(op)?;
+            let r = trace::render::op_raster(&kind, &[&shape], DType::F32, 96, 128)?;
+            write_out(&dir, &format!("fig3_{op}.pgm"), &r.to_pgm())?;
+        }
+    }
+    if fig(6) {
+        let x = Shape::hwc(112, 112, 96);
+        let k = dmo::ir::OpKind::DepthwiseConv2D(dmo::ir::op::DepthwiseParams {
+            kernel: (3, 3),
+            stride: (2, 2),
+            dilation: (1, 1),
+            padding: dmo::ir::Padding::Same,
+            depth_multiplier: 1,
+            act: dmo::ir::Activation::None,
+        });
+        write_out(&dir, "fig6_minr_bound.csv", &trace::render::fig6_csv(&k, &[&x], 400)?)?;
+    }
+    if fig(8) {
+        let p = dmo::ir::op::Conv2DParams {
+            kernel: (5, 5),
+            stride: (1, 1),
+            dilation: (1, 1),
+            padding: dmo::ir::Padding::Same,
+            out_channels: 8,
+            act: dmo::ir::Activation::None,
+        };
+        let x = Shape::hwc(32, 32, 4);
+        let events = trace::threads::sharded_conv_events(&p, &x, DType::F32, 4)?;
+        let arena = (x.num_elements() + 32 * 32 * 8) * 4;
+        let r = trace::threads::raster_events(&events, arena, 96, 128);
+        write_out(&dir, "fig8_multithreaded_conv.pgm", &r.to_pgm())?;
+    }
+    if fig(9) {
+        let g9 = models::build("densenet_121")?;
+        let b9 = plan_graph(&g9, PlanOptions::baseline());
+        let o9 = plan_graph(&g9, PlanOptions::dmo());
+        write_out(&dir, "fig9a_densenet_original.csv", &trace::render::alloc_map_csv(&g9, &b9))?;
+        write_out(&dir, "fig9b_densenet_dmo.csv", &trace::render::alloc_map_csv(&g9, &o9))?;
+        println!(
+            "fig9: densenet original {} vs DMO {}",
+            report::fmt_bytes(b9.peak()),
+            report::fmt_bytes(o9.peak())
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "dmo — Diagonal Memory Optimisation (paper reproduction)
+
+USAGE: dmo <command> [args]
+
+COMMANDS:
+  models                      list the model zoo
+  plan <model> [--baseline] [--map]
+                              plan a model's arena; print overlaps
+  validate <model>            execute the DMO plan, prove bit-exact safety
+  table2 [--out DIR]          O_s exact vs analytic (paper Table II)
+  table3 [--out DIR]          memory savings, 11 models (paper Table III)
+  figures [--fig N] [--out DIR]
+                              regenerate paper figures 1,2,3,6,8,9
+  fit [<model>]               MCU deployment matrix (§IV)
+  split <model>               best operation-splitting report (§II-A)
+  trace-op <relu|matmul|dwconv|conv>
+                              ASCII access-pattern trace (Fig 3)
+  serve [--requests N] [--rate R] [--batch B]
+                              end-to-end serving on the AOT'd model"
+    );
+}

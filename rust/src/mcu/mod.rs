@@ -1,0 +1,166 @@
+//! Micro-controller deployment-fit analysis (§IV discussion).
+//!
+//! The paper's point: intermediate-tensor RAM, not weight storage, gates
+//! deployment — MCUs almost universally carry far more flash than SRAM.
+//! The catalog includes the paper's two parts (STM32F103xF hosting the
+//! smallest MobileNet *only with DMO*, and the AT32UC3C of ESA's ESEO
+//! mission) plus common contemporary targets.
+
+use crate::ir::graph::Graph;
+use crate::planner::SavingRow;
+
+/// A micro-controller deployment target.
+#[derive(Debug, Clone)]
+pub struct Mcu {
+    pub name: &'static str,
+    pub core: &'static str,
+    pub flash_bytes: usize,
+    pub sram_bytes: usize,
+}
+
+/// Catalog of targets. Flash/SRAM from the referenced datasheets.
+pub fn catalog() -> Vec<Mcu> {
+    vec![
+        Mcu {
+            // §IV: "768 KB or 1 MB of program storage and 96 KB of SRAM"
+            name: "STM32F103xF",
+            core: "Cortex-M3",
+            flash_bytes: 768 * 1024,
+            sram_bytes: 96 * 1024,
+        },
+        Mcu {
+            // §IV: ESA ESEO on-board computer; ≥4× more flash than SRAM
+            name: "AT32UC3C0512C",
+            core: "AVR32",
+            flash_bytes: 512 * 1024,
+            sram_bytes: 68 * 1024,
+        },
+        Mcu {
+            name: "STM32F746",
+            core: "Cortex-M7",
+            flash_bytes: 1024 * 1024,
+            sram_bytes: 320 * 1024,
+        },
+        Mcu {
+            name: "STM32H743",
+            core: "Cortex-M7",
+            flash_bytes: 2 * 1024 * 1024,
+            sram_bytes: 1024 * 1024,
+        },
+        Mcu {
+            name: "nRF52840",
+            core: "Cortex-M4",
+            flash_bytes: 1024 * 1024,
+            sram_bytes: 256 * 1024,
+        },
+        Mcu {
+            name: "ESP32-WROOM",
+            core: "Xtensa LX6",
+            flash_bytes: 4 * 1024 * 1024,
+            sram_bytes: 520 * 1024,
+        },
+        Mcu {
+            name: "RP2040 (2MB QSPI)",
+            core: "Cortex-M0+",
+            flash_bytes: 2 * 1024 * 1024,
+            sram_bytes: 264 * 1024,
+        },
+    ]
+}
+
+/// Can `model` deploy on `mcu` given an arena of `arena_bytes`?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fit {
+    pub weights_fit: bool,
+    pub arena_fits: bool,
+    /// weight bytes / flash bytes, scaled by 1000 (‰) for display
+    pub flash_permille: usize,
+}
+
+impl Fit {
+    pub fn deployable(&self) -> bool {
+        self.weights_fit && self.arena_fits
+    }
+}
+
+/// Fit check for a model on an MCU.
+pub fn fit(graph: &Graph, mcu: &Mcu, arena_bytes: usize) -> Fit {
+    let w = graph.weight_bytes();
+    Fit {
+        weights_fit: w <= mcu.flash_bytes,
+        arena_fits: arena_bytes <= mcu.sram_bytes,
+        flash_permille: if mcu.flash_bytes == 0 { 1000 } else { w * 1000 / mcu.flash_bytes },
+    }
+}
+
+/// One row of the deployment matrix: does DMO change deployability?
+#[derive(Debug, Clone)]
+pub struct DeployRow {
+    pub model: String,
+    pub mcu: &'static str,
+    pub without_dmo: bool,
+    pub with_dmo: bool,
+}
+
+/// Cross every catalog MCU with a planned model.
+pub fn deploy_matrix(graph: &Graph, row: &SavingRow) -> Vec<DeployRow> {
+    catalog()
+        .iter()
+        .map(|m| DeployRow {
+            model: graph.name.clone(),
+            mcu: m.name,
+            without_dmo: fit(graph, m, row.original).deployable(),
+            with_dmo: fit(graph, m, row.optimised).deployable(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::planner::saving_row;
+
+    /// §IV's headline deployment claim: MobileNet v1 0.25 128 (8-bit)
+    /// fits the STM32F103xF's 96 KB SRAM *only* with DMO (96 KB arena
+    /// leaves no room for stack/runtime; 64 KB does), and its ~620 KB of
+    /// weights take most of the 768 KB flash.
+    #[test]
+    fn stm32f103_needs_dmo_for_smallest_mobilenet() {
+        let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
+        let (_b, _d, row) = saving_row(&g);
+        let stm = &catalog()[0];
+        // without DMO the arena exactly consumes all SRAM — treat the
+        // paper's "only possible with DMO" as requiring headroom
+        let without = fit(&g, stm, row.original + 4 * 1024); // +4 KB runtime headroom
+        let with = fit(&g, stm, row.optimised + 4 * 1024);
+        assert!(!without.arena_fits, "96 KB arena + runtime must NOT fit");
+        assert!(with.arena_fits, "64 KB arena + runtime must fit");
+        assert!(with.weights_fit, "weights must fit flash");
+        // §IV: weights ≈ 60.8 % of program memory; ours is close
+        assert!(
+            with.flash_permille > 400 && with.flash_permille < 800,
+            "got {}",
+            with.flash_permille
+        );
+    }
+
+    #[test]
+    fn big_models_never_fit_mcus() {
+        let g = models::build("mobilenet_v2_1.0_224").unwrap();
+        let (_b, _d, row) = saving_row(&g);
+        for m in catalog() {
+            assert!(!fit(&g, &m, row.optimised).deployable(), "{} should not fit", m.name);
+        }
+    }
+
+    #[test]
+    fn matrix_shape() {
+        let g = models::build("tiny_int8").unwrap();
+        let (_b, _d, row) = saving_row(&g);
+        let rows = deploy_matrix(&g, &row);
+        assert_eq!(rows.len(), catalog().len());
+        // tiny model fits everything, with or without
+        assert!(rows.iter().all(|r| r.with_dmo));
+    }
+}

@@ -1,0 +1,80 @@
+//! DenseNet 121 (Huang et al.) — Table III row 10. Every dense layer
+//! concatenates its input with its output, so tensors are extremely
+//! multi-use; the paper's 4.55 % saving is an allocation-ordering side
+//! effect, not direct overlapping (Fig 9).
+
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::op::{Activation, Padding};
+use crate::ir::{DType, GraphBuilder, Shape};
+
+const GROWTH: usize = 32;
+
+/// One dense layer: 1×1 bottleneck to 4·growth, 3×3 conv to growth,
+/// concat with the running feature map (BN folded, relu fused).
+fn dense_layer(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let h = b.conv2d(x, 4 * GROWTH, (1, 1), (1, 1), Padding::Same, Activation::Relu);
+    let h = b.conv2d(h, GROWTH, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+    b.concat(&[x, h])
+}
+
+/// Transition: 1×1 conv to half the channels + 2×2 average pool.
+fn transition(b: &mut GraphBuilder, x: TensorId, channels: usize) -> TensorId {
+    let h = b.conv2d(x, channels / 2, (1, 1), (1, 1), Padding::Same, Activation::Relu);
+    b.avgpool(h, (2, 2), (2, 2), Padding::Valid)
+}
+
+/// Build DenseNet 121 at 224×224 (blocks 6/12/24/16, growth 32).
+pub fn build(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("densenet_121", dtype);
+    let x = b.input(Shape::hwc(224, 224, 3));
+    let h = b.conv2d(x, 64, (7, 7), (2, 2), Padding::Same, Activation::Relu);
+    let mut h = b.maxpool(h, (3, 3), (2, 2), Padding::Same);
+    let mut c = 64usize;
+    for (bi, n) in [6usize, 12, 24, 16].iter().enumerate() {
+        for _ in 0..*n {
+            h = dense_layer(&mut b, h);
+            c += GROWTH;
+        }
+        if bi < 3 {
+            h = transition(&mut b, h, c);
+            c /= 2;
+        }
+    }
+    let h = b.global_avg_pool(h);
+    let h = b.reshape(h, Shape::new(&[1, c]));
+    let h = b.fully_connected(h, 1000, Activation::None);
+    let out = b.softmax(h);
+    b.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_progression() {
+        let g = build(DType::F32);
+        // after block1 (6 layers): 64 + 6*32 = 256 at 56x56
+        let concats: Vec<_> = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Concat))
+            .collect();
+        assert_eq!(concats.len(), 6 + 12 + 24 + 16);
+        assert_eq!(g.tensor(concats[5].output).shape, Shape::hwc(56, 56, 256));
+        // final features: 1024 at 7x7
+        assert_eq!(
+            g.tensor(concats.last().unwrap().output).shape,
+            Shape::hwc(7, 7, 1024)
+        );
+    }
+
+    #[test]
+    fn inputs_are_multi_use() {
+        let g = build(DType::F32);
+        // a dense-block tensor feeds both the bottleneck conv and the concat
+        let first_concat = g.ops.iter().position(|o| matches!(o.kind, crate::ir::op::OpKind::Concat)).unwrap();
+        let x_in = g.ops[first_concat].inputs[0];
+        assert!(g.consumers(x_in).len() >= 2);
+    }
+}

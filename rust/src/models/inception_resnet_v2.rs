@@ -1,0 +1,156 @@
+//! Inception-ResNet v2 (Szegedy et al. 2017) — Table III row 8, the
+//! largest saving (34.4 %): the sequential stem's 3×3/64 conv produces an
+//! output twice its input and overlaps by almost the whole input buffer
+//! (§IV).
+
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::op::{Activation, Padding};
+use crate::ir::{DType, GraphBuilder, Shape};
+
+fn conv(b: &mut GraphBuilder, x: TensorId, c: usize, k: (usize, usize), s: usize, p: Padding) -> TensorId {
+    b.conv2d(x, c, k, (s, s), p, Activation::Relu)
+}
+
+/// Sequential stem, 299×299×3 → 35×35×192 (as in the official
+/// `inception_resnet_v2.py`: conv…maxpool…conv…maxpool).
+fn stem(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let h = conv(b, x, 32, (3, 3), 2, Padding::Valid); // 149x149x32
+    let h = conv(b, h, 32, (3, 3), 1, Padding::Valid); // 147x147x32
+    let h = conv(b, h, 64, (3, 3), 1, Padding::Same); // 147x147x64 — the 34% op
+    let h = b.maxpool(h, (3, 3), (2, 2), Padding::Valid); // 73x73x64
+    let h = conv(b, h, 80, (1, 1), 1, Padding::Same); // 73x73x80
+    let h = conv(b, h, 192, (3, 3), 1, Padding::Valid); // 71x71x192
+    b.maxpool(h, (3, 3), (2, 2), Padding::Valid) // 35x35x192
+}
+
+/// mixed_5b: Inception-A style concat → 35×35×320.
+fn mixed_5b(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let br0 = conv(b, x, 96, (1, 1), 1, Padding::Same);
+    let t = conv(b, x, 48, (1, 1), 1, Padding::Same);
+    let br1 = conv(b, t, 64, (5, 5), 1, Padding::Same);
+    let t = conv(b, x, 64, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 96, (3, 3), 1, Padding::Same);
+    let br2 = conv(b, t, 96, (3, 3), 1, Padding::Same);
+    let p = b.avgpool(x, (3, 3), (1, 1), Padding::Same);
+    let br3 = conv(b, p, 64, (1, 1), 1, Padding::Same);
+    b.concat(&[br0, br1, br2, br3])
+}
+
+/// block35 (Inception-ResNet-A): residual over 35×35×320.
+fn block35(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let br0 = conv(b, x, 32, (1, 1), 1, Padding::Same);
+    let t = conv(b, x, 32, (1, 1), 1, Padding::Same);
+    let br1 = conv(b, t, 32, (3, 3), 1, Padding::Same);
+    let t = conv(b, x, 32, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 48, (3, 3), 1, Padding::Same);
+    let br2 = conv(b, t, 64, (3, 3), 1, Padding::Same);
+    let cat = b.concat(&[br0, br1, br2]);
+    // linear projection back to 320 (residual scale folded into weights)
+    let up = b.conv2d(cat, 320, (1, 1), (1, 1), Padding::Same, Activation::None);
+    b.add(x, up)
+}
+
+/// mixed_6a (reduction) → 17×17×1088.
+fn mixed_6a(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let br0 = conv(b, x, 384, (3, 3), 2, Padding::Valid);
+    let t = conv(b, x, 256, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 256, (3, 3), 1, Padding::Same);
+    let br1 = conv(b, t, 384, (3, 3), 2, Padding::Valid);
+    let p = b.maxpool(x, (3, 3), (2, 2), Padding::Valid);
+    b.concat(&[br0, br1, p])
+}
+
+/// block17 (Inception-ResNet-B): residual over 17×17×1088.
+fn block17(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let br0 = conv(b, x, 192, (1, 1), 1, Padding::Same);
+    let t = conv(b, x, 128, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 160, (1, 7), 1, Padding::Same);
+    let br1 = conv(b, t, 192, (7, 1), 1, Padding::Same);
+    let cat = b.concat(&[br0, br1]);
+    let up = b.conv2d(cat, 1088, (1, 1), (1, 1), Padding::Same, Activation::None);
+    b.add(x, up)
+}
+
+/// mixed_7a (reduction) → 8×8×2080.
+fn mixed_7a(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let t = conv(b, x, 256, (1, 1), 1, Padding::Same);
+    let br0 = conv(b, t, 384, (3, 3), 2, Padding::Valid);
+    let t = conv(b, x, 256, (1, 1), 1, Padding::Same);
+    let br1 = conv(b, t, 288, (3, 3), 2, Padding::Valid);
+    let t = conv(b, x, 256, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 288, (3, 3), 1, Padding::Same);
+    let br2 = conv(b, t, 320, (3, 3), 2, Padding::Valid);
+    let p = b.maxpool(x, (3, 3), (2, 2), Padding::Valid);
+    b.concat(&[br0, br1, br2, p])
+}
+
+/// block8 (Inception-ResNet-C): residual over 8×8×2080.
+fn block8(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let br0 = conv(b, x, 192, (1, 1), 1, Padding::Same);
+    let t = conv(b, x, 192, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 224, (1, 3), 1, Padding::Same);
+    let br1 = conv(b, t, 256, (3, 1), 1, Padding::Same);
+    let cat = b.concat(&[br0, br1]);
+    let up = b.conv2d(cat, 2080, (1, 1), (1, 1), Padding::Same, Activation::None);
+    b.add(x, up)
+}
+
+/// Build Inception-ResNet v2 at 299×299 (10 / 20 / 10 blocks).
+pub fn build(dtype: DType) -> Graph {
+    let mut bld = GraphBuilder::new("inception_resnet_v2", dtype);
+    let x = bld.input(Shape::hwc(299, 299, 3));
+    let h = stem(&mut bld, x);
+    let mut h = mixed_5b(&mut bld, h);
+    for _ in 0..10 {
+        h = block35(&mut bld, h);
+    }
+    h = mixed_6a(&mut bld, h);
+    for _ in 0..20 {
+        h = block17(&mut bld, h);
+    }
+    h = mixed_7a(&mut bld, h);
+    for _ in 0..10 {
+        h = block8(&mut bld, h);
+    }
+    // conv_7b: 1x1 to 1536
+    let h = conv(&mut bld, h, 1536, (1, 1), 1, Padding::Same);
+    let h = bld.global_avg_pool(h);
+    let h = bld.reshape(h, Shape::new(&[1, 1536]));
+    let h = bld.fully_connected(h, 1000, Activation::None);
+    let out = bld.softmax(h);
+    bld.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stem_shapes() {
+        let g = build(DType::F32);
+        // the §IV op: conv3 input 147x147x32 (2.6 MB), output 147x147x64
+        assert_eq!(g.tensor(g.ops[2].inputs[0]).shape, Shape::hwc(147, 147, 32));
+        assert_eq!(g.tensor(g.ops[2].output).shape, Shape::hwc(147, 147, 64));
+        // stage channels
+        let shapes: Vec<_> = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Concat))
+            .map(|o| g.tensor(o.output).shape.clone())
+            .collect();
+        assert!(shapes.contains(&Shape::hwc(35, 35, 320)));
+        assert!(shapes.contains(&Shape::hwc(17, 17, 1088)));
+        assert!(shapes.contains(&Shape::hwc(8, 8, 2080)));
+    }
+
+    #[test]
+    fn residual_count() {
+        let g = build(DType::F32);
+        let adds = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Binary(_)))
+            .count();
+        assert_eq!(adds, 40);
+    }
+}

@@ -1,0 +1,159 @@
+//! Inception v4 (Szegedy et al. 2017) — Table III row 7 (7.35 % saving:
+//! only the sequential stem overlaps; the inception blocks' concats and
+//! branch fan-outs keep tensors multi-use).
+
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::op::{Activation, Padding};
+use crate::ir::{DType, GraphBuilder, Shape};
+
+fn conv(b: &mut GraphBuilder, x: TensorId, c: usize, k: (usize, usize), s: usize, p: Padding) -> TensorId {
+    b.conv2d(x, c, k, (s, s), p, Activation::Relu)
+}
+
+/// Stem: 299×299×3 → 35×35×384 (shared with Inception-ResNet v2).
+pub fn stem(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let h = conv(b, x, 32, (3, 3), 2, Padding::Valid); // 149x149x32
+    let h = conv(b, h, 32, (3, 3), 1, Padding::Valid); // 147x147x32
+    let h = conv(b, h, 64, (3, 3), 1, Padding::Same); // 147x147x64
+    // branch: maxpool ‖ conv s2 -> 73x73x160
+    let p = b.maxpool(h, (3, 3), (2, 2), Padding::Valid);
+    let c = conv(b, h, 96, (3, 3), 2, Padding::Valid);
+    let h = b.concat(&[p, c]);
+    // branch: (1x1,3x3v) ‖ (1x1,7x1,1x7,3x3v) -> 71x71x192
+    let a1 = conv(b, h, 64, (1, 1), 1, Padding::Same);
+    let a2 = conv(b, a1, 96, (3, 3), 1, Padding::Valid);
+    let b1 = conv(b, h, 64, (1, 1), 1, Padding::Same);
+    let b2 = conv(b, b1, 64, (1, 7), 1, Padding::Same);
+    let b3 = conv(b, b2, 64, (7, 1), 1, Padding::Same);
+    let b4 = conv(b, b3, 96, (3, 3), 1, Padding::Valid);
+    let h = b.concat(&[a2, b4]);
+    // branch: conv s2 ‖ maxpool -> 35x35x384
+    let c1 = conv(b, h, 192, (3, 3), 2, Padding::Valid);
+    let p1 = b.maxpool(h, (3, 3), (2, 2), Padding::Valid);
+    b.concat(&[c1, p1])
+}
+
+/// Inception-A block (35×35×384 → same).
+fn block_a(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let p = b.avgpool(x, (3, 3), (1, 1), Padding::Same);
+    let br0 = conv(b, p, 96, (1, 1), 1, Padding::Same);
+    let br1 = conv(b, x, 96, (1, 1), 1, Padding::Same);
+    let t = conv(b, x, 64, (1, 1), 1, Padding::Same);
+    let br2 = conv(b, t, 96, (3, 3), 1, Padding::Same);
+    let t = conv(b, x, 64, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 96, (3, 3), 1, Padding::Same);
+    let br3 = conv(b, t, 96, (3, 3), 1, Padding::Same);
+    b.concat(&[br0, br1, br2, br3])
+}
+
+/// Reduction-A (35×35×384 → 17×17×1024).
+fn reduction_a(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let p = b.maxpool(x, (3, 3), (2, 2), Padding::Valid);
+    let c = conv(b, x, 384, (3, 3), 2, Padding::Valid);
+    let t = conv(b, x, 192, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 224, (3, 3), 1, Padding::Same);
+    let d = conv(b, t, 256, (3, 3), 2, Padding::Valid);
+    b.concat(&[p, c, d])
+}
+
+/// Inception-B block (17×17×1024 → same).
+fn block_b(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let p = b.avgpool(x, (3, 3), (1, 1), Padding::Same);
+    let br0 = conv(b, p, 128, (1, 1), 1, Padding::Same);
+    let br1 = conv(b, x, 384, (1, 1), 1, Padding::Same);
+    let t = conv(b, x, 192, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 224, (1, 7), 1, Padding::Same);
+    let br2 = conv(b, t, 256, (7, 1), 1, Padding::Same);
+    let t = conv(b, x, 192, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 192, (1, 7), 1, Padding::Same);
+    let t = conv(b, t, 224, (7, 1), 1, Padding::Same);
+    let t = conv(b, t, 224, (1, 7), 1, Padding::Same);
+    let br3 = conv(b, t, 256, (7, 1), 1, Padding::Same);
+    b.concat(&[br0, br1, br2, br3])
+}
+
+/// Reduction-B (17×17×1024 → 8×8×1536).
+fn reduction_b(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let p = b.maxpool(x, (3, 3), (2, 2), Padding::Valid);
+    let t = conv(b, x, 192, (1, 1), 1, Padding::Same);
+    let c = conv(b, t, 192, (3, 3), 2, Padding::Valid);
+    let t = conv(b, x, 256, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 256, (1, 7), 1, Padding::Same);
+    let t = conv(b, t, 320, (7, 1), 1, Padding::Same);
+    let d = conv(b, t, 320, (3, 3), 2, Padding::Valid);
+    b.concat(&[p, c, d])
+}
+
+/// Inception-C block (8×8×1536 → same).
+fn block_c(b: &mut GraphBuilder, x: TensorId) -> TensorId {
+    let p = b.avgpool(x, (3, 3), (1, 1), Padding::Same);
+    let br0 = conv(b, p, 256, (1, 1), 1, Padding::Same);
+    let br1 = conv(b, x, 256, (1, 1), 1, Padding::Same);
+    let t = conv(b, x, 384, (1, 1), 1, Padding::Same);
+    let c1 = conv(b, t, 256, (1, 3), 1, Padding::Same);
+    let c2 = conv(b, t, 256, (3, 1), 1, Padding::Same);
+    let t = conv(b, x, 384, (1, 1), 1, Padding::Same);
+    let t = conv(b, t, 448, (1, 3), 1, Padding::Same);
+    let t = conv(b, t, 512, (3, 1), 1, Padding::Same);
+    let d1 = conv(b, t, 256, (3, 1), 1, Padding::Same);
+    let d2 = conv(b, t, 256, (1, 3), 1, Padding::Same);
+    b.concat(&[br0, br1, c1, c2, d1, d2])
+}
+
+/// Build Inception v4 at 299×299.
+pub fn build(dtype: DType) -> Graph {
+    let mut bld = GraphBuilder::new("inception_v4", dtype);
+    let x = bld.input(Shape::hwc(299, 299, 3));
+    let mut h = stem(&mut bld, x);
+    for _ in 0..4 {
+        h = block_a(&mut bld, h);
+    }
+    h = reduction_a(&mut bld, h);
+    for _ in 0..7 {
+        h = block_b(&mut bld, h);
+    }
+    h = reduction_b(&mut bld, h);
+    for _ in 0..3 {
+        h = block_c(&mut bld, h);
+    }
+    let h = bld.global_avg_pool(h);
+    let h = bld.reshape(h, Shape::new(&[1, 1536]));
+    let h = bld.fully_connected(h, 1000, Activation::None);
+    let out = bld.softmax(h);
+    bld.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_shapes() {
+        let g = build(DType::F32);
+        // stem output 35x35x384
+        let stem_out = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Concat))
+            .nth(2)
+            .unwrap();
+        assert_eq!(g.tensor(stem_out.output).shape, Shape::hwc(35, 35, 384));
+        // block-A output keeps 35x35x384
+        let a_out = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Concat))
+            .nth(3)
+            .unwrap();
+        assert_eq!(g.tensor(a_out.output).shape, Shape::hwc(35, 35, 384));
+        // reduction-A -> 17x17x1024, reduction-B -> 8x8x1536
+        let shapes: Vec<_> = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Concat))
+            .map(|o| g.tensor(o.output).shape.clone())
+            .collect();
+        assert!(shapes.contains(&Shape::hwc(17, 17, 1024)));
+        assert!(shapes.contains(&Shape::hwc(8, 8, 1536)));
+    }
+}

@@ -1,0 +1,90 @@
+//! MobileNet v1 (Howard et al. 2017) — the paper's primary subject
+//! (Figs 1, 2 and four Table III rows).
+
+use super::make_divisible;
+use crate::ir::graph::Graph;
+use crate::ir::op::{Activation, Padding};
+use crate::ir::{DType, GraphBuilder, Shape};
+
+/// (pointwise out channels before α, dw stride) per separable block.
+const BLOCKS: [(usize, usize); 13] = [
+    (64, 1),
+    (128, 2),
+    (128, 1),
+    (256, 2),
+    (256, 1),
+    (512, 2),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (1024, 2),
+    (1024, 1),
+];
+
+/// Build MobileNet v1 with width multiplier `alpha` and input resolution
+/// `res` (e.g. `build(0.25, 128, DType::I8)` is the paper's smallest
+/// deployable variant).
+pub fn build(alpha: f64, res: usize, dtype: DType) -> Graph {
+    let name = format!(
+        "mobilenet_v1_{alpha:.2}_{res}{}",
+        if dtype == DType::I8 { "_int8" } else { "" }
+    );
+    let mut b = GraphBuilder::new(&name, dtype);
+    let x = b.input(Shape::hwc(res, res, 3));
+    let c0 = make_divisible(32.0 * alpha, 8);
+    let mut h = b.conv2d(x, c0, (3, 3), (2, 2), Padding::Same, Activation::Relu6);
+    for (c, s) in BLOCKS {
+        h = b.dwconv2d(h, (3, 3), (s, s), Padding::Same, Activation::Relu6);
+        let oc = make_divisible(c as f64 * alpha, 8);
+        h = b.conv2d(h, oc, (1, 1), (1, 1), Padding::Same, Activation::Relu6);
+    }
+    h = b.global_avg_pool(h);
+    let n = make_divisible(1024.0 * alpha, 8);
+    let h = b.reshape(h, Shape::new(&[1, n]));
+    let h = b.fully_connected(h, 1000, Activation::None);
+    let out = b.softmax(h);
+    b.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::TensorId;
+
+    #[test]
+    fn full_alpha_224_shapes() {
+        let g = build(1.0, 224, DType::F32);
+        // conv1 out 112x112x32
+        assert_eq!(g.tensor(g.ops[0].output).shape, Shape::hwc(112, 112, 32));
+        // block 1: dw 112x112x32, pw 112x112x64
+        assert_eq!(g.tensor(g.ops[1].output).shape, Shape::hwc(112, 112, 32));
+        assert_eq!(g.tensor(g.ops[2].output).shape, Shape::hwc(112, 112, 64));
+        // final pw: 7x7x1024
+        assert_eq!(g.tensor(g.ops[26].output).shape, Shape::hwc(7, 7, 1024));
+        // 1 conv + 13*(dw+pw) + gap + reshape + fc + softmax = 31 ops
+        assert_eq!(g.ops.len(), 31);
+    }
+
+    #[test]
+    fn quarter_alpha_128_is_papers_example() {
+        // §I: "the second 2D convolution operation needs 32 KB input and
+        // 64 KB output buffers… peak RAM requirement … at 96 KB"
+        let g = build(0.25, 128, DType::I8);
+        let dw1_out = g.tensor(g.ops[1].output);
+        let pw1_out = g.tensor(g.ops[2].output);
+        assert_eq!(dw1_out.size_bytes(), 32 * 1024);
+        assert_eq!(pw1_out.size_bytes(), 64 * 1024);
+    }
+
+    #[test]
+    fn weights_dominate_activations() {
+        // §IV: MobileNet v1 0.25 224 has ≈2.5 MB of f32 weights
+        let g = build(0.25, 224, DType::F32);
+        let w = g.weight_bytes();
+        assert!(w > 1_500_000 && w < 4_000_000, "weights {w}");
+        let input = g.tensor(TensorId(0));
+        assert_eq!(input.shape, Shape::hwc(224, 224, 3));
+    }
+}

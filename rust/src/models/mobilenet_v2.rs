@@ -1,0 +1,117 @@
+//! MobileNet v2 (Sandler et al. 2018) — inverted residual bottlenecks.
+//! Two Table III rows (0.35/224 and 1.0/224, both 20 % savings: the peak
+//! op is the Table-I depthwise conv whose `O_s` equals its output size).
+
+use super::make_divisible;
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::op::{Activation, Padding};
+use crate::ir::{DType, GraphBuilder, Shape};
+
+/// (expansion t, channels c, repeats n, first stride s) per stage.
+const STAGES: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+fn bottleneck(
+    b: &mut GraphBuilder,
+    x: TensorId,
+    in_c: usize,
+    out_c: usize,
+    t: usize,
+    stride: usize,
+    g: &mut usize,
+) -> TensorId {
+    *g += 1;
+    let mut h = x;
+    // expansion 1x1 (skipped when t == 1, as in the published model)
+    if t != 1 {
+        h = b.conv2d(h, in_c * t, (1, 1), (1, 1), Padding::Same, Activation::Relu6);
+    }
+    // depthwise 3x3
+    h = b.dwconv2d(h, (3, 3), (stride, stride), Padding::Same, Activation::Relu6);
+    // linear projection
+    h = b.conv2d(h, out_c, (1, 1), (1, 1), Padding::Same, Activation::None);
+    // residual only when shapes match
+    if stride == 1 && in_c == out_c {
+        h = b.add(x, h);
+    }
+    h
+}
+
+/// Build MobileNet v2 with width multiplier `alpha` at `res`×`res`.
+pub fn build(alpha: f64, res: usize, dtype: DType) -> Graph {
+    let name = format!("mobilenet_v2_{alpha:.2}_{res}");
+    let mut b = GraphBuilder::new(&name, dtype);
+    let x = b.input(Shape::hwc(res, res, 3));
+    let c0 = make_divisible(32.0 * alpha, 8);
+    let mut h = b.conv2d(x, c0, (3, 3), (2, 2), Padding::Same, Activation::Relu6);
+    let mut in_c = c0;
+    let mut gidx = 0usize;
+    for (t, c, n, s) in STAGES {
+        let out_c = make_divisible(c as f64 * alpha, 8);
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            h = bottleneck(&mut b, h, in_c, out_c, t, stride, &mut gidx);
+            in_c = out_c;
+        }
+    }
+    // final 1x1 conv: 1280 channels, scaled only when alpha > 1
+    let last = if alpha > 1.0 {
+        make_divisible(1280.0 * alpha, 8)
+    } else {
+        1280
+    };
+    h = b.conv2d(h, last, (1, 1), (1, 1), Padding::Same, Activation::Relu6);
+    h = b.global_avg_pool(h);
+    let h = b.reshape(h, Shape::new(&[1, last]));
+    let h = b.fully_connected(h, 1000, Activation::None);
+    let out = b.softmax(h);
+    b.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_alpha_224_peak_pair_is_table1_op() {
+        let g = build(1.0, 224, DType::F32);
+        // find the dw conv with input 112x112x96 (Table I)
+        let found = g.ops.iter().any(|op| {
+            matches!(op.kind, crate::ir::op::OpKind::DepthwiseConv2D(ref p) if p.stride == (2,2))
+                && g.tensor(op.inputs[0]).shape == Shape::hwc(112, 112, 96)
+                && g.tensor(op.output).shape == Shape::hwc(56, 56, 96)
+        });
+        assert!(found, "Table I op (112,112,96)->(56,56,96) s2 must exist");
+    }
+
+    #[test]
+    fn alpha_035_channels() {
+        let g = build(0.35, 224, DType::F32);
+        // conv1 -> 16 channels (0.9 rule), stage1 -> 8, stage2 -> 8
+        assert_eq!(g.tensor(g.ops[0].output).shape.c(), 16);
+        // first bottleneck (t=1): dw on 16, project to 8
+        assert_eq!(g.tensor(g.ops[1].output).shape.c(), 16);
+        assert_eq!(g.tensor(g.ops[2].output).shape.c(), 8);
+        // stage-2 first expand: 8 * 6 = 48 channels at 112x112
+        assert_eq!(g.tensor(g.ops[3].output).shape, Shape::hwc(112, 112, 48));
+    }
+
+    #[test]
+    fn residuals_present() {
+        let g = build(1.0, 224, DType::F32);
+        let adds = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Binary(_)))
+            .count();
+        // stages with n>1 contribute n-1 residuals: 1+2+3+2+2 = 10
+        assert_eq!(adds, 10);
+    }
+}

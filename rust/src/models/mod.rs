@@ -1,0 +1,106 @@
+//! Model zoo: the eleven networks of Table III plus the small serving
+//! model used by the end-to-end stack.
+//!
+//! DMO depends only on op types, shapes, dtypes and topology, so the
+//! builders construct the published architectures with their exact layer
+//! shapes (weights are irrelevant to planning and generated
+//! deterministically when execution is needed). Activations are fused
+//! into their producing ops, as TFLite does — standalone activations
+//! would introduce intermediate tensors the deployed models don't have.
+
+pub mod densenet;
+pub mod inception_resnet_v2;
+pub mod inception_v4;
+pub mod mobilenet_v1;
+pub mod mobilenet_v2;
+pub mod nasnet;
+pub mod resnet;
+pub mod tiny;
+
+use crate::ir::graph::Graph;
+use crate::ir::DType;
+
+/// Keras/TF channel rounding: round to the nearest multiple of `divisor`
+/// (≥ `divisor`), never dropping below 90 % of the requested value.
+pub fn make_divisible(v: f64, divisor: usize) -> usize {
+    let d = divisor as f64;
+    let mut new_v = ((v + d / 2.0) / d).floor() * d;
+    if new_v < d {
+        new_v = d;
+    }
+    if new_v < 0.9 * v {
+        new_v += d;
+    }
+    new_v as usize
+}
+
+/// The Table III catalog, in the paper's row order.
+pub fn table3_names() -> Vec<&'static str> {
+    vec![
+        "mobilenet_v1_1.0_224",
+        "mobilenet_v1_1.0_224_int8",
+        "mobilenet_v1_0.25_224",
+        "mobilenet_v1_0.25_128_int8",
+        "mobilenet_v2_0.35_224",
+        "mobilenet_v2_1.0_224",
+        "inception_v4",
+        "inception_resnet_v2",
+        "nasnet_mobile",
+        "densenet_121",
+        "resnet_50_v2",
+    ]
+}
+
+/// Build a catalog model by name.
+pub fn build(name: &str) -> anyhow::Result<Graph> {
+    Ok(match name {
+        "mobilenet_v1_1.0_224" => mobilenet_v1::build(1.0, 224, DType::F32),
+        "mobilenet_v1_1.0_224_int8" => mobilenet_v1::build(1.0, 224, DType::I8),
+        "mobilenet_v1_0.25_224" => mobilenet_v1::build(0.25, 224, DType::F32),
+        "mobilenet_v1_0.25_128" => mobilenet_v1::build(0.25, 128, DType::F32),
+        "mobilenet_v1_0.25_128_int8" => mobilenet_v1::build(0.25, 128, DType::I8),
+        "mobilenet_v2_0.35_224" => mobilenet_v2::build(0.35, 224, DType::F32),
+        "mobilenet_v2_1.0_224" => mobilenet_v2::build(1.0, 224, DType::F32),
+        "inception_v4" => inception_v4::build(DType::F32),
+        "inception_resnet_v2" => inception_resnet_v2::build(DType::F32),
+        "nasnet_mobile" => nasnet::build(DType::F32),
+        "densenet_121" => densenet::build(DType::F32),
+        "resnet_50_v2" => resnet::build_50_v2(DType::F32),
+        "tiny" => tiny::build(DType::F32),
+        "tiny_int8" => tiny::build(DType::I8),
+        other => anyhow::bail!("unknown model `{other}` (see `dmo models`)"),
+    })
+}
+
+/// All buildable names (catalog + extras).
+pub fn all_names() -> Vec<&'static str> {
+    let mut v = table3_names();
+    v.extend(["mobilenet_v1_0.25_128", "tiny", "tiny_int8"]);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_divisible_matches_keras() {
+        // reference values from keras_applications.mobilenet_v2
+        assert_eq!(make_divisible(32.0 * 0.35, 8), 16); // 11.2 -> 16 (0.9 rule)
+        assert_eq!(make_divisible(16.0 * 0.35, 8), 8); // 5.6 -> 8
+        assert_eq!(make_divisible(24.0 * 0.35, 8), 8); // 8.4 -> 8
+        assert_eq!(make_divisible(32.0 * 0.25, 8), 8);
+        assert_eq!(make_divisible(64.0 * 0.25, 8), 16);
+        assert_eq!(make_divisible(1024.0 * 0.25, 8), 256);
+        assert_eq!(make_divisible(96.0, 8), 96);
+    }
+
+    #[test]
+    fn every_catalog_model_builds_and_validates() {
+        for name in all_names() {
+            let g = build(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!g.ops.is_empty(), "{name} empty");
+        }
+    }
+}

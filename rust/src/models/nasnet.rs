@@ -1,0 +1,138 @@
+//! NasNet-A Mobile (Zoph et al. 2018) — Table III row 9. Every cell
+//! consumes the outputs of the *two* preceding cells, so cell outputs are
+//! always multi-use and DMO finds nothing to overlap ("None").
+//!
+//! The cell structure follows the published NASNet-A Mobile
+//! (penultimate filters 1056 ⇒ per-cell filters 44/88/176, N=4): five
+//! pairwise combinations of separable convs / poolings / identities,
+//! concatenated. Separable convs are modelled as one dw+pw pair (the
+//! published cells apply the pair twice; the repetition changes FLOPs but
+//! not liveness structure, which is what Table III measures).
+
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::op::{Activation, Padding};
+use crate::ir::{DType, GraphBuilder, Shape};
+
+/// Separable conv: depthwise k×k (stride s) then pointwise to `f`.
+fn sep(b: &mut GraphBuilder, x: TensorId, f: usize, k: usize, s: usize) -> TensorId {
+    let h = b.dwconv2d(x, (k, k), (s, s), Padding::Same, Activation::Relu);
+    b.conv2d(h, f, (1, 1), (1, 1), Padding::Same, Activation::None)
+}
+
+/// Match `prev`'s spatial/channel shape to (`h_dim`, `f`): 1×1 conv plus
+/// stride-2 pooling when the resolution halved (factorised reduction).
+fn adjust(b: &mut GraphBuilder, prev: TensorId, h_dim: usize, f: usize) -> TensorId {
+    let shape = b.shape_of(prev);
+    let mut t = prev;
+    if shape.h() != h_dim {
+        t = b.avgpool(t, (1, 1), (2, 2), Padding::Valid);
+    }
+    b.conv2d(t, f, (1, 1), (1, 1), Padding::Same, Activation::None)
+}
+
+/// NASNet-A normal cell: returns the concat of five pairwise sums.
+fn normal_cell(b: &mut GraphBuilder, prev: TensorId, cur: TensorId, f: usize) -> TensorId {
+    let h_dim = b.shape_of(cur).h();
+    let p = adjust(b, prev, h_dim, f);
+    let h = adjust(b, cur, h_dim, f);
+    let s1a = sep(b, h, f, 5, 1);
+    let s1b = sep(b, p, f, 3, 1);
+    let y1 = b.add(s1a, s1b);
+    let s2a = sep(b, p, f, 5, 1);
+    let s2b = sep(b, p, f, 3, 1);
+    let y2 = b.add(s2a, s2b);
+    let a3 = b.avgpool(h, (3, 3), (1, 1), Padding::Same);
+    let y3 = b.add(a3, p);
+    let a4a = b.avgpool(p, (3, 3), (1, 1), Padding::Same);
+    let a4b = b.avgpool(p, (3, 3), (1, 1), Padding::Same);
+    let y4 = b.add(a4a, a4b);
+    let s5 = sep(b, h, f, 3, 1);
+    let y5 = b.add(s5, h);
+    b.concat(&[p, y1, y2, y3, y4, y5])
+}
+
+/// NASNet-A reduction cell (halves resolution, concat of four combines).
+fn reduction_cell(b: &mut GraphBuilder, prev: TensorId, cur: TensorId, f: usize) -> TensorId {
+    let h_dim = b.shape_of(cur).h();
+    let p = adjust(b, prev, h_dim, f);
+    let h = adjust(b, cur, h_dim, f);
+    let s1a = sep(b, h, f, 5, 2);
+    let s1b = sep(b, p, f, 7, 2);
+    let y1 = b.add(s1a, s1b);
+    let m2 = b.maxpool(h, (3, 3), (2, 2), Padding::Same);
+    let s2 = sep(b, p, f, 7, 2);
+    let y2 = b.add(m2, s2);
+    let a3 = b.avgpool(h, (3, 3), (2, 2), Padding::Same);
+    let s3 = sep(b, p, f, 5, 2);
+    let y3 = b.add(a3, s3);
+    let m4 = b.maxpool(h, (3, 3), (2, 2), Padding::Same);
+    let s4 = sep(b, y1, f, 3, 1);
+    let y4 = b.add(m4, s4);
+    b.concat(&[y1, y2, y3, y4])
+}
+
+/// Build NasNet-A Mobile (N=4, penultimate filters 1056) at 224×224.
+pub fn build(dtype: DType) -> Graph {
+    let mut bld = GraphBuilder::new("nasnet_mobile", dtype);
+    let x = bld.input(Shape::hwc(224, 224, 3));
+    // stem conv 3x3 s2 valid, 32 channels
+    let stem = bld.conv2d(x, 32, (3, 3), (2, 2), Padding::Valid, Activation::None);
+    // two stem reduction cells (f = 11, 22)
+    let r1 = reduction_cell(&mut bld, x, stem, 11);
+    let mut prev = stem;
+    let mut cur = r1;
+    let r2 = reduction_cell(&mut bld, prev, cur, 22);
+    prev = cur;
+    cur = r2;
+    let n = 4usize;
+    for (stage, f) in [(0usize, 44usize), (1, 88), (2, 176)] {
+        if stage > 0 {
+            let r = reduction_cell(&mut bld, prev, cur, f);
+            prev = cur;
+            cur = r;
+        }
+        for _ in 0..n {
+            let nxt = normal_cell(&mut bld, prev, cur, f);
+            prev = cur;
+            cur = nxt;
+        }
+    }
+    let h = bld.relu(cur);
+    let h = bld.global_avg_pool(h);
+    let c = bld.shape_of(h).c();
+    let h = bld.reshape(h, Shape::new(&[1, c]));
+    let h = bld.fully_connected(h, 1000, Activation::None);
+    let out = bld.softmax(h);
+    bld.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penultimate_channels_1056() {
+        let g = build(DType::F32);
+        let gap_in = g
+            .ops
+            .iter()
+            .find(|o| matches!(o.kind, crate::ir::op::OpKind::GlobalAvgPool))
+            .map(|o| g.tensor(o.inputs[0]).shape.clone())
+            .unwrap();
+        assert_eq!(gap_in.c(), 6 * 176, "normal cell concat = 6f = 1056");
+        assert_eq!(gap_in.h(), 7);
+    }
+
+    #[test]
+    fn cell_outputs_are_multi_use() {
+        let g = build(DType::F32);
+        // most concat outputs feed two later cells
+        let multi = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Concat))
+            .filter(|o| g.consumers(o.output).len() >= 2)
+            .count();
+        assert!(multi >= 10, "only {multi} multi-use cell outputs");
+    }
+}

@@ -1,0 +1,103 @@
+//! ResNet 50 v2 (He et al., pre-activation variant) — Table III row 11:
+//! the residual topology keeps tensors live across whole blocks, so DMO
+//! finds no overlap opportunities ("None").
+
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::op::{Activation, Padding};
+use crate::ir::{DType, GraphBuilder, Shape};
+
+/// Pre-activation bottleneck block.
+///
+/// `conv_shortcut`: first block of a stage projects the shortcut with a
+/// 1×1 conv; later blocks use the identity. `stride` is applied in the
+/// 3×3 conv (and the shortcut projection/pool), v2-style at the *end* of
+/// each stage.
+fn block_v2(
+    b: &mut GraphBuilder,
+    x: TensorId,
+    filters: usize,
+    stride: usize,
+    conv_shortcut: bool,
+) -> TensorId {
+    // pre-activation (BN folded; the relu is standalone and shared, which
+    // is what keeps `x`'s successor live for the whole block)
+    let preact = b.relu(x);
+    let shortcut = if conv_shortcut {
+        b.conv2d(preact, 4 * filters, (1, 1), (stride, stride), Padding::Same, Activation::None)
+    } else if stride > 1 {
+        b.maxpool(x, (1, 1), (stride, stride), Padding::Same)
+    } else {
+        x
+    };
+    let h = b.conv2d(preact, filters, (1, 1), (1, 1), Padding::Same, Activation::Relu);
+    let h = b.conv2d(h, filters, (3, 3), (stride, stride), Padding::Same, Activation::Relu);
+    let h = b.conv2d(h, 4 * filters, (1, 1), (1, 1), Padding::Same, Activation::None);
+    b.add(shortcut, h)
+}
+
+/// Stage of `n` blocks; stride 2 in the last block (except the final
+/// stage), matching `keras.applications.ResNet50V2`.
+fn stack_v2(b: &mut GraphBuilder, mut x: TensorId, filters: usize, n: usize, last_stride: usize) -> TensorId {
+    x = block_v2(b, x, filters, 1, true);
+    for _ in 0..n.saturating_sub(2) {
+        x = block_v2(b, x, filters, 1, false);
+    }
+    x = block_v2(b, x, filters, last_stride, false);
+    x
+}
+
+/// Build ResNet 50 v2 at 224×224.
+pub fn build_50_v2(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("resnet_50_v2", dtype);
+    let x = b.input(Shape::hwc(224, 224, 3));
+    // conv1: 7x7 s2 64
+    let h = b.conv2d(x, 64, (7, 7), (2, 2), Padding::Same, Activation::Relu);
+    // maxpool 3x3 s2
+    let mut h = b.maxpool(h, (3, 3), (2, 2), Padding::Same);
+    for (f, n, s) in [(64, 3, 2), (128, 4, 2), (256, 6, 2), (512, 3, 1)] {
+        h = stack_v2(&mut b, h, f, n, s);
+    }
+    let h = b.relu(h); // post-norm activation
+    let h = b.global_avg_pool(h);
+    let h = b.reshape(h, Shape::new(&[1, 2048]));
+    let h = b.fully_connected(h, 1000, Activation::None);
+    let out = b.softmax(h);
+    b.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_size() {
+        let g = build_50_v2(DType::F32);
+        // conv1 out 112x112x64, pool out 56x56x64
+        assert_eq!(g.tensor(g.ops[0].output).shape, Shape::hwc(112, 112, 64));
+        assert_eq!(g.tensor(g.ops[1].output).shape, Shape::hwc(56, 56, 64));
+        // final feature map 7x7x2048
+        let gap_in = g
+            .ops
+            .iter()
+            .find(|o| matches!(o.kind, crate::ir::op::OpKind::GlobalAvgPool))
+            .map(|o| &g.tensor(o.inputs[0]).shape)
+            .unwrap();
+        assert_eq!(*gap_in, Shape::hwc(7, 7, 2048));
+        // 16 blocks x add
+        let adds = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::ir::op::OpKind::Binary(_)))
+            .count();
+        assert_eq!(adds, 16);
+    }
+
+    #[test]
+    fn residual_tensors_are_multi_use() {
+        // the pre-activation output feeds both shortcut conv and branch
+        let g = build_50_v2(DType::F32);
+        let first_relu = g.ops.iter().position(|o| matches!(o.kind, crate::ir::op::OpKind::Unary(_))).unwrap();
+        let t = g.ops[first_relu].output;
+        assert!(g.consumers(t).len() >= 2);
+    }
+}

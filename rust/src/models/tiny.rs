@@ -1,0 +1,47 @@
+//! The small MobileNet-style model used by the end-to-end serving stack
+//! (examples/serve.rs) and by the full-numerics overlap-safety tests.
+//!
+//! Its architecture mirrors `python/compile/model.py` exactly — the JAX
+//! side AOT-lowers the same graph (with its Pallas depthwise kernel) to
+//! HLO, and the Rust planner plans the host arena from this definition.
+
+use crate::ir::graph::Graph;
+use crate::ir::op::{Activation, Padding};
+use crate::ir::{DType, GraphBuilder, Shape};
+
+/// Input resolution of the tiny model.
+pub const RES: usize = 32;
+/// Class count of the tiny model.
+pub const CLASSES: usize = 10;
+
+/// Build the tiny serving model: conv s2 → 2 × (dw + pw) → gap → fc →
+/// softmax, 32×32×3 input, 10 classes.
+pub fn build(dtype: DType) -> Graph {
+    let name = if dtype == DType::I8 { "tiny_int8" } else { "tiny" };
+    let mut b = GraphBuilder::new(name, dtype);
+    let x = b.input(Shape::hwc(RES, RES, 3));
+    let h = b.conv2d(x, 8, (3, 3), (2, 2), Padding::Same, Activation::Relu6); // 16x16x8
+    let h = b.dwconv2d(h, (3, 3), (1, 1), Padding::Same, Activation::Relu6);
+    let h = b.conv2d(h, 16, (1, 1), (1, 1), Padding::Same, Activation::Relu6); // 16x16x16
+    let h = b.dwconv2d(h, (3, 3), (2, 2), Padding::Same, Activation::Relu6); // 8x8x16
+    let h = b.conv2d(h, 32, (1, 1), (1, 1), Padding::Same, Activation::Relu6); // 8x8x32
+    let h = b.global_avg_pool(h);
+    let h = b.reshape(h, Shape::new(&[1, 32]));
+    let h = b.fully_connected(h, CLASSES, Activation::None);
+    let out = b.softmax(h);
+    b.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let g = build(DType::F32);
+        assert_eq!(g.tensor(g.ops[0].output).shape, Shape::hwc(16, 16, 8));
+        assert_eq!(g.tensor(g.ops[4].output).shape, Shape::hwc(8, 8, 32));
+        assert_eq!(g.ops.len(), 9);
+        assert_eq!(g.outputs.len(), 1);
+    }
+}

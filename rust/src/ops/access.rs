@@ -1,0 +1,338 @@
+//! Offset-only access streams — the §III-C "algorithmic method" substrate.
+//!
+//! Each op's reference loop nest is reproduced with value computation
+//! stripped out: we visit one *step* per output write/update (the paper's
+//! `Steps`), reporting the output element offset written and, per input,
+//! the minimum input element offset read during that step. Reads belonging
+//! to a step happen *before* its write, matching the reference kernels
+//! (accumulate in a register, store last; updates read-then-write).
+//!
+//! Loop orders are identical to [`super::exec`]; `tests/` cross-check the
+//! two against each other event-for-event.
+
+use crate::ir::op::{pad_before, OpKind};
+use crate::ir::shape::Shape;
+
+/// Visitor: `(write_elem_offset, min_read_elem_offset_per_input)`.
+/// `None` means the step reads nothing from that input (e.g. padding
+/// regions, zero-init steps).
+pub type StepFn<'a> = dyn FnMut(usize, &[Option<usize>]) + 'a;
+
+/// Number of steps (output writes + updates) the stream will visit.
+pub fn step_count(kind: &OpKind, in_shapes: &[&Shape], out_shape: &Shape) -> usize {
+    match kind {
+        OpKind::Conv2D(_)
+        | OpKind::DepthwiseConv2D(_)
+        | OpKind::Pool(_)
+        | OpKind::GlobalAvgPool
+        | OpKind::Unary(_)
+        | OpKind::Binary(_)
+        | OpKind::FullyConnected { .. }
+        | OpKind::Concat
+        | OpKind::Pad { .. }
+        | OpKind::Softmax
+        | OpKind::Reshape { .. } => out_shape.num_elements(),
+        OpKind::MatMulAccum { out_features } => {
+            // zero-init sweep + one update per (k, o)
+            out_features + in_shapes[0].num_elements() * out_features
+        }
+    }
+}
+
+/// Visit every step of `kind`'s reference implementation in execution
+/// order. Batch dims must be 1.
+pub fn for_each_step(kind: &OpKind, in_shapes: &[&Shape], out_shape: &Shape, f: &mut StepFn<'_>) {
+    match kind {
+        OpKind::Conv2D(p) => {
+            let (xs, os) = (in_shapes[0], out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let ph = pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0) as isize;
+            let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+            let mut reads = [None];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    // min in-bounds window cell: smallest valid (iy, ix), ic = 0
+                    let min_read = min_window_read(
+                        oy, ox, p.kernel, p.stride, p.dilation, (ph, pw), (ih, iw),
+                    )
+                    .map(|(iy, ix)| (iy * iw + ix) * id);
+                    reads[0] = min_read;
+                    for oc in 0..od {
+                        f((oy * ow + ox) * od + oc, &reads);
+                    }
+                }
+            }
+        }
+        OpKind::DepthwiseConv2D(p) => {
+            let (xs, os) = (in_shapes[0], out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let mult = p.depth_multiplier;
+            debug_assert_eq!(od, id * mult);
+            let ph = pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0) as isize;
+            let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+            let mut reads = [None];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let cell = min_window_read(
+                        oy, ox, p.kernel, p.stride, p.dilation, (ph, pw), (ih, iw),
+                    );
+                    for ic in 0..id {
+                        reads[0] = cell.map(|(iy, ix)| (iy * iw + ix) * id + ic);
+                        for m in 0..mult {
+                            f((oy * ow + ox) * od + ic * mult + m, &reads);
+                        }
+                    }
+                }
+            }
+        }
+        OpKind::Pool(p) => {
+            let (xs, os) = (in_shapes[0], out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let ph = pad_before(ih, oh, p.kernel.0, p.stride.0, 1) as isize;
+            let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, 1) as isize;
+            let mut reads = [None];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let cell =
+                        min_window_read(oy, ox, p.kernel, p.stride, (1, 1), (ph, pw), (ih, iw));
+                    for c in 0..od {
+                        reads[0] = cell.map(|(iy, ix)| (iy * iw + ix) * id + c);
+                        f((oy * ow + ox) * od + c, &reads);
+                    }
+                }
+            }
+        }
+        OpKind::GlobalAvgPool => {
+            let xs = in_shapes[0];
+            let (_ih, _iw, id) = (xs.h(), xs.w(), xs.c());
+            // per channel: accumulate all spatial positions, then store.
+            let mut reads = [None];
+            for c in 0..id {
+                reads[0] = Some(c); // min spatial read offset for channel c is (0,0,c)
+                f(c, &reads);
+            }
+        }
+        OpKind::Unary(_) | OpKind::Reshape { .. } => {
+            let n = out_shape.num_elements();
+            let mut reads = [None];
+            for i in 0..n {
+                reads[0] = Some(i);
+                f(i, &reads);
+            }
+        }
+        OpKind::Binary(_) => {
+            let n = out_shape.num_elements();
+            let mut reads = [None, None];
+            for i in 0..n {
+                reads[0] = Some(i);
+                reads[1] = Some(i);
+                f(i, &reads);
+            }
+        }
+        OpKind::FullyConnected { out_features, .. } => {
+            // per output feature: read the full input (min offset 0), store.
+            let reads = [Some(0)];
+            for o in 0..*out_features {
+                f(o, &reads);
+            }
+        }
+        OpKind::MatMulAccum { out_features } => {
+            let k_dim = in_shapes[0].num_elements();
+            let n = *out_features;
+            // zero-init sweep: writes, no reads
+            let mut reads = [None];
+            for o in 0..n {
+                f(o, &reads);
+            }
+            // accumulate: for k, for o: out[o] += in[k] * w[k][o]
+            for k in 0..k_dim {
+                reads[0] = Some(k);
+                for o in 0..n {
+                    f(o, &reads);
+                }
+            }
+        }
+        OpKind::Concat => {
+            let os = out_shape;
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let n_in = in_shapes.len();
+            let mut reads = vec![None; n_in];
+            // TFLite concat: per spatial position, copy each input's
+            // channel slice in input order.
+            for p in 0..oh * ow {
+                let mut coff = 0usize;
+                for (j, xs) in in_shapes.iter().enumerate() {
+                    let cj = xs.c();
+                    for c in 0..cj {
+                        for r in reads.iter_mut() {
+                            *r = None;
+                        }
+                        reads[j] = Some(p * cj + c);
+                        f(p * od + coff + c, &reads);
+                    }
+                    coff += cj;
+                }
+            }
+        }
+        OpKind::Pad { pad } => {
+            let (xs, os) = (in_shapes[0], out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            debug_assert_eq!(id, od);
+            let (top, _bot, left, _right) = *pad;
+            let mut reads = [None];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let inside = oy >= top && oy < top + ih && ox >= left && ox < left + iw;
+                    for c in 0..od {
+                        reads[0] = if inside {
+                            Some(((oy - top) * iw + (ox - left)) * id + c)
+                        } else {
+                            None
+                        };
+                        f((oy * ow + ox) * od + c, &reads);
+                    }
+                }
+            }
+        }
+        OpKind::Softmax => {
+            let s = out_shape;
+            let d = s.dim(s.rank() - 1);
+            let rows = s.num_elements() / d;
+            let mut reads = [None];
+            // per row: max pass + exp-sum pass read the whole row *before*
+            // the first write of the row; the write pass re-reads each
+            // element. Attributing the row-scan reads to the row's first
+            // step (reads precede the step's write) keeps the stream exact.
+            for r in 0..rows {
+                for c in 0..d {
+                    // min read at this step: the write-pass read of (r, c);
+                    // the row-scan reads (offsets >= r*d) precede step (r, 0)
+                    // and are already covered by Some(r*d) at c == 0.
+                    reads[0] = Some(r * d + c);
+                    f(r * d + c, &reads);
+                }
+            }
+        }
+    }
+}
+
+/// Minimum in-bounds input cell `(iy, ix)` of the conv/pool window anchored
+/// at output position `(oy, ox)`, or `None` if the window is fully padded.
+#[inline]
+fn min_window_read(
+    oy: usize,
+    ox: usize,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    dilation: (usize, usize),
+    pad: (isize, isize),
+    in_dims: (usize, usize),
+) -> Option<(usize, usize)> {
+    let (ih, iw) = in_dims;
+    let y0 = oy as isize * stride.0 as isize - pad.0;
+    let x0 = ox as isize * stride.1 as isize - pad.1;
+    let mut iy_min = None;
+    for ky in 0..kernel.0 {
+        let iy = y0 + (ky * dilation.0) as isize;
+        if iy >= 0 && (iy as usize) < ih {
+            iy_min = Some(iy as usize);
+            break;
+        }
+    }
+    let mut ix_min = None;
+    for kx in 0..kernel.1 {
+        let ix = x0 + (kx * dilation.1) as isize;
+        if ix >= 0 && (ix as usize) < iw {
+            ix_min = Some(ix as usize);
+            break;
+        }
+    }
+    match (iy_min, ix_min) {
+        (Some(y), Some(x)) => Some((y, x)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, BinaryKind, Conv2DParams, Padding, UnaryKind};
+    use crate::ops::infer_output;
+
+    fn collect(kind: &OpKind, ins: &[&Shape]) -> Vec<(usize, Vec<Option<usize>>)> {
+        let out = infer_output(kind, ins).unwrap();
+        let mut v = Vec::new();
+        for_each_step(kind, ins, &out, &mut |w, r| v.push((w, r.to_vec())));
+        assert_eq!(v.len(), step_count(kind, ins, &out));
+        v
+    }
+
+    #[test]
+    fn relu_is_perfectly_diagonal() {
+        let s = Shape::hwc(2, 3, 4);
+        let steps = collect(&OpKind::Unary(UnaryKind::Relu), &[&s]);
+        for (i, (w, r)) in steps.iter().enumerate() {
+            assert_eq!(*w, i);
+            assert_eq!(r[0], Some(i));
+        }
+    }
+
+    #[test]
+    fn binary_reads_both() {
+        let s = Shape::hwc(1, 2, 2);
+        let steps = collect(&OpKind::Binary(BinaryKind::Add), &[&s, &s]);
+        assert_eq!(steps[3], (3, vec![Some(3), Some(3)]));
+    }
+
+    #[test]
+    fn conv_1x1_reads_lag_writes() {
+        // 1x1 conv doubling channels: reads advance at half the write rate.
+        let x = Shape::hwc(1, 4, 2);
+        let k = OpKind::Conv2D(Conv2DParams {
+            kernel: (1, 1),
+            stride: (1, 1),
+            dilation: (1, 1),
+            padding: Padding::Same,
+            out_channels: 4,
+            act: Activation::None,
+        });
+        let steps = collect(&k, &[&x]);
+        // step for (ox=3, oc=0): write 12, min read = 3*2 = 6
+        assert_eq!(steps[12], (12, vec![Some(6)]));
+    }
+
+    #[test]
+    fn matmul_updates_whole_output_early() {
+        let x = Shape::new(&[1, 3]);
+        let k = OpKind::MatMulAccum { out_features: 2 };
+        let steps = collect(&k, &[&x]);
+        // init: (0, None), (1, None); then k=0: writes 0,1 reading 0 ...
+        assert_eq!(steps[0], (0, vec![None]));
+        assert_eq!(steps[2], (0, vec![Some(0)]));
+        assert_eq!(steps.len(), 2 + 3 * 2);
+        // last step reads the last input element
+        assert_eq!(steps.last().unwrap(), &(1, vec![Some(2)]));
+    }
+
+    #[test]
+    fn padded_corner_has_inbounds_min_read() {
+        // 3x3 SAME conv on 4x4: output (0,0) window clipped to input (0,0)
+        let x = Shape::hwc(4, 4, 1);
+        let k = OpKind::Conv2D(Conv2DParams {
+            kernel: (3, 3),
+            stride: (1, 1),
+            dilation: (1, 1),
+            padding: Padding::Same,
+            out_channels: 1,
+            act: Activation::None,
+        });
+        let steps = collect(&k, &[&x]);
+        assert_eq!(steps[0], (0, vec![Some(0)]));
+        // output (3,3): window rows 2..4 cols 2..4 -> min read (2,2)
+        assert_eq!(steps[15], (15, vec![Some(2 * 4 + 2)]));
+    }
+}

@@ -1,0 +1,609 @@
+//! Numeric reference kernels over a flat tensor arena.
+//!
+//! These are re-implementations of the TFLite reference kernels the paper
+//! instruments (§III, Fig 3): every op reads and writes through an
+//! [`Arena`] that can record each load/store/update event — the substitute
+//! for the authors' patched Valgrind (DESIGN.md, substitution table).
+//!
+//! Loop orders are byte-for-byte the same sweeps as
+//! [`super::access::for_each_step`]; the tests in `rust/tests/` replay
+//! both against each other.
+//!
+//! Quantised (`i8`) semantics are simplified to saturating round-to-
+//! nearest with unit scale: DMO only depends on element *sizes* and access
+//! *order*, and unit-scale integer math keeps runs bit-exactly
+//! reproducible, which the overlap-safety validator requires.
+
+use crate::ir::op::{pad_before, Activation, OpKind, PoolKind};
+use crate::ir::shape::Shape;
+use crate::ir::DType;
+use anyhow::{ensure, Result};
+
+/// Kind of a recorded memory event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Read.
+    Load,
+    /// Write of a fresh value.
+    Store,
+    /// Read-modify-write (accumulation into the output buffer).
+    Update,
+}
+
+/// Sink receiving memory events in execution order.
+///
+/// Implementations: [`EventLog`] (raw storage, small ops),
+/// [`crate::overlap::trace::OverlapProbe`] (streaming bottom-up `O_s`),
+/// [`crate::trace::RasterSink`] (down-sampled figure rendering).
+pub trait EventSink {
+    /// `addr`/`len` are arena byte offsets.
+    fn event(&mut self, kind: EventKind, addr: usize, len: usize);
+}
+
+/// A raw in-memory event with a sequence number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub t: u64,
+    pub kind: EventKind,
+    pub addr: u32,
+    pub len: u8,
+}
+
+/// Stores every event — only for small ops and figure generation.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    pub events: Vec<Event>,
+}
+
+impl EventSink for EventLog {
+    fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
+        let t = self.events.len() as u64;
+        self.events.push(Event {
+            t,
+            kind,
+            addr: addr as u32,
+            len: len as u8,
+        });
+    }
+}
+
+/// Shared handle to an [`EventLog`], so callers can install it as the
+/// arena's sink and still read the events afterwards.
+#[derive(Debug, Clone, Default)]
+pub struct SharedLog(pub std::rc::Rc<std::cell::RefCell<EventLog>>);
+
+impl SharedLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn take_events(&self) -> Vec<Event> {
+        std::mem::take(&mut self.0.borrow_mut().events)
+    }
+}
+
+impl EventSink for SharedLog {
+    fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
+        self.0.borrow_mut().event(kind, addr, len);
+    }
+}
+
+/// A byte region inside the arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub base: usize,
+    pub len: usize,
+}
+
+impl Region {
+    pub fn new(base: usize, len: usize) -> Self {
+        Region { base, len }
+    }
+
+    pub fn end(&self) -> usize {
+        self.base + self.len
+    }
+
+    pub fn contains(&self, addr: usize) -> bool {
+        addr >= self.base && addr < self.end()
+    }
+}
+
+/// Flat byte arena with optional event tracing.
+///
+/// All activation loads/stores go through [`Arena::load`]/[`Arena::store`]/
+/// [`Arena::update`], which emit events; weight accesses do not touch the
+/// arena (the paper's traces omit filter/weight buffers, which live in
+/// flash on the target).
+pub struct Arena {
+    bytes: Vec<u8>,
+    pub sink: Option<Box<dyn EventSink>>,
+}
+
+impl Arena {
+    pub fn new(size: usize) -> Self {
+        Arena {
+            bytes: vec![0; size],
+            sink: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Install an event sink; returns the previous one.
+    pub fn set_sink(&mut self, sink: Option<Box<dyn EventSink>>) -> Option<Box<dyn EventSink>> {
+        std::mem::replace(&mut self.sink, sink)
+    }
+
+    /// Traced element load.
+    #[inline]
+    pub fn load(&mut self, dtype: DType, byte_off: usize) -> f32 {
+        let w = dtype.size_bytes();
+        if let Some(s) = self.sink.as_mut() {
+            s.event(EventKind::Load, byte_off, w);
+        }
+        self.peek(dtype, byte_off)
+    }
+
+    /// Traced element store.
+    #[inline]
+    pub fn store(&mut self, dtype: DType, byte_off: usize, v: f32) {
+        let w = dtype.size_bytes();
+        if let Some(s) = self.sink.as_mut() {
+            s.event(EventKind::Store, byte_off, w);
+        }
+        self.poke(dtype, byte_off, v);
+    }
+
+    /// Traced read-modify-write: `mem[off] += v`.
+    #[inline]
+    pub fn update_add(&mut self, dtype: DType, byte_off: usize, v: f32) {
+        let w = dtype.size_bytes();
+        if let Some(s) = self.sink.as_mut() {
+            s.event(EventKind::Update, byte_off, w);
+        }
+        let cur = self.peek(dtype, byte_off);
+        self.poke(dtype, byte_off, cur + v);
+    }
+
+    /// Untraced element read (initialisation / inspection).
+    #[inline]
+    pub fn peek(&self, dtype: DType, byte_off: usize) -> f32 {
+        match dtype {
+            DType::F32 => f32::from_le_bytes(self.bytes[byte_off..byte_off + 4].try_into().unwrap()),
+            DType::I8 => self.bytes[byte_off] as i8 as f32,
+            DType::I32 => {
+                i32::from_le_bytes(self.bytes[byte_off..byte_off + 4].try_into().unwrap()) as f32
+            }
+        }
+    }
+
+    /// Untraced element write.
+    #[inline]
+    pub fn poke(&mut self, dtype: DType, byte_off: usize, v: f32) {
+        match dtype {
+            DType::F32 => self.bytes[byte_off..byte_off + 4].copy_from_slice(&v.to_le_bytes()),
+            DType::I8 => {
+                self.bytes[byte_off] = (v.round().clamp(-128.0, 127.0) as i8) as u8;
+            }
+            DType::I32 => {
+                let q = v.round().clamp(i32::MIN as f32, i32::MAX as f32) as i32;
+                self.bytes[byte_off..byte_off + 4].copy_from_slice(&q.to_le_bytes());
+            }
+        }
+    }
+
+    /// Copy a typed tensor into the arena without tracing.
+    pub fn write_tensor(&mut self, dtype: DType, region: Region, values: &[f32]) {
+        let w = dtype.size_bytes();
+        assert!(values.len() * w <= region.len, "tensor larger than region");
+        for (i, &v) in values.iter().enumerate() {
+            self.poke(dtype, region.base + i * w, v);
+        }
+    }
+
+    /// Copy a typed tensor out of the arena without tracing.
+    pub fn read_tensor(&self, dtype: DType, region: Region, count: usize) -> Vec<f32> {
+        let w = dtype.size_bytes();
+        assert!(count * w <= region.len);
+        (0..count).map(|i| self.peek(dtype, region.base + i * w)).collect()
+    }
+}
+
+/// Everything an op execution needs to know about where its data lives.
+pub struct OpIo<'a> {
+    pub in_shapes: &'a [&'a Shape],
+    pub in_regions: &'a [Region],
+    pub out_shape: &'a Shape,
+    pub out_region: Region,
+    pub dtype: DType,
+    /// Weight tensors as f32 (conv: HWIO; fc: `[in, out]` row-major),
+    /// then bias. Empty for weight-less ops.
+    pub weights: &'a [Vec<f32>],
+}
+
+#[inline]
+fn act(v: f32, a: Activation) -> f32 {
+    match a {
+        Activation::None => v,
+        Activation::Relu => v.max(0.0),
+        Activation::Relu6 => v.clamp(0.0, 6.0),
+    }
+}
+
+/// Execute one op. Loop order mirrors [`super::access::for_each_step`].
+pub fn execute_op(kind: &OpKind, io: &OpIo<'_>, arena: &mut Arena) -> Result<()> {
+    let t = io.dtype.size_bytes();
+    match kind {
+        OpKind::Conv2D(p) => {
+            let (xs, os) = (io.in_shapes[0], io.out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let ph = pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0) as isize;
+            let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+            let (wts, bias) = (&io.weights[0], &io.weights[1]);
+            ensure!(wts.len() == p.kernel.0 * p.kernel.1 * id * od, "conv weight size");
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let y0 = oy as isize * p.stride.0 as isize - ph;
+                    let x0 = ox as isize * p.stride.1 as isize - pw;
+                    for oc in 0..od {
+                        let mut total = bias[oc];
+                        for ky in 0..p.kernel.0 {
+                            let iy = y0 + (ky * p.dilation.0) as isize;
+                            if iy < 0 || iy as usize >= ih {
+                                continue;
+                            }
+                            for kx in 0..p.kernel.1 {
+                                let ix = x0 + (kx * p.dilation.1) as isize;
+                                if ix < 0 || ix as usize >= iw {
+                                    continue;
+                                }
+                                for ic in 0..id {
+                                    let ioff = ((iy as usize * iw + ix as usize) * id + ic) * t;
+                                    let v = arena.load(io.dtype, ib + ioff);
+                                    let wv = wts[((ky * p.kernel.1 + kx) * id + ic) * od + oc];
+                                    total += v * wv;
+                                }
+                            }
+                        }
+                        let ooff = ((oy * ow + ox) * od + oc) * t;
+                        arena.store(io.dtype, ob + ooff, act(total, p.act));
+                    }
+                }
+            }
+        }
+        OpKind::DepthwiseConv2D(p) => {
+            let (xs, os) = (io.in_shapes[0], io.out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let mult = p.depth_multiplier;
+            let ph = pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0) as isize;
+            let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+            let (wts, bias) = (&io.weights[0], &io.weights[1]);
+            ensure!(wts.len() == p.kernel.0 * p.kernel.1 * id * mult, "dw weight size");
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let y0 = oy as isize * p.stride.0 as isize - ph;
+                    let x0 = ox as isize * p.stride.1 as isize - pw;
+                    for ic in 0..id {
+                        for m in 0..mult {
+                            let oc = ic * mult + m;
+                            let mut total = bias[oc.min(bias.len() - 1)];
+                            for ky in 0..p.kernel.0 {
+                                let iy = y0 + (ky * p.dilation.0) as isize;
+                                if iy < 0 || iy as usize >= ih {
+                                    continue;
+                                }
+                                for kx in 0..p.kernel.1 {
+                                    let ix = x0 + (kx * p.dilation.1) as isize;
+                                    if ix < 0 || ix as usize >= iw {
+                                        continue;
+                                    }
+                                    let ioff = ((iy as usize * iw + ix as usize) * id + ic) * t;
+                                    let v = arena.load(io.dtype, ib + ioff);
+                                    let wv = wts[((ky * p.kernel.1 + kx) * id + ic) * mult + m];
+                                    total += v * wv;
+                                }
+                            }
+                            let ooff = ((oy * ow + ox) * od + oc) * t;
+                            arena.store(io.dtype, ob + ooff, act(total, p.act));
+                        }
+                    }
+                }
+            }
+        }
+        OpKind::Pool(p) => {
+            let (xs, os) = (io.in_shapes[0], io.out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let ph = pad_before(ih, oh, p.kernel.0, p.stride.0, 1) as isize;
+            let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, 1) as isize;
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let y0 = oy as isize * p.stride.0 as isize - ph;
+                    let x0 = ox as isize * p.stride.1 as isize - pw;
+                    for c in 0..od {
+                        let mut acc = match p.kind {
+                            PoolKind::Max => f32::NEG_INFINITY,
+                            PoolKind::Avg => 0.0,
+                        };
+                        let mut n = 0usize;
+                        for ky in 0..p.kernel.0 {
+                            let iy = y0 + ky as isize;
+                            if iy < 0 || iy as usize >= ih {
+                                continue;
+                            }
+                            for kx in 0..p.kernel.1 {
+                                let ix = x0 + kx as isize;
+                                if ix < 0 || ix as usize >= iw {
+                                    continue;
+                                }
+                                let ioff = ((iy as usize * iw + ix as usize) * id + c) * t;
+                                let v = arena.load(io.dtype, ib + ioff);
+                                match p.kind {
+                                    PoolKind::Max => acc = acc.max(v),
+                                    PoolKind::Avg => acc += v,
+                                }
+                                n += 1;
+                            }
+                        }
+                        let v = match p.kind {
+                            PoolKind::Max => acc,
+                            PoolKind::Avg => acc / n.max(1) as f32,
+                        };
+                        arena.store(io.dtype, io.out_region.base + ((oy * ow + ox) * od + c) * t, v);
+                        let _ = ob;
+                    }
+                }
+            }
+        }
+        OpKind::GlobalAvgPool => {
+            let xs = io.in_shapes[0];
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for c in 0..id {
+                let mut acc = 0.0;
+                for p in 0..ih * iw {
+                    acc += arena.load(io.dtype, ib + (p * id + c) * t);
+                }
+                arena.store(io.dtype, ob + c * t, acc / (ih * iw) as f32);
+            }
+        }
+        OpKind::Unary(u) => {
+            let n = io.out_shape.num_elements();
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for i in 0..n {
+                let v = arena.load(io.dtype, ib + i * t);
+                let r = match u {
+                    crate::ir::op::UnaryKind::Relu => v.max(0.0),
+                    crate::ir::op::UnaryKind::Relu6 => v.clamp(0.0, 6.0),
+                    crate::ir::op::UnaryKind::Copy => v,
+                };
+                arena.store(io.dtype, ob + i * t, r);
+            }
+        }
+        OpKind::Binary(bk) => {
+            let n = io.out_shape.num_elements();
+            let (ab, bb) = (io.in_regions[0].base, io.in_regions[1].base);
+            let ob = io.out_region.base;
+            for i in 0..n {
+                let x = arena.load(io.dtype, ab + i * t);
+                let y = arena.load(io.dtype, bb + i * t);
+                let r = match bk {
+                    crate::ir::op::BinaryKind::Add => x + y,
+                    crate::ir::op::BinaryKind::Mul => x * y,
+                };
+                arena.store(io.dtype, ob + i * t, r);
+            }
+        }
+        OpKind::FullyConnected { out_features, act: a } => {
+            let k_dim = io.in_shapes[0].num_elements();
+            let (wts, bias) = (&io.weights[0], &io.weights[1]);
+            ensure!(wts.len() == k_dim * out_features, "fc weight size");
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for o in 0..*out_features {
+                let mut total = bias[o];
+                for k in 0..k_dim {
+                    total += arena.load(io.dtype, ib + k * t) * wts[k * out_features + o];
+                }
+                arena.store(io.dtype, ob + o * t, act(total, *a));
+            }
+        }
+        OpKind::MatMulAccum { out_features } => {
+            let k_dim = io.in_shapes[0].num_elements();
+            let (wts, bias) = (&io.weights[0], &io.weights[1]);
+            ensure!(wts.len() == k_dim * out_features, "matmul weight size");
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            // zero-init sweep (bias), then accumulate in the OUTPUT buffer —
+            // the Fig 3b worst case.
+            for o in 0..*out_features {
+                arena.store(io.dtype, ob + o * t, bias[o]);
+            }
+            for k in 0..k_dim {
+                let v = arena.load(io.dtype, ib + k * t);
+                for o in 0..*out_features {
+                    arena.update_add(io.dtype, ob + o * t, v * wts[k * out_features + o]);
+                }
+            }
+        }
+        OpKind::Concat => {
+            let os = io.out_shape;
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let ob = io.out_region.base;
+            for p in 0..oh * ow {
+                let mut coff = 0usize;
+                for (j, xs) in io.in_shapes.iter().enumerate() {
+                    let cj = xs.c();
+                    let ib = io.in_regions[j].base;
+                    for c in 0..cj {
+                        let v = arena.load(io.dtype, ib + (p * cj + c) * t);
+                        arena.store(io.dtype, ob + (p * od + coff + c) * t, v);
+                    }
+                    coff += cj;
+                }
+            }
+        }
+        OpKind::Pad { pad } => {
+            let (xs, os) = (io.in_shapes[0], io.out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let (top, _bot, left, _right) = *pad;
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let inside = oy >= top && oy < top + ih && ox >= left && ox < left + iw;
+                    for c in 0..od {
+                        let v = if inside {
+                            arena.load(io.dtype, ib + (((oy - top) * iw + (ox - left)) * id + c) * t)
+                        } else {
+                            0.0
+                        };
+                        arena.store(io.dtype, ob + ((oy * ow + ox) * od + c) * t, v);
+                    }
+                }
+            }
+        }
+        OpKind::Softmax => {
+            let s = io.out_shape;
+            let d = s.dim(s.rank() - 1);
+            let rows = s.num_elements() / d;
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for r in 0..rows {
+                // pass 1: max
+                let mut m = f32::NEG_INFINITY;
+                for c in 0..d {
+                    m = m.max(arena.load(io.dtype, ib + (r * d + c) * t));
+                }
+                // pass 2: sum of exp
+                let mut sum = 0.0;
+                for c in 0..d {
+                    sum += (arena.load(io.dtype, ib + (r * d + c) * t) - m).exp();
+                }
+                // pass 3: re-read, write normalised
+                for c in 0..d {
+                    let v = (arena.load(io.dtype, ib + (r * d + c) * t) - m).exp() / sum;
+                    arena.store(io.dtype, ob + (r * d + c) * t, v);
+                }
+            }
+        }
+        OpKind::Reshape { .. } => {
+            let n = io.out_shape.num_elements();
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for i in 0..n {
+                let v = arena.load(io.dtype, ib + i * t);
+                arena.store(io.dtype, ob + i * t, v);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Generate deterministic pseudo-random weights for an op (used by the
+/// interpreter and validation — the paper's technique is weight-agnostic,
+/// but execution needs concrete values).
+pub fn gen_weights(op: &crate::ir::graph::OpNode, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0xD0D0_0000_0000_0000);
+    op.weights
+        .iter()
+        .map(|w| {
+            let n = w.shape.num_elements();
+            // small integer-ish weights keep i8 paths well-conditioned
+            (0..n).map(|_| (rng.range(0, 4) as f32) - 2.0).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{BinaryKind, UnaryKind};
+
+    fn f32_arena(vals: &[f32]) -> Arena {
+        let mut a = Arena::new(vals.len() * 4 + 64);
+        for (i, &v) in vals.iter().enumerate() {
+            a.poke(DType::F32, i * 4, v);
+        }
+        a
+    }
+
+    #[test]
+    fn relu_numerics_and_events() {
+        let mut a = f32_arena(&[-1.0, 2.0, -3.0, 4.0]);
+        let log = SharedLog::new();
+        a.set_sink(Some(Box::new(log.clone())));
+        let s = Shape::new(&[4]);
+        let io = OpIo {
+            in_shapes: &[&s],
+            in_regions: &[Region::new(0, 16)],
+            out_shape: &s,
+            out_region: Region::new(16, 16),
+            dtype: DType::F32,
+            weights: &[],
+        };
+        execute_op(&OpKind::Unary(UnaryKind::Relu), &io, &mut a).unwrap();
+        assert_eq!(a.read_tensor(DType::F32, Region::new(16, 16), 4), vec![0.0, 2.0, 0.0, 4.0]);
+        let events = log.take_events();
+        // 4 loads interleaved with 4 stores, perfectly diagonal (Fig 3a)
+        assert_eq!(events.len(), 8);
+        assert_eq!(events[0].kind, EventKind::Load);
+        assert_eq!(events[1].kind, EventKind::Store);
+        assert_eq!(events[0].addr, 0);
+        assert_eq!(events[1].addr, 16);
+        assert_eq!(events[7].addr as usize, 16 + 3 * 4);
+    }
+
+    #[test]
+    fn binary_add() {
+        let mut a = f32_arena(&[1.0, 2.0, 10.0, 20.0]);
+        let s = Shape::new(&[2]);
+        let io = OpIo {
+            in_shapes: &[&s, &s],
+            in_regions: &[Region::new(0, 8), Region::new(8, 8)],
+            out_shape: &s,
+            out_region: Region::new(16, 8),
+            dtype: DType::F32,
+            weights: &[],
+        };
+        execute_op(&OpKind::Binary(BinaryKind::Add), &io, &mut a).unwrap();
+        assert_eq!(a.read_tensor(DType::F32, Region::new(16, 8), 2), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn i8_saturates() {
+        let mut a = Arena::new(8);
+        a.poke(DType::I8, 0, 200.0);
+        assert_eq!(a.peek(DType::I8, 0), 127.0);
+        a.poke(DType::I8, 1, -300.0);
+        assert_eq!(a.peek(DType::I8, 1), -128.0);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut a = f32_arena(&[1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let s = Shape::new(&[2, 3]);
+        let io = OpIo {
+            in_shapes: &[&s],
+            in_regions: &[Region::new(0, 24)],
+            out_shape: &s,
+            out_region: Region::new(24, 24),
+            dtype: DType::F32,
+            weights: &[],
+        };
+        execute_op(&OpKind::Softmax, &io, &mut a).unwrap();
+        let out = a.read_tensor(DType::F32, Region::new(24, 24), 6);
+        let r0: f32 = out[..3].iter().sum();
+        let r1: f32 = out[3..].iter().sum();
+        assert!((r0 - 1.0).abs() < 1e-5 && (r1 - 1.0).abs() < 1e-5);
+        assert!(out[2] > out[1] && out[1] > out[0]);
+    }
+}

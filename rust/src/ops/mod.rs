@@ -1,0 +1,165 @@
+//! Operation behaviour: shape inference, memory-access streams, numerics.
+//!
+//! Three views of every op, kept deliberately separate because the paper's
+//! three `O_s` methods consume different ones:
+//!
+//! * [`infer_output`] — static shape inference (planner, builders).
+//! * [`access`] — the *offset-only* loop nests of §III-C: the op's loop
+//!   structure with value computation stripped, yielding one step per
+//!   output write/update. Feeds the algorithmic `O_s` method.
+//! * [`exec`] — full numeric reference implementations running over a flat
+//!   [`Arena`](exec::Arena), optionally recording every load/store/update
+//!   event. Feeds the bottom-up (Valgrind-substitute) `O_s` method, the
+//!   figure tracers, and overlap-safety validation.
+//!
+//! The loop orders of `access` and `exec` are intentionally identical to
+//! TFLite's reference kernels (low-to-high index sweeps); the test suite
+//! cross-checks the two code paths step for step.
+
+pub mod access;
+pub mod exec;
+
+use crate::ir::op::{OpKind, out_dim};
+use crate::ir::shape::Shape;
+use anyhow::{bail, ensure, Result};
+
+/// Infer the output shape of `kind` applied to `inputs`.
+pub fn infer_output(kind: &OpKind, inputs: &[&Shape]) -> Result<Shape> {
+    match kind {
+        OpKind::Conv2D(p) => {
+            ensure!(inputs.len() == 1, "conv2d takes 1 input");
+            let s = inputs[0];
+            ensure!(s.rank() == 4, "conv2d input must be NHWC");
+            let oh = out_dim(s.h(), p.kernel.0, p.stride.0, p.dilation.0, p.padding);
+            let ow = out_dim(s.w(), p.kernel.1, p.stride.1, p.dilation.1, p.padding);
+            Ok(Shape::hwc(oh, ow, p.out_channels))
+        }
+        OpKind::DepthwiseConv2D(p) => {
+            ensure!(inputs.len() == 1, "dwconv2d takes 1 input");
+            let s = inputs[0];
+            ensure!(s.rank() == 4, "dwconv2d input must be NHWC");
+            let oh = out_dim(s.h(), p.kernel.0, p.stride.0, p.dilation.0, p.padding);
+            let ow = out_dim(s.w(), p.kernel.1, p.stride.1, p.dilation.1, p.padding);
+            Ok(Shape::hwc(oh, ow, s.c() * p.depth_multiplier))
+        }
+        OpKind::Pool(p) => {
+            ensure!(inputs.len() == 1, "pool takes 1 input");
+            let s = inputs[0];
+            ensure!(s.rank() == 4, "pool input must be NHWC");
+            let oh = out_dim(s.h(), p.kernel.0, p.stride.0, 1, p.padding);
+            let ow = out_dim(s.w(), p.kernel.1, p.stride.1, 1, p.padding);
+            Ok(Shape::hwc(oh, ow, s.c()))
+        }
+        OpKind::GlobalAvgPool => {
+            ensure!(inputs.len() == 1, "gavgpool takes 1 input");
+            let s = inputs[0];
+            ensure!(s.rank() == 4, "gavgpool input must be NHWC");
+            Ok(Shape::hwc(1, 1, s.c()))
+        }
+        OpKind::Unary(_) => {
+            ensure!(inputs.len() == 1, "unary takes 1 input");
+            Ok(inputs[0].clone())
+        }
+        OpKind::Binary(_) => {
+            ensure!(inputs.len() == 2, "binary takes 2 inputs");
+            ensure!(inputs[0] == inputs[1], "binary inputs must match: {} vs {}", inputs[0], inputs[1]);
+            Ok(inputs[0].clone())
+        }
+        OpKind::FullyConnected { out_features, .. } => {
+            ensure!(inputs.len() == 1, "fc takes 1 input");
+            Ok(Shape::new(&[1, *out_features]))
+        }
+        OpKind::MatMulAccum { out_features } => {
+            ensure!(inputs.len() == 1, "matmul takes 1 input");
+            Ok(Shape::new(&[1, *out_features]))
+        }
+        OpKind::Concat => {
+            ensure!(!inputs.is_empty(), "concat needs inputs");
+            let first = inputs[0];
+            ensure!(first.rank() == 4, "concat inputs must be NHWC");
+            let mut c = 0;
+            for s in inputs {
+                ensure!(
+                    s.h() == first.h() && s.w() == first.w(),
+                    "concat spatial dims must match"
+                );
+                c += s.c();
+            }
+            Ok(Shape::hwc(first.h(), first.w(), c))
+        }
+        OpKind::Pad { pad } => {
+            ensure!(inputs.len() == 1, "pad takes 1 input");
+            let s = inputs[0];
+            ensure!(s.rank() == 4, "pad input must be NHWC");
+            Ok(Shape::hwc(s.h() + pad.0 + pad.1, s.w() + pad.2 + pad.3, s.c()))
+        }
+        OpKind::Softmax => {
+            ensure!(inputs.len() == 1, "softmax takes 1 input");
+            Ok(inputs[0].clone())
+        }
+        OpKind::Reshape { to } => {
+            ensure!(inputs.len() == 1, "reshape takes 1 input");
+            if inputs[0].num_elements() != to.num_elements() {
+                bail!(
+                    "reshape element count mismatch: {} -> {}",
+                    inputs[0].num_elements(),
+                    to.num_elements()
+                );
+            }
+            Ok(to.clone())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, Conv2DParams, DepthwiseParams, Padding};
+
+    fn conv(k: usize, s: usize, pad: Padding, oc: usize) -> OpKind {
+        OpKind::Conv2D(Conv2DParams {
+            kernel: (k, k),
+            stride: (s, s),
+            dilation: (1, 1),
+            padding: pad,
+            out_channels: oc,
+            act: Activation::None,
+        })
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let x = Shape::hwc(224, 224, 3);
+        let out = infer_output(&conv(3, 2, Padding::Same, 32), &[&x]).unwrap();
+        assert_eq!(out, Shape::hwc(112, 112, 32));
+    }
+
+    #[test]
+    fn dwconv_table1_shape() {
+        // Table I: in 112x112x96, k3 s2 SAME -> out 56x56x96
+        let x = Shape::hwc(112, 112, 96);
+        let k = OpKind::DepthwiseConv2D(DepthwiseParams {
+            kernel: (3, 3),
+            stride: (2, 2),
+            dilation: (1, 1),
+            padding: Padding::Same,
+            depth_multiplier: 1,
+            act: Activation::None,
+        });
+        assert_eq!(infer_output(&k, &[&x]).unwrap(), Shape::hwc(56, 56, 96));
+    }
+
+    #[test]
+    fn concat_channels() {
+        let a = Shape::hwc(8, 8, 3);
+        let b = Shape::hwc(8, 8, 5);
+        assert_eq!(infer_output(&OpKind::Concat, &[&a, &b]).unwrap(), Shape::hwc(8, 8, 8));
+    }
+
+    #[test]
+    fn binary_shape_mismatch_rejected() {
+        let a = Shape::hwc(8, 8, 3);
+        let b = Shape::hwc(8, 8, 4);
+        assert!(infer_output(&OpKind::Binary(crate::ir::op::BinaryKind::Add), &[&a, &b]).is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! The §III-C *algorithmic method*: the op's loop nest with value
+//! computation removed, folding read/write offsets into `O_s`.
+//!
+//! Two implementations:
+//!
+//! * [`os_paper_arrays`] — the faithful transcription of the paper's
+//!   Algorithm 2: materialise `minR` / `maxW` arrays of length `Steps`,
+//!   reverse-pass to enforce "minimum of all future iterations", then
+//!   fold `minD`.
+//! * [`os_streaming`] — an `O(1)`-memory equivalent. Because `maxW[i]` is
+//!   a running maximum (monotone non-decreasing),
+//!   `min_i (minR[i] − maxW[i]) = min_i (r_i − maxW[i])` where `r_i` is
+//!   the *raw* minimum read of step `i` alone — so a single forward pass
+//!   suffices. The test suite proves the two agree on every op family;
+//!   the equivalence is also an ablation entry in `benches/os_methods.rs`.
+
+use super::{os_from_mind, SafeOverlap};
+use crate::ir::op::OpKind;
+use crate::ir::shape::Shape;
+use crate::ir::DType;
+use crate::ops::access::{for_each_step, step_count};
+
+/// Streaming algorithmic `O_s` (exact, one forward pass, no arrays).
+///
+/// Window ops with position-constant read sets (conv2d, dwconv with
+/// depth multiplier 1, pooling) collapse to one fold step per *spatial
+/// position* instead of per element — within a position the reads' lower
+/// envelope is constant while writes ascend, so `minR − maxW` is minimal
+/// at the position's last step (§III-C notes the same simplification).
+/// `os_paper_arrays` keeps element granularity; the test suite proves the
+/// two agree on randomized sweeps. This fast path took the full-catalog
+/// `OsTable` build from ~10 ms to µs per model (EXPERIMENTS.md §Perf).
+pub fn os_streaming(
+    kind: &OpKind,
+    in_shapes: &[&Shape],
+    out_shape: &Shape,
+    dtype: DType,
+) -> SafeOverlap {
+    if let Some(min_d) = positional_min_d(kind, in_shapes, out_shape) {
+        return finish(vec![min_d], in_shapes, out_shape, dtype);
+    }
+    let n_in = in_shapes.len();
+    let mut max_w: i64 = i64::MIN;
+    let mut min_d = vec![i64::MAX; n_in];
+    for_each_step(kind, in_shapes, out_shape, &mut |w, reads| {
+        // reads of a step precede its write, but the paper's Algorithm 2
+        // pairs minR[i] against maxW[i] *including* step i's write; we
+        // reproduce that (conservative by design, see §III-A).
+        max_w = max_w.max(w as i64);
+        for (j, r) in reads.iter().enumerate() {
+            if let Some(r) = r {
+                min_d[j] = min_d[j].min(*r as i64 - max_w);
+            }
+        }
+    });
+    finish(min_d, in_shapes, out_shape, dtype)
+}
+
+/// Algorithm 2 exactly as printed: arrays `minR`/`maxW` of length `Steps`,
+/// reverse pass, fold. Use [`os_streaming`] for large ops.
+pub fn os_paper_arrays(
+    kind: &OpKind,
+    in_shapes: &[&Shape],
+    out_shape: &Shape,
+    dtype: DType,
+) -> SafeOverlap {
+    let n_in = in_shapes.len();
+    let steps = step_count(kind, in_shapes, out_shape);
+    // minR[j][i], maxW[i]
+    let mut min_r = vec![vec![i64::MAX; steps]; n_in];
+    let mut max_w = vec![0i64; steps]; // filled below
+    let mut max_f: i64 = i64::MIN;
+    let mut it = 0usize;
+    for_each_step(kind, in_shapes, out_shape, &mut |w, reads| {
+        for (j, r) in reads.iter().enumerate() {
+            min_r[j][it] = r.map(|r| r as i64).unwrap_or(i64::MAX);
+        }
+        max_f = max_f.max(w as i64);
+        max_w[it] = max_f;
+        it += 1;
+    });
+    debug_assert_eq!(it, steps);
+    // reverse pass: minR[i] = min(minR[i], minR[i+1..])
+    let mut min_d = vec![i64::MAX; n_in];
+    for (j, col) in min_r.iter_mut().enumerate() {
+        let mut run = i64::MAX;
+        for i in (0..steps).rev() {
+            run = run.min(col[i]);
+            col[i] = run;
+            if run != i64::MAX {
+                min_d[j] = min_d[j].min(run - max_w[i]);
+            }
+        }
+    }
+    finish(min_d, in_shapes, out_shape, dtype)
+}
+
+/// Position-granular exact `minD` for window ops whose per-step minimum
+/// read is constant across the channel sweep of a spatial position.
+/// Returns `None` for kinds that need the generic element stream.
+fn positional_min_d(kind: &OpKind, in_shapes: &[&Shape], out_shape: &Shape) -> Option<i64> {
+    use crate::ir::op::pad_before;
+    // (kernel, stride, dilation, steps-per-position, read offset of the
+    //  position's min cell for the *lowest* channel step)
+    let (kernel, stride, dilation, per_pos, dw_like) = match kind {
+        OpKind::Conv2D(p) => (p.kernel, p.stride, p.dilation, out_shape.c(), false),
+        OpKind::DepthwiseConv2D(p) if p.depth_multiplier == 1 => {
+            (p.kernel, p.stride, p.dilation, out_shape.c(), true)
+        }
+        OpKind::Pool(p) => (p.kernel, p.stride, (1, 1), out_shape.c(), true),
+        _ => return None,
+    };
+    let xs = in_shapes[0];
+    let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+    let (oh, ow) = (out_shape.h(), out_shape.w());
+    let ph = pad_before(ih, oh, kernel.0, stride.0, dilation.0) as isize;
+    let pw = pad_before(iw, ow, kernel.1, stride.1, dilation.1) as isize;
+    let min_cell = |o: usize, s: usize, pad: isize, k: usize, d: usize, lim: usize| -> Option<usize> {
+        let base = o as isize * s as isize - pad;
+        (0..k)
+            .map(|t| base + (t * d) as isize)
+            .find(|&v| v >= 0 && (v as usize) < lim)
+            .map(|v| v as usize)
+    };
+    // per-row min cells are reusable across the row sweep
+    let y_min: Vec<Option<usize>> = (0..oh)
+        .map(|oy| min_cell(oy, stride.0, ph, kernel.0, dilation.0, ih))
+        .collect();
+    let x_min: Vec<Option<usize>> = (0..ow)
+        .map(|ox| min_cell(ox, stride.1, pw, kernel.1, dilation.1, iw))
+        .collect();
+    let c = per_pos as i64;
+    let mut suffix = i64::MAX; // min read over future positions (lowest channel)
+    let mut min_d = i64::MAX;
+    for pos in (0..oh * ow).rev() {
+        let (oy, ox) = (pos / ow, pos % ow);
+        let own = match (y_min[oy], x_min[ox]) {
+            (Some(y), Some(x)) => Some(((y * iw + x) * id) as i64),
+            _ => None,
+        };
+        let i_last = pos as i64 * c + (c - 1);
+        // constraint from this position's own reads: for dw/pool the read
+        // tracks the channel (diff constant); for conv reads stay at
+        // channel 0 (diff minimal at the last step)
+        if let Some(o) = own {
+            let own_d = if dw_like { o - pos as i64 * c } else { o - i_last };
+            min_d = min_d.min(own_d);
+        }
+        // constraint from future positions' lowest reads vs this
+        // position's last write
+        if suffix != i64::MAX {
+            min_d = min_d.min(suffix - i_last);
+        }
+        if let Some(o) = own {
+            suffix = suffix.min(o);
+        }
+    }
+    Some(min_d)
+}
+
+fn finish(min_d: Vec<i64>, in_shapes: &[&Shape], out_shape: &Shape, dtype: DType) -> SafeOverlap {
+    let per_input = min_d
+        .into_iter()
+        .enumerate()
+        .map(|(j, d)| {
+            if d == i64::MAX {
+                // input never read: any overlap is safe up to the cap
+                super::os_cap(in_shapes[j], out_shape, dtype)
+            } else {
+                os_from_mind(d, in_shapes[j], out_shape, dtype)
+            }
+        })
+        .collect();
+    SafeOverlap { per_input }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{
+        Activation, BinaryKind, Conv2DParams, DepthwiseParams, Padding, PoolKind, PoolParams,
+        UnaryKind,
+    };
+    use crate::ops::infer_output;
+
+    fn both(kind: &OpKind, ins: &[&Shape], dtype: DType) -> (SafeOverlap, SafeOverlap) {
+        let out = infer_output(kind, ins).unwrap();
+        (
+            os_streaming(kind, ins, &out, dtype),
+            os_paper_arrays(kind, ins, &out, dtype),
+        )
+    }
+
+    #[test]
+    fn relu_os_is_output_buffer_size() {
+        // §III-A: in-place reuse is the special case O_s = OB_s.
+        let s = Shape::hwc(7, 5, 3);
+        let (a, b) = both(&OpKind::Unary(UnaryKind::Relu), &[&s], DType::F32);
+        assert_eq!(a, b);
+        assert_eq!(a.single(), s.num_elements() * 4);
+    }
+
+    #[test]
+    fn binary_os_is_output_buffer_size_per_input() {
+        let s = Shape::hwc(3, 4, 2);
+        let (a, b) = both(&OpKind::Binary(BinaryKind::Add), &[&s, &s], DType::F32);
+        assert_eq!(a, b);
+        assert_eq!(a.per_input, vec![s.num_elements() * 4; 2]);
+    }
+
+    #[test]
+    fn matmul_os_is_one_element() {
+        // Fig 3b: accumulating matmul — effectively no usable overlap.
+        let x = Shape::new(&[1, 8]);
+        let k = OpKind::MatMulAccum { out_features: 6 };
+        let (a, b) = both(&k, &[&x], DType::F32);
+        assert_eq!(a, b);
+        // the zero-init sweep writes out[N-1] before any input read, so
+        // minD = 0 - (N-1) and O_s = one element.
+        assert_eq!(a.single(), 4);
+    }
+
+    #[test]
+    fn table1_dwconv_exact_matches_paper() {
+        // §III-E: exact algorithmic O_s of the Table-I op = 1,204,224 B.
+        let x = Shape::hwc(112, 112, 96);
+        let k = OpKind::DepthwiseConv2D(DepthwiseParams {
+            kernel: (3, 3),
+            stride: (2, 2),
+            dilation: (1, 1),
+            padding: Padding::Same,
+            depth_multiplier: 1,
+            act: Activation::None,
+        });
+        let out = infer_output(&k, &[&x]).unwrap();
+        assert_eq!(out, Shape::hwc(56, 56, 96));
+        let os = os_streaming(&k, &[&x], &out, DType::F32);
+        assert_eq!(os.single(), 1_204_224);
+    }
+
+    #[test]
+    fn conv_1x1_channel_doubling_os() {
+        // §IV: 1x1 conv doubling channels overlaps by a few elements less
+        // than the input buffer size: O_s = IB - (D_in - 1) elements.
+        let x = Shape::hwc(4, 4, 8);
+        let k = OpKind::Conv2D(Conv2DParams {
+            kernel: (1, 1),
+            stride: (1, 1),
+            dilation: (1, 1),
+            padding: Padding::Same,
+            out_channels: 16,
+            act: Activation::None,
+        });
+        let out = infer_output(&k, &[&x]).unwrap();
+        let os = os_streaming(&k, &[&x], &out, DType::F32);
+        let ib = x.num_elements() * 4;
+        assert_eq!(os.single(), ib - (8 - 1) * 4);
+    }
+
+    #[test]
+    fn streaming_equals_paper_arrays_on_sweep() {
+        let mut rng = crate::util::rng::Rng::new(0xA11C);
+        for _ in 0..40 {
+            let h = rng.range(3, 12);
+            let w = rng.range(3, 12);
+            let c = rng.range(1, 6);
+            let x = Shape::hwc(h, w, c);
+            let kinds: Vec<OpKind> = vec![
+                OpKind::Conv2D(Conv2DParams {
+                    kernel: (rng.range(1, 3), rng.range(1, 3)),
+                    stride: (rng.range(1, 2), rng.range(1, 2)),
+                    dilation: (1, 1),
+                    padding: if rng.chance(0.5) { Padding::Same } else { Padding::Valid },
+                    out_channels: rng.range(1, 8),
+                    act: Activation::None,
+                }),
+                OpKind::DepthwiseConv2D(DepthwiseParams {
+                    kernel: (rng.range(1, 3), rng.range(1, 3)),
+                    stride: (rng.range(1, 2), rng.range(1, 2)),
+                    dilation: (1, 1),
+                    padding: Padding::Same,
+                    depth_multiplier: rng.range(1, 2),
+                    act: Activation::None,
+                }),
+                OpKind::Pool(PoolParams {
+                    kind: if rng.chance(0.5) { PoolKind::Max } else { PoolKind::Avg },
+                    kernel: (2, 2),
+                    stride: (2, 2),
+                    padding: Padding::Valid,
+                }),
+                OpKind::Softmax,
+                OpKind::Pad { pad: (1, 1, 1, 1) },
+            ];
+            for k in &kinds {
+                let (a, b) = both(k, &[&x], DType::F32);
+                assert_eq!(a, b, "mismatch for {k:?} on {x}");
+            }
+        }
+    }
+}

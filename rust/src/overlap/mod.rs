@@ -1,0 +1,101 @@
+//! Safe buffer overlap (`O_s`) computation — §III of the paper.
+//!
+//! `O_s` is the maximum number of bytes the *start* of an op's input
+//! buffer may overlap the *end* of its output buffer without any value
+//! being read after the overlapped output write clobbers it (Fig 4).
+//! Memory saved per op equals the overlap itself.
+//!
+//! Three engines, in increasing abstraction / decreasing cost
+//! (§III-B/C/D):
+//!
+//! * [`trace`] — **bottom-up**: observe the load/store/update events of a
+//!   real execution (our Valgrind substitute) and fold them streaming.
+//! * [`algorithmic`] — strip value computation from the reference loop
+//!   nest, keep offsets, fold `minR`/`maxW`. Exact, costs `O(Steps)`.
+//! * [`analytic`] — closed-form truncated-linear lower bound
+//!   (Eqs 7–15): costs `O(1)`, may under-estimate by design (§III-E).
+//!
+//! All engines use *element* units internally and return bytes that are
+//! multiples of the element size; the allocator only ever applies overlaps
+//! in element-size multiples, which keeps byte- and element-granularity
+//! analyses equivalent.
+//!
+//! Conventions (§III-A): implementations sweep from low to high indices;
+//! within a step, reads precede the write (accumulate-in-register or
+//! read-modify-write). Both match the reference kernels in
+//! [`crate::ops`].
+
+pub mod algorithmic;
+pub mod analytic;
+pub mod trace;
+
+use crate::ir::op::OpKind;
+use crate::ir::shape::Shape;
+use crate::ir::DType;
+
+/// Safe overlap in **bytes** for each activation input of an op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SafeOverlap {
+    pub per_input: Vec<usize>,
+}
+
+impl SafeOverlap {
+    /// Overlap for a single-input op.
+    pub fn single(&self) -> usize {
+        self.per_input[0]
+    }
+}
+
+/// Which engine computed an overlap — used in reports and benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    BottomUp,
+    Algorithmic,
+    Analytic,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::BottomUp => "bottom-up",
+            Method::Algorithmic => "algorithmic",
+            Method::Analytic => "analytic",
+        }
+    }
+}
+
+/// Upper cap for `O_s`: with the input completely below the output start
+/// the buffers are disjoint again, so a larger value buys nothing.
+pub(crate) fn os_cap(in_shape: &Shape, out_shape: &Shape, dtype: DType) -> usize {
+    (in_shape.num_elements() + out_shape.num_elements()) * dtype.size_bytes()
+}
+
+/// Convert an element-unit `minD` into the final byte `O_s`
+/// (`O_s = OB_s + minD · T_s`, Eq 1), clamped to `[0, cap]`.
+pub(crate) fn os_from_mind(
+    min_d: i64,
+    in_shape: &Shape,
+    out_shape: &Shape,
+    dtype: DType,
+) -> usize {
+    let t = dtype.size_bytes() as i64;
+    let ob = (out_shape.num_elements() * dtype.size_bytes()) as i64;
+    let cap = os_cap(in_shape, out_shape, dtype) as i64;
+    (ob + min_d * t).clamp(0, cap) as usize
+}
+
+/// Dispatch an engine by [`Method`]. Bottom-up requires executing the op,
+/// so it generates deterministic dummy data internally.
+pub fn compute_os(
+    method: Method,
+    kind: &OpKind,
+    in_shapes: &[&Shape],
+    out_shape: &Shape,
+    dtype: DType,
+) -> SafeOverlap {
+    match method {
+        Method::Algorithmic => algorithmic::os_streaming(kind, in_shapes, out_shape, dtype),
+        Method::Analytic => analytic::os_analytic(kind, in_shapes, out_shape, dtype),
+        Method::BottomUp => trace::os_bottom_up(kind, in_shapes, out_shape, dtype),
+    }
+}

@@ -1,0 +1,278 @@
+//! The §III-B *bottom-up method*: derive `O_s` from the observed memory
+//! events of an actual execution.
+//!
+//! The authors patched Valgrind to watch a compiled TFLite binary and
+//! signalled buffer locations over a FIFO; our substitute observes the
+//! same information at the same abstraction level — every load/store/
+//! update of the input/output buffers during a real run of the reference
+//! kernel (see DESIGN.md substitution table). The probe is an
+//! [`EventSink`], so it can watch any execution the [`Arena`] performs,
+//! including full-model runs.
+//!
+//! Folding is streaming (no event storage): every read is paired with the
+//! maximum output write up to *and including the next write after it*,
+//! which reproduces Algorithm 2's same-step pairing (reads of a step
+//! precede its write). The test suite asserts bottom-up == algorithmic on
+//! every op family.
+
+use super::{os_from_mind, SafeOverlap};
+use crate::ir::op::OpKind;
+use crate::ir::shape::Shape;
+use crate::ir::DType;
+use crate::ops::exec::{execute_op, Arena, EventKind, EventSink, OpIo, Region};
+
+/// Streaming `O_s` probe over memory events.
+///
+/// Configure with the op's buffer regions (as laid out in the traced run —
+/// non-overlapping), then install as the arena's sink.
+pub struct OverlapProbe {
+    in_regions: Vec<Region>,
+    out_region: Region,
+    elem: usize,
+    /// running max output write (element units), -inf until first write
+    max_w: i64,
+    /// min pending read per input since the last write
+    pending: Vec<i64>,
+    /// folded minD per input
+    min_d: Vec<i64>,
+}
+
+impl OverlapProbe {
+    pub fn new(in_regions: Vec<Region>, out_region: Region, dtype: DType) -> Self {
+        let n = in_regions.len();
+        OverlapProbe {
+            in_regions,
+            out_region,
+            elem: dtype.size_bytes(),
+            max_w: i64::MIN,
+            pending: vec![i64::MAX; n],
+            min_d: vec![i64::MAX; n],
+        }
+    }
+
+    fn flush_pending(&mut self) {
+        if self.max_w == i64::MIN {
+            return;
+        }
+        for j in 0..self.pending.len() {
+            if self.pending[j] != i64::MAX {
+                self.min_d[j] = self.min_d[j].min(self.pending[j] - self.max_w);
+                self.pending[j] = i64::MAX;
+            }
+        }
+    }
+
+    /// Fold trailing reads and produce per-input `O_s` in bytes.
+    pub fn finish(mut self, in_shapes: &[&Shape], out_shape: &Shape, dtype: DType) -> SafeOverlap {
+        self.flush_pending();
+        let per_input = self
+            .min_d
+            .iter()
+            .enumerate()
+            .map(|(j, &d)| {
+                if d == i64::MAX {
+                    super::os_cap(in_shapes[j], out_shape, dtype)
+                } else {
+                    os_from_mind(d, in_shapes[j], out_shape, dtype)
+                }
+            })
+            .collect();
+        SafeOverlap { per_input }
+    }
+}
+
+impl EventSink for OverlapProbe {
+    fn event(&mut self, kind: EventKind, addr: usize, _len: usize) {
+        match kind {
+            EventKind::Load => {
+                for (j, r) in self.in_regions.iter().enumerate() {
+                    if r.contains(addr) {
+                        let off = ((addr - r.base) / self.elem) as i64;
+                        if off < self.pending[j] {
+                            self.pending[j] = off;
+                        }
+                        // input regions may not overlap in the traced run
+                        break;
+                    }
+                }
+            }
+            EventKind::Store | EventKind::Update => {
+                if self.out_region.contains(addr) {
+                    let off = ((addr - self.out_region.base) / self.elem) as i64;
+                    if off > self.max_w {
+                        self.max_w = off;
+                    }
+                    self.flush_pending();
+                }
+            }
+        }
+    }
+}
+
+/// Compute bottom-up `O_s` by actually executing `kind` on deterministic
+/// dummy data with the probe attached — the whole §III-B pipeline
+/// (build test binary → debug → fold) collapsed into one call.
+pub fn os_bottom_up(
+    kind: &OpKind,
+    in_shapes: &[&Shape],
+    out_shape: &Shape,
+    dtype: DType,
+) -> SafeOverlap {
+    let t = dtype.size_bytes();
+    // lay out input buffers then the output buffer, disjoint
+    let mut base = 0usize;
+    let in_regions: Vec<Region> = in_shapes
+        .iter()
+        .map(|s| {
+            let r = Region::new(base, s.num_elements() * t);
+            base += r.len;
+            r
+        })
+        .collect();
+    let out_region = Region::new(base, out_shape.num_elements() * t);
+    let mut arena = Arena::new(out_region.end());
+
+    // deterministic input data
+    let mut rng = crate::util::rng::Rng::new(0xB077_0409);
+    for (s, r) in in_shapes.iter().zip(&in_regions) {
+        let data: Vec<f32> = (0..s.num_elements())
+            .map(|_| (rng.range(0, 8) as f32) - 4.0)
+            .collect();
+        arena.write_tensor(dtype, *r, &data);
+    }
+
+    // deterministic weights, if the op needs them
+    let weights = dummy_weights(kind, in_shapes, dtype);
+
+    let probe = SharedProbe::new(OverlapProbe::new(in_regions.clone(), out_region, dtype));
+    arena.set_sink(Some(Box::new(probe.clone())));
+    let io = OpIo {
+        in_shapes,
+        in_regions: &in_regions,
+        out_shape,
+        out_region,
+        dtype,
+        weights: &weights,
+    };
+    execute_op(kind, &io, &mut arena).expect("traced execution failed");
+    arena.set_sink(None);
+    probe.take().finish(in_shapes, out_shape, dtype)
+}
+
+/// Shared handle to an [`OverlapProbe`] so it can serve as the arena's
+/// boxed sink and still be recovered afterwards.
+#[derive(Clone)]
+pub struct SharedProbe(std::rc::Rc<std::cell::RefCell<Option<OverlapProbe>>>);
+
+impl SharedProbe {
+    pub fn new(p: OverlapProbe) -> Self {
+        SharedProbe(std::rc::Rc::new(std::cell::RefCell::new(Some(p))))
+    }
+
+    /// Remove the probe (panics if already taken).
+    pub fn take(&self) -> OverlapProbe {
+        self.0.borrow_mut().take().expect("probe already taken")
+    }
+}
+
+impl EventSink for SharedProbe {
+    fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
+        if let Some(p) = self.0.borrow_mut().as_mut() {
+            p.event(kind, addr, len);
+        }
+    }
+}
+
+/// Deterministic weights sized for `kind` (values irrelevant to `O_s`).
+pub fn dummy_weights(kind: &OpKind, in_shapes: &[&Shape], _dtype: DType) -> Vec<Vec<f32>> {
+    let mut rng = crate::util::rng::Rng::new(0x5EED);
+    let mut mk = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect() };
+    match kind {
+        OpKind::Conv2D(p) => {
+            let id = in_shapes[0].c();
+            vec![
+                mk(p.kernel.0 * p.kernel.1 * id * p.out_channels),
+                mk(p.out_channels),
+            ]
+        }
+        OpKind::DepthwiseConv2D(p) => {
+            let id = in_shapes[0].c();
+            vec![
+                mk(p.kernel.0 * p.kernel.1 * id * p.depth_multiplier),
+                mk(id * p.depth_multiplier),
+            ]
+        }
+        OpKind::FullyConnected { out_features, .. } | OpKind::MatMulAccum { out_features } => {
+            let k = in_shapes[0].num_elements();
+            vec![mk(k * out_features), mk(*out_features)]
+        }
+        _ => vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, BinaryKind, Conv2DParams, DepthwiseParams, Padding, UnaryKind};
+    use crate::ops::infer_output;
+    use crate::overlap::algorithmic::os_streaming;
+
+    fn check_matches_algorithmic(kind: &OpKind, ins: &[&Shape], dtype: DType) {
+        let out = infer_output(kind, ins).unwrap();
+        let bu = os_bottom_up(kind, ins, &out, dtype);
+        let alg = os_streaming(kind, ins, &out, dtype);
+        assert_eq!(bu, alg, "bottom-up != algorithmic for {kind:?}");
+    }
+
+    #[test]
+    fn bottom_up_matches_algorithmic_elementwise() {
+        let s = Shape::hwc(4, 5, 3);
+        check_matches_algorithmic(&OpKind::Unary(UnaryKind::Relu), &[&s], DType::F32);
+        check_matches_algorithmic(&OpKind::Binary(BinaryKind::Add), &[&s, &s], DType::I8);
+    }
+
+    #[test]
+    fn bottom_up_matches_algorithmic_convs() {
+        let x = Shape::hwc(10, 10, 3);
+        check_matches_algorithmic(
+            &OpKind::Conv2D(Conv2DParams {
+                kernel: (3, 3),
+                stride: (2, 2),
+                dilation: (1, 1),
+                padding: Padding::Same,
+                out_channels: 8,
+                act: Activation::Relu,
+            }),
+            &[&x],
+            DType::F32,
+        );
+        check_matches_algorithmic(
+            &OpKind::DepthwiseConv2D(DepthwiseParams {
+                kernel: (3, 3),
+                stride: (1, 1),
+                dilation: (1, 1),
+                padding: Padding::Same,
+                depth_multiplier: 2,
+                act: Activation::None,
+            }),
+            &[&x],
+            DType::I8,
+        );
+    }
+
+    #[test]
+    fn bottom_up_matches_algorithmic_matmul_and_softmax() {
+        let x = Shape::new(&[1, 12]);
+        check_matches_algorithmic(&OpKind::MatMulAccum { out_features: 7 }, &[&x], DType::F32);
+        check_matches_algorithmic(
+            &OpKind::FullyConnected {
+                out_features: 5,
+                act: Activation::None,
+            },
+            &[&x],
+            DType::F32,
+        );
+        let r = Shape::new(&[3, 9]);
+        check_matches_algorithmic(&OpKind::Softmax, &[&r], DType::F32);
+    }
+}

@@ -1,0 +1,578 @@
+//! Buffer pre-allocation: the paper's *modified heap* allocator (§IV)
+//! with the diagonal-memory-optimisation overlap relaxation (§II-D).
+//!
+//! The baseline places every arena tensor at the lowest offset that is
+//! disjoint from all already-placed, scope-overlapping buffers, choosing
+//! the next buffer heuristically (frontier member placeable lowest). DMO
+//! relaxes exactly one constraint class: the input of an op may share
+//! bytes with that op's output, provided the input *dies* at the op and
+//! `out_end − in_start ≤ O_s` — i.e. the start of the input overlaps at
+//! most `O_s` bytes of the end of the output (Fig 4).
+//!
+//! Allocation is a pre-inference step (the overlap geometry is only valid
+//! for the analysed execution order), matching §II-D: "this approach can
+//! only be used as a pre-allocation method".
+
+use super::scope::{Scope, Scopes};
+use crate::ir::graph::{Graph, OpId, TensorId, TensorKind};
+use crate::overlap::{compute_os, Method};
+
+/// Cached `O_s` values per op per input index, in bytes.
+#[derive(Debug, Clone)]
+pub struct OsTable {
+    pub per_op: Vec<Vec<usize>>,
+    pub method: Method,
+}
+
+impl OsTable {
+    /// Compute `O_s` for every (op, input) in `graph` with `method`.
+    pub fn build(graph: &Graph, method: Method) -> OsTable {
+        let per_op = graph
+            .ops
+            .iter()
+            .map(|op| {
+                let in_shapes: Vec<_> = op.inputs.iter().map(|&t| &graph.tensor(t).shape).collect();
+                let out_shape = &graph.tensor(op.output).shape;
+                let dtype = graph.tensor(op.output).dtype;
+                compute_os(method, &op.kind, &in_shapes, out_shape, dtype).per_input
+            })
+            .collect();
+        OsTable { per_op, method }
+    }
+
+    /// A table of zeros — disables all overlapping (baseline allocator).
+    pub fn disabled(graph: &Graph) -> OsTable {
+        OsTable {
+            per_op: graph.ops.iter().map(|op| vec![0; op.inputs.len()]).collect(),
+            method: Method::Analytic,
+        }
+    }
+
+    pub fn get(&self, op: OpId, input_idx: usize) -> usize {
+        self.per_op[op.0][input_idx]
+    }
+}
+
+/// Seed / fallback direction (§IV: forwards seeds the model input at
+/// offset zero, backwards seeds the model output).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Backward,
+}
+
+pub const DIRECTIONS: [Direction; 2] = [Direction::Forward, Direction::Backward];
+
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Forward => "forward",
+            Direction::Backward => "backward",
+        }
+    }
+}
+
+/// Which order tensors are offered to the heap.
+///
+/// The paper describes a scope-frontier walk seeded at an input or output
+/// buffer (§IV); TFLite Micro's greedy planner instead offers buffers in
+/// decreasing size order. Both are heuristics for the same NP-hard
+/// problem ("no guarantee of optimality", §IV) and neither dominates;
+/// [`super::plan_graph`] sweeps all and keeps the best, exactly as the
+/// paper sweeps serialisation orders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Heuristic {
+    /// §IV frontier walk, seeded per [`Direction`].
+    Frontier(Direction),
+    /// Decreasing buffer size (TFLite-Micro-style greedy).
+    SizeDesc,
+    /// Pair-aware frontier: seed the largest tensor, then repeatedly place
+    /// the unplaced tensor most constrained by what is already down —
+    /// preferring tensors with a DMO pair relation to a placed tensor,
+    /// larger first. This follows the overlap chains outward from the
+    /// peak-defining op, which is how the diagonal packings of Fig 2b
+    /// arise (the dying input nests into its consumer's output *before*
+    /// an unrelated tensor can squat on the low addresses).
+    PairFrontier,
+}
+
+/// Every allocation-order heuristic, for best-of sweeps.
+pub const HEURISTICS: [Heuristic; 4] = [
+    Heuristic::Frontier(Direction::Forward),
+    Heuristic::Frontier(Direction::Backward),
+    Heuristic::SizeDesc,
+    Heuristic::PairFrontier,
+];
+
+impl Heuristic {
+    pub fn name(self) -> &'static str {
+        match self {
+            Heuristic::Frontier(Direction::Forward) => "frontier-fwd",
+            Heuristic::Frontier(Direction::Backward) => "frontier-bwd",
+            Heuristic::SizeDesc => "size-desc",
+            Heuristic::PairFrontier => "pair-frontier",
+        }
+    }
+}
+
+/// A DMO overlap actually applied in a layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AppliedOverlap {
+    pub op: OpId,
+    pub input: TensorId,
+    pub output: TensorId,
+    /// bytes shared between the two buffers
+    pub bytes: usize,
+}
+
+/// Result of allocation: byte offsets for every arena tensor.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// Indexed by `TensorId`; `None` for tensors with no scope (unused).
+    pub offsets: Vec<Option<usize>>,
+    /// Arena size = max(offset + size).
+    pub peak: usize,
+    /// Overlaps the layout exploits (for reports and Fig 2b/9b).
+    pub applied: Vec<AppliedOverlap>,
+}
+
+/// Precomputed DMO pair relation: `(input, output) → O_s budget` for
+/// every op whose input dies at it. Built once per allocation/check —
+/// the placement loop is O(n²) pairs, and resolving producers on the fly
+/// made each pair O(ops) (the planner perf pass measured 3.05 s → see
+/// EXPERIMENTS.md §Perf).
+pub struct PairTable {
+    budgets: std::collections::HashMap<(usize, usize), usize>,
+}
+
+impl PairTable {
+    pub fn build(graph: &Graph, scopes: &Scopes, os: &OsTable) -> PairTable {
+        let mut budgets = std::collections::HashMap::new();
+        for (k, op) in graph.ops.iter().enumerate() {
+            for (idx, &inp) in op.inputs.iter().enumerate() {
+                if inp == op.output || !scopes.dies_at(inp, OpId(k)) {
+                    continue;
+                }
+                let b = os.get(OpId(k), idx);
+                budgets
+                    .entry((inp.0, op.output.0))
+                    .and_modify(|cur: &mut usize| *cur = (*cur).min(b))
+                    .or_insert(b);
+            }
+        }
+        PairTable { budgets }
+    }
+
+    /// Budget for `input` overlapping the tail of `output`, if related.
+    #[inline]
+    pub fn budget(&self, input: TensorId, output: TensorId) -> Option<usize> {
+        self.budgets.get(&(input.0, output.0)).copied()
+    }
+
+    /// Does `t` participate in any pair relation (either side)?
+    pub fn related(&self, t: TensorId) -> impl Iterator<Item = usize> + '_ {
+        let tid = t.0;
+        self.budgets
+            .keys()
+            .filter(move |(a, b)| *a == tid || *b == tid)
+            .map(move |(a, b)| if *a == tid { *b } else { *a })
+    }
+}
+
+/// One pairwise constraint between a tensor being placed and an already
+/// placed tensor.
+enum Constraint {
+    /// Must not share any byte.
+    Disjoint,
+    /// May overlap; safe iff disjoint OR `out_end − in_start ≤ budget`,
+    /// where the placed tensor is the op's output.
+    PairPlacedOutput { budget: usize },
+    /// May overlap; the placed tensor is the dying input, the candidate is
+    /// the output. Safe iff disjoint OR `cand_end − placed_start ≤ budget`.
+    PairPlacedInput { budget: usize },
+}
+
+/// Lowest feasible offset for tensor `t` of `size` bytes with alignment
+/// `align`, against `placed = [(offset, size, constraint)]`.
+fn lowest_feasible(placed: &[(usize, usize, Constraint)], size: usize, align: usize) -> usize {
+    let align_up = |x: usize| x.div_ceil(align) * align;
+    let mut x = 0usize;
+    'retry: loop {
+        for &(u_off, u_len, ref c) in placed {
+            let u_end = u_off + u_len;
+            let disjoint = x >= u_end || x + size <= u_off;
+            let ok = match c {
+                Constraint::Disjoint => disjoint,
+                Constraint::PairPlacedOutput { budget } => {
+                    // candidate is the input: in_start = x, out_end = u_end
+                    disjoint || u_end.saturating_sub(x) <= *budget
+                }
+                Constraint::PairPlacedInput { budget } => {
+                    // candidate is the output: out_end = x + size
+                    disjoint || (x + size).saturating_sub(u_off) <= *budget
+                }
+            };
+            if !ok {
+                // advance past the violation and rescan
+                let next = match c {
+                    Constraint::Disjoint => u_end,
+                    Constraint::PairPlacedOutput { budget } => u_end.saturating_sub(*budget).max(x + 1),
+                    Constraint::PairPlacedInput { .. } => u_end,
+                };
+                x = align_up(next.max(x + 1));
+                continue 'retry;
+            }
+        }
+        return x;
+    }
+}
+
+/// Collect the placement constraints for unplaced tensor `t` against all
+/// placed, scope-overlapping tensors.
+fn constraints_for(
+    graph: &Graph,
+    scopes: &Scopes,
+    pairs: &PairTable,
+    offsets: &[Option<usize>],
+    t: TensorId,
+) -> Vec<(usize, usize, Constraint)> {
+    let ts = scopes.scopes[t.0].unwrap();
+    let mut placed = Vec::new();
+    for u0 in 0..graph.tensors.len() {
+        let u = TensorId(u0);
+        let (Some(u_off), Some(us)) = (offsets[u0], scopes.scopes[u0]) else {
+            continue;
+        };
+        if !ts.overlaps(&us) {
+            continue;
+        }
+        let u_len = graph.tensor(u).size_bytes();
+        let c = if let Some(b) = pairs.budget(t, u) {
+            Constraint::PairPlacedOutput { budget: b }
+        } else if let Some(b) = pairs.budget(u, t) {
+            Constraint::PairPlacedInput { budget: b }
+        } else {
+            Constraint::Disjoint
+        };
+        placed.push((u_off, u_len, c));
+    }
+    placed
+}
+
+/// Allocate every arena tensor of `graph` under `order`/`scopes`.
+///
+/// `os` supplies per-(op, input) overlap budgets; pass
+/// [`OsTable::disabled`] for the non-DMO baseline.
+pub fn allocate(graph: &Graph, scopes: &Scopes, os: &OsTable, heuristic: Heuristic) -> Allocation {
+    let pairs = PairTable::build(graph, scopes, os);
+    let n = graph.tensors.len();
+    let mut offsets: Vec<Option<usize>> = vec![None; n];
+    let live: Vec<Option<Scope>> = scopes.scopes.clone();
+
+    let arena_tensors: Vec<TensorId> = (0..n)
+        .map(TensorId)
+        .filter(|&t| live[t.0].is_some())
+        .collect();
+
+    match heuristic {
+        Heuristic::SizeDesc => {
+            // decreasing size, ties by earlier scope start then id
+            let mut order: Vec<TensorId> = arena_tensors.clone();
+            order.sort_by_key(|&t| {
+                (
+                    usize::MAX - graph.tensor(t).size_bytes(),
+                    live[t.0].unwrap().start,
+                    t.0,
+                )
+            });
+            for t in order {
+                let placed = constraints_for(graph, scopes, &pairs, &offsets, t);
+                let size = graph.tensor(t).size_bytes();
+                let align = graph.tensor(t).dtype.size_bytes();
+                offsets[t.0] = Some(lowest_feasible(&placed, size, align));
+            }
+        }
+        Heuristic::PairFrontier => {
+            // seed: the largest arena tensor
+            let seed = *arena_tensors
+                .iter()
+                .max_by_key(|t| (graph.tensor(**t).size_bytes(), usize::MAX - t.0))
+                .unwrap();
+            offsets[seed.0] = Some(0);
+            let total = arena_tensors.len();
+            let mut done = 1usize;
+            // does `t` have a DMO pair relation with any placed tensor?
+            let has_pair = |offsets: &[Option<usize>], t: TensorId| -> bool {
+                pairs.related(t).any(|u| offsets[u].is_some())
+            };
+            while done < total {
+                // select: pair-related first, then scope-frontier, then
+                // anything; larger first within a class
+                let mut chosen: Option<(usize, usize, usize, TensorId)> = None;
+                for &t in &arena_tensors {
+                    if offsets[t.0].is_some() {
+                        continue;
+                    }
+                    let ts = live[t.0].unwrap();
+                    let touches = arena_tensors.iter().any(|&u| {
+                        offsets[u.0].is_some() && ts.overlaps(&live[u.0].unwrap())
+                    });
+                    let class = if has_pair(&offsets, t) {
+                        0
+                    } else if touches {
+                        1
+                    } else {
+                        2
+                    };
+                    let key = (class, usize::MAX - graph.tensor(t).size_bytes(), t.0, t);
+                    if chosen.map_or(true, |c| (key.0, key.1, key.2) < (c.0, c.1, c.2)) {
+                        chosen = Some(key);
+                    }
+                }
+                let t = chosen.unwrap().3;
+                let placed = constraints_for(graph, scopes, &pairs, &offsets, t);
+                let size = graph.tensor(t).size_bytes();
+                let align = graph.tensor(t).dtype.size_bytes();
+                offsets[t.0] = Some(lowest_feasible(&placed, size, align));
+                done += 1;
+            }
+        }
+        Heuristic::Frontier(direction) => {
+            let total = arena_tensors.len();
+            let mut done = 0usize;
+            // seed: first model input (forward) or last output (backward)
+            let seed = match direction {
+                Direction::Forward => graph
+                    .inputs
+                    .first()
+                    .copied()
+                    .filter(|t| live[t.0].is_some())
+                    .unwrap_or(arena_tensors[0]),
+                Direction::Backward => graph
+                    .outputs
+                    .last()
+                    .copied()
+                    .filter(|t| live[t.0].is_some())
+                    .unwrap_or(*arena_tensors.last().unwrap()),
+            };
+            offsets[seed.0] = Some(0);
+            done += 1;
+
+            while done < total {
+                // frontier: unplaced tensors whose scope overlaps a placed one
+                let mut best: Option<(usize, usize, TensorId)> = None;
+                for &t in &arena_tensors {
+                    if offsets[t.0].is_some() {
+                        continue;
+                    }
+                    let placed = constraints_for(graph, scopes, &pairs, &offsets, t);
+                    if placed.is_empty() {
+                        continue; // not on the frontier
+                    }
+                    let size = graph.tensor(t).size_bytes();
+                    let align = graph.tensor(t).dtype.size_bytes();
+                    let x = lowest_feasible(&placed, size, align);
+                    // frontier member placeable lowest; ties: bigger first
+                    let key = (x, usize::MAX - size, t.0);
+                    if best.map_or(true, |(bx, bk, bt)| key < (bx, bk, bt.0)) {
+                        best = Some((x, key.1, t));
+                    }
+                }
+                let (x, _k, t) = match best {
+                    Some(b) => b,
+                    None => {
+                        // disconnected scope group: next unplaced in scope order
+                        let t = *arena_tensors
+                            .iter()
+                            .filter(|t| offsets[t.0].is_none())
+                            .min_by_key(|t| match direction {
+                                Direction::Forward => live[t.0].unwrap().start,
+                                Direction::Backward => usize::MAX - live[t.0].unwrap().end,
+                            })
+                            .unwrap();
+                        (0, 0, t)
+                    }
+                };
+                offsets[t.0] = Some(x);
+                done += 1;
+            }
+        }
+    }
+
+    // peak + applied overlaps
+    let mut peak = 0usize;
+    for &t in &arena_tensors {
+        peak = peak.max(offsets[t.0].unwrap() + graph.tensor(t).size_bytes());
+    }
+    let mut applied = Vec::new();
+    for (oi, op) in graph.ops.iter().enumerate() {
+        let out = op.output;
+        let (Some(out_off), Some(_)) = (offsets[out.0], live[out.0]) else {
+            continue;
+        };
+        let out_end = out_off + graph.tensor(out).size_bytes();
+        for &inp in &op.inputs {
+            let Some(in_off) = offsets[inp.0] else { continue };
+            let in_end = in_off + graph.tensor(inp).size_bytes();
+            let shared = out_end.min(in_end).saturating_sub(out_off.max(in_off));
+            if shared > 0 && inp != out {
+                applied.push(AppliedOverlap {
+                    op: OpId(oi),
+                    input: inp,
+                    output: out,
+                    bytes: shared,
+                });
+            }
+        }
+    }
+
+    Allocation {
+        offsets,
+        peak,
+        applied,
+    }
+}
+
+/// Verify that `alloc` satisfies every pairwise constraint — used by the
+/// property tests and after every planning run.
+pub fn check(graph: &Graph, scopes: &Scopes, os: &OsTable, alloc: &Allocation) -> anyhow::Result<()> {
+    let pairs = PairTable::build(graph, scopes, os);
+    let n = graph.tensors.len();
+    for a in 0..n {
+        let (Some(ao), Some(asc)) = (alloc.offsets[a], scopes.scopes[a]) else {
+            continue;
+        };
+        let a_id = TensorId(a);
+        let a_len = graph.tensor(a_id).size_bytes();
+        for b in (a + 1)..n {
+            let (Some(bo), Some(bsc)) = (alloc.offsets[b], scopes.scopes[b]) else {
+                continue;
+            };
+            let b_id = TensorId(b);
+            let b_len = graph.tensor(b_id).size_bytes();
+            if !asc.overlaps(&bsc) {
+                continue;
+            }
+            let disjoint = ao + a_len <= bo || bo + b_len <= ao;
+            if disjoint {
+                continue;
+            }
+            // overlapping bytes: must be a DMO pair within budget
+            let ok_ab = pairs
+                .budget(a_id, b_id)
+                .map(|budget| (bo + b_len).saturating_sub(ao) <= budget)
+                .unwrap_or(false);
+            let ok_ba = pairs
+                .budget(b_id, a_id)
+                .map(|budget| (ao + a_len).saturating_sub(bo) <= budget)
+                .unwrap_or(false);
+            anyhow::ensure!(
+                ok_ab || ok_ba,
+                "tensors {} and {} overlap illegally ({}..{} vs {}..{})",
+                graph.tensor(a_id).name,
+                graph.tensor(b_id).name,
+                ao,
+                ao + a_len,
+                bo,
+                bo + b_len
+            );
+        }
+    }
+    // every live tensor placed, peak correct
+    let mut peak = 0;
+    for t in 0..n {
+        if scopes.scopes[t].is_some() {
+            let off = alloc.offsets[t]
+                .ok_or_else(|| anyhow::anyhow!("tensor {t} unplaced"))?;
+            peak = peak.max(off + graph.tensor(TensorId(t)).size_bytes());
+        }
+    }
+    anyhow::ensure!(peak == alloc.peak, "peak mismatch: {} != {}", peak, alloc.peak);
+    // outputs may never be clobbered: an output tensor's buffer must not
+    // overlap anything while it is an op input later… covered by pair rule
+    let _ = TensorKind::Output;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, Padding};
+    use crate::ir::{DType, GraphBuilder, Shape};
+    use crate::planner::order::{serialise, Strategy};
+    use crate::planner::scope::analyse;
+
+    fn two_op_graph() -> Graph {
+        // input 8x8x4 -> 1x1 conv to 8 ch (out 2x input) -> dw 3x3 s2
+        let mut b = GraphBuilder::new("t", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 4));
+        let c = b.conv2d(x, 8, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
+        b.finish(&[d])
+    }
+
+    #[test]
+    fn baseline_no_overlaps() {
+        let g = two_op_graph();
+        let order = serialise(&g, Strategy::Eager);
+        let sc = analyse(&g, &order);
+        let os = OsTable::disabled(&g);
+        for h in HEURISTICS {
+            let a = allocate(&g, &sc, &os, h);
+            check(&g, &sc, &os, &a).unwrap();
+            assert!(a.applied.is_empty(), "baseline must not overlap");
+            // peak >= the largest simultaneous pair (conv in+out)
+            let pair = g.tensor(crate::ir::graph::TensorId(0)).size_bytes()
+                + g.tensor(crate::ir::graph::TensorId(1)).size_bytes();
+            assert!(a.peak >= pair);
+        }
+    }
+
+    #[test]
+    fn dmo_overlaps_and_shrinks_peak() {
+        let g = two_op_graph();
+        let order = serialise(&g, Strategy::Eager);
+        let sc = analyse(&g, &order);
+        let base = allocate(&g, &sc, &OsTable::disabled(&g), Heuristic::Frontier(Direction::Backward));
+        let os = OsTable::build(&g, Method::Algorithmic);
+        let dmo = allocate(&g, &sc, &os, Heuristic::Frontier(Direction::Backward));
+        check(&g, &sc, &os, &dmo).unwrap();
+        assert!(!dmo.applied.is_empty(), "DMO should apply an overlap");
+        assert!(dmo.peak < base.peak, "DMO {} !< base {}", dmo.peak, base.peak);
+    }
+
+    #[test]
+    fn residual_blocks_overlap_with_live_tensor() {
+        // a is used by conv AND add: it must not be overlapped by the conv
+        let mut b = GraphBuilder::new("res", DType::F32);
+        let x = b.input(Shape::hwc(4, 4, 2));
+        let a = b.conv2d(x, 2, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let p = b.conv2d(a, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let s = b.add(a, p);
+        let g = b.finish(&[s]);
+        let order = serialise(&g, Strategy::Eager);
+        let sc = analyse(&g, &order);
+        let os = OsTable::build(&g, Method::Algorithmic);
+        let alloc = allocate(&g, &sc, &os, Heuristic::Frontier(Direction::Backward));
+        check(&g, &sc, &os, &alloc).unwrap();
+        // `a` (tensor of the first conv) must not share bytes with p's
+        // buffer: dies_at(a, conv_p) is false
+        let a_off = alloc.offsets[a.0].unwrap();
+        let a_end = a_off + g.tensor(a).size_bytes();
+        let p_off = alloc.offsets[p.0].unwrap();
+        let p_end = p_off + g.tensor(p).size_bytes();
+        assert!(a_end <= p_off || p_end <= a_off, "a and p must be disjoint");
+    }
+
+    #[test]
+    fn lowest_feasible_respects_budget() {
+        // one placed output [0, 100); budget 40 ⇒ input may start at 60
+        let placed = vec![(0usize, 100usize, Constraint::PairPlacedOutput { budget: 40 })];
+        assert_eq!(lowest_feasible(&placed, 50, 1), 60);
+        let placed = vec![(0usize, 100usize, Constraint::Disjoint)];
+        assert_eq!(lowest_feasible(&placed, 50, 1), 100);
+        // alignment rounds up
+        let placed = vec![(0usize, 10usize, Constraint::Disjoint)];
+        assert_eq!(lowest_feasible(&placed, 8, 4), 12);
+    }
+}

@@ -1,0 +1,185 @@
+//! Graph serialisation (§II-B).
+//!
+//! Connected graphs admit many valid execution orders; the order changes
+//! which tensors are simultaneously live and therefore the peak memory.
+//! The paper evaluates each model under an *eager* and a *lazy* strategy
+//! and keeps the better result (§IV); both are implemented here as Kahn
+//! topological sorts with different ready-queue policies.
+
+use crate::ir::graph::{Graph, OpId, TensorId};
+use std::collections::BTreeSet;
+
+/// A valid execution order over the graph's ops.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecOrder(pub Vec<OpId>);
+
+/// Serialisation strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Run ops as soon as their inputs exist, in emission order — breadth
+    /// first across branches.
+    Eager,
+    /// Run each op as late as possible — depth first along branches, so
+    /// side branches complete just before their results are consumed.
+    Lazy,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Eager => "eager",
+            Strategy::Lazy => "lazy",
+        }
+    }
+}
+
+/// All strategies, for "best-of" sweeps.
+pub const STRATEGIES: [Strategy; 2] = [Strategy::Eager, Strategy::Lazy];
+
+/// Serialise `graph` with the given strategy.
+pub fn serialise(graph: &Graph, strategy: Strategy) -> ExecOrder {
+    match strategy {
+        Strategy::Eager => eager(graph),
+        Strategy::Lazy => lazy(graph),
+    }
+}
+
+fn ready_inputs(graph: &Graph, op: OpId, produced: &[bool]) -> bool {
+    graph.op(op).inputs.iter().all(|&t| {
+        graph.producer(t).map(|p| produced[p.0]).unwrap_or(true) // graph inputs always ready
+    })
+}
+
+/// Kahn's algorithm, ready set ordered by op index (FIFO w.r.t. emission).
+fn eager(graph: &Graph) -> ExecOrder {
+    let n = graph.ops.len();
+    let mut produced = vec![false; n];
+    let mut done = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut ready: BTreeSet<usize> = (0..n)
+        .filter(|&i| ready_inputs(graph, OpId(i), &produced))
+        .collect();
+    while let Some(&i) = ready.iter().next() {
+        ready.remove(&i);
+        if done[i] {
+            continue;
+        }
+        done[i] = true;
+        produced[i] = true;
+        order.push(OpId(i));
+        // newly ready consumers
+        let out: TensorId = graph.ops[i].output;
+        for c in graph.consumers(out) {
+            if !done[c.0] && ready_inputs(graph, c, &produced) {
+                ready.insert(c.0);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph has a cycle");
+    ExecOrder(order)
+}
+
+/// As-late-as-possible: schedule the *reverse* graph eagerly from the
+/// outputs, preferring the highest op index, then reverse. Each op lands
+/// just before its first consumer.
+fn lazy(graph: &Graph) -> ExecOrder {
+    let n = graph.ops.len();
+    // consumers_done[i]: all ops consuming i's output already scheduled
+    // (in reverse construction).
+    let consumer_count: Vec<usize> = (0..n)
+        .map(|i| graph.consumers(graph.ops[i].output).len())
+        .collect();
+    let mut remaining = consumer_count;
+    let mut done = vec![false; n];
+    let mut rev = Vec::with_capacity(n);
+    let mut ready: BTreeSet<usize> = (0..n).filter(|&i| remaining[i] == 0).collect();
+    while let Some(&i) = ready.iter().next_back() {
+        ready.remove(&i);
+        if done[i] {
+            continue;
+        }
+        done[i] = true;
+        rev.push(OpId(i));
+        for &t in &graph.ops[i].inputs {
+            if let Some(p) = graph.producer(t) {
+                remaining[p.0] -= 1;
+                if remaining[p.0] == 0 {
+                    ready.insert(p.0);
+                }
+            }
+        }
+    }
+    assert_eq!(rev.len(), n, "graph has a cycle");
+    rev.reverse();
+    ExecOrder(rev)
+}
+
+/// Check that `order` is a valid topological order of `graph`.
+pub fn is_valid(graph: &Graph, order: &ExecOrder) -> bool {
+    if order.0.len() != graph.ops.len() {
+        return false;
+    }
+    let mut pos = vec![usize::MAX; graph.ops.len()];
+    for (p, &op) in order.0.iter().enumerate() {
+        if pos[op.0] != usize::MAX {
+            return false; // duplicate
+        }
+        pos[op.0] = p;
+    }
+    for (i, op) in graph.ops.iter().enumerate() {
+        for &t in &op.inputs {
+            if let Some(p) = graph.producer(t) {
+                if pos[p.0] >= pos[i] {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, Padding};
+    use crate::ir::{DType, GraphBuilder, Shape};
+
+    fn branchy() -> Graph {
+        // x -> a -> b ┐
+        //      └-> c ─┴-> add -> out
+        let mut b = GraphBuilder::new("branchy", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 4));
+        let a = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let p = b.conv2d(a, 4, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let q = b.conv2d(a, 4, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let s = b.add(p, q);
+        b.finish(&[s])
+    }
+
+    #[test]
+    fn both_strategies_valid() {
+        let g = branchy();
+        for strat in STRATEGIES {
+            let o = serialise(&g, strat);
+            assert!(is_valid(&g, &o), "{strat:?} produced invalid order");
+        }
+    }
+
+    #[test]
+    fn sequential_graph_orders_agree() {
+        let mut b = GraphBuilder::new("seq", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 3));
+        let c = b.conv2d(x, 8, (3, 3), (2, 2), Padding::Same, Activation::Relu);
+        let d = b.dwconv2d(c, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let g = b.finish(&[d]);
+        assert_eq!(serialise(&g, Strategy::Eager), serialise(&g, Strategy::Lazy));
+    }
+
+    #[test]
+    fn invalid_order_detected() {
+        let g = branchy();
+        let mut o = serialise(&g, Strategy::Eager);
+        o.0.swap(0, 3);
+        assert!(!is_valid(&g, &o));
+    }
+}

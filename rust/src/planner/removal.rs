@@ -1,0 +1,187 @@
+//! Operation removal (§II-C): elide concat ops by letting producers write
+//! directly into the aggregated tensor.
+//!
+//! Concat stores two copies of the same elements (differently shaped); if
+//! each upstream op writes its output *into its channel slice of the
+//! concatenated tensor*, the copy — and the duplicated memory — vanish.
+//! TFLite Micro cannot express this (its element-offset function assumes
+//! dense tensors); the paper notes it needs "a small change to the memory
+//! offset function". We model that change as an *alias plan*: removed
+//! concat inputs have no allocation of their own, only a base offset and
+//! a channel stride inside the concat output's buffer.
+//!
+//! §II-C also notes that writing strided output alters the producer's
+//! `O_s`; we conservatively disable DMO overlap for aliased producers
+//! (their writes land further ahead in the aggregate than in a dense
+//! buffer, so the dense `O_s` would be unsafe).
+
+use crate::ir::graph::{Graph, OpId, TensorId};
+use crate::ir::op::OpKind;
+use crate::planner::alloc::OsTable;
+
+/// One aliased concat input: lives inside the concat output buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Alias {
+    /// the elided input tensor
+    pub tensor: TensorId,
+    /// the concat output it aliases into
+    pub target: TensorId,
+    /// element offset of this input's channel slice within a target row
+    pub channel_offset: usize,
+    /// channels of the target (the stride between this input's rows)
+    pub target_channels: usize,
+}
+
+/// Result of the removal pass.
+#[derive(Debug, Clone, Default)]
+pub struct RemovalPlan {
+    /// concat ops removed
+    pub removed: Vec<OpId>,
+    /// alias records for the planner
+    pub aliases: Vec<Alias>,
+}
+
+impl RemovalPlan {
+    pub fn is_aliased(&self, t: TensorId) -> bool {
+        self.aliases.iter().any(|a| a.tensor == t)
+    }
+}
+
+/// Find concat ops whose inputs can alias into the output: every input
+/// must be produced by exactly one op (not a graph input), consumed only
+/// by the concat, and the producer must be able to write strided output
+/// (window/elementwise ops can; re-arrangement ops cannot).
+pub fn find_removals(graph: &Graph) -> RemovalPlan {
+    let mut plan = RemovalPlan::default();
+    for (i, op) in graph.ops.iter().enumerate() {
+        if !matches!(op.kind, OpKind::Concat) {
+            continue;
+        }
+        let out_c = graph.tensor(op.output).shape.c();
+        let ok = op.inputs.iter().all(|&t| {
+            let single_use = graph.consumers(t).len() == 1;
+            let produced = graph.producer(t).is_some();
+            let strided_ok = graph
+                .producer(t)
+                .map(|p| {
+                    matches!(
+                        graph.op(p).kind,
+                        OpKind::Conv2D(_)
+                            | OpKind::DepthwiseConv2D(_)
+                            | OpKind::Pool(_)
+                            | OpKind::Unary(_)
+                            | OpKind::Binary(_)
+                    )
+                })
+                .unwrap_or(false);
+            single_use && produced && strided_ok
+        });
+        if !ok {
+            continue;
+        }
+        plan.removed.push(OpId(i));
+        let mut coff = 0usize;
+        for &t in &op.inputs {
+            let c = graph.tensor(t).shape.c();
+            plan.aliases.push(Alias {
+                tensor: t,
+                target: op.output,
+                channel_offset: coff,
+                target_channels: out_c,
+            });
+            coff += c;
+        }
+    }
+    plan
+}
+
+/// Apply a removal plan: concat ops become `Reshape`-like no-ops on the
+/// planning graph — we rebuild the graph with the concat's inputs replaced
+/// by zero-sized scopes. Practically the planner needs two effects:
+/// (1) aliased tensors take no arena space of their own, and
+/// (2) producers of aliased tensors lose their DMO budget.
+/// We express both by returning a transformed copy of the `O_s` table and
+/// the list of tensors to pin to the concat output's allocation.
+pub fn apply_to_os(graph: &Graph, plan: &RemovalPlan, os: &OsTable) -> OsTable {
+    let mut out = os.clone();
+    for alias in &plan.aliases {
+        if let Some(p) = graph.producer(alias.tensor) {
+            for b in out.per_op[p.0].iter_mut() {
+                *b = 0; // strided writes invalidate the dense O_s (§II-C)
+            }
+        }
+    }
+    out
+}
+
+/// Peak-memory estimate with concat removal applied on top of a plan:
+/// every aliased tensor's bytes are saved whenever it was live alongside
+/// its target. This is the §II-C headline effect (Squeezenet-style
+/// models); exact layout comes from re-planning with the aliased tensors
+/// removed from the arena set.
+pub fn removable_bytes(graph: &Graph, plan: &RemovalPlan) -> usize {
+    plan.aliases
+        .iter()
+        .map(|a| graph.tensor(a.tensor).size_bytes())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, Padding};
+    use crate::ir::{DType, GraphBuilder, Shape};
+    use crate::overlap::Method;
+
+    fn concat_graph() -> Graph {
+        // inception-style: x -> (1x1 conv, 3x3 conv) -> concat -> conv
+        let mut b = GraphBuilder::new("cat", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 4));
+        let a = b.conv2d(x, 4, (1, 1), (1, 1), Padding::Same, Activation::Relu);
+        let c = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let cat = b.concat(&[a, c]);
+        let out = b.conv2d(cat, 4, (1, 1), (1, 1), Padding::Same, Activation::None);
+        b.finish(&[out])
+    }
+
+    #[test]
+    fn finds_removable_concat() {
+        let g = concat_graph();
+        let plan = find_removals(&g);
+        assert_eq!(plan.removed.len(), 1);
+        assert_eq!(plan.aliases.len(), 2);
+        assert_eq!(plan.aliases[0].channel_offset, 0);
+        assert_eq!(plan.aliases[1].channel_offset, 4);
+        assert_eq!(plan.aliases[1].target_channels, 12);
+        let saved = removable_bytes(&g, &plan);
+        assert_eq!(saved, (8 * 8 * 4 + 8 * 8 * 8) * 4);
+    }
+
+    #[test]
+    fn multi_use_input_blocks_removal() {
+        let mut b = GraphBuilder::new("cat2", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 4));
+        let a = b.conv2d(x, 4, (1, 1), (1, 1), Padding::Same, Activation::Relu);
+        let c = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let cat = b.concat(&[a, c]);
+        let merged = b.conv2d(cat, 4, (1, 1), (1, 1), Padding::Same, Activation::None);
+        // `a` also feeds a residual add — concat can't claim its buffer
+        let extra = b.add(merged, a);
+        let g = b.finish(&[extra]);
+        let plan = find_removals(&g);
+        assert!(plan.removed.is_empty());
+    }
+
+    #[test]
+    fn aliased_producers_lose_dmo_budget() {
+        let g = concat_graph();
+        let plan = find_removals(&g);
+        let os = OsTable::build(&g, Method::Analytic);
+        let adjusted = apply_to_os(&g, &plan, &os);
+        // producers of the two concat inputs are ops 0 and 1
+        assert_eq!(adjusted.per_op[0], vec![0]);
+        assert_eq!(adjusted.per_op[1], vec![0]);
+        // the consumer conv's budget is untouched
+        assert_eq!(adjusted.per_op[3], os.per_op[3]);
+    }
+}

@@ -1,0 +1,143 @@
+//! Tensor liveness (scope) analysis.
+//!
+//! A tensor's *scope* is the closed interval of execution-order positions
+//! during which its buffer must hold valid data — from first materialised
+//! (graph input: before op 0; intermediate: its producer's slot) to last
+//! consumed (graph output: after the final op). This is exactly the
+//! y-extent of the buffer rectangles in Figs 1 and 9.
+
+use super::order::ExecOrder;
+use crate::ir::graph::{Graph, OpId, TensorId, TensorKind};
+
+/// Closed interval of order positions `[start, end]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scope {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Scope {
+    /// Two scopes conflict if any position is in both.
+    pub fn overlaps(&self, other: &Scope) -> bool {
+        self.start <= other.end && other.start <= self.end
+    }
+}
+
+/// Per-tensor scopes under a given execution order.
+#[derive(Debug, Clone)]
+pub struct Scopes {
+    /// Indexed by `TensorId`. `None` for tensors never used under this
+    /// order (possible after graph transforms).
+    pub scopes: Vec<Option<Scope>>,
+    /// position of each op in the order, indexed by `OpId`
+    pub pos: Vec<usize>,
+}
+
+impl Scopes {
+    pub fn get(&self, t: TensorId) -> Option<Scope> {
+        self.scopes[t.0]
+    }
+
+    /// Position of op in the execution order.
+    pub fn op_pos(&self, op: OpId) -> usize {
+        self.pos[op.0]
+    }
+
+    /// Is `op` the last use of tensor `t`?
+    pub fn dies_at(&self, t: TensorId, op: OpId) -> bool {
+        self.scopes[t.0]
+            .map(|s| s.end == self.pos[op.0])
+            .unwrap_or(false)
+    }
+}
+
+/// Compute scopes for `graph` under `order`.
+pub fn analyse(graph: &Graph, order: &ExecOrder) -> Scopes {
+    let n_ops = graph.ops.len();
+    let mut pos = vec![usize::MAX; n_ops];
+    for (p, &op) in order.0.iter().enumerate() {
+        pos[op.0] = p;
+    }
+    let mut scopes: Vec<Option<Scope>> = vec![None; graph.tensors.len()];
+    for (tid, info) in graph.tensors.iter().enumerate() {
+        let t = TensorId(tid);
+        let producer = graph.producer(t);
+        let consumers = graph.consumers(t);
+        let start = match (&info.kind, producer) {
+            (TensorKind::Input, _) => 0,
+            (_, Some(p)) => pos[p.0],
+            // unused non-input tensor with no producer: skip
+            (_, None) => {
+                continue;
+            }
+        };
+        let mut end = match info.kind {
+            // outputs must survive past the last op
+            TensorKind::Output => n_ops, // one past the last slot
+            _ => start,
+        };
+        for c in &consumers {
+            end = end.max(pos[c.0]);
+        }
+        if info.kind != TensorKind::Output && consumers.is_empty() && producer.is_none() {
+            continue;
+        }
+        scopes[tid] = Some(Scope { start, end });
+    }
+    Scopes { scopes, pos }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, Padding};
+    use crate::ir::{DType, GraphBuilder, Shape};
+    use crate::planner::order::{serialise, Strategy};
+
+    #[test]
+    fn sequential_scopes() {
+        let mut b = GraphBuilder::new("seq", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 3));
+        let c = b.conv2d(x, 8, (3, 3), (2, 2), Padding::Same, Activation::Relu);
+        let d = b.dwconv2d(c, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let g = b.finish(&[d]);
+        let order = serialise(&g, Strategy::Eager);
+        let s = analyse(&g, &order);
+        // input: live [0, 0] (consumed by op 0)
+        assert_eq!(s.get(x), Some(Scope { start: 0, end: 0 }));
+        // conv out: produced op 0, consumed op 1
+        assert_eq!(s.get(c), Some(Scope { start: 0, end: 1 }));
+        // output: produced op 1, survives to the end (pos 2 = n_ops)
+        assert_eq!(s.get(d), Some(Scope { start: 1, end: 2 }));
+        assert!(s.dies_at(x, crate::ir::graph::OpId(0)));
+        assert!(!s.dies_at(c, crate::ir::graph::OpId(0)));
+    }
+
+    #[test]
+    fn residual_keeps_tensor_alive() {
+        // x -> a; a -> p; (a, p) -> add : a must live until the add
+        let mut b = GraphBuilder::new("res", DType::F32);
+        let x = b.input(Shape::hwc(4, 4, 2));
+        let a = b.conv2d(x, 2, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let p = b.conv2d(a, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let s = b.add(a, p);
+        let g = b.finish(&[s]);
+        let order = serialise(&g, Strategy::Eager);
+        let sc = analyse(&g, &order);
+        let a_scope = sc.get(a).unwrap();
+        // a produced at pos 0, last used by add at pos 2
+        assert_eq!(a_scope, Scope { start: 0, end: 2 });
+        // therefore a does NOT die at the conv that reads it (pos 1)
+        assert!(!sc.dies_at(a, crate::ir::graph::OpId(1)));
+    }
+
+    #[test]
+    fn overlap_relation() {
+        let a = Scope { start: 0, end: 2 };
+        let b = Scope { start: 2, end: 5 };
+        let c = Scope { start: 3, end: 4 };
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+        assert!(b.overlaps(&c));
+    }
+}

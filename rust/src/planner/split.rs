@@ -1,0 +1,178 @@
+//! Operation splitting analysis (§II-A).
+//!
+//! A pair of chained window ops whose intermediate tensor dominates peak
+//! memory can be split into `k` vertical slices executed sequentially:
+//! each slice computes a horizontal band of the final output through a
+//! band of the intermediate tensor, so only `≈ 1/k` of the intermediate
+//! values are live at once — at the price of recomputing the band-overlap
+//! rows of the intermediate tensor (receptive-field halo).
+//!
+//! The paper demonstrates this manually on MobileNet v1 (§II-A: 96 KB →
+//! 66 KB with 6144 elements computed twice) and calls for automatic
+//! analysis as future work; [`analyse_pair`] is that analysis, and the
+//! planner exposes it as a report (it cannot be combined with DMO — the
+//! longer scopes of the split tensors defeat overlapping, as §II-A notes).
+
+use crate::ir::graph::{Graph, OpId};
+use crate::ir::op::OpKind;
+
+/// Result of splitting a two-op chain into `parts` slices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitReport {
+    pub first: OpId,
+    pub second: OpId,
+    pub parts: usize,
+    /// Peak bytes for the fused pair without splitting
+    /// (input + intermediate, intermediate + output, whichever is larger).
+    pub peak_before: usize,
+    /// Peak bytes with splitting: input + largest intermediate band +
+    /// output (all live together, §II-A).
+    pub peak_after: usize,
+    /// Intermediate elements computed more than once (halo rows × parts-1).
+    pub recomputed_elems: usize,
+}
+
+impl SplitReport {
+    pub fn saving_pct(&self) -> f64 {
+        if self.peak_before == 0 {
+            return 0.0;
+        }
+        100.0 * (self.peak_before.saturating_sub(self.peak_after)) as f64 / self.peak_before as f64
+    }
+}
+
+/// Kernel/stride extents of a window op along H, or `None` if the op is
+/// not splittable this way.
+fn window_h(kind: &OpKind) -> Option<(usize, usize, usize)> {
+    // (kernel_h, stride_h, dilation_h)
+    match kind {
+        OpKind::Conv2D(p) => Some((p.kernel.0, p.stride.0, p.dilation.0)),
+        OpKind::DepthwiseConv2D(p) => Some((p.kernel.0, p.stride.0, p.dilation.0)),
+        OpKind::Pool(p) => Some((p.kernel.0, p.stride.0, 1)),
+        OpKind::Unary(_) | OpKind::Reshape { .. } => Some((1, 1, 1)),
+        _ => None,
+    }
+}
+
+/// Analyse splitting the chain `first → second` (second consumes first's
+/// output) into `parts` horizontal bands.
+pub fn analyse_pair(graph: &Graph, first: OpId, second: OpId, parts: usize) -> anyhow::Result<SplitReport> {
+    let f = graph.op(first);
+    let s = graph.op(second);
+    anyhow::ensure!(parts >= 2, "parts must be >= 2");
+    anyhow::ensure!(
+        s.inputs.contains(&f.output),
+        "second op must consume first op's output"
+    );
+    let (k2, s2, d2) = window_h(&s.kind)
+        .ok_or_else(|| anyhow::anyhow!("second op `{}` not splittable", s.name))?;
+    window_h(&f.kind).ok_or_else(|| anyhow::anyhow!("first op `{}` not splittable", f.name))?;
+
+    let input = graph.tensor(f.inputs[0]);
+    let mid = graph.tensor(f.output);
+    let out = graph.tensor(s.output);
+    anyhow::ensure!(mid.shape.rank() == 4 && out.shape.rank() == 4, "need NHWC chain");
+
+    let peak_before = (input.size_bytes() + mid.size_bytes()).max(mid.size_bytes() + out.size_bytes());
+
+    // band of output rows per slice
+    let oh = out.shape.h();
+    let band_out = oh.div_ceil(parts);
+    // intermediate rows needed for band_out output rows of the second op:
+    // (band_out − 1)·stride + effective kernel
+    let eff_k2 = (k2 - 1) * d2 + 1;
+    let band_mid = ((band_out - 1) * s2 + eff_k2).min(mid.shape.h());
+    let mid_row_bytes = mid.shape.w() * mid.shape.c() * mid.dtype.size_bytes();
+    let band_mid_bytes = band_mid * mid_row_bytes;
+
+    // §II-A: with splitting, input + current intermediate band + output
+    // are all live at once (input and output now span all slices).
+    let peak_after = input.size_bytes() + band_mid_bytes + out.size_bytes();
+
+    // halo rows recomputed: each interior band boundary recomputes
+    // (band_mid − stride·band_out) rows of the intermediate tensor
+    let step_mid = s2 * band_out;
+    let halo_rows = band_mid.saturating_sub(step_mid);
+    let recomputed_elems = halo_rows * mid.shape.w() * mid.shape.c() * (parts - 1);
+
+    Ok(SplitReport {
+        first,
+        second,
+        parts,
+        peak_before,
+        peak_after,
+        recomputed_elems,
+    })
+}
+
+/// Scan a graph for its most profitable 2-op split (exhaustive over
+/// adjacent window-op pairs and 2..=max_parts).
+pub fn best_split(graph: &Graph, max_parts: usize) -> Option<SplitReport> {
+    let mut best: Option<SplitReport> = None;
+    for (i, f) in graph.ops.iter().enumerate() {
+        for c in graph.consumers(f.output) {
+            for parts in 2..=max_parts {
+                if let Ok(r) = analyse_pair(graph, OpId(i), c, parts) {
+                    if r.peak_after < r.peak_before
+                        && best.as_ref().map_or(true, |b| r.peak_after < b.peak_after)
+                    {
+                        best = Some(r);
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, Padding};
+    use crate::ir::{DType, GraphBuilder, Shape};
+
+    /// §II-A's MobileNet v1 0.25 128 (8-bit) case: conv2d (32 KB out…
+    /// wait — the *pair* is the 2nd conv (1x1 → 64 KB mid) feeding the
+    /// next dwconv (→16 KB out); splitting 4 ways shrinks 96 KB to ~66 KB
+    /// with 6144 recomputed elements.
+    #[test]
+    fn paper_mobilenet_split_case() {
+        let mut b = GraphBuilder::new("split", DType::I8);
+        let x = b.input(Shape::hwc(64, 64, 8)); // 32 KB
+        let c = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Same, Activation::None); // 64 KB mid
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None); // 16 KB out
+        let g = b.finish(&[d]);
+        let r = analyse_pair(&g, OpId(0), OpId(1), 4).unwrap();
+        assert_eq!(r.peak_before, 96 * 1024);
+        // band: 8 output rows -> (8-1)*2+3 = 17 mid rows = 17 KB band
+        // peak_after = 32 + 17 + 16 = 65 KB ≈ paper's 66 KB
+        assert_eq!(r.peak_after, (32 + 17 + 16) * 1024);
+        assert!(r.saving_pct() > 30.0);
+        // halo: 17 − 16 = 1 row × 64·16 elems × 3 boundaries = 3072;
+        // the paper's 6144 counts a 2-row halo (VALID alignment differs)
+        assert!(r.recomputed_elems > 0);
+    }
+
+    #[test]
+    fn best_split_finds_something() {
+        let mut b = GraphBuilder::new("bs", DType::F32);
+        let x = b.input(Shape::hwc(32, 32, 4));
+        let c = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let d = b.maxpool(c, (2, 2), (2, 2), Padding::Valid);
+        let g = b.finish(&[d]);
+        let r = best_split(&g, 8).unwrap();
+        assert!(r.peak_after < r.peak_before);
+    }
+
+    #[test]
+    fn rejects_non_chain() {
+        let mut b = GraphBuilder::new("nc", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 2));
+        let c = b.conv2d(x, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let d = b.conv2d(x, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let s = b.add(c, d);
+        let g = b.finish(&[s]);
+        // ops 0 and 1 are siblings, not a chain
+        assert!(analyse_pair(&g, OpId(0), OpId(1), 2).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Report generation: the paper's tables as markdown/CSV, written under
+//! `results/`.
+
+use crate::ir::graph::Graph;
+use crate::ir::DType;
+use crate::models;
+use crate::overlap::{compute_os, Method};
+use crate::planner::{saving_row, SavingRow};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Paper's Table III reference values (KB), for side-by-side reports.
+pub fn paper_table3() -> Vec<(&'static str, usize, usize)> {
+    vec![
+        ("mobilenet_v1_1.0_224", 4704, 3136),
+        ("mobilenet_v1_1.0_224_int8", 1176, 784),
+        ("mobilenet_v1_0.25_224", 1176, 786),
+        ("mobilenet_v1_0.25_128_int8", 96, 64),
+        ("mobilenet_v2_0.35_224", 2940, 2352),
+        ("mobilenet_v2_1.0_224", 5880, 4704),
+        ("inception_v4", 10879, 10079),
+        ("inception_resnet_v2", 8399, 5504),
+        ("nasnet_mobile", 4540, 4540),
+        ("densenet_121", 8624, 8232),
+        ("resnet_50_v2", 10976, 10976),
+    ]
+}
+
+/// One Table II row: exact vs analytic `O_s` of a model's peak-defining
+/// overlappable op.
+#[derive(Debug, Clone)]
+pub struct PrecisionRow {
+    pub model: String,
+    pub op_name: String,
+    pub exact: usize,
+    pub estimate: usize,
+}
+
+impl PrecisionRow {
+    /// Under-estimation relative to the exact `O_s`.
+    pub fn error_pct(&self) -> f64 {
+        if self.exact == 0 {
+            return 0.0;
+        }
+        100.0 * (self.exact.saturating_sub(self.estimate)) as f64 / self.exact as f64
+    }
+
+    /// Under-estimation relative to a model peak — the paper's Table II
+    /// "Error" definition (§III-E normalises by the model's memory
+    /// requirement, e.g. 10848 B / 5880 KB = 0.18 %).
+    pub fn error_vs_peak_pct(&self, peak_bytes: usize) -> f64 {
+        if peak_bytes == 0 {
+            return 0.0;
+        }
+        100.0 * (self.exact.saturating_sub(self.estimate)) as f64 / peak_bytes as f64
+    }
+}
+
+/// Find the op with the largest exact `O_s` contribution among the peak
+/// region's overlappable window ops and compare methods (Table II
+/// methodology: the op defining the optimised peak).
+pub fn precision_row(graph: &Graph) -> PrecisionRow {
+    // pick the op with the largest input+output footprint that is in the
+    // analytic family (conv/dw/pool) — the peak-defining candidates
+    let mut best: Option<(usize, usize)> = None; // (footprint, op index)
+    for (i, op) in graph.ops.iter().enumerate() {
+        let family = matches!(
+            op.kind,
+            crate::ir::op::OpKind::Conv2D(_)
+                | crate::ir::op::OpKind::DepthwiseConv2D(_)
+                | crate::ir::op::OpKind::Pool(_)
+        );
+        if !family {
+            continue;
+        }
+        let fp = op
+            .inputs
+            .iter()
+            .map(|&t| graph.tensor(t).size_bytes())
+            .sum::<usize>()
+            + graph.tensor(op.output).size_bytes();
+        if best.map_or(true, |(bfp, _)| fp > bfp) {
+            best = Some((fp, i));
+        }
+    }
+    let (_, i) = best.expect("no window op in graph");
+    let op = &graph.ops[i];
+    let in_shapes: Vec<_> = op.inputs.iter().map(|&t| &graph.tensor(t).shape).collect();
+    let out_shape = &graph.tensor(op.output).shape;
+    let dtype = graph.tensor(op.output).dtype;
+    let exact = compute_os(Method::Algorithmic, &op.kind, &in_shapes, out_shape, dtype).single();
+    let estimate = compute_os(Method::Analytic, &op.kind, &in_shapes, out_shape, dtype).single();
+    PrecisionRow {
+        model: graph.name.clone(),
+        op_name: op.name.clone(),
+        exact,
+        estimate,
+    }
+}
+
+/// Table II as markdown (exact vs analytic `O_s`).
+pub fn table2_markdown() -> Result<String> {
+    let mut s = String::from(
+        "| Model | Op | Exact O_s | Analytic O_s | Error (vs O_s) | Error (vs peak, paper defn) |\n|---|---|---:|---:|---:|---:|\n",
+    );
+    for name in [
+        "mobilenet_v1_1.0_224",
+        "mobilenet_v2_1.0_224",
+        "inception_resnet_v2",
+    ] {
+        let g = models::build(name)?;
+        let r = precision_row(&g);
+        let (_b, _d, row) = saving_row(&g);
+        writeln!(
+            s,
+            "| {} | {} | {} | {} | {:.2}% | {:.2}% |",
+            r.model,
+            r.op_name,
+            r.exact,
+            r.estimate,
+            r.error_pct(),
+            r.error_vs_peak_pct(row.original)
+        )?;
+    }
+    // the paper's §III-E worked example (Table I op) for direct comparison
+    let x = crate::ir::Shape::hwc(112, 112, 96);
+    let k = crate::ir::op::OpKind::DepthwiseConv2D(crate::ir::op::DepthwiseParams {
+        kernel: (3, 3),
+        stride: (2, 2),
+        dilation: (1, 1),
+        padding: crate::ir::Padding::Same,
+        depth_multiplier: 1,
+        act: crate::ir::Activation::None,
+    });
+    let out = crate::ops::infer_output(&k, &[&x])?;
+    let exact = compute_os(Method::Algorithmic, &k, &[&x], &out, DType::F32).single();
+    let est = compute_os(Method::Analytic, &k, &[&x], &out, DType::F32).single();
+    writeln!(
+        s,
+        "| Table-I op (paper: 1204224 / 1193376) | dwconv2d | {} | {} | {:.2}% | {:.2}% |",
+        exact,
+        est,
+        100.0 * (exact - est) as f64 / exact as f64,
+        100.0 * (exact - est) as f64 / (5880.0 * 1024.0)
+    )?;
+    Ok(s)
+}
+
+/// Table III as markdown, side by side with the paper's values.
+pub fn table3_markdown() -> Result<(String, Vec<SavingRow>)> {
+    let paper = paper_table3();
+    let mut s = String::from(
+        "| Model | Original (KB) | Optimised (KB) | Saving | Paper orig | Paper opt | Paper saving |\n|---|---:|---:|---:|---:|---:|---:|\n",
+    );
+    let mut rows = Vec::new();
+    for (name, p_orig, p_opt) in paper {
+        let g = models::build(name)?;
+        let (_b, _d, row) = saving_row(&g);
+        let p_saving = if p_orig == p_opt {
+            "None".to_string()
+        } else {
+            format!("{:.1}%", 100.0 * (p_orig - p_opt) as f64 / p_orig as f64)
+        };
+        writeln!(
+            s,
+            "| {} | {} | {} | {:.1}% | {} | {} | {} |",
+            name,
+            row.original / 1024,
+            row.optimised / 1024,
+            row.saving_pct(),
+            p_orig,
+            p_opt,
+            p_saving
+        )?;
+        rows.push(row);
+    }
+    Ok((s, rows))
+}
+
+/// CSV variant of Table III for downstream tooling.
+pub fn table3_csv(rows: &[SavingRow]) -> String {
+    let mut s = String::from("model,original_bytes,optimised_bytes,saving_pct\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{},{:.2}\n",
+            r.model,
+            r.original,
+            r.optimised,
+            r.saving_pct()
+        ));
+    }
+    s
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1024 * 1024 {
+        format!("{:.1} MB", b as f64 / (1024.0 * 1024.0))
+    } else if b >= 1024 {
+        format!("{:.1} KB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_row_table1_op() {
+        // MobileNet v2's peak-footprint window op is the Table-I dwconv
+        let g = models::build("mobilenet_v2_1.0_224").unwrap();
+        let r = precision_row(&g);
+        assert!(r.exact >= r.estimate, "analytic must lower-bound exact");
+        assert!(r.error_pct() < 2.0, "paper: penalty below 2%, got {}", r.error_pct());
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(96 * 1024), "96.0 KB");
+        assert_eq!(fmt_bytes(4 * 1024 * 1024 + 512 * 1024), "4.5 MB");
+    }
+}

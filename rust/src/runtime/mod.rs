@@ -1,0 +1,165 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The compile path is python/JAX (`python/compile/aot.py` lowers the L2
+//! model — which calls the L1 Pallas kernels — to **HLO text**; see
+//! DESIGN.md and /opt/xla-example/README.md for why text, not serialized
+//! protos, is the interchange format). At run time this module is the
+//! only thing touching XLA: `PjRtClient::cpu()` → parse HLO → compile →
+//! execute. Python never runs on the request path.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata sidecar emitted by `aot.py` alongside the HLO artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// input shape per request, e.g. `[32, 32, 3]`
+    pub input_shape: Vec<usize>,
+    /// output features per request, e.g. `10`
+    pub output_features: usize,
+    /// compiled batch sizes, ascending, e.g. `[1, 2, 4, 8]`
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ArtifactMeta {
+    /// Parse `model.meta.json`.
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text)?;
+        let arr = |key: &str| -> Result<Vec<usize>> {
+            Ok(v.get(key)
+                .and_then(|j| j.as_arr())
+                .context(format!("missing {key}"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect())
+        };
+        Ok(ArtifactMeta {
+            input_shape: arr("input_shape")?,
+            output_features: v
+                .get("output_features")
+                .and_then(|j| j.as_usize())
+                .context("missing output_features")?,
+            batch_sizes: arr("batch_sizes")?,
+        })
+    }
+
+    pub fn elements_per_request(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// A compiled executable for one batch size.
+pub struct BatchExecutable {
+    pub batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The loaded model: one PJRT client, one executable per batch size.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    pub variants: Vec<BatchExecutable>,
+}
+
+impl Engine {
+    /// Load every `model_b<N>.hlo.txt` listed in the metadata sidecar.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let meta = ArtifactMeta::load(&artifacts_dir.join("model.meta.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let mut variants = Vec::new();
+        for &b in &meta.batch_sizes {
+            let path: PathBuf = artifacts_dir.join(format!("model_b{b}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(wrap)
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap)?;
+            variants.push(BatchExecutable { batch: b, exe });
+        }
+        Ok(Engine {
+            client,
+            meta,
+            variants,
+        })
+    }
+
+    /// Smallest compiled batch size ≥ `n` (falls back to the largest).
+    pub fn variant_for(&self, n: usize) -> &BatchExecutable {
+        self.variants
+            .iter()
+            .find(|v| v.batch >= n)
+            .unwrap_or_else(|| self.variants.last().expect("no variants"))
+    }
+
+    /// Run a batch: `inputs` is `batch × elements_per_request` f32s,
+    /// zero-padded by the caller to the variant's batch size. Returns
+    /// `batch × output_features` probabilities.
+    pub fn run(&self, variant: &BatchExecutable, inputs: &[f32]) -> Result<Vec<f32>> {
+        let per = self.meta.elements_per_request();
+        anyhow::ensure!(
+            inputs.len() == variant.batch * per,
+            "input length {} != batch {} × {}",
+            inputs.len(),
+            variant.batch,
+            per
+        );
+        let mut dims: Vec<i64> = vec![variant.batch as i64];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        let lit = xla::Literal::vec1(inputs).reshape(&dims).map_err(wrap)?;
+        let result = variant.exe.execute::<xla::Literal>(&[lit]).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1().map_err(wrap)?;
+        let values = out.to_vec::<f32>().map_err(wrap)?;
+        anyhow::ensure!(
+            values.len() == variant.batch * self.meta.output_features,
+            "unexpected output length {}",
+            values.len()
+        );
+        Ok(values)
+    }
+
+    /// Device the client is running on (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+/// Default artifacts directory (`artifacts/` next to the workspace root,
+/// overridable with `DMO_ARTIFACTS`).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("DMO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let dir = std::env::temp_dir().join("dmo_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.meta.json");
+        std::fs::write(
+            &p,
+            r#"{"input_shape":[32,32,3],"output_features":10,"batch_sizes":[1,2,4,8]}"#,
+        )
+        .unwrap();
+        let m = ArtifactMeta::load(&p).unwrap();
+        assert_eq!(m.elements_per_request(), 32 * 32 * 3);
+        assert_eq!(m.batch_sizes, vec![1, 2, 4, 8]);
+        assert_eq!(m.output_features, 10);
+    }
+}

@@ -1,0 +1,18 @@
+//! Memory-trace instrumentation and figure rendering.
+//!
+//! Reproduces the paper's Valgrind-based visualisations:
+//! * Fig 1 / Fig 9 — buffer allocation maps (offset × scope rectangles).
+//! * Fig 2 — full-model load/store/update rasters, original vs DMO.
+//! * Fig 3 — single-op access patterns (relu, matmul, dwconv, conv).
+//! * Fig 6 — dwconv read offsets vs the analytic `minR(i)` bound.
+//! * Fig 8 — interleaved multi-threaded conv trace (§III-F).
+//!
+//! Renders are plain text (PGM images + ASCII + CSV) written under
+//! `results/`, keeping the repo free of binary assets and the toolchain
+//! free of plotting dependencies.
+
+pub mod raster;
+pub mod render;
+pub mod threads;
+
+pub use raster::RasterSink;

@@ -1,0 +1,208 @@
+//! Down-sampling event raster — records a full execution's memory events
+//! into a fixed time×address grid so whole-model traces (tens of millions
+//! of events) stay bounded.
+
+use crate::ops::exec::{EventKind, EventSink};
+
+/// Per-cell event counts.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cell {
+    pub loads: u32,
+    pub stores: u32,
+    pub updates: u32,
+}
+
+impl Cell {
+    pub fn total(&self) -> u32 {
+        self.loads + self.stores + self.updates
+    }
+
+    /// Dominant event class for colouring (paper: load=red, store=blue,
+    /// update=green).
+    pub fn dominant(&self) -> Option<EventKind> {
+        if self.total() == 0 {
+            return None;
+        }
+        if self.updates >= self.loads && self.updates >= self.stores {
+            Some(EventKind::Update)
+        } else if self.loads >= self.stores {
+            Some(EventKind::Load)
+        } else {
+            Some(EventKind::Store)
+        }
+    }
+}
+
+/// A time × memory grid of event counts.
+///
+/// Time advances by one tick per event (the paper's x-axis is
+/// instructions; event count is the deterministic analogue our
+/// instrumentation exposes). Two passes are typical: one to count events
+/// (`total_events`), one to rasterise with the right scale.
+pub struct RasterSink {
+    /// grid[t][m]
+    pub grid: Vec<Vec<Cell>>,
+    pub t_buckets: usize,
+    pub m_buckets: usize,
+    /// arena bytes represented per memory bucket
+    pub bytes_per_bucket: f64,
+    /// events represented per time bucket
+    pub events_per_bucket: f64,
+    tick: u64,
+}
+
+impl RasterSink {
+    /// `arena_bytes` across `m_buckets` columns; `expected_events` across
+    /// `t_buckets` rows.
+    pub fn new(arena_bytes: usize, expected_events: u64, t_buckets: usize, m_buckets: usize) -> Self {
+        RasterSink {
+            grid: vec![vec![Cell::default(); m_buckets]; t_buckets],
+            t_buckets,
+            m_buckets,
+            bytes_per_bucket: (arena_bytes.max(1) as f64) / m_buckets as f64,
+            events_per_bucket: (expected_events.max(1) as f64) / t_buckets as f64,
+            tick: 0,
+        }
+    }
+
+    fn bucket(&self, addr: usize) -> usize {
+        ((addr as f64 / self.bytes_per_bucket) as usize).min(self.m_buckets - 1)
+    }
+
+    /// Render as a portable graymap (P2) with class-coded intensities:
+    /// 0 = empty, loads dark, stores mid, updates bright.
+    pub fn to_pgm(&self) -> String {
+        let mut s = format!("P2\n{} {}\n255\n", self.m_buckets, self.t_buckets);
+        for row in &self.grid {
+            let mut line = String::new();
+            for c in row {
+                let v = match c.dominant() {
+                    None => 0,
+                    Some(EventKind::Load) => 90,
+                    Some(EventKind::Store) => 170,
+                    Some(EventKind::Update) => 255,
+                };
+                line.push_str(&format!("{v} "));
+            }
+            line.push('\n');
+            s.push_str(&line);
+        }
+        s
+    }
+
+    /// Compact ASCII view (`.` empty, `L` load, `S` store, `U` update).
+    pub fn to_ascii(&self) -> String {
+        let mut s = String::new();
+        for row in &self.grid {
+            for c in row {
+                s.push(match c.dominant() {
+                    None => '.',
+                    Some(EventKind::Load) => 'L',
+                    Some(EventKind::Store) => 'S',
+                    Some(EventKind::Update) => 'U',
+                });
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// CSV rows `t_bucket,m_bucket,loads,stores,updates`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t,m,loads,stores,updates\n");
+        for (t, row) in self.grid.iter().enumerate() {
+            for (m, c) in row.iter().enumerate() {
+                if c.total() > 0 {
+                    s.push_str(&format!("{t},{m},{},{},{}\n", c.loads, c.stores, c.updates));
+                }
+            }
+        }
+        s
+    }
+}
+
+impl EventSink for RasterSink {
+    fn event(&mut self, kind: EventKind, addr: usize, _len: usize) {
+        let t = ((self.tick as f64 / self.events_per_bucket) as usize).min(self.t_buckets - 1);
+        let m = self.bucket(addr);
+        let cell = &mut self.grid[t][m];
+        match kind {
+            EventKind::Load => cell.loads += 1,
+            EventKind::Store => cell.stores += 1,
+            EventKind::Update => cell.updates += 1,
+        }
+        self.tick += 1;
+    }
+}
+
+/// Count the events an execution will produce (first pass).
+#[derive(Debug, Default)]
+pub struct EventCounter {
+    pub count: u64,
+}
+
+impl EventSink for EventCounter {
+    fn event(&mut self, _kind: EventKind, _addr: usize, _len: usize) {
+        self.count += 1;
+    }
+}
+
+/// Shared handle so counters/rasters can be recovered after execution.
+#[derive(Default)]
+pub struct Shared<T>(pub std::rc::Rc<std::cell::RefCell<T>>);
+
+// manual impl: Rc handles are clonable regardless of T
+impl<T> Clone for Shared<T> {
+    fn clone(&self) -> Self {
+        Shared(self.0.clone())
+    }
+}
+
+impl<T> Shared<T> {
+    pub fn new(v: T) -> Self {
+        Shared(std::rc::Rc::new(std::cell::RefCell::new(v)))
+    }
+}
+
+impl<T: EventSink> EventSink for Shared<T> {
+    fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
+        self.0.borrow_mut().event(kind, addr, len);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raster_buckets_events() {
+        let mut r = RasterSink::new(100, 10, 5, 10);
+        for i in 0..10u64 {
+            r.event(EventKind::Load, (i * 10) as usize, 1);
+        }
+        // diagonal: event i lands in t=i/2, m=i
+        assert_eq!(r.grid[0][0].loads, 1);
+        assert_eq!(r.grid[4][9].loads, 1);
+        let ascii = r.to_ascii();
+        assert!(ascii.contains('L'));
+        assert_eq!(ascii.lines().count(), 5);
+    }
+
+    #[test]
+    fn pgm_header() {
+        let r = RasterSink::new(10, 10, 3, 4);
+        let pgm = r.to_pgm();
+        assert!(pgm.starts_with("P2\n4 3\n255\n"));
+    }
+
+    #[test]
+    fn dominant_class() {
+        let mut c = Cell::default();
+        assert_eq!(c.dominant(), None);
+        c.loads = 2;
+        c.stores = 1;
+        assert_eq!(c.dominant(), Some(EventKind::Load));
+        c.updates = 5;
+        assert_eq!(c.dominant(), Some(EventKind::Update));
+    }
+}

@@ -1,0 +1,272 @@
+//! Figure generators (Fig 1, 2, 3, 6, 9).
+
+use super::raster::{EventCounter, RasterSink, Shared};
+use crate::ir::graph::{Graph, TensorId};
+use crate::ir::op::OpKind;
+use crate::ir::{DType, Shape};
+use crate::ops::access::for_each_step;
+use crate::ops::exec::{execute_op, Arena, OpIo, Region};
+use crate::overlap::analytic::linear_bound;
+use crate::overlap::trace::dummy_weights;
+use crate::planner::Plan;
+use anyhow::Result;
+
+/// Fig 1 / Fig 9: buffer allocation map. Rows = execution slots (scope
+/// axis), columns = arena memory buckets; each tensor's rectangle is
+/// drawn with a rotating letter, `#` marking peak-defining buffers.
+pub fn alloc_map_ascii(graph: &Graph, plan: &Plan, width: usize) -> String {
+    let peak = plan.peak().max(1);
+    let n_slots = plan.order.0.len() + 1;
+    let mut rows = vec![vec!['.'; width]; n_slots];
+    let letters: Vec<char> = ('a'..='z').collect();
+    for t in 0..graph.tensors.len() {
+        let (Some(off), Some(scope)) = (plan.alloc.offsets[t], plan.scopes.scopes[t]) else {
+            continue;
+        };
+        let size = graph.tensor(TensorId(t)).size_bytes();
+        let c0 = off * width / peak;
+        let c1 = (((off + size) * width).div_ceil(peak)).min(width);
+        let peak_defining = off + size == peak;
+        let ch = if peak_defining { '#' } else { letters[t % letters.len()] };
+        for row in rows.iter_mut().take(scope.end.min(n_slots - 1) + 1).skip(scope.start) {
+            for cell in row.iter_mut().take(c1).skip(c0) {
+                *cell = ch;
+            }
+        }
+    }
+    let mut s = format!(
+        "# {} — peak {} KB ({} slots x {} B/col)\n",
+        graph.name,
+        peak / 1024,
+        n_slots,
+        peak / width
+    );
+    for row in rows {
+        s.push_str(&row.iter().collect::<String>());
+        s.push('\n');
+    }
+    s
+}
+
+/// Fig 1 / Fig 9 data: CSV `tensor,offset,size,scope_start,scope_end`.
+pub fn alloc_map_csv(graph: &Graph, plan: &Plan) -> String {
+    let mut s = String::from("tensor,offset,size,scope_start,scope_end\n");
+    for t in 0..graph.tensors.len() {
+        let (Some(off), Some(scope)) = (plan.alloc.offsets[t], plan.scopes.scopes[t]) else {
+            continue;
+        };
+        s.push_str(&format!(
+            "{},{},{},{},{}\n",
+            graph.tensor(TensorId(t)).name,
+            off,
+            graph.tensor(TensorId(t)).size_bytes(),
+            scope.start,
+            scope.end
+        ));
+    }
+    s
+}
+
+/// Fig 2: full-model memory access raster under `plan`'s layout.
+/// Two passes: count events, then rasterise.
+pub fn model_raster(
+    graph: &Graph,
+    plan: &Plan,
+    seed: u64,
+    t_buckets: usize,
+    m_buckets: usize,
+) -> Result<RasterSink> {
+    let inputs: Vec<Vec<f32>> = graph
+        .inputs
+        .iter()
+        .map(|&t| crate::interp::gen_input(graph, t, seed))
+        .collect();
+    // pass 1: count
+    let counter = Shared::new(EventCounter::default());
+    run_traced(graph, plan, &inputs, seed, Box::new(counter.clone()))?;
+    let total = counter.0.borrow().count;
+    // pass 2: raster
+    let raster = Shared::new(RasterSink::new(plan.peak(), total, t_buckets, m_buckets));
+    run_traced(graph, plan, &inputs, seed, Box::new(raster.clone()))?;
+    let inner = std::rc::Rc::try_unwrap(raster.0)
+        .map_err(|_| anyhow::anyhow!("raster still shared"))?
+        .into_inner();
+    Ok(inner)
+}
+
+fn run_traced(
+    graph: &Graph,
+    plan: &Plan,
+    inputs: &[Vec<f32>],
+    seed: u64,
+    sink: Box<dyn crate::ops::exec::EventSink>,
+) -> Result<()> {
+    use crate::ops::exec::gen_weights;
+    let regions: Vec<Option<Region>> = (0..graph.tensors.len())
+        .map(|t| {
+            plan.alloc.offsets[t].map(|off| Region::new(off, graph.tensor(TensorId(t)).size_bytes()))
+        })
+        .collect();
+    let mut arena = Arena::new(plan.peak());
+    for (&t, data) in graph.inputs.iter().zip(inputs) {
+        arena.write_tensor(graph.tensor(t).dtype, regions[t.0].unwrap(), data);
+    }
+    arena.set_sink(Some(sink));
+    for &opid in &plan.order.0 {
+        let op = graph.op(opid);
+        let in_shapes: Vec<&Shape> = op.inputs.iter().map(|&t| &graph.tensor(t).shape).collect();
+        let in_regions: Vec<Region> = op.inputs.iter().map(|&t| regions[t.0].unwrap()).collect();
+        let weights = gen_weights(op, seed ^ opid.0 as u64);
+        let io = OpIo {
+            in_shapes: &in_shapes,
+            in_regions: &in_regions,
+            out_shape: &graph.tensor(op.output).shape,
+            out_region: regions[op.output.0].unwrap(),
+            dtype: graph.tensor(op.output).dtype,
+            weights: &weights,
+        };
+        execute_op(&op.kind, &io, &mut arena)?;
+    }
+    arena.set_sink(None);
+    Ok(())
+}
+
+/// Fig 3: single-op access-pattern raster. Buffers are laid out
+/// input(s)-then-output, disjoint, like the paper's per-op traces.
+pub fn op_raster(
+    kind: &OpKind,
+    in_shapes: &[&Shape],
+    dtype: DType,
+    t_buckets: usize,
+    m_buckets: usize,
+) -> Result<RasterSink> {
+    let out_shape = crate::ops::infer_output(kind, in_shapes)?;
+    let t = dtype.size_bytes();
+    let mut base = 0usize;
+    let in_regions: Vec<Region> = in_shapes
+        .iter()
+        .map(|s| {
+            let r = Region::new(base, s.num_elements() * t);
+            base += r.len;
+            r
+        })
+        .collect();
+    let out_region = Region::new(base, out_shape.num_elements() * t);
+    let arena_size = out_region.end();
+
+    let run = |sink: Box<dyn crate::ops::exec::EventSink>| -> Result<()> {
+        let mut arena = Arena::new(arena_size);
+        let mut rng = crate::util::rng::Rng::new(0xF16_3);
+        for (s, r) in in_shapes.iter().zip(&in_regions) {
+            let data: Vec<f32> = (0..s.num_elements()).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            arena.write_tensor(dtype, *r, &data);
+        }
+        let weights = dummy_weights(kind, in_shapes, dtype);
+        arena.set_sink(Some(sink));
+        let io = OpIo {
+            in_shapes,
+            in_regions: &in_regions,
+            out_shape: &out_shape,
+            out_region,
+            dtype,
+            weights: &weights,
+        };
+        execute_op(kind, &io, &mut arena)?;
+        arena.set_sink(None);
+        Ok(())
+    };
+
+    let counter = Shared::new(EventCounter::default());
+    run(Box::new(counter.clone()))?;
+    let total = counter.0.borrow().count;
+    let raster = Shared::new(RasterSink::new(arena_size, total, t_buckets, m_buckets));
+    run(Box::new(raster.clone()))?;
+    Ok(std::rc::Rc::try_unwrap(raster.0)
+        .map_err(|_| anyhow::anyhow!("raster still shared"))?
+        .into_inner())
+}
+
+/// Fig 6 data: sampled `(step, min_read_offset)` pairs of a window op,
+/// plus the analytic bound `minR(i) = max(0, a·i + b)` — CSV columns
+/// `i,min_read,bound`.
+pub fn fig6_csv(kind: &OpKind, in_shapes: &[&Shape], samples: usize) -> Result<String> {
+    let out_shape = crate::ops::infer_output(kind, in_shapes)?;
+    let lb = linear_bound(kind, in_shapes, &out_shape)
+        .ok_or_else(|| anyhow::anyhow!("op outside the analytic family"))?;
+    let steps = crate::ops::access::step_count(kind, in_shapes, &out_shape);
+    let stride = (steps / samples.max(1)).max(1);
+    let mut s = String::from("i,min_read,bound\n");
+    let mut i = 0usize;
+    for_each_step(kind, in_shapes, &out_shape, &mut |_w, reads| {
+        if i % stride == 0 {
+            if let Some(r) = reads[0] {
+                let bound = (lb.a * i as f64 + lb.b).max(0.0);
+                s.push_str(&format!("{i},{r},{bound:.1}\n"));
+            }
+        }
+        i += 1;
+    });
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, DepthwiseParams, Padding, UnaryKind};
+    use crate::models;
+    use crate::planner::{plan_graph, PlanOptions};
+
+    #[test]
+    fn alloc_map_renders() {
+        let g = models::build("tiny").unwrap();
+        let plan = plan_graph(&g, PlanOptions::dmo());
+        let map = alloc_map_ascii(&g, &plan, 60);
+        assert!(map.contains('#'), "peak-defining buffer marked");
+        let csv = alloc_map_csv(&g, &plan);
+        assert!(csv.lines().count() > 5);
+    }
+
+    #[test]
+    fn model_raster_runs() {
+        let g = models::build("tiny").unwrap();
+        let plan = plan_graph(&g, PlanOptions::dmo());
+        let r = model_raster(&g, &plan, 1, 40, 60).unwrap();
+        let nonempty: u32 = r.grid.iter().flatten().map(|c| c.total()).sum();
+        assert!(nonempty > 1000);
+    }
+
+    #[test]
+    fn fig3_relu_is_diagonal() {
+        let s = Shape::hwc(16, 16, 4);
+        let r = op_raster(
+            &OpKind::Unary(UnaryKind::Relu),
+            &[&s],
+            DType::F32,
+            16,
+            32,
+        )
+        .unwrap();
+        // first time-bucket activity must be in low memory, last in high
+        let first_active: Vec<usize> = (0..32).filter(|&m| r.grid[0][m].total() > 0).collect();
+        let last_active: Vec<usize> = (0..32).filter(|&m| r.grid[15][m].total() > 0).collect();
+        assert!(first_active.iter().min() < last_active.iter().min());
+    }
+
+    #[test]
+    fn fig6_bound_below_reads() {
+        let x = Shape::hwc(24, 24, 8);
+        let k = OpKind::DepthwiseConv2D(DepthwiseParams {
+            kernel: (3, 3),
+            stride: (2, 2),
+            dilation: (1, 1),
+            padding: Padding::Same,
+            depth_multiplier: 1,
+            act: Activation::None,
+        });
+        let csv = fig6_csv(&k, &[&x], 50).unwrap();
+        for line in csv.lines().skip(1) {
+            let f: Vec<f64> = line.split(',').map(|v| v.parse().unwrap()).collect();
+            assert!(f[2] <= f[1] + 1e-9, "bound above an actual read: {line}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Minimal benchmarking helper (criterion is not in the vendored set).
+//!
+//! `cargo bench` runs each `benches/*.rs` as a plain binary; this module
+//! gives them consistent measurement (median-of-N wall times with spread)
+//! and table formatting.
+
+use std::time::{Duration, Instant};
+
+/// One measured result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn per_iter_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+}
+
+/// Time `f` `iters` times (after one warmup), reporting the median.
+pub fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Measurement {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    Measurement {
+        name: name.to_string(),
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        iters: iters.max(1),
+    }
+}
+
+/// Pretty duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1.0 {
+        format!("{:.0} ns", us * 1000.0)
+    } else if us < 1000.0 {
+        format!("{us:.1} µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2} ms", us / 1000.0)
+    } else {
+        format!("{:.2} s", us / 1_000_000.0)
+    }
+}
+
+/// Print a measurement row.
+pub fn report(m: &Measurement) {
+    println!(
+        "{:48} {:>12} (min {:>10}, max {:>10}, n={})",
+        m.name,
+        fmt_dur(m.median),
+        fmt_dur(m.min),
+        fmt_dur(m.max),
+        m.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = time("spin", 3, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(m.median > Duration::ZERO);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so `rand`, `serde`/`serde_json` and `criterion` are not
+//! available; these modules provide the minimal deterministic
+//! replacements the library needs (documented in DESIGN.md).
+
+pub mod bench;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,101 @@
+//! Deterministic PRNG (SplitMix64) for weight generation, synthetic
+//! inputs, property-test case generation and workload arrival processes.
+//!
+//! SplitMix64 is the seeding generator of `rand`'s `SmallRng`; it passes
+//! BigCrush and is fully reproducible across platforms, which matters
+//! because tests assert bit-exact numerics between runs.
+
+/// SplitMix64 generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded generator. Same seed ⇒ same stream, forever.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f64() as f32
+    }
+
+    /// Uniform usize in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Exponentially distributed inter-arrival time with rate `lambda`
+    /// (events per second) — used by the serving workload generator.
+    #[inline]
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        let u = self.next_f64().max(1e-12);
+        -u.ln() / lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.uniform(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+            let n = r.range(3, 9);
+            assert!((3..=9).contains(&n));
+        }
+    }
+
+    #[test]
+    fn exp_positive_and_mean_reasonable() {
+        let mut r = Rng::new(9);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exp(100.0)).sum::<f64>() / n as f64;
+        assert!(mean > 0.008 && mean < 0.012, "mean {mean}");
+    }
+}

@@ -1,0 +1,106 @@
+//! End-to-end tests over the PJRT runtime and the serving coordinator.
+//!
+//! These need `make artifacts` to have run; they skip (with a note)
+//! when the artifacts are absent so `cargo test` stays green in a fresh
+//! checkout. CI runs `make test`, which builds artifacts first.
+
+use dmo::coordinator::{serve, BatchPolicy, ServeConfig};
+use dmo::runtime::{default_artifacts_dir, Engine};
+use std::time::Duration;
+
+fn artifacts_ready() -> bool {
+    let ok = default_artifacts_dir().join("model.meta.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn engine_loads_and_outputs_distributions() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::load(&default_artifacts_dir()).unwrap();
+    assert_eq!(engine.platform(), "cpu");
+    let per = engine.meta.elements_per_request();
+    for &b in &engine.meta.batch_sizes {
+        let v = engine.variant_for(b);
+        assert_eq!(v.batch, b);
+        let mut rng = dmo::util::rng::Rng::new(b as u64);
+        let input: Vec<f32> = (0..b * per).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let out = engine.run(v, &input).unwrap();
+        assert_eq!(out.len(), b * engine.meta.output_features);
+        for row in out.chunks(engine.meta.output_features) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "softmax row sums to {s}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+}
+
+#[test]
+fn engine_is_deterministic_and_batch_consistent() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::load(&default_artifacts_dir()).unwrap();
+    let per = engine.meta.elements_per_request();
+    let mut rng = dmo::util::rng::Rng::new(5);
+    let one: Vec<f32> = (0..per).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    // b=1 twice: identical
+    let v1 = engine.variant_for(1);
+    let a = engine.run(v1, &one).unwrap();
+    let b = engine.run(v1, &one).unwrap();
+    assert_eq!(a, b);
+
+    // the same example inside a padded b=4 batch: same row
+    let v4 = engine.variant_for(3);
+    assert_eq!(v4.batch, 4);
+    let mut padded = vec![0.0f32; 4 * per];
+    padded[..per].copy_from_slice(&one);
+    let out = engine.run(v4, &padded).unwrap();
+    let of = engine.meta.output_features;
+    for (x, y) in a.iter().zip(&out[..of]) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn variant_selection_rounds_up() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::load(&default_artifacts_dir()).unwrap();
+    assert_eq!(engine.variant_for(1).batch, 1);
+    assert_eq!(engine.variant_for(3).batch, 4);
+    assert_eq!(engine.variant_for(8).batch, 8);
+    assert_eq!(engine.variant_for(100).batch, 8); // clamped to largest
+}
+
+#[test]
+fn serve_completes_all_requests() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = ServeConfig {
+        requests: 48,
+        rate: 2000.0,
+        queue_capacity: 64,
+        policy: BatchPolicy {
+            max_batch: 8,
+            window: Duration::from_millis(1),
+        },
+        seed: 3,
+        ..Default::default()
+    };
+    let r = serve(&cfg).unwrap();
+    assert_eq!(r.completed + r.shed, 48);
+    assert!(r.completed > 0);
+    let l = r.metrics.latency();
+    assert!(l.p50_us > 0.0 && l.p99_us >= l.p50_us);
+    assert!(r.metrics.batch_efficiency() > 0.1);
+    // the DMO arena story is attached to the report
+    assert!(r.arena_dmo < r.arena_original);
+}

@@ -1,0 +1,196 @@
+//! Property tests over the three `O_s` engines (§III).
+//!
+//! proptest is not in the vendored dependency set, so cases are generated
+//! from the library's deterministic PRNG — same shrink-free randomised
+//! coverage, fully reproducible by seed.
+
+use dmo::ir::op::{
+    Activation, BinaryKind, Conv2DParams, DepthwiseParams, OpKind, Padding, PoolKind, PoolParams,
+    UnaryKind,
+};
+use dmo::ir::{DType, Shape};
+use dmo::ops::infer_output;
+use dmo::overlap::algorithmic::{os_paper_arrays, os_streaming};
+use dmo::overlap::analytic::os_analytic;
+use dmo::overlap::trace::os_bottom_up;
+use dmo::util::rng::Rng;
+
+fn random_window_op(rng: &mut Rng) -> (OpKind, Shape) {
+    let h = rng.range(3, 20);
+    let w = rng.range(3, 20);
+    let c = rng.range(1, 8);
+    let x = Shape::hwc(h, w, c);
+    let padding = if rng.chance(0.5) { Padding::Same } else { Padding::Valid };
+    let kind = match rng.below(3) {
+        0 => OpKind::Conv2D(Conv2DParams {
+            kernel: (rng.range(1, 3), rng.range(1, 3)),
+            stride: (rng.range(1, 3), rng.range(1, 3)),
+            dilation: (1, 1),
+            padding,
+            out_channels: rng.range(1, 12),
+            act: Activation::None,
+        }),
+        1 => OpKind::DepthwiseConv2D(DepthwiseParams {
+            kernel: (rng.range(1, 3), rng.range(1, 3)),
+            stride: (rng.range(1, 3), rng.range(1, 3)),
+            dilation: (1, 1),
+            padding,
+            depth_multiplier: rng.range(1, 3),
+            act: Activation::None,
+        }),
+        _ => OpKind::Pool(PoolParams {
+            kind: if rng.chance(0.5) { PoolKind::Max } else { PoolKind::Avg },
+            kernel: (rng.range(1, 3), rng.range(1, 3)),
+            stride: (rng.range(1, 3), rng.range(1, 3)),
+            padding,
+        }),
+    };
+    (kind, x)
+}
+
+/// Invariant 2 (DESIGN.md): the analytic value never exceeds the exact
+/// algorithmic value — it must be a safe lower bound.
+#[test]
+fn analytic_is_lower_bound_on_window_ops() {
+    let mut rng = Rng::new(0xBEEF);
+    let mut checked = 0;
+    for _ in 0..300 {
+        let (kind, x) = random_window_op(&mut rng);
+        let Ok(out) = infer_output(&kind, &[&x]) else { continue };
+        if out.num_elements() == 0 {
+            continue;
+        }
+        let exact = os_streaming(&kind, &[&x], &out, DType::F32);
+        let approx = os_analytic(&kind, &[&x], &out, DType::F32);
+        assert!(
+            approx.single() <= exact.single(),
+            "analytic {} > exact {} for {kind:?} on {x}",
+            approx.single(),
+            exact.single()
+        );
+        checked += 1;
+    }
+    assert!(checked > 200, "only {checked} cases generated");
+}
+
+/// Invariant 1: bottom-up (observed events) equals algorithmic (offset
+/// stream) — two independent code paths over the same loop nests.
+#[test]
+fn bottom_up_equals_algorithmic_on_random_ops() {
+    let mut rng = Rng::new(0x7EA7);
+    for _ in 0..60 {
+        let (kind, x) = random_window_op(&mut rng);
+        let Ok(out) = infer_output(&kind, &[&x]) else { continue };
+        if out.num_elements() == 0 {
+            continue;
+        }
+        let dtype = if rng.chance(0.5) { DType::F32 } else { DType::I8 };
+        let a = os_streaming(&kind, &[&x], &out, dtype);
+        let b = os_bottom_up(&kind, &[&x], &out, dtype);
+        assert_eq!(a, b, "mismatch for {kind:?} on {x} {dtype}");
+    }
+}
+
+/// The paper's Algorithm-2 array form agrees with the streaming rewrite.
+#[test]
+fn paper_arrays_equal_streaming_on_random_ops() {
+    let mut rng = Rng::new(0xA55);
+    for _ in 0..60 {
+        let (kind, x) = random_window_op(&mut rng);
+        let Ok(out) = infer_output(&kind, &[&x]) else { continue };
+        if out.num_elements() == 0 {
+            continue;
+        }
+        assert_eq!(
+            os_paper_arrays(&kind, &[&x], &out, DType::F32),
+            os_streaming(&kind, &[&x], &out, DType::F32),
+            "forms disagree for {kind:?} on {x}"
+        );
+    }
+}
+
+/// Invariant 6: element-wise ops have O_s = OB_s exactly (in-place reuse
+/// is a special case of DMO, §III-A); matmul is effectively zero.
+#[test]
+fn elementwise_and_matmul_extremes() {
+    let mut rng = Rng::new(0xE1E);
+    for _ in 0..40 {
+        let s = Shape::hwc(rng.range(1, 10), rng.range(1, 10), rng.range(1, 8));
+        let ob = s.num_elements() * 4;
+        for kind in [
+            OpKind::Unary(UnaryKind::Relu),
+            OpKind::Unary(UnaryKind::Relu6),
+            OpKind::Unary(UnaryKind::Copy),
+        ] {
+            let os = os_streaming(&kind, &[&s], &s, DType::F32);
+            assert_eq!(os.single(), ob);
+        }
+        let os = os_streaming(&OpKind::Binary(BinaryKind::Add), &[&s, &s], &s, DType::F32);
+        assert_eq!(os.per_input, vec![ob, ob]);
+    }
+    // accumulating matmul: one element (the zero-init sweep writes the
+    // whole range before the first input read)
+    let x = Shape::new(&[1, rng.range(2, 40)]);
+    let k = OpKind::MatMulAccum {
+        out_features: rng.range(2, 40),
+    };
+    let out = infer_output(&k, &[&x]).unwrap();
+    assert_eq!(os_streaming(&k, &[&x], &out, DType::F32).single(), 4);
+}
+
+/// O_s scales with element size: the i8 overlap in bytes is exactly a
+/// quarter of the f32 overlap for the same op geometry.
+#[test]
+fn os_scales_with_dtype() {
+    let x = Shape::hwc(16, 16, 8);
+    let k = OpKind::DepthwiseConv2D(DepthwiseParams {
+        kernel: (3, 3),
+        stride: (2, 2),
+        dilation: (1, 1),
+        padding: Padding::Same,
+        depth_multiplier: 1,
+        act: Activation::None,
+    });
+    let out = infer_output(&k, &[&x]).unwrap();
+    let f = os_streaming(&k, &[&x], &out, DType::F32).single();
+    let q = os_streaming(&k, &[&x], &out, DType::I8).single();
+    assert_eq!(f, q * 4);
+}
+
+/// Softmax and global-average-pool are fully overlappable (their per-row
+/// / per-channel reads precede the corresponding writes).
+#[test]
+fn softmax_and_gap_fully_overlap()
+{
+    let s = Shape::new(&[6, 17]);
+    let os = os_streaming(&OpKind::Softmax, &[&s], &s, DType::F32);
+    assert_eq!(os.single(), s.num_elements() * 4);
+
+    let x = Shape::hwc(9, 9, 13);
+    let out = infer_output(&OpKind::GlobalAvgPool, &[&x]).unwrap();
+    let os = os_streaming(&OpKind::GlobalAvgPool, &[&x], &out, DType::F32);
+    assert_eq!(os.single(), out.num_elements() * 4);
+}
+
+/// Stride-2 window ops read ahead of their writes, so O_s equals the
+/// whole output buffer — the fact behind MobileNet v2's 20 % row.
+#[test]
+fn stride2_dwconv_os_is_whole_output() {
+    let mut rng = Rng::new(0x5712);
+    for _ in 0..20 {
+        let h = rng.range(6, 32);
+        let c = rng.range(1, 8);
+        let x = Shape::hwc(h, h, c);
+        let k = OpKind::DepthwiseConv2D(DepthwiseParams {
+            kernel: (3, 3),
+            stride: (2, 2),
+            dilation: (1, 1),
+            padding: Padding::Same,
+            depth_multiplier: 1,
+            act: Activation::None,
+        });
+        let out = infer_output(&k, &[&x]).unwrap();
+        let os = os_streaming(&k, &[&x], &out, DType::F32);
+        assert_eq!(os.single(), out.num_elements() * 4, "h={h} c={c}");
+    }
+}
