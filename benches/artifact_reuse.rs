@@ -1,0 +1,52 @@
+//! Bench: plan-artifact reuse vs re-planning.
+//!
+//! The point of [`dmo::planner::PlanArtifact`] is §II-D made concrete:
+//! the strategy × direction × heuristic search (plus the exact `O_s`
+//! table build, which walks every window op's step stream) runs once,
+//! offline; every serving worker then loads the artifact and only pays
+//! fingerprint + overlap-safety revalidation. This bench measures both
+//! sides of that trade on a mid-size and a large model and asserts the
+//! reuse path is at least 10× faster.
+
+use dmo::models;
+use dmo::planner::{PlanArtifact, Planner};
+use dmo::util::bench::{fmt_dur, report, time};
+
+fn main() {
+    println!("=== plan reuse: full search vs artifact load + revalidate ===\n");
+    let mut worst_speedup = f64::INFINITY;
+    for name in ["mobilenet_v1_1.0_224", "densenet_121"] {
+        let g = models::build(name).unwrap();
+        println!("-- {name} ({} ops, {} tensors)", g.ops.len(), g.tensors.len());
+
+        let m_search = time("full planner search (DMO)", 3, || {
+            std::hint::black_box(Planner::for_graph(&g).dmo(true).plan().unwrap());
+        });
+        report(&m_search);
+
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let path = std::env::temp_dir().join(format!("dmo_artifact_bench_{name}.json"));
+        PlanArtifact::from_plan(&g, &plan).save(&path).unwrap();
+
+        let m_reuse = time("artifact load + revalidate", 10, || {
+            let art = PlanArtifact::load(&path).unwrap();
+            let re = art.to_plan(&g).unwrap();
+            std::hint::black_box(re);
+        });
+        report(&m_reuse);
+
+        let speedup = m_search.median.as_secs_f64() / m_reuse.median.as_secs_f64().max(1e-9);
+        worst_speedup = worst_speedup.min(speedup);
+        println!(
+            "  reuse speedup: {speedup:.1}× ({} vs {})\n",
+            fmt_dur(m_search.median),
+            fmt_dur(m_reuse.median)
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+    println!("worst-case speedup across models: {worst_speedup:.1}×");
+    assert!(
+        worst_speedup >= 10.0,
+        "plan reuse must be ≥10× faster than re-planning, got {worst_speedup:.1}×"
+    );
+}

@@ -5,7 +5,7 @@
 use dmo::ir::op::{Activation, Conv2DParams, DepthwiseParams, Padding, UnaryKind};
 use dmo::ir::{DType, OpKind, Shape};
 use dmo::models;
-use dmo::planner::{plan_graph, PlanOptions};
+use dmo::planner::Planner;
 use dmo::trace::render::{alloc_map_csv, fig6_csv, model_raster, op_raster};
 use dmo::trace::threads::sharded_conv_events;
 use dmo::util::bench::{report, time};
@@ -50,8 +50,8 @@ fn main() {
 
     println!("\n=== Fig 1/2: whole-model maps & rasters ===\n");
     let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
-    let base = plan_graph(&g, PlanOptions::baseline());
-    let opt = plan_graph(&g, PlanOptions::dmo());
+    let base = Planner::for_graph(&g).plan().unwrap();
+    let opt = Planner::for_graph(&g).dmo(true).plan().unwrap();
     report(&time("fig1 alloc map (csv)", 20, || {
         std::hint::black_box(alloc_map_csv(&g, &base));
     }));
@@ -100,8 +100,8 @@ fn main() {
 
     println!("\n=== Fig 9: DenseNet allocation, original vs DMO ===\n");
     let g9 = models::build("densenet_121").unwrap();
-    let b9 = plan_graph(&g9, PlanOptions::baseline());
-    let o9 = plan_graph(&g9, PlanOptions::dmo());
+    let b9 = Planner::for_graph(&g9).plan().unwrap();
+    let o9 = Planner::for_graph(&g9).dmo(true).plan().unwrap();
     println!(
         "  densenet peak: original {} KB vs DMO {} KB (paper: 8624 vs 8232,",
         b9.peak() / 1024,

@@ -14,7 +14,7 @@ use dmo::ir::{DType, OpKind, Shape};
 use dmo::models;
 use dmo::overlap::algorithmic::{os_paper_arrays, os_streaming};
 use dmo::overlap::{compute_os, Method};
-use dmo::planner::{plan_graph, PlanOptions};
+use dmo::planner::Planner;
 use dmo::util::bench::{report, time};
 
 fn dw(stride: usize) -> OpKind {
@@ -70,9 +70,13 @@ fn main() {
         "inception_resnet_v2",
     ] {
         let g = models::build(name).unwrap();
-        let base = plan_graph(&g, PlanOptions::baseline());
-        let exact = plan_graph(&g, PlanOptions::dmo());
-        let analytic = plan_graph(&g, PlanOptions::dmo_analytic());
+        let base = Planner::for_graph(&g).plan().unwrap();
+        let exact = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let analytic = Planner::for_graph(&g)
+            .dmo(true)
+            .method(Method::Analytic)
+            .plan()
+            .unwrap();
         println!(
             "{:30} {:>9}K {:>11}K {:>11}K",
             name,

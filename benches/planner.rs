@@ -11,7 +11,7 @@
 use dmo::models;
 use dmo::planner::removal::{find_removals, removable_bytes};
 use dmo::planner::split::best_split;
-use dmo::planner::{allocate, analyse, serialise, OsTable, PlanOptions, HEURISTICS, STRATEGIES};
+use dmo::planner::{allocate, analyse, serialise, OsTable, Planner, HEURISTICS, STRATEGIES};
 use dmo::util::bench::{fmt_dur, time};
 use std::time::Instant;
 
@@ -48,10 +48,10 @@ fn main() {
     for name in ["tiny", "mobilenet_v1_1.0_224", "densenet_121", "nasnet_mobile"] {
         let g = models::build(name).unwrap();
         let m = time(
-            &format!("plan_graph dmo {name} ({} ops)", g.ops.len()),
+            &format!("planner session dmo {name} ({} ops)", g.ops.len()),
             3,
             || {
-                std::hint::black_box(dmo::planner::plan_graph(&g, PlanOptions::dmo()));
+                std::hint::black_box(Planner::for_graph(&g).dmo(true).plan().unwrap());
             },
         );
         dmo::util::bench::report(&m);

@@ -9,7 +9,7 @@
 
 use dmo::models;
 use dmo::overlap::{compute_os, Method};
-use dmo::planner::saving_row;
+use dmo::planner::PlannedModel;
 use dmo::report::precision_row;
 use dmo::util::bench::{report, time};
 
@@ -24,9 +24,9 @@ fn main() {
         "mobilenet_v2_1.0_224",
         "inception_resnet_v2",
     ] {
-        let g = models::build(name).unwrap();
-        let r = precision_row(&g);
-        let (_b, _d, row) = saving_row(&g);
+        let pm = PlannedModel::new(models::build(name).unwrap()).unwrap();
+        let r = precision_row(&pm.graph);
+        let row = pm.row();
         println!(
             "{:28} {:>14} {:>14} {:>8.2}% {:>11.2}%",
             name,

@@ -3,7 +3,7 @@
 //! plus end-to-end planning cost per model.
 
 use dmo::models;
-use dmo::planner::{plan_graph, PlanOptions};
+use dmo::planner::Planner;
 use dmo::report::paper_table3;
 use std::time::Instant;
 
@@ -18,8 +18,8 @@ fn main() {
     for (name, p_orig, p_opt) in paper_table3() {
         let g = models::build(name).unwrap();
         let t0 = Instant::now();
-        let base = plan_graph(&g, PlanOptions::baseline());
-        let opt = plan_graph(&g, PlanOptions::dmo());
+        let base = Planner::for_graph(&g).plan().unwrap();
+        let opt = Planner::for_graph(&g).dmo(true).plan().unwrap();
         let dt = t0.elapsed();
         let orig = base.peak();
         let o = opt.peak().min(orig);

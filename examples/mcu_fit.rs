@@ -12,7 +12,7 @@
 
 use dmo::mcu::{catalog, fit};
 use dmo::models;
-use dmo::planner::saving_row;
+use dmo::planner::PlannedModel;
 use dmo::report::fmt_bytes;
 
 /// SRAM the application keeps for stack/runtime besides the tensor arena.
@@ -33,18 +33,18 @@ fn main() -> anyhow::Result<()> {
     println!("{}", "-".repeat(110));
 
     for name in models_under_test {
-        let g = models::build(name)?;
-        let (_b, _d, row) = saving_row(&g);
+        let pm = PlannedModel::new(models::build(name)?)?;
+        let row = pm.row();
         print!(
             "{:28} {:>10} {:>10} {:>9}   ",
             name,
             fmt_bytes(row.original),
             fmt_bytes(row.optimised),
-            fmt_bytes(g.weight_bytes())
+            fmt_bytes(pm.graph.weight_bytes())
         );
         for m in catalog() {
-            let f0 = fit(&g, &m, row.original + RUNTIME_HEADROOM);
-            let f1 = fit(&g, &m, row.optimised + RUNTIME_HEADROOM);
+            let f0 = fit(&pm.graph, &m, row.original + RUNTIME_HEADROOM);
+            let f1 = fit(&pm.graph, &m, row.optimised + RUNTIME_HEADROOM);
             let mark = match (f0.deployable(), f1.deployable()) {
                 (true, true) => "✓",       // fits regardless
                 (false, true) => "D",      // deployable ONLY with DMO
@@ -69,11 +69,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     // the paper's specific claim, asserted
-    let g = models::build("mobilenet_v1_0.25_128_int8")?;
-    let (_b, _d, row) = saving_row(&g);
+    let pm = PlannedModel::new(models::build("mobilenet_v1_0.25_128_int8")?)?;
+    let g = &pm.graph;
+    let row = pm.row();
     let stm = &catalog()[0];
-    let without = fit(&g, stm, row.original + RUNTIME_HEADROOM).deployable();
-    let with = fit(&g, stm, row.optimised + RUNTIME_HEADROOM).deployable();
+    let without = fit(g, stm, row.original + RUNTIME_HEADROOM).deployable();
+    let with = fit(g, stm, row.optimised + RUNTIME_HEADROOM).deployable();
     println!(
         "\nSTM32F103xF + MobileNet v1 0.25 128 (8-bit): without DMO {} | with DMO {}",
         if without { "deploys" } else { "DOES NOT deploy" },

@@ -1,5 +1,7 @@
-//! Quickstart: plan a model with and without DMO, inspect the overlaps,
-//! and *prove* the optimised layout safe by executing it.
+//! Quickstart: plan a model with and without DMO in one planning
+//! session each, inspect the overlaps, *prove* the optimised layout safe
+//! by executing it, and round-trip the plan through a serializable
+//! artifact — the cross-process reuse path.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -7,7 +9,7 @@
 
 use dmo::interp::validate_plan;
 use dmo::models;
-use dmo::planner::{plan_graph, PlanOptions};
+use dmo::planner::{PlanArtifact, Planner};
 use dmo::report::fmt_bytes;
 use dmo::trace::render::alloc_map_ascii;
 
@@ -22,11 +24,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 1. baseline pre-allocation (modified heap, §IV)
-    let base = plan_graph(&graph, PlanOptions::baseline());
+    let base = Planner::for_graph(&graph).plan()?;
     println!("baseline arena : {}", fmt_bytes(base.peak()));
 
     // 2. diagonal memory optimisation (§II-D)
-    let opt = plan_graph(&graph, PlanOptions::dmo());
+    let opt = Planner::for_graph(&graph).dmo(true).plan()?;
     println!("DMO arena      : {}", fmt_bytes(opt.peak()));
     println!(
         "saving         : {:.1}%  ({} overlapped buffer pairs)\n",
@@ -48,7 +50,19 @@ fn main() -> anyhow::Result<()> {
     validate_plan(&graph, &opt, 2024)?;
     println!("\nvalidated: planned execution is bit-identical to the reference ✓");
 
-    // 4. the allocation map (Fig 1/2b style)
+    // 4. persist the plan and reload it, as a deploy process would —
+    //    the fingerprint check plus the pairwise safety checker run on
+    //    load, so a stale artifact can never reach the arena.
+    let path = std::env::temp_dir().join("dmo_quickstart_plan.json");
+    PlanArtifact::from_plan(&graph, &opt).save(&path)?;
+    let reloaded = PlanArtifact::load(&path)?.to_plan(&graph)?;
+    println!(
+        "artifact       : saved + reloaded via {} (peak {})",
+        path.display(),
+        fmt_bytes(reloaded.peak())
+    );
+
+    // 5. the allocation map (Fig 1/2b style)
     println!("\n{}", alloc_map_ascii(&graph, &opt, 96));
     Ok(())
 }

@@ -10,7 +10,7 @@
 use dmo::ir::op::{Activation, DepthwiseParams, OpKind, Padding, UnaryKind};
 use dmo::ir::{DType, Shape};
 use dmo::models;
-use dmo::planner::{plan_graph, PlanOptions};
+use dmo::planner::Planner;
 use dmo::report::fmt_bytes;
 use dmo::trace::render::{alloc_map_ascii, model_raster, op_raster};
 
@@ -20,8 +20,8 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(|| "mobilenet_v1_0.25_128_int8".to_string());
     let g = models::build(&name)?;
 
-    let base = plan_graph(&g, PlanOptions::baseline());
-    let opt = plan_graph(&g, PlanOptions::dmo());
+    let base = Planner::for_graph(&g).plan()?;
+    let opt = Planner::for_graph(&g).dmo(true).plan()?;
 
     println!("== Fig 1: heap allocation map ({name}) ==");
     println!("{}", alloc_map_ascii(&g, &base, 96));

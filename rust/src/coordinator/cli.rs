@@ -2,34 +2,45 @@
 
 use super::server::{serve, ServeConfig};
 use super::BatchPolicy;
+use crate::util::args::{opt, ArgSpec, Args};
 use anyhow::Result;
+use std::path::PathBuf;
 use std::time::Duration;
 
-fn opt<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> T {
-    args.iter()
-        .position(|a| a == name)
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
+/// Flags accepted by `dmo serve`.
+pub const SERVE_SPEC: &[ArgSpec] = &[
+    opt("--requests", "number of requests to generate (default 256)"),
+    opt("--rate", "open-loop arrival rate, req/s (default 500)"),
+    opt("--queue", "bounded queue capacity (default 64)"),
+    opt("--batch", "max dynamic batch size (default 8)"),
+    opt("--window-us", "batching window in µs (default 2000)"),
+    opt("--seed", "workload RNG seed (default 42)"),
+    opt("--plan", "pre-computed plan artifact to start from (skips the planner search)"),
+    opt("--model", "model the memory plan is for (default `tiny`)"),
+];
 
 /// Entry point used by `main.rs`.
-pub fn serve_main(args: &[String]) -> Result<()> {
+pub fn serve_main(args: &Args) -> Result<()> {
     let cfg = ServeConfig {
-        requests: opt(args, "--requests", 256u64),
-        rate: opt(args, "--rate", 500.0f64),
-        queue_capacity: opt(args, "--queue", 64usize),
+        requests: args.parsed("--requests", 256u64)?,
+        rate: args.parsed("--rate", 500.0f64)?,
+        queue_capacity: args.parsed("--queue", 64usize)?,
         policy: BatchPolicy {
-            max_batch: opt(args, "--batch", 8usize),
-            window: Duration::from_micros(opt(args, "--window-us", 2000u64)),
+            max_batch: args.parsed("--batch", 8usize)?,
+            window: Duration::from_micros(args.parsed("--window-us", 2000u64)?),
         },
-        seed: opt(args, "--seed", 42u64),
+        seed: args.parsed("--seed", 42u64)?,
+        plan_artifact: args.value("--plan").map(PathBuf::from),
+        plan_model: args.value("--model").unwrap_or("tiny").to_string(),
         ..Default::default()
     };
     println!(
         "serving {} requests at {} req/s (queue {}, batch ≤{}, window {:?})",
         cfg.requests, cfg.rate, cfg.queue_capacity, cfg.policy.max_batch, cfg.policy.window
     );
+    if let Some(p) = &cfg.plan_artifact {
+        println!("memory plan     : loaded from artifact {}", p.display());
+    }
     let report = serve(&cfg)?;
     let l = report.metrics.latency();
     println!("platform        : {}", report.platform);

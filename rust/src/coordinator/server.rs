@@ -32,6 +32,14 @@ pub struct Reply {
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub artifacts: PathBuf,
+    /// Pre-computed plan artifact for the on-device model
+    /// (`dmo plan <model> --export <path>`). When set, the server starts
+    /// from the loaded plan — revalidated against the graph fingerprint —
+    /// instead of re-running the planner search per process (§II-D:
+    /// planning is a pre-inference step).
+    pub plan_artifact: Option<PathBuf>,
+    /// Model whose DMO arena story the report carries.
+    pub plan_model: String,
     pub requests: u64,
     /// open-loop arrival rate, req/s
     pub rate: f64,
@@ -44,6 +52,8 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             artifacts: crate::runtime::default_artifacts_dir(),
+            plan_artifact: None,
+            plan_model: "tiny".to_string(),
             requests: 256,
             rate: 500.0,
             queue_capacity: 64,
@@ -71,6 +81,32 @@ pub struct ServeReport {
 /// `cfg.requests` requests, a worker thread owns the PJRT engine (it is
 /// not `Send`; it never leaves its thread) and executes padded batches.
 pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    // Resolve the memory plan FIRST (§II-D: planning is a pre-inference
+    // step): a stale or mismatched artifact must fail startup, not the
+    // end of a served workload. With an artifact configured the planner
+    // search never runs in this process.
+    let plan_graph_model = crate::models::build(&cfg.plan_model)?;
+    let (arena_original, arena_dmo) = match &cfg.plan_artifact {
+        Some(path) => {
+            let artifact = crate::planner::PlanArtifact::load(path)
+                .with_context(|| format!("loading plan artifact {}", path.display()))?;
+            let plan = artifact.to_plan(&plan_graph_model).with_context(|| {
+                format!(
+                    "revalidating plan artifact against model `{}`",
+                    cfg.plan_model
+                )
+            })?;
+            // no baseline search either: report the unplanned upper
+            // bound (sum of all arena tensors) as "original"
+            (plan_graph_model.total_tensor_bytes(), plan.peak())
+        }
+        None => {
+            let pm = crate::planner::PlannedModel::new(plan_graph_model)?;
+            let row = pm.row();
+            (row.original, row.optimised)
+        }
+    };
+
     let queue: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(cfg.queue_capacity));
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
 
@@ -169,10 +205,6 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         "output checksum {checksum} far from {expect} — model output is not a distribution"
     );
 
-    // the on-device arena story for the served model (report context)
-    let g = crate::models::build("tiny")?;
-    let (_b, _d, row) = crate::planner::saving_row(&g);
-
     Ok(ServeReport {
         completed,
         shed,
@@ -180,7 +212,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         throughput_rps: completed as f64 / wall.as_secs_f64(),
         metrics,
         platform,
-        arena_original: row.original,
-        arena_dmo: row.optimised,
+        arena_original,
+        arena_dmo,
     })
 }

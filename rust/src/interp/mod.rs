@@ -11,7 +11,7 @@
 
 use crate::ir::graph::{Graph, TensorId};
 use crate::ops::exec::{execute_op, gen_weights, Arena, OpIo, Region};
-use crate::planner::Plan;
+use crate::planner::{Plan, PlanArtifact};
 use anyhow::{ensure, Context, Result};
 
 /// Deterministic synthetic input for a tensor.
@@ -104,7 +104,8 @@ fn run_with_regions(
 
 /// Execute `graph` under `plan` and under the disjoint reference layout
 /// with identical inputs/weights; fail unless outputs are bit-identical.
-pub fn validate_plan(graph: &Graph, plan: &Plan, seed: u64) -> Result<()> {
+/// Returns the (verified) planned-layout outputs.
+fn execute_and_prove(graph: &Graph, plan: &Plan, seed: u64) -> Result<Vec<Vec<f32>>> {
     let inputs: Vec<Vec<f32>> = graph
         .inputs
         .iter()
@@ -122,7 +123,28 @@ pub fn validate_plan(graph: &Graph, plan: &Plan, seed: u64) -> Result<()> {
             );
         }
     }
-    Ok(())
+    Ok(got)
+}
+
+/// Execute `graph` under `plan` and under the disjoint reference layout
+/// with identical inputs/weights; fail unless outputs are bit-identical.
+pub fn validate_plan(graph: &Graph, plan: &Plan, seed: u64) -> Result<()> {
+    execute_and_prove(graph, plan, seed).map(|_| ())
+}
+
+/// Reconstruct a loaded [`PlanArtifact`] against `graph`, *prove* the
+/// layout safe by executing it bit-exactly against disjoint reference
+/// buffers, and return the model outputs — the deploy-time entry point
+/// for plans computed in another process.
+pub fn run_planned_artifact(
+    graph: &Graph,
+    artifact: &PlanArtifact,
+    seed: u64,
+) -> Result<Vec<Vec<f32>>> {
+    let plan = artifact
+        .to_plan(graph)
+        .context("revalidating plan artifact")?;
+    execute_and_prove(graph, &plan, seed).context("executing loaded plan artifact")
 }
 
 #[cfg(test)]
@@ -130,12 +152,12 @@ mod tests {
     use super::*;
     use crate::ir::DType;
     use crate::models;
-    use crate::planner::{plan_graph, PlanOptions};
+    use crate::planner::Planner;
 
     #[test]
     fn tiny_model_dmo_plan_is_safe_f32() {
         let g = models::build("tiny").unwrap();
-        let plan = plan_graph(&g, PlanOptions::dmo());
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
         assert!(!plan.alloc.applied.is_empty(), "expect overlaps on tiny");
         validate_plan(&g, &plan, 42).unwrap();
     }
@@ -143,14 +165,14 @@ mod tests {
     #[test]
     fn tiny_model_dmo_plan_is_safe_i8() {
         let g = models::tiny::build(DType::I8);
-        let plan = plan_graph(&g, PlanOptions::dmo());
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
         validate_plan(&g, &plan, 7).unwrap();
     }
 
     #[test]
     fn baseline_plan_is_safe() {
         let g = models::build("tiny").unwrap();
-        let plan = plan_graph(&g, PlanOptions::baseline());
+        let plan = Planner::for_graph(&g).plan().unwrap();
         validate_plan(&g, &plan, 3).unwrap();
     }
 
@@ -158,11 +180,29 @@ mod tests {
     fn corrupted_plan_is_caught() {
         // force an illegal overlap: shift a mid-graph tensor onto a live one
         let g = models::build("tiny").unwrap();
-        let mut plan = plan_graph(&g, PlanOptions::dmo());
+        let mut plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
         // tensor 1 = conv1 out; slam it onto tensor 2's offset
         let o2 = plan.alloc.offsets[2];
         plan.alloc.offsets[1] = o2;
         let r = validate_plan(&g, &plan, 42);
         assert!(r.is_err(), "clobbering layout must be detected");
+    }
+
+    #[test]
+    fn artifact_executes_and_proves_safe() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let art = PlanArtifact::from_plan(&g, &plan);
+        let out = run_planned_artifact(&g, &art, 42).unwrap();
+        let want = run_reference(
+            &g,
+            &g.inputs
+                .iter()
+                .map(|&t| gen_input(&g, t, 42))
+                .collect::<Vec<_>>(),
+            42,
+        )
+        .unwrap();
+        assert_eq!(out, want);
     }
 }

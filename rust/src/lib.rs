@@ -11,11 +11,49 @@
 //! and a serving stack (PJRT runtime + request coordinator) that runs
 //! AOT-compiled JAX/Pallas models with DMO-planned host arenas.
 //!
-//! Entry points:
+//! ## Entry points
+//!
+//! Planning follows the paper's lifecycle (§II-D): it is a
+//! *pre-inference* step whose result is reused for every inference.
+//!
 //! * [`models`] — the paper's networks by name.
-//! * [`planner`] — buffer pre-allocation with/without DMO.
+//! * [`planner::Planner`] — a builder-style planning session: configure
+//!   the §IV search (DMO on/off, `O_s` method, strategies, directions,
+//!   heuristics, a progress callback) and produce a validated
+//!   [`planner::Plan`].
+//! * [`planner::PlanArtifact`] — a versioned JSON snapshot of a plan;
+//!   save it once, then load and revalidate it in other processes (the
+//!   CLI, the serving coordinator, benches) without re-running the
+//!   search.
 //! * [`overlap::compute_os`] — `O_s` via any of the three methods.
-//! * [`interp`] — execute a planned graph and validate overlap safety.
+//! * [`interp`] — execute a planned graph and validate overlap safety;
+//!   [`interp::run_planned_artifact`] does so straight from a loaded
+//!   artifact.
+//!
+//! Plan once, persist, reuse:
+//!
+//! ```
+//! use dmo::planner::{PlanArtifact, Planner};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let graph = dmo::models::build("tiny")?;
+//!
+//! // One planning session, full §IV sweep, DMO on.
+//! let plan = Planner::for_graph(&graph).dmo(true).plan()?;
+//!
+//! // Snapshot → JSON → (another process) → revalidate → execute.
+//! let artifact = PlanArtifact::from_plan(&graph, &plan);
+//! let json = artifact.to_json().to_string();
+//! let reloaded = PlanArtifact::from_json(&dmo::util::json::Json::parse(&json)?)?;
+//! let restored = reloaded.to_plan(&graph)?; // checks fingerprint + layout
+//! assert_eq!(restored.peak(), plan.peak());
+//!
+//! // The interpreter proves the loaded layout safe by executing it.
+//! let outputs = dmo::interp::run_planned_artifact(&graph, &reloaded, 42)?;
+//! assert!(!outputs.is_empty());
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod coordinator;
 pub mod interp;

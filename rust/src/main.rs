@@ -2,36 +2,31 @@
 //!
 //! Subcommands map one-to-one onto the paper's artefacts:
 //! `table2`, `table3`, `figures`, `fit`, `plan`, `split`, `validate`,
-//! `trace-op`, `serve` (see `dmo help`).
+//! `trace-op`, `serve` (see `dmo help`). Plans can be exported as
+//! versioned artifacts (`dmo plan <model> --export p.json`) and reused
+//! across processes (`dmo validate <model> --import p.json`,
+//! `dmo serve --plan p.json`) without re-running the planner search.
 
 use anyhow::{bail, Context, Result};
 use dmo::ir::{DType, Shape};
-use dmo::planner::{plan_graph, saving_row, PlanOptions};
+use dmo::planner::{PlanArtifact, PlanCandidate, PlannedModel, Planner};
+use dmo::util::args::{flag, opt, ArgSpec, Args};
 use dmo::{interp, mcu, models, report, trace};
 use std::fs;
 use std::path::Path;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = run(&args) {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
 }
 
-fn flag(args: &[String], name: &str) -> bool {
-    args.iter().any(|a| a == name)
-}
+const OUT_SPEC: ArgSpec = opt("--out", "output directory (default `results`)");
 
-fn opt_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
-    args.iter()
-        .position(|a| a == name)
-        .and_then(|i| args.get(i + 1))
-        .map(|s| s.as_str())
-}
-
-fn out_dir(args: &[String]) -> String {
-    opt_value(args, "--out").unwrap_or("results").to_string()
+fn out_dir(args: &Args) -> String {
+    args.value("--out").unwrap_or("results").to_string()
 }
 
 fn write_out(dir: &str, file: &str, content: &str) -> Result<()> {
@@ -42,13 +37,34 @@ fn write_out(dir: &str, file: &str, content: &str) -> Result<()> {
     Ok(())
 }
 
-fn run(args: &[String]) -> Result<()> {
-    match args.first().map(|s| s.as_str()) {
-        None | Some("help") | Some("--help") => {
+/// Stderr progress line for `--verbose` planning sessions.
+fn report_candidate(c: &PlanCandidate) {
+    eprintln!(
+        "  [{}/{}] {} + {} → peak {} (best {})",
+        c.index + 1,
+        c.total,
+        c.strategy.name(),
+        c.heuristic.name(),
+        report::fmt_bytes(c.peak),
+        report::fmt_bytes(c.best_peak)
+    );
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let (cmd, rest) = match argv.split_first() {
+        None => {
+            print_help();
+            return Ok(());
+        }
+        Some((c, rest)) => (c.as_str(), rest),
+    };
+    match cmd {
+        "help" | "--help" => {
             print_help();
             Ok(())
         }
-        Some("models") => {
+        "models" => {
+            Args::parse(rest, &[])?;
             for n in models::all_names() {
                 let g = models::build(n)?;
                 println!(
@@ -60,15 +76,43 @@ fn run(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
-        Some("plan") => {
-            let name = args.get(1).context("usage: dmo plan <model> [--baseline] [--map]")?;
-            let g = models::build(name)?;
-            let opts = if flag(args, "--baseline") {
-                PlanOptions::baseline()
-            } else {
-                PlanOptions::dmo()
+        "plan" => {
+            let args = Args::parse(
+                rest,
+                &[
+                    flag("--baseline", "plan without DMO"),
+                    flag("--map", "print the allocation map"),
+                    flag("--verbose", "print every search candidate"),
+                    opt("--export", "write the plan as a reusable artifact"),
+                    opt("--import", "load a plan artifact instead of planning"),
+                ],
+            )?;
+            let name = args
+                .pos(0)
+                .context("usage: dmo plan <model> [--baseline] [--map] [--export PATH] [--import PATH]")?
+                .to_string();
+            let g = models::build(&name)?;
+            let plan = match args.value("--import") {
+                Some(path) => {
+                    if args.flag("--baseline") || args.flag("--verbose") {
+                        bail!(
+                            "--import loads a finished plan; --baseline/--verbose only \
+                             apply when planning from scratch"
+                        );
+                    }
+                    let artifact = PlanArtifact::load(Path::new(path))?;
+                    let plan = artifact.to_plan(&g)?;
+                    println!("loaded plan artifact {path} (revalidated against `{name}`)");
+                    plan
+                }
+                None => {
+                    let mut session = Planner::for_graph(&g).dmo(!args.flag("--baseline"));
+                    if args.flag("--verbose") {
+                        session = session.on_candidate(report_candidate);
+                    }
+                    session.plan()?
+                }
             };
-            let plan = plan_graph(&g, opts);
             println!(
                 "{name}: peak {} ({} strategy, {} heuristic, {} overlaps applied)",
                 report::fmt_bytes(plan.peak()),
@@ -84,27 +128,42 @@ fn run(args: &[String]) -> Result<()> {
                     report::fmt_bytes(a.bytes)
                 );
             }
-            if flag(args, "--map") {
+            if let Some(path) = args.value("--export") {
+                PlanArtifact::from_plan(&g, &plan).save(Path::new(path))?;
+                println!("exported plan artifact to {path}");
+            }
+            if args.flag("--map") {
                 println!("{}", trace::render::alloc_map_ascii(&g, &plan, 100));
             }
             Ok(())
         }
-        Some("table2") => {
-            let md = report::table2_markdown()?;
+        "table2" => {
+            let args = Args::parse(rest, &[OUT_SPEC])?;
+            let planned = report::plan_models(&report::table2_models())?;
+            let md = report::table2_markdown(&planned)?;
             println!("{md}");
-            write_out(&out_dir(args), "table2.md", &md)
+            write_out(&out_dir(&args), "table2.md", &md)
         }
-        Some("table3") => {
-            let (md, rows) = report::table3_markdown()?;
+        "table3" => {
+            let args = Args::parse(rest, &[OUT_SPEC])?;
+            let planned = report::plan_models(&models::table3_names())?;
+            let (md, rows) = report::table3_markdown(&planned)?;
             println!("{md}");
-            let dir = out_dir(args);
+            let dir = out_dir(&args);
             write_out(&dir, "table3.md", &md)?;
             write_out(&dir, "table3.csv", &report::table3_csv(&rows))
         }
-        Some("figures") => figures(args),
-        Some("fit") => {
-            let names: Vec<&str> = match args.get(1).filter(|a| !a.starts_with("--")) {
-                Some(n) => vec![n.as_str()],
+        "figures" => {
+            let args = Args::parse(
+                rest,
+                &[OUT_SPEC, opt("--fig", "regenerate one figure (1|2|3|6|8|9)")],
+            )?;
+            figures(&args)
+        }
+        "fit" => {
+            let args = Args::parse(rest, &[])?;
+            let names: Vec<&str> = match args.pos(0) {
+                Some(n) => vec![n],
                 None => models::table3_names(),
             };
             println!(
@@ -112,11 +171,11 @@ fn run(args: &[String]) -> Result<()> {
                 "model", "mcu", "arena0", "arenaD"
             );
             for name in names {
-                let g = models::build(name)?;
-                let (_b, _d, row) = saving_row(&g);
+                let pm = PlannedModel::new(models::build(name)?)?;
+                let row = pm.row();
                 for m in mcu::catalog() {
-                    let f0 = mcu::fit(&g, &m, row.original);
-                    let f1 = mcu::fit(&g, &m, row.optimised);
+                    let f0 = mcu::fit(&pm.graph, &m, row.original);
+                    let f1 = mcu::fit(&pm.graph, &m, row.optimised);
                     println!(
                         "{:32} {:20} {:>9} {:>9}  {:12} {}",
                         name,
@@ -130,8 +189,9 @@ fn run(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
-        Some("split") => {
-            let name = args.get(1).context("usage: dmo split <model>")?;
+        "split" => {
+            let args = Args::parse(rest, &[])?;
+            let name = args.pos(0).context("usage: dmo split <model>")?;
             let g = models::build(name)?;
             match dmo::planner::split::best_split(&g, 8) {
                 Some(r) => {
@@ -149,27 +209,53 @@ fn run(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
-        Some("validate") => {
-            let name = args.get(1).context("usage: dmo validate <model>")?;
-            let g = models::build(name)?;
-            let plan = plan_graph(&g, PlanOptions::dmo());
-            interp::validate_plan(&g, &plan, 42)?;
-            println!(
-                "{name}: DMO plan ({} with {} overlaps) executes bit-identically to the reference — safe",
-                report::fmt_bytes(plan.peak()),
-                plan.alloc.applied.len()
-            );
+        "validate" => {
+            let args = Args::parse(
+                rest,
+                &[opt("--import", "plan artifact to revalidate and execute")],
+            )?;
+            let name = args
+                .pos(0)
+                .context("usage: dmo validate <model> [--import PATH]")?
+                .to_string();
+            let g = models::build(&name)?;
+            match args.value("--import") {
+                Some(path) => {
+                    let artifact = PlanArtifact::load(Path::new(path))?;
+                    interp::run_planned_artifact(&g, &artifact, 42)?;
+                    println!(
+                        "{name}: artifact {path} ({}, {} overlaps) revalidated and executed \
+                         bit-identically to the reference — safe",
+                        report::fmt_bytes(artifact.peak),
+                        artifact.applied.len()
+                    );
+                }
+                None => {
+                    let plan = Planner::for_graph(&g).dmo(true).plan()?;
+                    interp::validate_plan(&g, &plan, 42)?;
+                    println!(
+                        "{name}: DMO plan ({} with {} overlaps) executes bit-identically to the \
+                         reference — safe",
+                        report::fmt_bytes(plan.peak()),
+                        plan.alloc.applied.len()
+                    );
+                }
+            }
             Ok(())
         }
-        Some("trace-op") => {
-            let which = args.get(1).map(|s| s.as_str()).unwrap_or("dwconv");
+        "trace-op" => {
+            let args = Args::parse(rest, &[])?;
+            let which = args.pos(0).unwrap_or("dwconv");
             let (kind, shape) = trace_op_spec(which)?;
             let r = trace::render::op_raster(&kind, &[&shape], DType::F32, 48, 96)?;
             println!("{}", r.to_ascii());
             Ok(())
         }
-        Some("serve") => dmo::coordinator::cli::serve_main(args),
-        Some(other) => bail!("unknown command `{other}` — try `dmo help`"),
+        "serve" => {
+            let args = Args::parse(rest, dmo::coordinator::cli::SERVE_SPEC)?;
+            dmo::coordinator::cli::serve_main(&args)
+        }
+        other => bail!("unknown command `{other}` — try `dmo help`"),
     }
 }
 
@@ -204,25 +290,24 @@ fn trace_op_spec(which: &str) -> Result<(dmo::ir::OpKind, Shape)> {
     })
 }
 
-fn figures(args: &[String]) -> Result<()> {
+fn figures(args: &Args) -> Result<()> {
     let dir = out_dir(args);
-    let which: Option<usize> = opt_value(args, "--fig").map(|v| v.parse()).transpose()?;
+    let which: Option<usize> = args.value("--fig").map(|v| v.parse()).transpose()?;
     let all = which.is_none();
     let fig = |n: usize| all || which == Some(n);
 
     // Figs 1 & 2 use the paper's example model: MobileNet v1 0.25 128 8-bit
-    let g = models::build("mobilenet_v1_0.25_128_int8")?;
-    let base = plan_graph(&g, PlanOptions::baseline());
-    let opt = plan_graph(&g, PlanOptions::dmo());
+    let pm = PlannedModel::new(models::build("mobilenet_v1_0.25_128_int8")?)?;
+    let (g, base, opt) = (&pm.graph, &pm.baseline, &pm.dmo);
 
     if fig(1) {
-        write_out(&dir, "fig1_alloc_original.txt", &trace::render::alloc_map_ascii(&g, &base, 100))?;
-        write_out(&dir, "fig1_alloc_original.csv", &trace::render::alloc_map_csv(&g, &base))?;
+        write_out(&dir, "fig1_alloc_original.txt", &trace::render::alloc_map_ascii(g, base, 100))?;
+        write_out(&dir, "fig1_alloc_original.csv", &trace::render::alloc_map_csv(g, base))?;
     }
     if fig(2) {
-        let ra = trace::render::model_raster(&g, &base, 1, 120, 160)?;
+        let ra = trace::render::model_raster(g, base, 1, 120, 160)?;
         write_out(&dir, "fig2a_trace_original.pgm", &ra.to_pgm())?;
-        let rb = trace::render::model_raster(&g, &opt, 1, 120, 160)?;
+        let rb = trace::render::model_raster(g, opt, 1, 120, 160)?;
         write_out(&dir, "fig2b_trace_dmo.pgm", &rb.to_pgm())?;
         println!(
             "fig2: arena original {} vs DMO {}",
@@ -265,15 +350,13 @@ fn figures(args: &[String]) -> Result<()> {
         write_out(&dir, "fig8_multithreaded_conv.pgm", &r.to_pgm())?;
     }
     if fig(9) {
-        let g9 = models::build("densenet_121")?;
-        let b9 = plan_graph(&g9, PlanOptions::baseline());
-        let o9 = plan_graph(&g9, PlanOptions::dmo());
-        write_out(&dir, "fig9a_densenet_original.csv", &trace::render::alloc_map_csv(&g9, &b9))?;
-        write_out(&dir, "fig9b_densenet_dmo.csv", &trace::render::alloc_map_csv(&g9, &o9))?;
+        let pm9 = PlannedModel::new(models::build("densenet_121")?)?;
+        write_out(&dir, "fig9a_densenet_original.csv", &trace::render::alloc_map_csv(&pm9.graph, &pm9.baseline))?;
+        write_out(&dir, "fig9b_densenet_dmo.csv", &trace::render::alloc_map_csv(&pm9.graph, &pm9.dmo))?;
         println!(
             "fig9: densenet original {} vs DMO {}",
-            report::fmt_bytes(b9.peak()),
-            report::fmt_bytes(o9.peak())
+            report::fmt_bytes(pm9.baseline.peak()),
+            report::fmt_bytes(pm9.dmo.peak())
         );
     }
     Ok(())
@@ -283,13 +366,17 @@ fn print_help() {
     println!(
         "dmo — Diagonal Memory Optimisation (paper reproduction)
 
-USAGE: dmo <command> [args]
+USAGE: dmo <command> [args]   (flags accept both `--key value` and `--key=value`)
 
 COMMANDS:
   models                      list the model zoo
-  plan <model> [--baseline] [--map]
-                              plan a model's arena; print overlaps
-  validate <model>            execute the DMO plan, prove bit-exact safety
+  plan <model> [--baseline] [--map] [--verbose]
+       [--export PATH] [--import PATH]
+                              plan a model's arena (or reload an exported
+                              plan artifact); print overlaps
+  validate <model> [--import PATH]
+                              execute the DMO plan (or a loaded artifact),
+                              prove bit-exact safety
   table2 [--out DIR]          O_s exact vs analytic (paper Table II)
   table3 [--out DIR]          memory savings, 11 models (paper Table III)
   figures [--fig N] [--out DIR]
@@ -298,7 +385,8 @@ COMMANDS:
   split <model>               best operation-splitting report (§II-A)
   trace-op <relu|matmul|dwconv|conv>
                               ASCII access-pattern trace (Fig 3)
-  serve [--requests N] [--rate R] [--batch B]
-                              end-to-end serving on the AOT'd model"
+  serve [--requests N] [--rate R] [--batch B] [--plan PATH] [--model M]
+                              end-to-end serving on the AOT'd model,
+                              optionally starting from a plan artifact"
     );
 }

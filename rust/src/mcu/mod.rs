@@ -119,7 +119,7 @@ pub fn deploy_matrix(graph: &Graph, row: &SavingRow) -> Vec<DeployRow> {
 mod tests {
     use super::*;
     use crate::models;
-    use crate::planner::saving_row;
+    use crate::planner::PlannedModel;
 
     /// §IV's headline deployment claim: MobileNet v1 0.25 128 (8-bit)
     /// fits the STM32F103xF's 96 KB SRAM *only* with DMO (96 KB arena
@@ -127,13 +127,13 @@ mod tests {
     /// weights take most of the 768 KB flash.
     #[test]
     fn stm32f103_needs_dmo_for_smallest_mobilenet() {
-        let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
-        let (_b, _d, row) = saving_row(&g);
+        let pm = PlannedModel::new(models::build("mobilenet_v1_0.25_128_int8").unwrap()).unwrap();
+        let row = pm.row();
         let stm = &catalog()[0];
         // without DMO the arena exactly consumes all SRAM — treat the
         // paper's "only possible with DMO" as requiring headroom
-        let without = fit(&g, stm, row.original + 4 * 1024); // +4 KB runtime headroom
-        let with = fit(&g, stm, row.optimised + 4 * 1024);
+        let without = fit(&pm.graph, stm, row.original + 4 * 1024); // +4 KB runtime headroom
+        let with = fit(&pm.graph, stm, row.optimised + 4 * 1024);
         assert!(!without.arena_fits, "96 KB arena + runtime must NOT fit");
         assert!(with.arena_fits, "64 KB arena + runtime must fit");
         assert!(with.weights_fit, "weights must fit flash");
@@ -147,18 +147,21 @@ mod tests {
 
     #[test]
     fn big_models_never_fit_mcus() {
-        let g = models::build("mobilenet_v2_1.0_224").unwrap();
-        let (_b, _d, row) = saving_row(&g);
+        let pm = PlannedModel::new(models::build("mobilenet_v2_1.0_224").unwrap()).unwrap();
+        let row = pm.row();
         for m in catalog() {
-            assert!(!fit(&g, &m, row.optimised).deployable(), "{} should not fit", m.name);
+            assert!(
+                !fit(&pm.graph, &m, row.optimised).deployable(),
+                "{} should not fit",
+                m.name
+            );
         }
     }
 
     #[test]
     fn matrix_shape() {
-        let g = models::build("tiny_int8").unwrap();
-        let (_b, _d, row) = saving_row(&g);
-        let rows = deploy_matrix(&g, &row);
+        let pm = PlannedModel::new(models::build("tiny_int8").unwrap()).unwrap();
+        let rows = deploy_matrix(&pm.graph, &pm.row());
         assert_eq!(rows.len(), catalog().len());
         // tiny model fits everything, with or without
         assert!(rows.iter().all(|r| r.with_dmo));

@@ -62,6 +62,17 @@ impl Method {
             Method::Analytic => "analytic",
         }
     }
+
+    /// Parse from the name produced by [`Method::name`] — used when
+    /// deserialising plan artifacts.
+    pub fn from_name(name: &str) -> Option<Method> {
+        match name {
+            "bottom-up" => Some(Method::BottomUp),
+            "algorithmic" => Some(Method::Algorithmic),
+            "analytic" => Some(Method::Analytic),
+            _ => None,
+        }
+    }
 }
 
 /// Upper cap for `O_s`: with the input completely below the output start

@@ -78,7 +78,7 @@ impl Direction {
 /// buffer (§IV); TFLite Micro's greedy planner instead offers buffers in
 /// decreasing size order. Both are heuristics for the same NP-hard
 /// problem ("no guarantee of optimality", §IV) and neither dominates;
-/// [`super::plan_graph`] sweeps all and keeps the best, exactly as the
+/// [`super::Planner`] sweeps all and keeps the best, exactly as the
 /// paper sweeps serialisation orders.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Heuristic {
@@ -111,6 +111,18 @@ impl Heuristic {
             Heuristic::Frontier(Direction::Backward) => "frontier-bwd",
             Heuristic::SizeDesc => "size-desc",
             Heuristic::PairFrontier => "pair-frontier",
+        }
+    }
+
+    /// Parse from the name produced by [`Heuristic::name`] — used when
+    /// deserialising plan artifacts.
+    pub fn from_name(name: &str) -> Option<Heuristic> {
+        match name {
+            "frontier-fwd" => Some(Heuristic::Frontier(Direction::Forward)),
+            "frontier-bwd" => Some(Heuristic::Frontier(Direction::Backward)),
+            "size-desc" => Some(Heuristic::SizeDesc),
+            "pair-frontier" => Some(Heuristic::PairFrontier),
+            _ => None,
         }
     }
 }

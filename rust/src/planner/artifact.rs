@@ -1,0 +1,540 @@
+//! Serializable plan artifacts — cross-process reuse of a computed plan.
+//!
+//! §II-D makes DMO pre-allocation an *offline* step: the overlap
+//! geometry is computed once and reused for every inference. A
+//! [`PlanArtifact`] is the durable form of that step — a versioned JSON
+//! snapshot of a validated [`Plan`](super::Plan) (execution order, byte
+//! offsets, applied overlaps, the `O_s` table with its method and hash,
+//! and a structural fingerprint of the graph it was planned against).
+//!
+//! Loading is defensive: [`PlanArtifact::to_plan`] refuses artifacts
+//! whose version, graph fingerprint, or `O_s` table hash do not match,
+//! and re-runs the pairwise overlap-safety checker on the reconstructed
+//! layout before handing it out. The checker trusts the stored `O_s`
+//! budgets (recomputing them would erase the point of caching); for the
+//! full bit-exactness proof, run the layout through
+//! [`crate::interp::run_planned_artifact`], which executes it against a
+//! disjoint reference.
+
+use super::alloc::{Allocation, AppliedOverlap, Heuristic, OsTable};
+use super::error::PlanError;
+use super::order::{self, ExecOrder, Strategy};
+use super::scope::analyse;
+use super::Plan;
+use crate::ir::graph::{Graph, OpId, TensorId};
+use crate::overlap::Method;
+use crate::util::json::{num, obj, s, Json};
+use std::path::Path;
+
+/// 64-bit FNV-1a, the repository's deterministic structural hash.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn word(&mut self, v: usize) {
+        self.bytes(&(v as u64).to_le_bytes());
+    }
+
+    fn str(&mut self, v: &str) {
+        self.word(v.len());
+        self.bytes(v.as_bytes());
+    }
+}
+
+/// Structural fingerprint of a graph: name, tensors (shape, dtype,
+/// kind), ops (kind incl. parameters, input/output wiring) and the
+/// input/output lists. Two graphs plan identically iff these match, so
+/// the fingerprint is what gates artifact reuse.
+pub fn graph_fingerprint(graph: &Graph) -> u64 {
+    let mut h = Fnv::new();
+    h.str(&graph.name);
+    h.word(graph.tensors.len());
+    for t in &graph.tensors {
+        h.word(t.shape.0.len());
+        for &d in &t.shape.0 {
+            h.word(d);
+        }
+        h.str(t.dtype.name());
+        h.str(&format!("{:?}", t.kind));
+    }
+    h.word(graph.ops.len());
+    for op in &graph.ops {
+        h.str(&format!("{:?}", op.kind));
+        h.word(op.inputs.len());
+        for &t in &op.inputs {
+            h.word(t.0);
+        }
+        h.word(op.output.0);
+    }
+    h.word(graph.inputs.len());
+    for &t in &graph.inputs {
+        h.word(t.0);
+    }
+    h.word(graph.outputs.len());
+    for &t in &graph.outputs {
+        h.word(t.0);
+    }
+    h.0
+}
+
+/// Content hash of an `O_s` table (method + every per-input budget).
+fn os_table_hash(method: Method, per_op: &[Vec<usize>]) -> u64 {
+    let mut h = Fnv::new();
+    h.str(method.name());
+    h.word(per_op.len());
+    for row in per_op {
+        h.word(row.len());
+        for &v in row {
+            h.word(v);
+        }
+    }
+    h.0
+}
+
+fn hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex(text: &str) -> Result<u64, PlanError> {
+    u64::from_str_radix(text, 16)
+        .map_err(|_| PlanError::Malformed(format!("bad hex hash `{text}`")))
+}
+
+/// A versioned, serializable snapshot of a validated [`Plan`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanArtifact {
+    /// Format version ([`PlanArtifact::VERSION`] when written by this
+    /// build).
+    pub version: u64,
+    /// Name of the graph the plan was computed for.
+    pub model: String,
+    /// [`graph_fingerprint`] of that graph.
+    pub fingerprint: u64,
+    /// Winning serialisation strategy.
+    pub strategy: Strategy,
+    /// Winning allocation heuristic.
+    pub heuristic: Heuristic,
+    /// `O_s` engine the table was computed with.
+    pub method: Method,
+    /// Execution order (op indices).
+    pub order: Vec<usize>,
+    /// Byte offset per tensor (`None` = tensor has no arena buffer).
+    pub offsets: Vec<Option<usize>>,
+    /// Arena bytes required.
+    pub peak: usize,
+    /// Applied overlaps as `(op, input, output, bytes)`.
+    pub applied: Vec<(usize, usize, usize, usize)>,
+    /// Per-(op, input) `O_s` budgets in bytes.
+    pub os_per_op: Vec<Vec<usize>>,
+    /// Content hash of `method` + `os_per_op`.
+    pub os_hash: u64,
+}
+
+impl PlanArtifact {
+    /// Artifact format version this build reads and writes.
+    pub const VERSION: u64 = 1;
+
+    /// Marker stored in the `kind` field of every artifact file.
+    pub const KIND: &'static str = "dmo-plan-artifact";
+
+    /// Snapshot a validated plan for `graph`.
+    pub fn from_plan(graph: &Graph, plan: &Plan) -> PlanArtifact {
+        PlanArtifact {
+            version: Self::VERSION,
+            model: graph.name.clone(),
+            fingerprint: graph_fingerprint(graph),
+            strategy: plan.strategy,
+            heuristic: plan.heuristic,
+            method: plan.os.method,
+            order: plan.order.0.iter().map(|op| op.0).collect(),
+            offsets: plan.alloc.offsets.clone(),
+            peak: plan.alloc.peak,
+            applied: plan
+                .alloc
+                .applied
+                .iter()
+                .map(|a| (a.op.0, a.input.0, a.output.0, a.bytes))
+                .collect(),
+            os_per_op: plan.os.per_op.clone(),
+            os_hash: os_table_hash(plan.os.method, &plan.os.per_op),
+        }
+    }
+
+    /// Serialise to the artifact JSON document.
+    pub fn to_json(&self) -> Json {
+        let offsets = Json::Arr(
+            self.offsets
+                .iter()
+                .map(|o| match o {
+                    Some(v) => num(*v),
+                    None => Json::Null,
+                })
+                .collect(),
+        );
+        let applied = Json::Arr(
+            self.applied
+                .iter()
+                .map(|&(op, input, output, bytes)| {
+                    obj(vec![
+                        ("op", num(op)),
+                        ("input", num(input)),
+                        ("output", num(output)),
+                        ("bytes", num(bytes)),
+                    ])
+                })
+                .collect(),
+        );
+        let os = Json::Arr(
+            self.os_per_op
+                .iter()
+                .map(|row| Json::Arr(row.iter().map(|&v| num(v)).collect()))
+                .collect(),
+        );
+        obj(vec![
+            ("kind", s(Self::KIND)),
+            ("version", num(self.version as usize)),
+            ("model", s(&self.model)),
+            ("fingerprint", s(&hex(self.fingerprint))),
+            ("strategy", s(self.strategy.name())),
+            ("heuristic", s(self.heuristic.name())),
+            ("method", s(self.method.name())),
+            ("order", Json::Arr(self.order.iter().map(|&i| num(i)).collect())),
+            ("offsets", offsets),
+            ("peak", num(self.peak)),
+            ("applied", applied),
+            ("os", os),
+            ("os_hash", s(&hex(self.os_hash))),
+        ])
+    }
+
+    /// Parse an artifact JSON document.
+    pub fn from_json(v: &Json) -> Result<PlanArtifact, PlanError> {
+        let field = |key: &str| {
+            v.get(key)
+                .ok_or_else(|| PlanError::Malformed(format!("missing field `{key}`")))
+        };
+        let str_field = |key: &str| {
+            field(key)?
+                .as_str()
+                .map(|x| x.to_string())
+                .ok_or_else(|| PlanError::Malformed(format!("field `{key}` must be a string")))
+        };
+        let usize_field = |key: &str| {
+            field(key)?
+                .as_usize()
+                .ok_or_else(|| PlanError::Malformed(format!("field `{key}` must be a number")))
+        };
+
+        let kind = str_field("kind")?;
+        if kind != Self::KIND {
+            return Err(PlanError::Malformed(format!(
+                "not a plan artifact (kind `{kind}`)"
+            )));
+        }
+        let version = usize_field("version")? as u64;
+        if version != Self::VERSION {
+            return Err(PlanError::UnsupportedVersion {
+                found: version,
+                supported: Self::VERSION,
+            });
+        }
+
+        let strategy_name = str_field("strategy")?;
+        let strategy = Strategy::from_name(&strategy_name)
+            .ok_or_else(|| PlanError::Malformed(format!("unknown strategy `{strategy_name}`")))?;
+        let heuristic_name = str_field("heuristic")?;
+        let heuristic = Heuristic::from_name(&heuristic_name)
+            .ok_or_else(|| PlanError::Malformed(format!("unknown heuristic `{heuristic_name}`")))?;
+        let method_name = str_field("method")?;
+        let method = Method::from_name(&method_name)
+            .ok_or_else(|| PlanError::Malformed(format!("unknown O_s method `{method_name}`")))?;
+
+        let usize_arr = |key: &str| -> Result<Vec<usize>, PlanError> {
+            field(key)?
+                .as_arr()
+                .ok_or_else(|| PlanError::Malformed(format!("field `{key}` must be an array")))?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| PlanError::Malformed(format!("non-numeric entry in `{key}`")))
+                })
+                .collect()
+        };
+
+        let offsets = field("offsets")?
+            .as_arr()
+            .ok_or_else(|| PlanError::Malformed("field `offsets` must be an array".into()))?
+            .iter()
+            .map(|x| match x {
+                Json::Null => Ok(None),
+                other => other
+                    .as_usize()
+                    .map(Some)
+                    .ok_or_else(|| PlanError::Malformed("bad entry in `offsets`".into())),
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+
+        let applied = field("applied")?
+            .as_arr()
+            .ok_or_else(|| PlanError::Malformed("field `applied` must be an array".into()))?
+            .iter()
+            .map(|entry| {
+                let part = |key: &str| {
+                    entry
+                        .get(key)
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| PlanError::Malformed(format!("bad `applied.{key}`")))
+                };
+                Ok((part("op")?, part("input")?, part("output")?, part("bytes")?))
+            })
+            .collect::<Result<Vec<_>, PlanError>>()?;
+
+        let os_per_op = field("os")?
+            .as_arr()
+            .ok_or_else(|| PlanError::Malformed("field `os` must be an array".into()))?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or_else(|| PlanError::Malformed("bad row in `os`".into()))?
+                    .iter()
+                    .map(|x| {
+                        x.as_usize()
+                            .ok_or_else(|| PlanError::Malformed("non-numeric entry in `os`".into()))
+                    })
+                    .collect::<Result<Vec<usize>, _>>()
+            })
+            .collect::<Result<Vec<_>, PlanError>>()?;
+
+        Ok(PlanArtifact {
+            version,
+            model: str_field("model")?,
+            fingerprint: parse_hex(&str_field("fingerprint")?)?,
+            strategy,
+            heuristic,
+            method,
+            order: usize_arr("order")?,
+            offsets,
+            peak: usize_field("peak")?,
+            applied,
+            os_per_op,
+            os_hash: parse_hex(&str_field("os_hash")?)?,
+        })
+    }
+
+    /// Write the artifact to `path` as JSON, creating parent
+    /// directories as needed (matching the CLI's other outputs).
+    pub fn save(&self, path: &Path) -> Result<(), PlanError> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| PlanError::Io(format!("creating {}: {e}", parent.display())))?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| PlanError::Io(format!("writing {}: {e}", path.display())))
+    }
+
+    /// Read an artifact file. Parsing only — call
+    /// [`PlanArtifact::to_plan`] to revalidate against a graph.
+    pub fn load(path: &Path) -> Result<PlanArtifact, PlanError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| PlanError::Io(format!("reading {}: {e}", path.display())))?;
+        let v = Json::parse(&text)
+            .map_err(|e| PlanError::Malformed(format!("{}: {e:#}", path.display())))?;
+        Self::from_json(&v)
+    }
+
+    /// `model@fingerprint` label used in mismatch errors.
+    fn identity(&self) -> String {
+        format!("{}@{}", self.model, hex(self.fingerprint))
+    }
+
+    /// Reconstruct and revalidate the plan against `graph`.
+    ///
+    /// Verifies, in order: the graph fingerprint (a mismatching graph
+    /// yields [`PlanError::GraphMismatch`] — §II-D overlap geometry is
+    /// only valid for the exact graph), the `O_s` table hash, structural
+    /// consistency (table shapes, order validity), and finally the full
+    /// pairwise overlap-safety check of the reconstructed layout.
+    pub fn to_plan(&self, graph: &Graph) -> Result<Plan, PlanError> {
+        if self.version != Self::VERSION {
+            return Err(PlanError::UnsupportedVersion {
+                found: self.version,
+                supported: Self::VERSION,
+            });
+        }
+        let found_fp = graph_fingerprint(graph);
+        if self.model != graph.name || self.fingerprint != found_fp {
+            return Err(PlanError::GraphMismatch {
+                expected: self.identity(),
+                found: format!("{}@{}", graph.name, hex(found_fp)),
+            });
+        }
+        if self.os_hash != os_table_hash(self.method, &self.os_per_op) {
+            return Err(PlanError::Malformed(
+                "O_s table does not match its recorded hash".into(),
+            ));
+        }
+        if self.offsets.len() != graph.tensors.len() {
+            return Err(PlanError::Malformed(format!(
+                "offset table covers {} tensors, graph has {}",
+                self.offsets.len(),
+                graph.tensors.len()
+            )));
+        }
+        if self.os_per_op.len() != graph.ops.len()
+            || self
+                .os_per_op
+                .iter()
+                .zip(&graph.ops)
+                .any(|(row, op)| row.len() != op.inputs.len())
+        {
+            return Err(PlanError::Malformed(
+                "O_s table shape does not match the graph's ops".into(),
+            ));
+        }
+        if self.order.iter().any(|&i| i >= graph.ops.len())
+            || self
+                .applied
+                .iter()
+                .any(|&(op, i, o, _)| {
+                    op >= graph.ops.len() || i >= graph.tensors.len() || o >= graph.tensors.len()
+                })
+        {
+            return Err(PlanError::Malformed(
+                "order or overlap entry out of range".into(),
+            ));
+        }
+
+        let order = ExecOrder(self.order.iter().map(|&i| OpId(i)).collect());
+        if !order::is_valid(graph, &order) {
+            return Err(PlanError::InvalidLayout(
+                "stored execution order is not a valid topological order".into(),
+            ));
+        }
+        let scopes = analyse(graph, &order);
+        let os = OsTable {
+            per_op: self.os_per_op.clone(),
+            method: self.method,
+        };
+        let alloc = Allocation {
+            offsets: self.offsets.clone(),
+            peak: self.peak,
+            applied: self
+                .applied
+                .iter()
+                .map(|&(op, input, output, bytes)| AppliedOverlap {
+                    op: OpId(op),
+                    input: TensorId(input),
+                    output: TensorId(output),
+                    bytes,
+                })
+                .collect(),
+        };
+        super::check(graph, &scopes, &os, &alloc)
+            .map_err(|e| PlanError::InvalidLayout(format!("{e:#}")))?;
+        Ok(Plan {
+            order,
+            scopes,
+            alloc,
+            strategy: self.strategy,
+            heuristic: self.heuristic,
+            os,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::planner::Planner;
+
+    #[test]
+    fn fingerprint_is_stable_and_structure_sensitive() {
+        let a = models::build("tiny").unwrap();
+        let b = models::build("tiny").unwrap();
+        assert_eq!(graph_fingerprint(&a), graph_fingerprint(&b));
+        let c = models::build("tiny_int8").unwrap();
+        assert_ne!(graph_fingerprint(&a), graph_fingerprint(&c));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let art = PlanArtifact::from_plan(&g, &plan);
+        let text = art.to_json().to_string();
+        let back = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(art, back);
+    }
+
+    #[test]
+    fn reloaded_plan_matches_original() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let art = PlanArtifact::from_plan(&g, &plan);
+        let re = art.to_plan(&g).unwrap();
+        assert_eq!(re.peak(), plan.peak());
+        assert_eq!(re.order, plan.order);
+        assert_eq!(re.alloc.offsets, plan.alloc.offsets);
+        assert_eq!(re.strategy, plan.strategy);
+        assert_eq!(re.heuristic, plan.heuristic);
+    }
+
+    #[test]
+    fn wrong_graph_is_rejected() {
+        let g = models::build("tiny").unwrap();
+        let other = models::build("tiny_int8").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let art = PlanArtifact::from_plan(&g, &plan);
+        assert!(matches!(
+            art.to_plan(&other),
+            Err(PlanError::GraphMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn tampered_peak_fails_the_safety_check() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let mut art = PlanArtifact::from_plan(&g, &plan);
+        // a peak that disagrees with the offsets is an invalid layout
+        art.peak += 1;
+        assert!(matches!(art.to_plan(&g), Err(PlanError::InvalidLayout(_))));
+    }
+
+    #[test]
+    fn tampered_os_table_is_rejected_by_hash() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let mut art = PlanArtifact::from_plan(&g, &plan);
+        if let Some(first) = art.os_per_op.iter_mut().flat_map(|r| r.iter_mut()).next() {
+            *first = first.wrapping_add(4096);
+        }
+        assert!(matches!(art.to_plan(&g), Err(PlanError::Malformed(_))));
+    }
+
+    #[test]
+    fn future_version_is_refused() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let mut art = PlanArtifact::from_plan(&g, &plan);
+        art.version = PlanArtifact::VERSION + 1;
+        assert_eq!(
+            art.to_plan(&g).unwrap_err(),
+            PlanError::UnsupportedVersion {
+                found: PlanArtifact::VERSION + 1,
+                supported: PlanArtifact::VERSION,
+            }
+        );
+    }
+}

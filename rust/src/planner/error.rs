@@ -1,0 +1,115 @@
+//! Structured planner errors.
+//!
+//! The planner session API ([`crate::planner::Planner`]) and the plan
+//! artifact layer ([`crate::planner::PlanArtifact`]) report failures as
+//! [`PlanError`] values instead of panicking: a serving process that
+//! loads a stale or corrupt plan must be able to refuse it cleanly and
+//! fall back to re-planning. The enum implements `std::error::Error` by
+//! hand (the vendored dependency set has no `thiserror`), so it flows
+//! into `anyhow::Result` call chains unchanged.
+
+use std::fmt;
+
+/// Everything that can go wrong while planning a graph or reloading a
+/// serialized plan artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// The graph has no arena tensors to place.
+    EmptyGraph {
+        /// Name of the offending graph.
+        model: String,
+    },
+    /// The configured search space is empty (no strategies, or no
+    /// heuristics left after direction filtering).
+    EmptySearchSpace {
+        /// Which axis of the search space is empty.
+        axis: &'static str,
+    },
+    /// A produced or loaded layout failed the pairwise overlap-safety
+    /// checker.
+    InvalidLayout(String),
+    /// An artifact was created for a different graph (fingerprint or
+    /// model-name mismatch) — §II-D: overlap geometry is only valid for
+    /// the exact graph it was planned against.
+    GraphMismatch {
+        /// `model@fingerprint` the artifact was created for.
+        expected: String,
+        /// `model@fingerprint` of the graph it was applied to.
+        found: String,
+    },
+    /// The artifact's format version is not supported by this build.
+    UnsupportedVersion {
+        /// Version recorded in the artifact.
+        found: u64,
+        /// Version this build reads and writes.
+        supported: u64,
+    },
+    /// The artifact file is structurally broken (bad JSON, missing or
+    /// ill-typed fields, inconsistent table sizes, O_s hash mismatch).
+    Malformed(String),
+    /// Reading or writing the artifact file failed.
+    Io(String),
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::EmptyGraph { model } => {
+                write!(f, "graph `{model}` has no tensors to plan")
+            }
+            PlanError::EmptySearchSpace { axis } => {
+                write!(f, "planner search space is empty: no {axis} configured")
+            }
+            PlanError::InvalidLayout(why) => {
+                write!(f, "layout failed overlap-safety validation: {why}")
+            }
+            PlanError::GraphMismatch { expected, found } => {
+                write!(
+                    f,
+                    "plan artifact does not match the graph: artifact is for {expected}, \
+                     graph is {found} (re-plan the model)"
+                )
+            }
+            PlanError::UnsupportedVersion { found, supported } => {
+                write!(
+                    f,
+                    "plan artifact version {found} not supported (this build reads v{supported})"
+                )
+            }
+            PlanError::Malformed(why) => write!(f, "malformed plan artifact: {why}"),
+            PlanError::Io(why) => write!(f, "plan artifact I/O failed: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_actionable() {
+        let e = PlanError::GraphMismatch {
+            expected: "tiny@00aa".into(),
+            found: "tiny@00bb".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("tiny@00aa") && s.contains("tiny@00bb"));
+
+        let e = PlanError::UnsupportedVersion {
+            found: 9,
+            supported: 1,
+        };
+        assert!(e.to_string().contains('9'));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn f() -> anyhow::Result<()> {
+            Err(PlanError::EmptySearchSpace { axis: "strategies" })?
+        }
+        let msg = format!("{:#}", f().unwrap_err());
+        assert!(msg.contains("strategies"), "{msg}");
+    }
+}

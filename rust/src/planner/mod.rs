@@ -1,65 +1,48 @@
 //! Memory planning: serialisation → scopes → allocation (→ validation).
 //!
-//! [`plan_graph`] reproduces the paper's §IV methodology: serialise the
-//! graph with both eager and lazy strategies, allocate forwards and
-//! backwards with the modified heap allocator, and keep the lowest-peak
-//! layout. With DMO enabled the allocator may additionally overlap each
-//! op's dying input with its output by up to `O_s`.
+//! Planning is a *pre-inference* step (§II-D: "this approach can only be
+//! used as a pre-allocation method"): the overlap geometry is computed
+//! once, offline, and then reused for every inference. The API mirrors
+//! that lifecycle:
+//!
+//! * [`Planner`] — a builder-style session that configures the §IV
+//!   search (strategy × direction × heuristic, with or without DMO) and
+//!   produces a validated [`Plan`]. Long searches are observable through
+//!   [`Planner::on_candidate`].
+//! * [`PlanArtifact`] — a versioned, JSON-serializable snapshot of a
+//!   [`Plan`] that can be persisted with [`PlanArtifact::save`], shipped
+//!   across processes, and revalidated against the target graph with
+//!   [`PlanArtifact::to_plan`]. Deploy-time consumers (the CLI, the
+//!   serving coordinator, benches) load artifacts instead of re-running
+//!   the search.
+//!
+//! ```
+//! use dmo::planner::Planner;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let graph = dmo::models::build("tiny")?;
+//! let plan = Planner::for_graph(&graph).dmo(true).plan()?;
+//! assert!(plan.peak() > 0);
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod alloc;
+pub mod artifact;
+pub mod error;
 pub mod order;
 pub mod removal;
 pub mod scope;
 pub mod split;
 
 pub use alloc::{allocate, check, Allocation, AppliedOverlap, Direction, Heuristic, OsTable, DIRECTIONS, HEURISTICS};
+pub use artifact::{graph_fingerprint, PlanArtifact};
+pub use error::PlanError;
 pub use order::{serialise, ExecOrder, Strategy, STRATEGIES};
 pub use scope::{analyse, Scope, Scopes};
 
 use crate::ir::graph::Graph;
 use crate::overlap::Method;
-
-/// Planning configuration.
-#[derive(Debug, Clone, Copy)]
-pub struct PlanOptions {
-    /// Apply diagonal memory optimisation (overlap relaxation).
-    pub dmo: bool,
-    /// Engine used for `O_s` when `dmo`.
-    ///
-    /// Default: the exact algorithmic method. The paper planned with the
-    /// analytic lower bound (§II-D) and reports a <2 % penalty (§III-E);
-    /// under our allocator the penalty can be structural — e.g. the
-    /// stride-2 depthwise output of MobileNet nests inside its input only
-    /// when `O_s` equals the exact output size, and the analytic bound's
-    /// few-hundred-byte shortfall then costs a whole buffer of packing.
-    /// `benches/os_methods.rs` quantifies this as an ablation; see
-    /// EXPERIMENTS.md §Deviations.
-    pub method: Method,
-}
-
-impl PlanOptions {
-    pub fn baseline() -> Self {
-        PlanOptions {
-            dmo: false,
-            method: Method::Algorithmic,
-        }
-    }
-
-    pub fn dmo() -> Self {
-        PlanOptions {
-            dmo: true,
-            method: Method::Algorithmic,
-        }
-    }
-
-    /// DMO planning with the paper's analytic `O_s` (ablation).
-    pub fn dmo_analytic() -> Self {
-        PlanOptions {
-            dmo: true,
-            method: Method::Analytic,
-        }
-    }
-}
 
 /// A complete, validated memory plan.
 #[derive(Debug, Clone)]
@@ -80,25 +63,186 @@ impl Plan {
     }
 }
 
-/// Plan `graph`: sweep strategy × direction, return the lowest-peak valid
-/// layout (§IV: "serialised using both an eager and lazy execution
-/// strategy with the lowest peak memory figure being taken").
-pub fn plan_graph(graph: &Graph, opts: PlanOptions) -> Plan {
-    // O_s depends only on op geometry, never on serialisation order —
-    // build the table once for the whole sweep (perf pass, §Perf).
-    let os = if opts.dmo {
-        OsTable::build(graph, opts.method)
-    } else {
-        OsTable::disabled(graph)
-    };
-    let mut best: Option<Plan> = None;
-    for strat in STRATEGIES {
-        let ord = serialise(graph, strat);
-        let scopes = analyse(graph, &ord);
-        for h in HEURISTICS {
-            let a = allocate(graph, &scopes, &os, h);
-            debug_assert!(check(graph, &scopes, &os, &a).is_ok());
-            if best.as_ref().map_or(true, |b| a.peak < b.alloc.peak) {
+/// One evaluated point of the planner's search, reported to
+/// [`Planner::on_candidate`] observers as the sweep runs.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanCandidate {
+    /// Serialisation strategy of this candidate.
+    pub strategy: Strategy,
+    /// Allocation heuristic of this candidate.
+    pub heuristic: Heuristic,
+    /// Arena peak this candidate achieved.
+    pub peak: usize,
+    /// Best (lowest) peak seen so far, including this candidate.
+    pub best_peak: usize,
+    /// 0-based index of this candidate in the sweep.
+    pub index: usize,
+    /// Total number of candidates the sweep will evaluate.
+    pub total: usize,
+}
+
+/// Builder-style planning session.
+///
+/// Defaults reproduce the paper's baseline search: DMO off, exact
+/// algorithmic `O_s` when DMO is enabled, and the full
+/// strategy × direction × heuristic sweep of §IV. Every axis can be
+/// narrowed:
+///
+/// ```
+/// use dmo::overlap::Method;
+/// use dmo::planner::{Direction, Heuristic, Planner, Strategy};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let graph = dmo::models::build("tiny")?;
+/// let plan = Planner::for_graph(&graph)
+///     .dmo(true)
+///     .method(Method::Analytic)
+///     .strategies(&[Strategy::Lazy])
+///     .directions(&[Direction::Backward])
+///     .heuristics(&[Heuristic::Frontier(Direction::Backward), Heuristic::SizeDesc])
+///     .plan()?;
+/// assert_eq!(plan.strategy, Strategy::Lazy);
+/// # Ok(())
+/// # }
+/// ```
+pub struct Planner<'a> {
+    graph: &'a Graph,
+    dmo: bool,
+    method: Method,
+    strategies: Vec<Strategy>,
+    heuristics: Vec<Heuristic>,
+    directions: Vec<Direction>,
+    on_candidate: Option<Box<dyn FnMut(&PlanCandidate) + 'a>>,
+}
+
+impl<'a> Planner<'a> {
+    /// Start a planning session for `graph` with the default (baseline,
+    /// full-sweep) configuration.
+    pub fn for_graph(graph: &'a Graph) -> Planner<'a> {
+        Planner {
+            graph,
+            dmo: false,
+            method: Method::Algorithmic,
+            strategies: STRATEGIES.to_vec(),
+            heuristics: HEURISTICS.to_vec(),
+            directions: DIRECTIONS.to_vec(),
+            on_candidate: None,
+        }
+    }
+
+    /// Enable or disable diagonal memory optimisation (overlap
+    /// relaxation, §II-D).
+    pub fn dmo(mut self, enabled: bool) -> Self {
+        self.dmo = enabled;
+        self
+    }
+
+    /// Engine used for `O_s` when DMO is enabled.
+    ///
+    /// Default: the exact algorithmic method. The paper planned with the
+    /// analytic lower bound (§II-D) and reports a <2 % penalty (§III-E);
+    /// under our allocator the penalty can be structural — e.g. the
+    /// stride-2 depthwise output of MobileNet nests inside its input only
+    /// when `O_s` equals the exact output size, and the analytic bound's
+    /// few-hundred-byte shortfall then costs a whole buffer of packing.
+    /// `benches/os_methods.rs` quantifies this as an ablation; see
+    /// EXPERIMENTS.md §Deviations.
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Restrict the serialisation strategies swept (§II-B).
+    pub fn strategies(mut self, strategies: &[Strategy]) -> Self {
+        self.strategies = strategies.to_vec();
+        self
+    }
+
+    /// Restrict the allocation heuristics swept (§IV).
+    pub fn heuristics(mut self, heuristics: &[Heuristic]) -> Self {
+        self.heuristics = heuristics.to_vec();
+        self
+    }
+
+    /// Restrict the frontier seed directions swept (§IV). Non-frontier
+    /// heuristics are unaffected; `Heuristic::Frontier(d)` candidates are
+    /// kept only when `d` is listed here.
+    pub fn directions(mut self, directions: &[Direction]) -> Self {
+        self.directions = directions.to_vec();
+        self
+    }
+
+    /// Observe every candidate the sweep evaluates — progress reporting
+    /// for long searches (NasNet's ~600-op graph takes seconds per
+    /// candidate).
+    pub fn on_candidate<F: FnMut(&PlanCandidate) + 'a>(mut self, f: F) -> Self {
+        self.on_candidate = Some(Box::new(f));
+        self
+    }
+
+    /// The candidate grid after direction filtering, in sweep order.
+    fn search_space(&self) -> Result<Vec<(Strategy, Heuristic)>, PlanError> {
+        if self.strategies.is_empty() {
+            return Err(PlanError::EmptySearchSpace { axis: "strategies" });
+        }
+        let heuristics: Vec<Heuristic> = self
+            .heuristics
+            .iter()
+            .copied()
+            .filter(|h| match h {
+                Heuristic::Frontier(d) => self.directions.contains(d),
+                _ => true,
+            })
+            .collect();
+        if heuristics.is_empty() {
+            return Err(PlanError::EmptySearchSpace { axis: "heuristics" });
+        }
+        let mut grid = Vec::with_capacity(self.strategies.len() * heuristics.len());
+        for &s in &self.strategies {
+            for &h in &heuristics {
+                grid.push((s, h));
+            }
+        }
+        Ok(grid)
+    }
+
+    /// Run the sweep and return the lowest-peak valid layout (§IV:
+    /// "serialised using both an eager and lazy execution strategy with
+    /// the lowest peak memory figure being taken").
+    pub fn plan(mut self) -> Result<Plan, PlanError> {
+        let graph = self.graph;
+        if graph.tensors.is_empty() || graph.ops.is_empty() {
+            return Err(PlanError::EmptyGraph {
+                model: graph.name.clone(),
+            });
+        }
+        let grid = self.search_space()?;
+
+        // O_s depends only on op geometry, never on serialisation order —
+        // build the table once for the whole sweep (perf pass, §Perf).
+        let os = if self.dmo {
+            OsTable::build(graph, self.method)
+        } else {
+            OsTable::disabled(graph)
+        };
+
+        let mut best: Option<Plan> = None;
+        let total = grid.len();
+        let mut last_order: Option<(Strategy, ExecOrder, Scopes)> = None;
+        for (index, (strat, h)) in grid.into_iter().enumerate() {
+            // Orders are grouped by strategy in sweep order; reuse the
+            // serialisation + scope analysis across the heuristic axis.
+            let reuse = matches!(&last_order, Some((s, _, _)) if *s == strat);
+            if !reuse {
+                let ord = serialise(graph, strat);
+                let scopes = analyse(graph, &ord);
+                last_order = Some((strat, ord, scopes));
+            }
+            let (_, ord, scopes) = last_order.as_ref().expect("order just computed");
+            let a = allocate(graph, scopes, &os, h);
+            let peak = a.peak;
+            let improved = best.as_ref().map_or(true, |b| peak < b.alloc.peak);
+            if improved {
                 best = Some(Plan {
                     order: ord.clone(),
                     scopes: scopes.clone(),
@@ -108,9 +252,25 @@ pub fn plan_graph(graph: &Graph, opts: PlanOptions) -> Plan {
                     os: os.clone(),
                 });
             }
+            if let Some(cb) = self.on_candidate.as_mut() {
+                cb(&PlanCandidate {
+                    strategy: strat,
+                    heuristic: h,
+                    peak,
+                    best_peak: best.as_ref().map(|b| b.alloc.peak).unwrap_or(peak),
+                    index,
+                    total,
+                });
+            }
         }
+
+        let plan = best.ok_or_else(|| PlanError::EmptyGraph {
+            model: graph.name.clone(),
+        })?;
+        check(graph, &plan.scopes, &plan.os, &plan.alloc)
+            .map_err(|e| PlanError::InvalidLayout(format!("{e:#}")))?;
+        Ok(plan)
     }
-    best.expect("graph has no tensors to plan")
 }
 
 /// Original-vs-DMO comparison for one graph — one row of Table III.
@@ -130,16 +290,37 @@ impl SavingRow {
     }
 }
 
-/// Compute both plans and the Table-III row for `graph`.
-pub fn saving_row(graph: &Graph) -> (Plan, Plan, SavingRow) {
-    let base = plan_graph(graph, PlanOptions::baseline());
-    let dmo = plan_graph(graph, PlanOptions::dmo());
-    let row = SavingRow {
-        model: graph.name.clone(),
-        original: base.peak(),
-        optimised: dmo.peak().min(base.peak()),
-    };
-    (base, dmo, row)
+/// A graph planned both ways (baseline and DMO) with the full sweep —
+/// the unit the reports, the MCU fit catalog and the serving stack
+/// consume, so each of them works from precomputed [`Plan`]s instead of
+/// re-running the search.
+#[derive(Debug)]
+pub struct PlannedModel {
+    pub graph: Graph,
+    pub baseline: Plan,
+    pub dmo: Plan,
+}
+
+impl PlannedModel {
+    /// Plan `graph` with and without DMO (full §IV sweep each).
+    pub fn new(graph: Graph) -> Result<PlannedModel, PlanError> {
+        let baseline = Planner::for_graph(&graph).plan()?;
+        let dmo = Planner::for_graph(&graph).dmo(true).plan()?;
+        Ok(PlannedModel {
+            graph,
+            baseline,
+            dmo,
+        })
+    }
+
+    /// The Table-III row for this model.
+    pub fn row(&self) -> SavingRow {
+        SavingRow {
+            model: self.graph.name.clone(),
+            original: self.baseline.peak(),
+            optimised: self.dmo.peak().min(self.baseline.peak()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -163,8 +344,8 @@ mod tests {
 
     #[test]
     fn paper_intro_example_96kb_to_64kb() {
-        let g = mobilenet_head_i8();
-        let (_base, _dmo, row) = saving_row(&g);
+        let pm = PlannedModel::new(mobilenet_head_i8()).unwrap();
+        let row = pm.row();
         assert_eq!(row.original, 96 * 1024, "original peak must be 96 KB");
         // optimised: 64 KB + a few bytes (O_s is IB minus (D_in−1) elems)
         assert!(row.optimised >= 64 * 1024);
@@ -176,17 +357,105 @@ mod tests {
     #[test]
     fn dmo_never_worse_than_baseline() {
         let g = mobilenet_head_i8();
-        let base = plan_graph(&g, PlanOptions::baseline());
-        let dmo = plan_graph(&g, PlanOptions::dmo());
+        let base = Planner::for_graph(&g).plan().unwrap();
+        let dmo = Planner::for_graph(&g).dmo(true).plan().unwrap();
         assert!(dmo.peak() <= base.peak());
     }
 
     #[test]
     fn plans_are_checkable() {
         let g = mobilenet_head_i8();
-        for opts in [PlanOptions::baseline(), PlanOptions::dmo()] {
-            let p = plan_graph(&g, opts);
+        for dmo in [false, true] {
+            let p = Planner::for_graph(&g).dmo(dmo).plan().unwrap();
             check(&g, &p.scopes, &p.os, &p.alloc).unwrap();
         }
+    }
+
+    #[test]
+    fn narrowed_search_space_is_respected() {
+        let g = mobilenet_head_i8();
+        let p = Planner::for_graph(&g)
+            .dmo(true)
+            .strategies(&[Strategy::Lazy])
+            .heuristics(&[Heuristic::SizeDesc])
+            .plan()
+            .unwrap();
+        assert_eq!(p.strategy, Strategy::Lazy);
+        assert_eq!(p.heuristic, Heuristic::SizeDesc);
+    }
+
+    #[test]
+    fn direction_filter_applies_to_frontier_heuristics() {
+        let g = mobilenet_head_i8();
+        let mut seen = Vec::new();
+        let p = Planner::for_graph(&g)
+            .heuristics(&[
+                Heuristic::Frontier(Direction::Forward),
+                Heuristic::Frontier(Direction::Backward),
+            ])
+            .directions(&[Direction::Backward])
+            .on_candidate(|c| seen.push(c.heuristic))
+            .plan()
+            .unwrap();
+        assert_eq!(p.heuristic, Heuristic::Frontier(Direction::Backward));
+        assert!(seen
+            .iter()
+            .all(|h| *h == Heuristic::Frontier(Direction::Backward)));
+    }
+
+    #[test]
+    fn empty_search_space_is_an_error() {
+        let g = mobilenet_head_i8();
+        assert_eq!(
+            Planner::for_graph(&g).strategies(&[]).plan().unwrap_err(),
+            PlanError::EmptySearchSpace { axis: "strategies" }
+        );
+        assert_eq!(
+            Planner::for_graph(&g).heuristics(&[]).plan().unwrap_err(),
+            PlanError::EmptySearchSpace { axis: "heuristics" }
+        );
+        // all-frontier heuristics + no directions leaves nothing either
+        assert_eq!(
+            Planner::for_graph(&g)
+                .heuristics(&[Heuristic::Frontier(Direction::Forward)])
+                .directions(&[])
+                .plan()
+                .unwrap_err(),
+            PlanError::EmptySearchSpace { axis: "heuristics" }
+        );
+    }
+
+    #[test]
+    fn candidate_callback_sees_whole_sweep() {
+        let g = mobilenet_head_i8();
+        let mut count = 0usize;
+        let mut best = usize::MAX;
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .on_candidate(|c| {
+                count += 1;
+                assert_eq!(c.total, STRATEGIES.len() * HEURISTICS.len());
+                assert!(c.best_peak <= c.peak);
+                best = c.best_peak;
+            })
+            .plan()
+            .unwrap();
+        assert_eq!(count, STRATEGIES.len() * HEURISTICS.len());
+        assert_eq!(best, plan.peak(), "final best_peak must equal the plan's");
+    }
+
+    #[test]
+    fn empty_graph_is_an_error() {
+        let g = Graph {
+            name: "empty".into(),
+            tensors: Vec::new(),
+            ops: Vec::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        };
+        assert!(matches!(
+            Planner::for_graph(&g).plan(),
+            Err(PlanError::EmptyGraph { .. })
+        ));
     }
 }

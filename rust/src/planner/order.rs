@@ -31,6 +31,16 @@ impl Strategy {
             Strategy::Lazy => "lazy",
         }
     }
+
+    /// Parse from the name produced by [`Strategy::name`] — used when
+    /// deserialising plan artifacts.
+    pub fn from_name(name: &str) -> Option<Strategy> {
+        match name {
+            "eager" => Some(Strategy::Eager),
+            "lazy" => Some(Strategy::Lazy),
+            _ => None,
+        }
+    }
 }
 
 /// All strategies, for "best-of" sweeps.

@@ -1,11 +1,16 @@
 //! Report generation: the paper's tables as markdown/CSV, written under
 //! `results/`.
+//!
+//! Table builders consume pre-planned models ([`PlannedModel`]) rather
+//! than re-running the planner search internally — callers plan once
+//! (or load plan artifacts) and can reuse the same plans across Table
+//! II, Table III, the MCU fit matrix and the figures.
 
 use crate::ir::graph::Graph;
 use crate::ir::DType;
 use crate::models;
 use crate::overlap::{compute_os, Method};
-use crate::planner::{saving_row, SavingRow};
+use crate::planner::{PlannedModel, SavingRow};
 use anyhow::Result;
 use std::fmt::Write as _;
 
@@ -24,6 +29,24 @@ pub fn paper_table3() -> Vec<(&'static str, usize, usize)> {
         ("densenet_121", 8624, 8232),
         ("resnet_50_v2", 10976, 10976),
     ]
+}
+
+/// Models Table II reports on (§III-E).
+pub fn table2_models() -> Vec<&'static str> {
+    vec![
+        "mobilenet_v1_1.0_224",
+        "mobilenet_v2_1.0_224",
+        "inception_resnet_v2",
+    ]
+}
+
+/// Build and fully plan (baseline + DMO) each named model — the one
+/// planning pass the report tables share.
+pub fn plan_models(names: &[&str]) -> Result<Vec<PlannedModel>> {
+    names
+        .iter()
+        .map(|name| Ok(PlannedModel::new(models::build(name)?)?))
+        .collect()
 }
 
 /// One Table II row: exact vs analytic `O_s` of a model's peak-defining
@@ -98,19 +121,15 @@ pub fn precision_row(graph: &Graph) -> PrecisionRow {
     }
 }
 
-/// Table II as markdown (exact vs analytic `O_s`).
-pub fn table2_markdown() -> Result<String> {
+/// Table II as markdown (exact vs analytic `O_s`), over pre-planned
+/// models (see [`table2_models`] / [`plan_models`]).
+pub fn table2_markdown(planned: &[PlannedModel]) -> Result<String> {
     let mut s = String::from(
         "| Model | Op | Exact O_s | Analytic O_s | Error (vs O_s) | Error (vs peak, paper defn) |\n|---|---|---:|---:|---:|---:|\n",
     );
-    for name in [
-        "mobilenet_v1_1.0_224",
-        "mobilenet_v2_1.0_224",
-        "inception_resnet_v2",
-    ] {
-        let g = models::build(name)?;
-        let r = precision_row(&g);
-        let (_b, _d, row) = saving_row(&g);
+    for pm in planned {
+        let r = precision_row(&pm.graph);
+        let row = pm.row();
         writeln!(
             s,
             "| {} | {} | {} | {} | {:.2}% | {:.2}% |",
@@ -146,25 +165,34 @@ pub fn table2_markdown() -> Result<String> {
     Ok(s)
 }
 
-/// Table III as markdown, side by side with the paper's values.
-pub fn table3_markdown() -> Result<(String, Vec<SavingRow>)> {
+/// Table III as markdown over pre-planned models, side by side with the
+/// paper's values (plan the [`models::table3_names`] catalog with
+/// [`plan_models`]).
+pub fn table3_markdown(planned: &[PlannedModel]) -> Result<(String, Vec<SavingRow>)> {
     let paper = paper_table3();
     let mut s = String::from(
         "| Model | Original (KB) | Optimised (KB) | Saving | Paper orig | Paper opt | Paper saving |\n|---|---:|---:|---:|---:|---:|---:|\n",
     );
     let mut rows = Vec::new();
-    for (name, p_orig, p_opt) in paper {
-        let g = models::build(name)?;
-        let (_b, _d, row) = saving_row(&g);
-        let p_saving = if p_orig == p_opt {
-            "None".to_string()
-        } else {
-            format!("{:.1}%", 100.0 * (p_orig - p_opt) as f64 / p_orig as f64)
+    for pm in planned {
+        let row = pm.row();
+        // models outside the paper's catalog get "-" columns rather
+        // than fabricated zeros
+        let (p_orig, p_opt, p_saving) = match paper.iter().find(|(name, _, _)| *name == row.model) {
+            Some(&(_, o, p)) => {
+                let saving = if o == p {
+                    "None".to_string()
+                } else {
+                    format!("{:.1}%", 100.0 * (o - p) as f64 / o as f64)
+                };
+                (o.to_string(), p.to_string(), saving)
+            }
+            None => ("-".to_string(), "-".to_string(), "-".to_string()),
         };
         writeln!(
             s,
             "| {} | {} | {} | {:.1}% | {} | {} | {} |",
-            name,
+            row.model,
             row.original / 1024,
             row.optimised / 1024,
             row.saving_pct(),
@@ -214,6 +242,17 @@ mod tests {
         let r = precision_row(&g);
         assert!(r.exact >= r.estimate, "analytic must lower-bound exact");
         assert!(r.error_pct() < 2.0, "paper: penalty below 2%, got {}", r.error_pct());
+    }
+
+    #[test]
+    fn table3_joins_paper_rows_by_name() {
+        let planned = plan_models(&["mobilenet_v1_0.25_128_int8", "tiny"]).unwrap();
+        let (md, rows) = table3_markdown(&planned).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].original / 1024, 96);
+        assert!(md.contains("| 96 | 64 |"), "paper columns joined: {md}");
+        // a model outside the paper catalog gets "-" columns, not zeros
+        assert!(md.contains("| - | - | - |"), "missing paper row marked: {md}");
     }
 
     #[test]

@@ -214,12 +214,12 @@ mod tests {
     use super::*;
     use crate::ir::op::{Activation, DepthwiseParams, Padding, UnaryKind};
     use crate::models;
-    use crate::planner::{plan_graph, PlanOptions};
+    use crate::planner::Planner;
 
     #[test]
     fn alloc_map_renders() {
         let g = models::build("tiny").unwrap();
-        let plan = plan_graph(&g, PlanOptions::dmo());
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
         let map = alloc_map_ascii(&g, &plan, 60);
         assert!(map.contains('#'), "peak-defining buffer marked");
         let csv = alloc_map_csv(&g, &plan);
@@ -229,7 +229,7 @@ mod tests {
     #[test]
     fn model_raster_runs() {
         let g = models::build("tiny").unwrap();
-        let plan = plan_graph(&g, PlanOptions::dmo());
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
         let r = model_raster(&g, &plan, 1, 40, 60).unwrap();
         let nonempty: u32 = r.grid.iter().flatten().map(|c| c.total()).sum();
         assert!(nonempty > 1000);

@@ -1,0 +1,192 @@
+//! Tiny declarative command-line parsing for the `dmo` binary.
+//!
+//! Each subcommand declares the flags it accepts as a slice of
+//! [`ArgSpec`]s; [`Args::parse`] then accepts both `--key value` and
+//! `--key=value` spellings, collects bare words as positional
+//! arguments, and rejects unknown flags with a message listing what the
+//! command does accept (the previous hand-rolled scanner silently
+//! ignored typos like `--basline`).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Declaration of one accepted `--flag`.
+#[derive(Debug, Clone, Copy)]
+pub struct ArgSpec {
+    /// Flag name including the leading dashes, e.g. `"--export"`.
+    pub name: &'static str,
+    /// Whether the flag consumes a value (`--key value` / `--key=value`).
+    pub takes_value: bool,
+    /// Short help fragment shown in error messages.
+    pub help: &'static str,
+}
+
+/// Declare a boolean flag.
+pub const fn flag(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec {
+        name,
+        takes_value: false,
+        help,
+    }
+}
+
+/// Declare a value-taking option.
+pub const fn opt(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec {
+        name,
+        takes_value: true,
+        help,
+    }
+}
+
+/// Parsed command-line arguments for one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeSet<&'static str>,
+}
+
+impl Args {
+    /// Parse `raw` against the accepted `known` flags.
+    pub fn parse(raw: &[String], known: &[ArgSpec]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (format!("--{n}"), Some(v.to_string())),
+                    None => (tok.clone(), None),
+                };
+                let spec = known
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow!("unknown flag `{name}`\n{}", usage(known)))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("flag `{}` expects a value", spec.name))?
+                        }
+                    };
+                    args.values.insert(spec.name, value);
+                } else {
+                    if inline.is_some() {
+                        bail!("flag `{}` does not take a value", spec.name);
+                    }
+                    args.flags.insert(spec.name);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Was the boolean `--flag` given?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+
+    /// Value of `--name`, if given.
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Value of `--name` parsed as `T`, or `default` when absent.
+    pub fn parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.value(name) {
+            None => Ok(default),
+            Some(text) => text
+                .parse()
+                .map_err(|_| anyhow!("flag `{name}`: cannot parse `{text}`")),
+        }
+    }
+
+    /// All positional (non-flag) arguments, in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Positional argument `i`, if present.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+}
+
+/// One-line-per-flag usage fragment for error messages.
+fn usage(known: &[ArgSpec]) -> String {
+    if known.is_empty() {
+        return "this command takes no flags".to_string();
+    }
+    let mut s = String::from("accepted flags:");
+    for spec in known {
+        s.push_str(&format!(
+            "\n  {}{}  {}",
+            spec.name,
+            if spec.takes_value { " <value>" } else { "" },
+            spec.help
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPEC: &[ArgSpec] = &[
+        flag("--baseline", "plan without DMO"),
+        opt("--export", "write the plan artifact"),
+        opt("--rate", "arrival rate"),
+    ];
+
+    #[test]
+    fn space_and_equals_spellings_agree() {
+        let a = Args::parse(&raw(&["model", "--export", "p.json"]), SPEC).unwrap();
+        let b = Args::parse(&raw(&["model", "--export=p.json"]), SPEC).unwrap();
+        assert_eq!(a.value("--export"), Some("p.json"));
+        assert_eq!(b.value("--export"), Some("p.json"));
+        assert_eq!(a.pos(0), Some("model"));
+        assert_eq!(b.pos(0), Some("model"));
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_help() {
+        let e = Args::parse(&raw(&["--basline"]), SPEC).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("--basline"), "{msg}");
+        assert!(msg.contains("--baseline"), "help must list accepted flags: {msg}");
+    }
+
+    #[test]
+    fn missing_value_and_spurious_value_fail() {
+        assert!(Args::parse(&raw(&["--export"]), SPEC).is_err());
+        assert!(Args::parse(&raw(&["--baseline=yes"]), SPEC).is_err());
+    }
+
+    #[test]
+    fn typed_values_parse_with_default() {
+        let a = Args::parse(&raw(&["--rate=250.5"]), SPEC).unwrap();
+        assert_eq!(a.parsed("--rate", 1.0f64).unwrap(), 250.5);
+        assert_eq!(a.parsed("--missing", 7usize).unwrap(), 7);
+        let b = Args::parse(&raw(&["--rate", "abc"]), SPEC).unwrap();
+        assert!(b.parsed("--rate", 1.0f64).is_err());
+    }
+
+    #[test]
+    fn flags_and_positionals_mix() {
+        let a = Args::parse(&raw(&["tiny", "--baseline", "extra"]), SPEC).unwrap();
+        assert!(a.flag("--baseline"));
+        assert_eq!(a.positional(), &["tiny".to_string(), "extra".to_string()]);
+    }
+}

@@ -5,6 +5,7 @@
 //! available; these modules provide the minimal deterministic
 //! replacements the library needs (documented in DESIGN.md).
 
+pub mod args;
 pub mod bench;
 pub mod json;
 pub mod rng;

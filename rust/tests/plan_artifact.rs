@@ -1,0 +1,133 @@
+//! Plan-artifact round-trip tests: save → load → revalidate must
+//! reproduce the plan byte-for-byte for every model in the Table III
+//! zoo, and a corrupted graph fingerprint must be refused with
+//! [`PlanError::GraphMismatch`].
+//!
+//! The full strategy × heuristic sweep is exercised elsewhere
+//! (`table_reproduction.rs`); here the planner session is narrowed to a
+//! single candidate per model so the whole catalog stays fast — the
+//! artifact layer is what is under test, not the search.
+
+use dmo::models;
+use dmo::planner::{
+    graph_fingerprint, Heuristic, PlanArtifact, PlanError, Planner, Strategy,
+};
+use dmo::util::json::Json;
+use std::path::PathBuf;
+
+/// Narrow, fast planning session used across the zoo.
+fn quick_plan(g: &dmo::ir::Graph) -> dmo::planner::Plan {
+    Planner::for_graph(g)
+        .dmo(true)
+        .method(dmo::overlap::Method::Analytic) // O(1) per op, exactness irrelevant here
+        .strategies(&[Strategy::Eager])
+        .heuristics(&[Heuristic::SizeDesc])
+        .plan()
+        .unwrap()
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dmo_plan_artifact_test_{name}.json"))
+}
+
+#[test]
+fn roundtrip_all_zoo_models() {
+    for name in models::table3_names() {
+        let g = models::build(name).unwrap();
+        let plan = quick_plan(&g);
+        let art = PlanArtifact::from_plan(&g, &plan);
+
+        let path = tmp_path(name);
+        art.save(&path).unwrap_or_else(|e| panic!("{name}: save: {e}"));
+        let loaded = PlanArtifact::load(&path).unwrap_or_else(|e| panic!("{name}: load: {e}"));
+        std::fs::remove_file(&path).ok();
+        assert_eq!(art, loaded, "{name}: artifact must round-trip losslessly");
+
+        let re = loaded
+            .to_plan(&g)
+            .unwrap_or_else(|e| panic!("{name}: revalidate: {e}"));
+        assert_eq!(re.peak(), plan.peak(), "{name}: peak");
+        assert_eq!(re.order, plan.order, "{name}: exec order");
+        assert_eq!(re.alloc.offsets, plan.alloc.offsets, "{name}: offsets");
+        assert_eq!(re.alloc.applied, plan.alloc.applied, "{name}: overlaps");
+        assert_eq!(re.strategy, plan.strategy, "{name}: strategy");
+        assert_eq!(re.heuristic, plan.heuristic, "{name}: heuristic");
+        assert_eq!(re.os.per_op, plan.os.per_op, "{name}: O_s table");
+    }
+}
+
+#[test]
+fn corrupted_fingerprint_is_a_graph_mismatch() {
+    let g = models::build("tiny").unwrap();
+    let plan = quick_plan(&g);
+    let mut art = PlanArtifact::from_plan(&g, &plan);
+    art.fingerprint ^= 0xDEAD_BEEF;
+    match art.to_plan(&g) {
+        Err(PlanError::GraphMismatch { expected, found }) => {
+            assert_ne!(expected, found);
+        }
+        other => panic!("expected GraphMismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn corrupted_fingerprint_in_the_file_is_caught_too() {
+    // end-to-end through JSON: flip the stored fingerprint on disk
+    let g = models::build("tiny").unwrap();
+    let plan = quick_plan(&g);
+    let art = PlanArtifact::from_plan(&g, &plan);
+    let text = art
+        .to_json()
+        .to_string()
+        .replace(&format!("{:016x}", art.fingerprint), &format!("{:016x}", !art.fingerprint));
+    let tampered = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert!(matches!(
+        tampered.to_plan(&g),
+        Err(PlanError::GraphMismatch { .. })
+    ));
+}
+
+#[test]
+fn artifact_is_graph_specific_not_name_specific() {
+    // same model name, different structure (dtype) ⇒ different
+    // fingerprint ⇒ mismatch
+    let f32_graph = models::build("tiny").unwrap();
+    let mut i8_graph = models::build("tiny_int8").unwrap();
+    i8_graph.name = f32_graph.name.clone();
+    assert_ne!(graph_fingerprint(&f32_graph), graph_fingerprint(&i8_graph));
+    let art = PlanArtifact::from_plan(&f32_graph, &quick_plan(&f32_graph));
+    assert!(matches!(
+        art.to_plan(&i8_graph),
+        Err(PlanError::GraphMismatch { .. })
+    ));
+}
+
+#[test]
+fn garbage_files_are_malformed_not_panics() {
+    let path = tmp_path("garbage");
+    std::fs::write(&path, "{\"kind\":\"something-else\"}").unwrap();
+    assert!(matches!(
+        PlanArtifact::load(&path),
+        Err(PlanError::Malformed(_))
+    ));
+    std::fs::write(&path, "not json at all").unwrap();
+    assert!(matches!(
+        PlanArtifact::load(&path),
+        Err(PlanError::Malformed(_))
+    ));
+    std::fs::remove_file(&path).ok();
+    assert!(matches!(PlanArtifact::load(&path), Err(PlanError::Io(_))));
+}
+
+#[test]
+fn loaded_artifact_survives_the_interpreter_proof() {
+    // the acceptance path: export, import, execute-and-prove
+    let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
+    let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+    let path = tmp_path("acceptance");
+    PlanArtifact::from_plan(&g, &plan).save(&path).unwrap();
+    let loaded = PlanArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let out = dmo::interp::run_planned_artifact(&g, &loaded, 42).unwrap();
+    assert_eq!(out.len(), g.outputs.len());
+}

@@ -8,7 +8,7 @@ use dmo::interp::validate_plan;
 use dmo::ir::graph::{Graph, GraphBuilder, TensorId};
 use dmo::ir::op::{Activation, Padding};
 use dmo::ir::{DType, Shape};
-use dmo::planner::{check, plan_graph, PlanOptions};
+use dmo::planner::{check, Planner};
 use dmo::util::rng::Rng;
 
 /// Build a random small model: conv stem, then a few random blocks.
@@ -75,11 +75,11 @@ fn plans_check_and_dmo_never_worse() {
     let mut rng = Rng::new(0x9147);
     for case in 0..25 {
         let g = random_graph(&mut rng);
-        let base = plan_graph(&g, PlanOptions::baseline());
+        let base = Planner::for_graph(&g).plan().unwrap();
         check(&g, &base.scopes, &base.os, &base.alloc)
             .unwrap_or_else(|e| panic!("case {case}: baseline check failed: {e}"));
         assert!(base.alloc.applied.is_empty(), "case {case}: baseline overlapped");
-        let dmo = plan_graph(&g, PlanOptions::dmo());
+        let dmo = Planner::for_graph(&g).dmo(true).plan().unwrap();
         check(&g, &dmo.scopes, &dmo.os, &dmo.alloc)
             .unwrap_or_else(|e| panic!("case {case}: dmo check failed: {e}"));
         assert!(
@@ -99,7 +99,7 @@ fn dmo_plans_execute_bit_identically() {
     let mut rng = Rng::new(0xD0D0);
     for case in 0..20 {
         let g = random_graph(&mut rng);
-        let plan = plan_graph(&g, PlanOptions::dmo());
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
         validate_plan(&g, &plan, 1000 + case)
             .unwrap_or_else(|e| panic!("case {case} ({}): {e:#}", g.name));
     }
@@ -112,7 +112,11 @@ fn analytic_planned_arenas_are_safe_too() {
     let mut rng = Rng::new(0xA11A);
     for case in 0..10 {
         let g = random_graph(&mut rng);
-        let plan = plan_graph(&g, PlanOptions::dmo_analytic());
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .method(dmo::overlap::Method::Analytic)
+            .plan()
+            .unwrap();
         validate_plan(&g, &plan, 2000 + case)
             .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
     }
@@ -124,7 +128,7 @@ fn analytic_planned_arenas_are_safe_too() {
 fn inflated_budget_is_rejected_by_checker() {
     let mut rng = Rng::new(0xBAD);
     let g = random_graph(&mut rng);
-    let plan = plan_graph(&g, PlanOptions::dmo());
+    let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
     if plan.alloc.applied.is_empty() {
         return; // nothing overlapped in this draw; other tests cover
     }

@@ -4,7 +4,7 @@
 
 use dmo::interp::validate_plan;
 use dmo::models;
-use dmo::planner::{plan_graph, saving_row, PlanOptions};
+use dmo::planner::{PlannedModel, Planner};
 
 /// Table III rows 1–6: all MobileNet variants must match the paper
 /// exactly (same architecture ⇒ same shapes ⇒ same peaks).
@@ -19,8 +19,8 @@ fn table3_mobilenet_rows_exact() {
         ("mobilenet_v2_1.0_224", 5880, 4704),
     ];
     for (name, orig_kb, opt_kb) in expect {
-        let g = models::build(name).unwrap();
-        let (_b, _d, row) = saving_row(&g);
+        let pm = PlannedModel::new(models::build(name).unwrap()).unwrap();
+        let row = pm.row();
         assert_eq!(row.original / 1024, orig_kb, "{name} original");
         assert_eq!(row.optimised / 1024, opt_kb, "{name} optimised");
     }
@@ -30,15 +30,15 @@ fn table3_mobilenet_rows_exact() {
 #[test]
 fn table3_complex_rows_shape() {
     // Inception v4: single-digit-% saving (paper 7.35 %)
-    let (_b, _d, r) = saving_row(&models::build("inception_v4").unwrap());
+    let r = PlannedModel::new(models::build("inception_v4").unwrap()).unwrap().row();
     assert!(r.saving_pct() > 2.0 && r.saving_pct() < 15.0, "inception v4: {}", r.saving_pct());
 
     // Inception-ResNet v2: ~a third (paper 34.4 %)
-    let (_b, _d, r) = saving_row(&models::build("inception_resnet_v2").unwrap());
+    let r = PlannedModel::new(models::build("inception_resnet_v2").unwrap()).unwrap().row();
     assert!(r.saving_pct() > 25.0 && r.saving_pct() < 40.0, "irv2: {}", r.saving_pct());
 
     // NasNet Mobile: nothing (paper None) — dense cell reuse blocks DMO
-    let (_b, _d, r) = saving_row(&models::build("nasnet_mobile").unwrap());
+    let r = PlannedModel::new(models::build("nasnet_mobile").unwrap()).unwrap().row();
     assert!(r.saving_pct() < 1.0, "nasnet: {}", r.saving_pct());
 }
 
@@ -77,7 +77,7 @@ fn table2_worked_example_exact() {
 #[test]
 fn irv2_saving_is_in_the_stem() {
     let g = models::build("inception_resnet_v2").unwrap();
-    let plan = plan_graph(&g, PlanOptions::dmo());
+    let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
     // the stem's conv3 output (147x147x64) participates in an overlap
     let overlapped: Vec<&str> = plan
         .alloc
@@ -96,7 +96,7 @@ fn irv2_saving_is_in_the_stem() {
 #[test]
 fn smallest_mobilenet_validates_at_full_size() {
     let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
-    let plan = plan_graph(&g, PlanOptions::dmo());
+    let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
     assert_eq!(plan.peak() / 1024, 64);
     validate_plan(&g, &plan, 99).unwrap();
 }
@@ -106,15 +106,15 @@ fn smallest_mobilenet_validates_at_full_size() {
 #[test]
 fn mobilenet_f32_validates() {
     let g = models::build("mobilenet_v1_0.25_128").unwrap();
-    let plan = plan_graph(&g, PlanOptions::dmo());
+    let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
     validate_plan(&g, &plan, 100).unwrap();
 }
 
 /// §IV deployment claim (also asserted by examples/mcu_fit.rs).
 #[test]
 fn stm32_deployment_flip() {
-    let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
-    let (_b, _d, row) = saving_row(&g);
+    let pm = PlannedModel::new(models::build("mobilenet_v1_0.25_128_int8").unwrap()).unwrap();
+    let row = pm.row();
     let stm = &dmo::mcu::catalog()[0];
     assert!(row.original + 4096 > stm.sram_bytes, "96 KB + runtime must exceed SRAM");
     assert!(row.optimised + 4096 <= stm.sram_bytes, "64 KB + runtime must fit");
