@@ -1,0 +1,122 @@
+//! C99 text formatting helpers: exact `f32` literals, identifier
+//! sanitisation, and array-initialiser wrapping.
+//!
+//! Emitted sources must be byte-deterministic (the golden-file tests
+//! diff them) and numerically exact: every `f32` the emitter writes has
+//! to parse back to the identical bit pattern under a C99 compiler.
+//! Integral values are printed as plain decimals; everything else uses
+//! C99 hexadecimal floating literals, which are exact by construction.
+
+/// Exact C literal for an `f32` value.
+///
+/// Integral values in the exactly-representable range print as
+/// `-2.0f`-style decimals (readable — all synthetic weights land here);
+/// other finite values as hexadecimal floats (`0x1.8p+1f`), which C99
+/// guarantees to round-trip bit-exactly. Infinities and NaN are not
+/// representable as literals and must never reach the emitter.
+pub(crate) fn f32_literal(v: f32) -> String {
+    assert!(v.is_finite(), "cannot emit a C literal for {v}");
+    let bits = v.to_bits();
+    if v == 0.0 {
+        return if bits >> 31 == 1 { "-0.0f".into() } else { "0.0f".into() };
+    }
+    if v.fract() == 0.0 && v.abs() < 16_777_216.0 {
+        return format!("{v:.1}f");
+    }
+    let sign = if bits >> 31 == 1 { "-" } else { "" };
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+    if exp == 0 {
+        // subnormal: 0.frac × 2^-126, mantissa printed as 24 bits
+        format!("{sign}0x0.{:06x}p-126f", frac << 1)
+    } else {
+        format!("{sign}0x1.{:06x}p{:+}f", frac << 1, exp - 127)
+    }
+}
+
+/// Reduce `name` to a C identifier: alphanumerics pass, everything else
+/// becomes `_`, and a leading digit gains a `m` prefix (model names like
+/// `mobilenet_v1_0.25_128` must make valid file stems and macro names).
+pub(crate) fn sanitize_ident(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if s.is_empty() || s.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        s.insert(0, 'm');
+    }
+    s
+}
+
+/// Join literals into wrapped initialiser lines, `per_line` values per
+/// row, indented four spaces — keeps multi-thousand-element weight
+/// arrays diffable.
+pub(crate) fn wrap_values(values: &[String], per_line: usize) -> String {
+    let mut out = String::new();
+    for chunk in values.chunks(per_line) {
+        out.push_str("    ");
+        out.push_str(&chunk.join(", "));
+        out.push_str(",\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integral_literals_are_decimal() {
+        assert_eq!(f32_literal(0.0), "0.0f");
+        assert_eq!(f32_literal(-0.0), "-0.0f");
+        assert_eq!(f32_literal(2.0), "2.0f");
+        assert_eq!(f32_literal(-2.0), "-2.0f");
+        assert_eq!(f32_literal(127.0), "127.0f");
+    }
+
+    #[test]
+    fn fractional_literals_are_exact_hex() {
+        assert_eq!(f32_literal(1.5), "0x1.800000p+0f");
+        assert_eq!(f32_literal(-0.375), "-0x1.800000p-2f");
+        // smallest positive subnormal: bit pattern 1
+        let tiny = f32::from_bits(1);
+        assert_eq!(f32_literal(tiny), "0x0.000002p-126f");
+    }
+
+    #[test]
+    fn hex_literal_roundtrips_through_parse() {
+        // Rust parses C-style hex floats? No — verify algebraically
+        // instead: mantissa/exponent reconstruction matches the bits.
+        for v in [1.5f32, 0.1, -123.456, 3.14159265, 1e-30, -2.5e20] {
+            let lit = f32_literal(v);
+            let lit = lit.trim_end_matches('f');
+            let parsed = if let Some(hex) = lit.strip_prefix("0x1.").or_else(|| {
+                lit.strip_prefix("-0x1.")
+            }) {
+                let (mant, exp) = hex.split_once('p').unwrap();
+                let m = u32::from_str_radix(mant, 16).unwrap();
+                let e: i32 = exp.parse().unwrap();
+                let mag = (1.0 + m as f64 / 16_777_216.0) * 2f64.powi(e);
+                if lit.starts_with('-') { -mag } else { mag }
+            } else {
+                lit.parse::<f64>().unwrap()
+            };
+            assert_eq!(parsed as f32, v, "literal {lit} for {v}");
+        }
+    }
+
+    #[test]
+    fn idents_are_c_safe() {
+        assert_eq!(sanitize_ident("mobilenet_v1_0.25_128"), "mobilenet_v1_0_25_128");
+        assert_eq!(sanitize_ident("tiny"), "tiny");
+        assert_eq!(sanitize_ident("0abc"), "m0abc");
+        assert_eq!(sanitize_ident(""), "m");
+    }
+
+    #[test]
+    fn wrapping_keeps_all_values() {
+        let vals: Vec<String> = (0..7).map(|i| i.to_string()).collect();
+        let s = wrap_values(&vals, 3);
+        assert_eq!(s, "    0, 1, 2,\n    3, 4, 5,\n    6,\n");
+    }
+}

@@ -1,0 +1,280 @@
+//! Compile-and-run differential harness for emitted C units.
+//!
+//! The arena interpreter proves a *plan* safe by executing it; this
+//! module proves the *emitted artifact* safe by actually building it:
+//! shell out to the host C compiler with the strict flag set
+//! (`-std=c99 -Wall -Werror`), link a generated `main.c` that feeds the
+//! same deterministic inputs the interpreter uses, run the binary, and
+//! demand every output element is bit-identical to
+//! [`crate::interp::run_reference`]. `-ffp-contract=off` keeps the C
+//! compiler from fusing multiply-adds the interpreter executed as two
+//! roundings.
+//!
+//! The harness degrades gracefully: [`cc_available`] probes for a
+//! toolchain, and callers (tests, CI) skip with a visible message when
+//! none exists instead of failing the suite.
+
+use super::fmt::{f32_literal, sanitize_ident, wrap_values};
+use super::unit::{emit, CUnit, EmitOptions};
+use crate::interp;
+use crate::ir::graph::Graph;
+use crate::planner::Plan;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Flags every emitted unit must compile under — the contract promised
+/// in the docs and enforced in CI.
+pub const CC_FLAGS: &[&str] = &["-std=c99", "-Wall", "-Werror", "-O1", "-ffp-contract=off"];
+
+static TEMP_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// First working C compiler: `$CC`, then `cc`, `gcc`, `clang`.
+/// `None` when the machine has no toolchain — callers should skip
+/// compile-and-run checks (with a message), never fail.
+pub fn cc_available() -> Option<String> {
+    let mut candidates: Vec<String> = Vec::new();
+    if let Ok(cc) = std::env::var("CC") {
+        if !cc.is_empty() {
+            candidates.push(cc);
+        }
+    }
+    candidates.extend(["cc", "gcc", "clang"].map(String::from));
+    candidates.into_iter().find(|cc| {
+        Command::new(cc)
+            .arg("--version")
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false)
+    })
+}
+
+/// Outcome of one successful differential run.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    /// Model name.
+    pub model: String,
+    /// Compiler used.
+    pub cc: String,
+    /// `DMO_ARENA_BYTES` of the compiled unit (the plan's peak).
+    pub arena_bytes: usize,
+    /// Model outputs compared.
+    pub outputs: usize,
+    /// Total output elements compared (all bit-identical).
+    pub elems: usize,
+    /// Whether the unit embedded weights or generated them.
+    pub weights_embedded: bool,
+}
+
+/// Emit `plan`, compile it with the host toolchain, run it on the
+/// interpreter's deterministic inputs, and assert bit-identical
+/// outputs. Errors if no compiler is available — gate on
+/// [`cc_available`] to skip instead.
+pub fn differential_test(graph: &Graph, plan: &Plan, seed: u64) -> Result<DiffReport> {
+    let stem = format!("{}_model", sanitize_ident(&graph.name));
+    differential_test_with(graph, plan, &EmitOptions::new(&stem).seed(seed))
+}
+
+/// [`differential_test`] with full control over the emission options
+/// (seed, embed-vs-generate threshold).
+pub fn differential_test_with(
+    graph: &Graph,
+    plan: &Plan,
+    opts: &EmitOptions,
+) -> Result<DiffReport> {
+    let unit = emit(graph, plan, opts)?;
+    differential_test_unit(&unit, graph, opts.seed)
+}
+
+/// Compile-and-run an already-emitted unit against the interpreter —
+/// callers that just wrote the unit to disk (the CLI's `--check`) avoid
+/// re-emitting multi-megabyte sources.
+pub fn differential_test_unit(unit: &CUnit, graph: &Graph, seed: u64) -> Result<DiffReport> {
+    let cc = cc_available().context("no C compiler found (install cc/gcc/clang or set $CC)")?;
+    let dir = std::env::temp_dir().join(format!(
+        "dmo-emitc-{}-{}",
+        std::process::id(),
+        TEMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    let result = compile_run_compare(&cc, &dir, unit, graph, seed);
+    let _ = std::fs::remove_dir_all(&dir);
+    result
+}
+
+fn compile_run_compare(
+    cc: &str,
+    dir: &Path,
+    unit: &CUnit,
+    graph: &Graph,
+    seed: u64,
+) -> Result<DiffReport> {
+    let c_path = dir.join(format!("{}.c", unit.stem));
+    unit.write_to(&c_path)?;
+    let main_path = dir.join("main.c");
+    std::fs::write(&main_path, generate_main_c(unit, graph, seed))
+        .with_context(|| format!("writing {}", main_path.display()))?;
+    let exe = dir.join("run");
+
+    let out = Command::new(cc)
+        .args(CC_FLAGS)
+        .arg(&c_path)
+        .arg(&main_path)
+        .arg("-lm")
+        .arg("-o")
+        .arg(&exe)
+        .output()
+        .with_context(|| format!("spawning `{cc}`"))?;
+    ensure!(
+        out.status.success(),
+        "emitted C for `{}` failed to compile under `{cc} {}`:\n{}",
+        graph.name,
+        CC_FLAGS.join(" "),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let run = Command::new(&exe)
+        .output()
+        .with_context(|| format!("running {}", exe.display()))?;
+    ensure!(
+        run.status.success(),
+        "emitted binary for `{}` exited with {:?}",
+        graph.name,
+        run.status.code()
+    );
+
+    let got: Vec<u32> = String::from_utf8_lossy(&run.stdout)
+        .split_whitespace()
+        .map(|tok| {
+            u32::from_str_radix(tok, 16)
+                .with_context(|| format!("unparseable output line `{tok}`"))
+        })
+        .collect::<Result<_>>()?;
+    let want = interp::reference_outputs(graph, seed)?;
+    let want_bits: Vec<u32> = want.iter().flatten().map(|v| v.to_bits()).collect();
+    ensure!(
+        got.len() == want_bits.len(),
+        "emitted binary printed {} elements, reference has {}",
+        got.len(),
+        want_bits.len()
+    );
+    for (i, (g, w)) in got.iter().zip(&want_bits).enumerate() {
+        ensure!(
+            g == w,
+            "`{}` output element {i}: emitted C {g:08x} != reference {w:08x} — \
+             the generated code diverged from the reference kernels",
+            graph.name
+        );
+    }
+    Ok(DiffReport {
+        model: graph.name.clone(),
+        cc: cc.to_string(),
+        arena_bytes: unit.arena_bytes,
+        outputs: want.len(),
+        elems: want_bits.len(),
+        weights_embedded: unit.weights_embedded,
+    })
+}
+
+/// The test driver `main.c` the harness links against an emitted unit:
+/// deterministic inputs ([`interp::gen_input`], same seed as the
+/// reference run) baked in as exact literals, outputs printed as f32
+/// bit patterns, one `%08x` per line.
+pub fn generate_main_c(unit: &CUnit, graph: &Graph, seed: u64) -> String {
+    let mut c = String::new();
+    c.push_str(&format!("#include \"{}\"\n\n", unit.header_file_name()));
+    c.push_str("#include <stdint.h>\n#include <stdio.h>\n#include <string.h>\n\n");
+    for (i, &t) in graph.inputs.iter().enumerate() {
+        let vals = interp::gen_input(graph, t, seed);
+        let lits: Vec<String> = vals.iter().map(|&v| f32_literal(v)).collect();
+        c.push_str(&format!(
+            "static const float dmo_in{i}[DMO_INPUT_{i}_ELEMS] = {{\n"
+        ));
+        c.push_str(&wrap_values(&lits, 10));
+        c.push_str("};\n");
+    }
+    for i in 0..graph.outputs.len() {
+        c.push_str(&format!("static float dmo_out{i}[DMO_OUTPUT_{i}_ELEMS];\n"));
+    }
+    c.push('\n');
+    c.push_str("int main(void) {\n");
+    let mut args: Vec<String> = (0..graph.inputs.len()).map(|i| format!("dmo_in{i}")).collect();
+    args.extend((0..graph.outputs.len()).map(|i| format!("dmo_out{i}")));
+    c.push_str(&format!("    dmo_invoke({});\n", args.join(", ")));
+    for i in 0..graph.outputs.len() {
+        c.push_str(&format!(
+            "    for (size_t j = 0; j < DMO_OUTPUT_{i}_ELEMS; j++) {{\n"
+        ));
+        c.push_str("        uint32_t b;\n");
+        c.push_str(&format!("        memcpy(&b, &dmo_out{i}[j], sizeof b);\n"));
+        c.push_str("        printf(\"%08x\\n\", b);\n");
+        c.push_str("    }\n");
+    }
+    c.push_str("    return 0;\n}\n");
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::planner::Planner;
+
+    fn cc_or_skip() -> Option<String> {
+        let cc = cc_available();
+        if cc.is_none() {
+            eprintln!("skipping: no C compiler on PATH (install gcc or set $CC)");
+        }
+        cc
+    }
+
+    #[test]
+    fn tiny_f32_emitted_c_is_bit_identical() {
+        if cc_or_skip().is_none() {
+            return;
+        }
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let r = differential_test(&g, &plan, 42).unwrap();
+        assert_eq!(r.elems, 10);
+        assert_eq!(r.arena_bytes, plan.peak());
+        assert!(r.weights_embedded);
+    }
+
+    #[test]
+    fn tiny_i8_emitted_c_is_bit_identical() {
+        if cc_or_skip().is_none() {
+            return;
+        }
+        let g = models::build("tiny_int8").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        differential_test(&g, &plan, 7).unwrap();
+    }
+
+    #[test]
+    fn generator_mode_matches_embedded_weights() {
+        if cc_or_skip().is_none() {
+            return;
+        }
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let opts = EmitOptions::new("tiny_model").seed(42).weight_embed_limit(0);
+        let r = differential_test_with(&g, &plan, &opts).unwrap();
+        assert!(!r.weights_embedded);
+    }
+
+    #[test]
+    fn main_c_bakes_in_reference_inputs() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let unit = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
+        let main_c = generate_main_c(&unit, &g, 42);
+        assert!(main_c.contains("#include \"tiny_model.h\""));
+        assert!(main_c.contains("dmo_invoke(dmo_in0, dmo_out0);"));
+        let first = interp::gen_input(&g, g.inputs[0], 42)[0];
+        assert!(main_c.contains(&crate::codegen::fmt::f32_literal(first)));
+    }
+}

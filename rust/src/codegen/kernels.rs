@@ -1,0 +1,478 @@
+//! The C99 kernel bodies the emitter pastes into a translation unit.
+//!
+//! Every kernel is a line-for-line port of the corresponding arm of
+//! [`crate::ops::exec::execute_op`]: same loop nests, same accumulation
+//! order, same read-before-write interleaving. That fidelity is the
+//! whole point — the `O_s` overlap budgets were computed against the
+//! reference sweep order, so the emitted code must touch the arena in
+//! exactly that order or the planned overlaps stop being safe. Do not
+//! "optimise" these loops without re-deriving the overlap analysis.
+//!
+//! Floating-point notes (the differential harness asserts bit-exactness
+//! against the Rust interpreter):
+//! * comparisons are written out (`if (v > acc)`) rather than calling
+//!   `fmaxf`, matching the interpreter and fixing `-0.0`/`+0.0` ties;
+//! * `expf`/`roundf` come from libm — the same routines Rust's
+//!   `f32::exp`/`f32::round` lower to on a glibc host;
+//! * the harness compiles with `-ffp-contract=off` so the compiler
+//!   cannot fuse `a * b + c` into an FMA the interpreter did not do.
+
+use crate::ir::graph::Graph;
+use crate::ir::op::{OpKind, PoolKind, UnaryKind};
+
+/// One emitted kernel function. Several [`OpKind`]s can share a kernel
+/// (both pool flavours, unary/reshape copies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Kernel {
+    Conv2D,
+    DwConv2D,
+    Pool,
+    GlobalAvgPool,
+    Unary,
+    Binary,
+    Fc,
+    MatMul,
+    Concat,
+    Pad,
+    Softmax,
+}
+
+impl Kernel {
+    /// Kernel implementing `kind`.
+    pub(crate) fn for_op(kind: &OpKind) -> Kernel {
+        match kind {
+            OpKind::Conv2D(_) => Kernel::Conv2D,
+            OpKind::DepthwiseConv2D(_) => Kernel::DwConv2D,
+            OpKind::Pool(_) => Kernel::Pool,
+            OpKind::GlobalAvgPool => Kernel::GlobalAvgPool,
+            OpKind::Unary(_) | OpKind::Reshape { .. } => Kernel::Unary,
+            OpKind::Binary(_) => Kernel::Binary,
+            OpKind::FullyConnected { .. } => Kernel::Fc,
+            OpKind::MatMulAccum { .. } => Kernel::MatMul,
+            OpKind::Concat => Kernel::Concat,
+            OpKind::Pad { .. } => Kernel::Pad,
+            OpKind::Softmax => Kernel::Softmax,
+        }
+    }
+
+    /// Does this kernel call the shared `dmo_act` helper?
+    pub(crate) fn uses_act(self) -> bool {
+        matches!(self, Kernel::Conv2D | Kernel::DwConv2D | Kernel::Fc)
+    }
+
+    /// C source of the kernel function.
+    pub(crate) fn source(self) -> &'static str {
+        match self {
+            Kernel::Conv2D => CONV2D,
+            Kernel::DwConv2D => DWCONV2D,
+            Kernel::Pool => POOL,
+            Kernel::GlobalAvgPool => GAVGPOOL,
+            Kernel::Unary => UNARY,
+            Kernel::Binary => BINARY,
+            Kernel::Fc => FC,
+            Kernel::MatMul => MATMUL,
+            Kernel::Concat => CONCAT,
+            Kernel::Pad => PAD,
+            Kernel::Softmax => SOFTMAX,
+        }
+    }
+}
+
+/// The kernels needed by `graph`, in first-use order, deduplicated.
+pub(crate) fn kernels_used(graph: &Graph) -> Vec<Kernel> {
+    let mut used = Vec::new();
+    for op in &graph.ops {
+        let k = Kernel::for_op(&op.kind);
+        if !used.contains(&k) {
+            used.push(k);
+        }
+    }
+    used
+}
+
+/// Unary-kernel selector constants (`kind` parameter of `dmo_unary`).
+pub(crate) fn unary_kind_id(u: UnaryKind) -> usize {
+    match u {
+        UnaryKind::Relu => 0,
+        UnaryKind::Relu6 => 1,
+        UnaryKind::Copy => 2,
+    }
+}
+
+/// Pool-kernel selector constants (`kind` parameter of `dmo_pool`).
+pub(crate) fn pool_kind_id(k: PoolKind) -> usize {
+    match k {
+        PoolKind::Max => 0,
+        PoolKind::Avg => 1,
+    }
+}
+
+/// Fused-activation selector (`a` parameter of `dmo_act`).
+pub(crate) fn act_id(a: crate::ir::op::Activation) -> usize {
+    match a {
+        crate::ir::op::Activation::None => 0,
+        crate::ir::op::Activation::Relu => 1,
+        crate::ir::op::Activation::Relu6 => 2,
+    }
+}
+
+/// Shared fused-activation helper (relu / relu6), `-0.0`-preserving like
+/// the interpreter's `act`.
+pub(crate) const ACT_HELPER: &str = "\
+static float dmo_act(float v, int a) {
+    if (a >= 1 && v < 0.0f) {
+        v = 0.0f;
+    }
+    if (a == 2 && v > 6.0f) {
+        v = 6.0f;
+    }
+    return v;
+}
+";
+
+const CONV2D: &str = "\
+static void dmo_conv2d(size_t ib, size_t ob, int ih, int iw, int id, int oh, int ow, int od,
+                       int kh, int kw, int sh, int sw, int dh, int dw, int ph, int pw, int a,
+                       const dmo_wt *w, const dmo_bt *bias) {
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int oc = 0; oc < od; oc++) {
+                float total = (float)bias[oc];
+                for (int ky = 0; ky < kh; ky++) {
+                    int iy = y0 + ky * dh;
+                    if (iy < 0 || iy >= ih) {
+                        continue;
+                    }
+                    for (int kx = 0; kx < kw; kx++) {
+                        int ix = x0 + kx * dw;
+                        if (ix < 0 || ix >= iw) {
+                            continue;
+                        }
+                        for (int ic = 0; ic < id; ic++) {
+                            float v = dmo_load(ib + (size_t)((iy * iw + ix) * id + ic) * DMO_ELEM_BYTES);
+                            total += v * (float)w[((ky * kw + kx) * id + ic) * od + oc];
+                        }
+                    }
+                }
+                dmo_store(ob + (size_t)((oy * ow + ox) * od + oc) * DMO_ELEM_BYTES, dmo_act(total, a));
+            }
+        }
+    }
+}
+";
+
+const DWCONV2D: &str = "\
+static void dmo_dwconv2d(size_t ib, size_t ob, int ih, int iw, int id, int oh, int ow, int od,
+                         int kh, int kw, int sh, int sw, int dh, int dw, int ph, int pw,
+                         int mult, int bias_n, int a, const dmo_wt *w, const dmo_bt *bias) {
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int ic = 0; ic < id; ic++) {
+                for (int m = 0; m < mult; m++) {
+                    int oc = ic * mult + m;
+                    float total = (float)bias[oc < bias_n ? oc : bias_n - 1];
+                    for (int ky = 0; ky < kh; ky++) {
+                        int iy = y0 + ky * dh;
+                        if (iy < 0 || iy >= ih) {
+                            continue;
+                        }
+                        for (int kx = 0; kx < kw; kx++) {
+                            int ix = x0 + kx * dw;
+                            if (ix < 0 || ix >= iw) {
+                                continue;
+                            }
+                            float v = dmo_load(ib + (size_t)((iy * iw + ix) * id + ic) * DMO_ELEM_BYTES);
+                            total += v * (float)w[((ky * kw + kx) * id + ic) * mult + m];
+                        }
+                    }
+                    dmo_store(ob + (size_t)((oy * ow + ox) * od + oc) * DMO_ELEM_BYTES, dmo_act(total, a));
+                }
+            }
+        }
+    }
+}
+";
+
+const POOL: &str = "\
+static void dmo_pool(size_t ib, size_t ob, int ih, int iw, int id, int oh, int ow, int od,
+                     int kh, int kw, int sh, int sw, int ph, int pw, int kind) {
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int c = 0; c < od; c++) {
+                float acc = kind == 0 ? -INFINITY : 0.0f;
+                int n = 0;
+                for (int ky = 0; ky < kh; ky++) {
+                    int iy = y0 + ky;
+                    if (iy < 0 || iy >= ih) {
+                        continue;
+                    }
+                    for (int kx = 0; kx < kw; kx++) {
+                        int ix = x0 + kx;
+                        if (ix < 0 || ix >= iw) {
+                            continue;
+                        }
+                        float v = dmo_load(ib + (size_t)((iy * iw + ix) * id + c) * DMO_ELEM_BYTES);
+                        if (kind == 0) {
+                            if (v > acc) {
+                                acc = v;
+                            }
+                        } else {
+                            acc += v;
+                        }
+                        n++;
+                    }
+                }
+                float r = kind == 0 ? acc : acc / (float)(n > 0 ? n : 1);
+                dmo_store(ob + (size_t)((oy * ow + ox) * od + c) * DMO_ELEM_BYTES, r);
+            }
+        }
+    }
+}
+";
+
+const GAVGPOOL: &str = "\
+static void dmo_gavgpool(size_t ib, size_t ob, int ih, int iw, int id) {
+    for (int c = 0; c < id; c++) {
+        float acc = 0.0f;
+        for (int p = 0; p < ih * iw; p++) {
+            acc += dmo_load(ib + (size_t)(p * id + c) * DMO_ELEM_BYTES);
+        }
+        dmo_store(ob + (size_t)c * DMO_ELEM_BYTES, acc / (float)(ih * iw));
+    }
+}
+";
+
+const UNARY: &str = "\
+static void dmo_unary(size_t ib, size_t ob, size_t n, int kind) {
+    for (size_t i = 0; i < n; i++) {
+        float v = dmo_load(ib + i * DMO_ELEM_BYTES);
+        if (kind == 0 && v < 0.0f) {
+            v = 0.0f;
+        }
+        if (kind == 1) {
+            if (v < 0.0f) {
+                v = 0.0f;
+            }
+            if (v > 6.0f) {
+                v = 6.0f;
+            }
+        }
+        dmo_store(ob + i * DMO_ELEM_BYTES, v);
+    }
+}
+";
+
+const BINARY: &str = "\
+static void dmo_binary(size_t ab, size_t bb, size_t ob, size_t n, int kind) {
+    for (size_t i = 0; i < n; i++) {
+        float x = dmo_load(ab + i * DMO_ELEM_BYTES);
+        float y = dmo_load(bb + i * DMO_ELEM_BYTES);
+        dmo_store(ob + i * DMO_ELEM_BYTES, kind == 0 ? x + y : x * y);
+    }
+}
+";
+
+const FC: &str = "\
+static void dmo_fc(size_t ib, size_t ob, int k_dim, int nf, int a,
+                   const dmo_wt *w, const dmo_bt *bias) {
+    for (int o = 0; o < nf; o++) {
+        float total = (float)bias[o];
+        for (int k = 0; k < k_dim; k++) {
+            total += dmo_load(ib + (size_t)k * DMO_ELEM_BYTES) * (float)w[k * nf + o];
+        }
+        dmo_store(ob + (size_t)o * DMO_ELEM_BYTES, dmo_act(total, a));
+    }
+}
+";
+
+const MATMUL: &str = "\
+static void dmo_matmul(size_t ib, size_t ob, int k_dim, int nf,
+                       const dmo_wt *w, const dmo_bt *bias) {
+    for (int o = 0; o < nf; o++) {
+        dmo_store(ob + (size_t)o * DMO_ELEM_BYTES, (float)bias[o]);
+    }
+    for (int k = 0; k < k_dim; k++) {
+        float v = dmo_load(ib + (size_t)k * DMO_ELEM_BYTES);
+        for (int o = 0; o < nf; o++) {
+            size_t off = ob + (size_t)o * DMO_ELEM_BYTES;
+            dmo_store(off, dmo_load(off) + v * (float)w[k * nf + o]);
+        }
+    }
+}
+";
+
+const CONCAT: &str = "\
+static void dmo_concat(size_t ob, int hw, int od, int n, const size_t *ibs, const int *cs) {
+    for (int p = 0; p < hw; p++) {
+        int coff = 0;
+        for (int j = 0; j < n; j++) {
+            int cj = cs[j];
+            for (int c = 0; c < cj; c++) {
+                float v = dmo_load(ibs[j] + (size_t)(p * cj + c) * DMO_ELEM_BYTES);
+                dmo_store(ob + (size_t)(p * od + coff + c) * DMO_ELEM_BYTES, v);
+            }
+            coff += cj;
+        }
+    }
+}
+";
+
+const PAD: &str = "\
+static void dmo_pad(size_t ib, size_t ob, int ih, int iw, int id, int oh, int ow, int od,
+                    int top, int left) {
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            int inside = oy >= top && oy < top + ih && ox >= left && ox < left + iw;
+            for (int c = 0; c < od; c++) {
+                float v = 0.0f;
+                if (inside) {
+                    v = dmo_load(ib + (size_t)(((oy - top) * iw + (ox - left)) * id + c) * DMO_ELEM_BYTES);
+                }
+                dmo_store(ob + (size_t)((oy * ow + ox) * od + c) * DMO_ELEM_BYTES, v);
+            }
+        }
+    }
+}
+";
+
+const SOFTMAX: &str = "\
+static void dmo_softmax(size_t ib, size_t ob, int rows, int d) {
+    for (int r = 0; r < rows; r++) {
+        float m = -INFINITY;
+        for (int c = 0; c < d; c++) {
+            float x = dmo_load(ib + (size_t)(r * d + c) * DMO_ELEM_BYTES);
+            if (x > m) {
+                m = x;
+            }
+        }
+        float sum = 0.0f;
+        for (int c = 0; c < d; c++) {
+            sum += expf(dmo_load(ib + (size_t)(r * d + c) * DMO_ELEM_BYTES) - m);
+        }
+        for (int c = 0; c < d; c++) {
+            float v = expf(dmo_load(ib + (size_t)(r * d + c) * DMO_ELEM_BYTES) - m) / sum;
+            dmo_store(ob + (size_t)(r * d + c) * DMO_ELEM_BYTES, v);
+        }
+    }
+}
+";
+
+/// Arena element accessors, specialised per activation dtype. The `i8`
+/// store replicates the interpreter's quantisation exactly: libm
+/// `roundf` (round half away from zero, what Rust's `f32::round` is),
+/// then saturate to `[-128, 127]`.
+pub(crate) fn load_store_source(dtype: crate::ir::DType) -> &'static str {
+    match dtype {
+        crate::ir::DType::F32 | crate::ir::DType::I32 => LOAD_STORE_F32,
+        crate::ir::DType::I8 => LOAD_STORE_I8,
+    }
+}
+
+const LOAD_STORE_F32: &str = "\
+static float dmo_load(size_t off) {
+    float v;
+    memcpy(&v, dmo_arena + off, sizeof v);
+    return v;
+}
+
+static void dmo_store(size_t off, float v) {
+    memcpy(dmo_arena + off, &v, sizeof v);
+}
+";
+
+const LOAD_STORE_I8: &str = "\
+static float dmo_load(size_t off) {
+    return (float)(int8_t)dmo_arena[off];
+}
+
+static void dmo_store(size_t off, float v) {
+    float r = roundf(v);
+    if (r < -128.0f) {
+        r = -128.0f;
+    }
+    if (r > 127.0f) {
+        r = 127.0f;
+    }
+    dmo_arena[off] = (uint8_t)(int8_t)r;
+}
+";
+
+/// SplitMix64 weight generator (emitted only when the model's weights
+/// are too large to embed as initialisers): the same stream
+/// [`crate::ops::exec::gen_weights`] draws from, so generated and
+/// embedded weights are interchangeable bit for bit.
+pub(crate) const SPLITMIX: &str = "\
+static uint64_t dmo_sm_next(uint64_t *s) {
+    *s += 0x9E3779B97F4A7C15ULL;
+    uint64_t z = *s;
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ULL;
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EBULL;
+    return z ^ (z >> 31);
+}
+
+static void dmo_fill_wt(dmo_wt *dst, size_t n, uint64_t *s) {
+    for (size_t i = 0; i < n; i++) {
+        dst[i] = (dmo_wt)((int)(dmo_sm_next(s) % 5u) - 2);
+    }
+}
+
+static void dmo_fill_bt(dmo_bt *dst, size_t n, uint64_t *s) {
+    for (size_t i = 0; i < n; i++) {
+        dst[i] = (dmo_bt)((int)(dmo_sm_next(s) % 5u) - 2);
+    }
+}
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn tiny_uses_expected_kernels() {
+        let g = models::build("tiny").unwrap();
+        let used = kernels_used(&g);
+        assert_eq!(
+            used,
+            vec![
+                Kernel::Conv2D,
+                Kernel::DwConv2D,
+                Kernel::GlobalAvgPool,
+                Kernel::Unary,
+                Kernel::Fc,
+                Kernel::Softmax,
+            ]
+        );
+        assert!(used.iter().any(|k| k.uses_act()));
+    }
+
+    #[test]
+    fn kernel_sources_reference_only_emitted_names() {
+        // every kernel body must be self-contained modulo the shared
+        // helpers the emitter always provides alongside it
+        for k in [
+            Kernel::Conv2D,
+            Kernel::DwConv2D,
+            Kernel::Pool,
+            Kernel::GlobalAvgPool,
+            Kernel::Unary,
+            Kernel::Binary,
+            Kernel::Fc,
+            Kernel::MatMul,
+            Kernel::Concat,
+            Kernel::Pad,
+            Kernel::Softmax,
+        ] {
+            let src = k.source();
+            assert!(src.starts_with("static void dmo_"), "{src}");
+            assert!(src.contains("dmo_store("), "every kernel writes: {src}");
+            assert_eq!(k.uses_act(), src.contains("dmo_act("), "{src}");
+        }
+    }
+}

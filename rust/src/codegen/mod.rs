@@ -1,0 +1,120 @@
+//! C99 firmware emission — the deployment backend the paper assumes.
+//!
+//! §I frames DMO as a *pre-allocation* technique for TFMin-style
+//! generated C: the plan only pays off once its fixed buffer offsets are
+//! baked into firmware that runs inside a single static arena on the
+//! MCU. This module is that last mile. [`emit`] lowers a validated
+//! [`Plan`](crate::planner::Plan) (or, via [`emit_artifact`], a loaded
+//! [`PlanArtifact`](crate::planner::PlanArtifact)) for a
+//! [`Graph`](crate::ir::graph::Graph) into one self-contained,
+//! dependency-free C99 translation unit plus a small public header:
+//!
+//! * `static uint8_t dmo_arena[DMO_ARENA_BYTES]` — the planned arena,
+//!   sized to the plan's (overlapped) peak, not the disjoint sum;
+//! * one `#define DMO_OFF_T<i>` per tensor, taken verbatim from the
+//!   plan — overlapping offsets and all;
+//! * one kernel function per [`OpKind`](crate::ir::op::OpKind) used,
+//!   whose loop sweep and read-before-write order replicate
+//!   [`crate::ops::exec`] exactly (the invariant the `O_s` engines
+//!   assume — see [`kernels`]);
+//! * weights/biases as `const` arrays destined for flash (or, past
+//!   [`EmitOptions::weight_embed_limit`], a SplitMix64 generator that
+//!   reproduces the same synthetic stream);
+//! * a `dmo_invoke(input, output)` entry point, and a header carrying
+//!   arena/flash size macros plus the source graph's fingerprint.
+//!
+//! [`harness`] is the proof-of-safety layer for the emitted artifact:
+//! it compiles the unit with the host `cc` (`-std=c99 -Wall -Werror`),
+//! runs it, and asserts the outputs are bit-identical to
+//! [`crate::interp::run_reference`] — the same guarantee the arena
+//! interpreter gives, now for the code we would actually ship.
+//!
+//! ```
+//! use dmo::codegen::{emit, EmitOptions};
+//! use dmo::planner::Planner;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let graph = dmo::models::build("tiny")?;
+//! let plan = Planner::for_graph(&graph).dmo(true).plan()?;
+//! let unit = emit(&graph, &plan, &EmitOptions::new("tiny_model"))?;
+//! assert!(unit.header.contains(&format!("#define DMO_ARENA_BYTES {}", plan.peak())));
+//! assert!(unit.source.contains("void dmo_invoke(const float *input_0, float *output_0)"));
+//! # Ok(())
+//! # }
+//! ```
+
+pub(crate) mod fmt;
+pub mod harness;
+pub(crate) mod kernels;
+mod unit;
+
+pub use harness::{
+    cc_available, differential_test, differential_test_unit, differential_test_with,
+    generate_main_c, DiffReport,
+};
+pub use unit::{emit, emit_artifact, CUnit, EmitOptions};
+
+use crate::ir::graph::Graph;
+
+/// Rough per-kernel machine-code size on a Cortex-M class target —
+/// deliberately generous so [`flash_footprint`] over-estimates rather
+/// than green-lighting a part the image will not fit.
+const KERNEL_CODE_BYTES: usize = 640;
+/// Per-op call-site cost (argument setup + call).
+const CALL_CODE_BYTES: usize = 48;
+/// Fixed runtime overhead (accessors, entry point, CRT glue).
+const RUNTIME_CODE_BYTES: usize = 1024;
+
+/// Flash image of an emitted unit: weights (exact) + code (estimate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlashFootprint {
+    /// Constant weight/bias bytes, exactly as stored by the emitted
+    /// arrays (dtype-faithful: `int8_t` weights for quantised models).
+    pub weight_bytes: usize,
+    /// Estimated machine-code bytes for the kernels + entry point.
+    pub code_bytes: usize,
+}
+
+impl FlashFootprint {
+    /// Total flash bytes the unit needs.
+    pub fn total(&self) -> usize {
+        self.weight_bytes + self.code_bytes
+    }
+}
+
+/// Flash footprint the emitted unit for `graph` will need — available
+/// without emitting, so [`crate::mcu::deploy_matrix`] can gate on it.
+pub fn flash_footprint(graph: &Graph) -> FlashFootprint {
+    FlashFootprint {
+        weight_bytes: graph.weight_bytes(),
+        code_bytes: code_estimate(graph),
+    }
+}
+
+pub(crate) fn code_estimate(graph: &Graph) -> usize {
+    RUNTIME_CODE_BYTES
+        + KERNEL_CODE_BYTES * kernels::kernels_used(graph).len()
+        + CALL_CODE_BYTES * graph.ops.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn flash_footprint_weights_match_graph() {
+        let g = models::build("tiny").unwrap();
+        let ff = flash_footprint(&g);
+        assert_eq!(ff.weight_bytes, g.weight_bytes());
+        assert!(ff.code_bytes >= RUNTIME_CODE_BYTES + KERNEL_CODE_BYTES);
+        assert_eq!(ff.total(), ff.weight_bytes + ff.code_bytes);
+    }
+
+    #[test]
+    fn quantised_weights_are_smaller_in_flash() {
+        let f32v = flash_footprint(&models::build("tiny").unwrap());
+        let i8v = flash_footprint(&models::build("tiny_int8").unwrap());
+        assert!(i8v.weight_bytes < f32v.weight_bytes);
+    }
+}

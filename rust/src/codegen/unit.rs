@@ -1,0 +1,694 @@
+//! Translation-unit assembly: lower a validated plan to `.c` + `.h`.
+//!
+//! The emitted unit is the shape TFMin produced (§I): every tensor at a
+//! fixed pre-computed arena offset, weights in flash-resident `const`
+//! arrays, one entry point. Emission is byte-deterministic for a given
+//! (graph, plan, options) triple — the golden-file tests rely on it.
+
+use super::fmt::{f32_literal, sanitize_ident, wrap_values};
+use super::kernels::{
+    act_id, kernels_used, load_store_source, pool_kind_id, unary_kind_id, ACT_HELPER, SPLITMIX,
+};
+use super::FlashFootprint;
+use crate::ir::graph::{Graph, OpNode, TensorId};
+use crate::ir::op::{pad_before, OpKind};
+use crate::ir::DType;
+use crate::ops::exec::gen_weights;
+use crate::planner::{graph_fingerprint, Plan, PlanArtifact};
+use anyhow::{bail, ensure, Context, Result};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Configuration for one emission.
+#[derive(Debug, Clone)]
+pub struct EmitOptions {
+    /// File stem: the unit becomes `<stem>.c` / `<stem>.h` and the
+    /// header guard is derived from it. Sanitised to a C identifier.
+    pub stem: String,
+    /// Seed for the synthetic weight stream (and the harness inputs) —
+    /// must match the seed later passed to the interpreter when
+    /// comparing outputs.
+    pub seed: u64,
+    /// Models whose total weight element count exceeds this are emitted
+    /// with a SplitMix64 weight generator instead of literal `const`
+    /// arrays (a 50 M-element initialiser list is not a reviewable or
+    /// compilable artifact). The stream is identical either way.
+    pub weight_embed_limit: usize,
+}
+
+impl EmitOptions {
+    /// Defaults: seed 42, embed weights up to one million elements.
+    pub fn new(stem: &str) -> EmitOptions {
+        EmitOptions {
+            stem: sanitize_ident(stem),
+            seed: 42,
+            weight_embed_limit: 1_000_000,
+        }
+    }
+
+    /// Override the synthetic-weight seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the embed-vs-generate threshold (elements).
+    pub fn weight_embed_limit(mut self, elems: usize) -> Self {
+        self.weight_embed_limit = elems;
+        self
+    }
+}
+
+/// An emitted C unit plus the numbers reports care about.
+#[derive(Debug, Clone)]
+pub struct CUnit {
+    /// File stem (`<stem>.c` / `<stem>.h`).
+    pub stem: String,
+    /// Source model name.
+    pub model: String,
+    /// [`graph_fingerprint`] of the source graph.
+    pub fingerprint: u64,
+    /// The translation unit.
+    pub source: String,
+    /// The public header.
+    pub header: String,
+    /// `DMO_ARENA_BYTES` — the plan's overlapped peak, verbatim.
+    pub arena_bytes: usize,
+    /// Flash image (exact weights + code estimate).
+    pub flash: FlashFootprint,
+    /// Whether weights were embedded as `const` initialisers (`true`)
+    /// or left to the emitted SplitMix64 generator (`false`).
+    pub weights_embedded: bool,
+    /// Element count per model input, in `dmo_invoke` parameter order.
+    pub input_elems: Vec<usize>,
+    /// Element count per model output, in `dmo_invoke` parameter order.
+    pub output_elems: Vec<usize>,
+}
+
+impl CUnit {
+    /// Header file name the source `#include`s.
+    pub fn header_file_name(&self) -> String {
+        format!("{}.h", self.stem)
+    }
+
+    /// Write `<c_path>` and its sibling header; returns the header path.
+    /// `c_path`'s file name should be `<stem>.c` so the `#include`
+    /// inside the source resolves.
+    pub fn write_to(&self, c_path: &Path) -> Result<PathBuf> {
+        if let Some(parent) = c_path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let header_path = c_path.with_file_name(self.header_file_name());
+        std::fs::write(c_path, &self.source)
+            .with_context(|| format!("writing {}", c_path.display()))?;
+        std::fs::write(&header_path, &self.header)
+            .with_context(|| format!("writing {}", header_path.display()))?;
+        Ok(header_path)
+    }
+}
+
+/// Lower `plan` for `graph` into a C unit.
+pub fn emit(graph: &Graph, plan: &Plan, opts: &EmitOptions) -> Result<CUnit> {
+    ensure!(!graph.ops.is_empty(), "cannot emit an empty graph");
+    ensure!(
+        plan.alloc.offsets.len() == graph.tensors.len(),
+        "plan places {} tensors but the graph has {} — plan/graph mismatch",
+        plan.alloc.offsets.len(),
+        graph.tensors.len()
+    );
+    let dtype = uniform_activation_dtype(graph)?;
+    for op in &graph.ops {
+        check_weight_scheme(op, dtype)?;
+        for &t in op.inputs.iter().chain([&op.output]) {
+            ensure!(
+                plan.alloc.offsets[t.0].is_some(),
+                "tensor `{}` is unplaced in the plan — cannot emit",
+                graph.tensor(t).name
+            );
+        }
+    }
+    for &t in graph.inputs.iter().chain(&graph.outputs) {
+        ensure!(
+            plan.alloc.offsets[t.0].is_some(),
+            "model i/o tensor `{}` is unplaced in the plan — cannot emit",
+            graph.tensor(t).name
+        );
+    }
+
+    let total_weight_elems: usize = graph
+        .ops
+        .iter()
+        .flat_map(|op| op.weights.iter())
+        .map(|w| w.shape.num_elements())
+        .sum();
+    let embed = total_weight_elems <= opts.weight_embed_limit;
+
+    let flash = FlashFootprint {
+        weight_bytes: graph.weight_bytes(),
+        code_bytes: super::code_estimate(graph),
+    };
+    let fingerprint = graph_fingerprint(graph);
+    let input_elems: Vec<usize> = graph
+        .inputs
+        .iter()
+        .map(|&t| graph.tensor(t).shape.num_elements())
+        .collect();
+    let output_elems: Vec<usize> = graph
+        .outputs
+        .iter()
+        .map(|&t| graph.tensor(t).shape.num_elements())
+        .collect();
+
+    let e = Emitter {
+        graph,
+        plan,
+        opts,
+        dtype,
+        embed,
+        flash,
+        fingerprint,
+    };
+    Ok(CUnit {
+        stem: opts.stem.clone(),
+        model: graph.name.clone(),
+        fingerprint,
+        source: e.source(),
+        header: e.header(&input_elems, &output_elems),
+        arena_bytes: plan.alloc.peak,
+        flash,
+        weights_embedded: embed,
+        input_elems,
+        output_elems,
+    })
+}
+
+/// Revalidate `artifact` against `graph` (fingerprint, layout safety)
+/// and emit the reconstructed plan — the deploy path: plan in one
+/// process, `dmo emit-c --import` in another.
+pub fn emit_artifact(graph: &Graph, artifact: &PlanArtifact, opts: &EmitOptions) -> Result<CUnit> {
+    let plan = artifact
+        .to_plan(graph)
+        .context("revalidating plan artifact for emission")?;
+    emit(graph, &plan, opts)
+}
+
+fn uniform_activation_dtype(graph: &Graph) -> Result<DType> {
+    let dtype = graph.tensors[0].dtype;
+    ensure!(
+        graph.tensors.iter().all(|t| t.dtype == dtype),
+        "mixed activation dtypes are not supported by the C emitter"
+    );
+    match dtype {
+        DType::F32 | DType::I8 => Ok(dtype),
+        DType::I32 => bail!("i32 activation tensors are not supported by the C emitter"),
+    }
+}
+
+/// Weight storage C types for an activation dtype: quantised models
+/// keep `int8_t` weights with `int32_t` biases (the TFLite layout the
+/// builders produce), float models use `float` throughout.
+fn weight_ctypes(dtype: DType) -> (&'static str, &'static str) {
+    match dtype {
+        DType::I8 => ("int8_t", "int32_t"),
+        _ => ("float", "float"),
+    }
+}
+
+fn check_weight_scheme(op: &OpNode, dtype: DType) -> Result<()> {
+    if op.weights.is_empty() {
+        return Ok(());
+    }
+    ensure!(
+        op.weights.len() == 2,
+        "op `{}`: expected [weights, bias] attributes, found {}",
+        op.name,
+        op.weights.len()
+    );
+    let bias_dtype = if dtype == DType::I8 { DType::I32 } else { dtype };
+    ensure!(
+        op.weights[0].dtype == dtype && op.weights[1].dtype == bias_dtype,
+        "op `{}`: weight dtypes {}/{} do not match the {}/{} storage scheme",
+        op.name,
+        op.weights[0].dtype,
+        op.weights[1].dtype,
+        dtype,
+        bias_dtype
+    );
+    Ok(())
+}
+
+struct Emitter<'a> {
+    graph: &'a Graph,
+    plan: &'a Plan,
+    opts: &'a EmitOptions,
+    dtype: DType,
+    embed: bool,
+    flash: FlashFootprint,
+    fingerprint: u64,
+}
+
+impl Emitter<'_> {
+    fn banner(&self) -> String {
+        format!(
+            "/* Generated by `dmo emit-c` - do not edit.\n \
+             * model: {} (fingerprint {:016x})\n \
+             * plan: strategy={} heuristic={} os={}\n \
+             * arena: {} bytes, weights: {} bytes (seed {}, {})\n \
+             */\n",
+            self.graph.name,
+            self.fingerprint,
+            self.plan.strategy.name(),
+            self.plan.heuristic.name(),
+            self.plan.os.method.name(),
+            self.plan.alloc.peak,
+            self.flash.weight_bytes,
+            self.opts.seed,
+            if self.embed { "embedded" } else { "generated" },
+        )
+    }
+
+    fn invoke_params(&self) -> String {
+        let mut params: Vec<String> = (0..self.graph.inputs.len())
+            .map(|i| format!("const float *input_{i}"))
+            .collect();
+        params.extend((0..self.graph.outputs.len()).map(|i| format!("float *output_{i}")));
+        params.join(", ")
+    }
+
+    fn header(&self, input_elems: &[usize], output_elems: &[usize]) -> String {
+        let guard = format!("DMO_{}_H", self.opts.stem.to_uppercase());
+        let mut h = self.banner();
+        let _ = writeln!(h, "#ifndef {guard}");
+        let _ = writeln!(h, "#define {guard}");
+        h.push('\n');
+        h.push_str("#include <stddef.h>\n\n");
+        let _ = writeln!(h, "#define DMO_MODEL_NAME \"{}\"", self.graph.name);
+        let _ = writeln!(h, "#define DMO_MODEL_FINGERPRINT \"{:016x}\"", self.fingerprint);
+        let _ = writeln!(h, "#define DMO_ARENA_BYTES {}", self.plan.alloc.peak);
+        let _ = writeln!(h, "#define DMO_ELEM_BYTES {}", self.dtype.size_bytes());
+        let _ = writeln!(h, "#define DMO_WEIGHT_BYTES {}", self.flash.weight_bytes);
+        let _ = writeln!(h, "#define DMO_CODE_BYTES_EST {}", self.flash.code_bytes);
+        let _ = writeln!(h, "#define DMO_FLASH_BYTES {}", self.flash.total());
+        let _ = writeln!(h, "#define DMO_WEIGHT_SEED {}", self.opts.seed);
+        let _ = writeln!(h, "#define DMO_WEIGHTS_EMBEDDED {}", i32::from(self.embed));
+        let _ = writeln!(h, "#define DMO_INPUT_COUNT {}", input_elems.len());
+        let _ = writeln!(h, "#define DMO_OUTPUT_COUNT {}", output_elems.len());
+        for (i, n) in input_elems.iter().enumerate() {
+            let _ = writeln!(h, "#define DMO_INPUT_{i}_ELEMS {n}");
+        }
+        for (i, n) in output_elems.iter().enumerate() {
+            let _ = writeln!(h, "#define DMO_OUTPUT_{i}_ELEMS {n}");
+        }
+        h.push('\n');
+        h.push_str(
+            "/* I/O buffers are caller-provided float arrays (dequantised for\n \
+             * quantised models) and are NOT counted in DMO_ARENA_BYTES -\n \
+             * stream or stage them according to your data source. */\n",
+        );
+        let _ = writeln!(h, "void dmo_invoke({});", self.invoke_params());
+        h.push('\n');
+        let _ = writeln!(h, "#endif /* {guard} */");
+        h
+    }
+
+    fn source(&self) -> String {
+        let (wt, bt) = weight_ctypes(self.dtype);
+        let mut c = self.banner();
+        let _ = writeln!(c, "#include \"{}.h\"", self.opts.stem);
+        c.push('\n');
+        c.push_str("#include <math.h>\n#include <stdint.h>\n#include <string.h>\n\n");
+        let _ = writeln!(c, "typedef {wt} dmo_wt;");
+        let _ = writeln!(c, "typedef {bt} dmo_bt;");
+        c.push('\n');
+        c.push_str("static uint8_t dmo_arena[DMO_ARENA_BYTES];\n\n");
+
+        c.push_str("/* Tensor arena offsets in bytes, verbatim from the plan. */\n");
+        for (i, info) in self.graph.tensors.iter().enumerate() {
+            if let Some(off) = self.plan.alloc.offsets[i] {
+                let _ = writeln!(
+                    c,
+                    "#define DMO_OFF_T{i} {off} /* {}: {} elems */",
+                    info.name,
+                    info.shape.num_elements()
+                );
+            }
+        }
+        c.push('\n');
+        c.push_str(load_store_source(self.dtype));
+        c.push('\n');
+
+        self.emit_weights(&mut c);
+
+        c.push_str("/* Kernels: loop sweeps and read/write order match the\n");
+        c.push_str(" * crate::ops reference kernels - the invariant the overlap\n");
+        c.push_str(" * engines assume. */\n");
+        let used = kernels_used(self.graph);
+        if used.iter().any(|k| k.uses_act()) {
+            c.push_str(ACT_HELPER);
+            c.push('\n');
+        }
+        for k in &used {
+            c.push_str(k.source());
+            c.push('\n');
+        }
+
+        let _ = writeln!(c, "void dmo_invoke({}) {{", self.invoke_params());
+        if !self.embed {
+            c.push_str("    static int dmo_ready = 0;\n");
+            c.push_str("    if (!dmo_ready) {\n");
+            c.push_str("        dmo_weights_init();\n");
+            c.push_str("        dmo_ready = 1;\n");
+            c.push_str("    }\n\n");
+        }
+        for (i, &t) in self.graph.inputs.iter().enumerate() {
+            let _ = writeln!(c, "    for (size_t i = 0; i < DMO_INPUT_{i}_ELEMS; i++) {{");
+            let _ = writeln!(
+                c,
+                "        dmo_store(DMO_OFF_T{} + i * DMO_ELEM_BYTES, input_{i}[i]);",
+                t.0
+            );
+            c.push_str("    }\n");
+        }
+        c.push('\n');
+        for &opid in &self.plan.order.0 {
+            let op = self.graph.op(opid);
+            let _ = writeln!(c, "    /* op {}: {} */", opid.0, op.name);
+            let _ = writeln!(c, "    {}", self.call_site(opid.0, op));
+        }
+        c.push('\n');
+        for (i, &t) in self.graph.outputs.iter().enumerate() {
+            let _ = writeln!(c, "    for (size_t i = 0; i < DMO_OUTPUT_{i}_ELEMS; i++) {{");
+            let _ = writeln!(
+                c,
+                "        output_{i}[i] = dmo_load(DMO_OFF_T{} + i * DMO_ELEM_BYTES);",
+                t.0
+            );
+            c.push_str("    }\n");
+        }
+        c.push_str("}\n");
+        c
+    }
+
+    fn emit_weights(&self, c: &mut String) {
+        c.push_str("/* Weights (synthetic SplitMix64 stream, seed DMO_WEIGHT_SEED). */\n");
+        for (oi, op) in self.graph.ops.iter().enumerate() {
+            if op.weights.is_empty() {
+                continue;
+            }
+            if self.embed {
+                let vals = gen_weights(op, self.opts.seed ^ oi as u64);
+                for (j, (w, tv)) in op.weights.iter().zip(&vals).enumerate() {
+                    let ctype = if j == 0 { "dmo_wt" } else { "dmo_bt" };
+                    let lits: Vec<String> = if self.dtype == DType::I8 {
+                        tv.iter().map(|&v| (v as i64).to_string()).collect()
+                    } else {
+                        tv.iter().map(|&v| f32_literal(v)).collect()
+                    };
+                    let _ = writeln!(
+                        c,
+                        "static const {ctype} dmo_w{oi}_{j}[{}] = {{",
+                        w.shape.num_elements()
+                    );
+                    c.push_str(&wrap_values(&lits, 10));
+                    c.push_str("};\n");
+                }
+            } else {
+                for (j, w) in op.weights.iter().enumerate() {
+                    let ctype = if j == 0 { "dmo_wt" } else { "dmo_bt" };
+                    let _ = writeln!(
+                        c,
+                        "static {ctype} dmo_w{oi}_{j}[{}];",
+                        w.shape.num_elements()
+                    );
+                }
+            }
+        }
+        c.push('\n');
+        if !self.embed {
+            c.push_str(SPLITMIX);
+            c.push('\n');
+            c.push_str("static void dmo_weights_init(void) {\n    uint64_t s;\n");
+            for (oi, op) in self.graph.ops.iter().enumerate() {
+                if op.weights.is_empty() {
+                    continue;
+                }
+                let opseed = (self.opts.seed ^ oi as u64) ^ 0xD0D0_0000_0000_0000;
+                let _ = writeln!(c, "    s = {opseed:#x}ULL; /* op {oi} */");
+                for (j, w) in op.weights.iter().enumerate() {
+                    let fill = if j == 0 { "dmo_fill_wt" } else { "dmo_fill_bt" };
+                    let _ = writeln!(
+                        c,
+                        "    {fill}(dmo_w{oi}_{j}, {}, &s);",
+                        w.shape.num_elements()
+                    );
+                }
+            }
+            c.push_str("}\n\n");
+        }
+    }
+
+    fn call_site(&self, oi: usize, op: &OpNode) -> String {
+        let off = |t: TensorId| format!("DMO_OFF_T{}", t.0);
+        let in0 = self.graph.tensor(op.inputs[0]);
+        let out = self.graph.tensor(op.output);
+        match &op.kind {
+            OpKind::Conv2D(p) => {
+                let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
+                let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
+                format!(
+                    "dmo_conv2d({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {}, {}, {}, dmo_w{oi}_0, dmo_w{oi}_1);",
+                    off(op.inputs[0]),
+                    off(op.output),
+                    p.kernel.0,
+                    p.kernel.1,
+                    p.stride.0,
+                    p.stride.1,
+                    p.dilation.0,
+                    p.dilation.1,
+                    pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0),
+                    pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1),
+                    act_id(p.act),
+                )
+            }
+            OpKind::DepthwiseConv2D(p) => {
+                let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
+                let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
+                format!(
+                    "dmo_dwconv2d({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {}, {}, {}, {}, {}, dmo_w{oi}_0, dmo_w{oi}_1);",
+                    off(op.inputs[0]),
+                    off(op.output),
+                    p.kernel.0,
+                    p.kernel.1,
+                    p.stride.0,
+                    p.stride.1,
+                    p.dilation.0,
+                    p.dilation.1,
+                    pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0),
+                    pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1),
+                    p.depth_multiplier,
+                    op.weights[1].shape.num_elements(),
+                    act_id(p.act),
+                )
+            }
+            OpKind::Pool(p) => {
+                let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
+                let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
+                format!(
+                    "dmo_pool({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {});",
+                    off(op.inputs[0]),
+                    off(op.output),
+                    p.kernel.0,
+                    p.kernel.1,
+                    p.stride.0,
+                    p.stride.1,
+                    pad_before(ih, oh, p.kernel.0, p.stride.0, 1),
+                    pad_before(iw, ow, p.kernel.1, p.stride.1, 1),
+                    pool_kind_id(p.kind),
+                )
+            }
+            OpKind::GlobalAvgPool => format!(
+                "dmo_gavgpool({}, {}, {}, {}, {});",
+                off(op.inputs[0]),
+                off(op.output),
+                in0.shape.h(),
+                in0.shape.w(),
+                in0.shape.c(),
+            ),
+            OpKind::Unary(u) => format!(
+                "dmo_unary({}, {}, {}, {});",
+                off(op.inputs[0]),
+                off(op.output),
+                out.shape.num_elements(),
+                unary_kind_id(*u),
+            ),
+            OpKind::Reshape { .. } => format!(
+                "dmo_unary({}, {}, {}, 2);",
+                off(op.inputs[0]),
+                off(op.output),
+                out.shape.num_elements(),
+            ),
+            OpKind::Binary(bk) => format!(
+                "dmo_binary({}, {}, {}, {}, {});",
+                off(op.inputs[0]),
+                off(op.inputs[1]),
+                off(op.output),
+                out.shape.num_elements(),
+                match bk {
+                    crate::ir::op::BinaryKind::Add => 0,
+                    crate::ir::op::BinaryKind::Mul => 1,
+                },
+            ),
+            OpKind::FullyConnected { out_features, act } => format!(
+                "dmo_fc({}, {}, {}, {out_features}, {}, dmo_w{oi}_0, dmo_w{oi}_1);",
+                off(op.inputs[0]),
+                off(op.output),
+                in0.shape.num_elements(),
+                act_id(*act),
+            ),
+            OpKind::MatMulAccum { out_features } => format!(
+                "dmo_matmul({}, {}, {}, {out_features}, dmo_w{oi}_0, dmo_w{oi}_1);",
+                off(op.inputs[0]),
+                off(op.output),
+                in0.shape.num_elements(),
+            ),
+            OpKind::Concat => {
+                let n = op.inputs.len();
+                let ibs: Vec<String> = op.inputs.iter().map(|&t| off(t)).collect();
+                let cs: Vec<String> = op
+                    .inputs
+                    .iter()
+                    .map(|&t| self.graph.tensor(t).shape.c().to_string())
+                    .collect();
+                format!(
+                    "{{\n        static const size_t ibs[{n}] = {{{}}};\n        static const int cs[{n}] = {{{}}};\n        dmo_concat({}, {}, {}, {n}, ibs, cs);\n    }}",
+                    ibs.join(", "),
+                    cs.join(", "),
+                    off(op.output),
+                    out.shape.h() * out.shape.w(),
+                    out.shape.c(),
+                )
+            }
+            OpKind::Pad { pad } => {
+                let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
+                let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
+                format!(
+                    "dmo_pad({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {});",
+                    off(op.inputs[0]),
+                    off(op.output),
+                    pad.0,
+                    pad.2,
+                )
+            }
+            OpKind::Softmax => {
+                let d = out.shape.dim(out.shape.rank() - 1);
+                format!(
+                    "dmo_softmax({}, {}, {}, {d});",
+                    off(op.inputs[0]),
+                    off(op.output),
+                    out.shape.num_elements() / d,
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::planner::Planner;
+
+    fn tiny_plan() -> (Graph, Plan) {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        (g, plan)
+    }
+
+    #[test]
+    fn header_carries_plan_and_fingerprint() {
+        let (g, plan) = tiny_plan();
+        let unit = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
+        assert_eq!(unit.arena_bytes, plan.peak());
+        assert!(unit
+            .header
+            .contains(&format!("#define DMO_ARENA_BYTES {}", plan.peak())));
+        assert!(unit
+            .header
+            .contains(&format!("\"{:016x}\"", graph_fingerprint(&g))));
+        assert!(unit.header.contains("#define DMO_INPUT_0_ELEMS 3072"));
+        assert!(unit.header.contains("#define DMO_OUTPUT_0_ELEMS 10"));
+        assert!(unit
+            .header
+            .contains("void dmo_invoke(const float *input_0, float *output_0);"));
+    }
+
+    #[test]
+    fn offsets_are_verbatim_from_the_plan() {
+        let (g, plan) = tiny_plan();
+        let unit = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
+        for (i, off) in plan.alloc.offsets.iter().enumerate() {
+            if let Some(off) = off {
+                assert!(
+                    unit.source.contains(&format!("#define DMO_OFF_T{i} {off} ")),
+                    "missing offset define for tensor {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn embedded_and_generated_weight_modes() {
+        let (g, plan) = tiny_plan();
+        let emb = emit(&g, &plan, &EmitOptions::new("t")).unwrap();
+        assert!(emb.weights_embedded);
+        assert!(emb.source.contains("static const dmo_wt dmo_w0_0[216] = {"));
+        assert!(!emb.source.contains("dmo_weights_init"));
+
+        let gen = emit(&g, &plan, &EmitOptions::new("t").weight_embed_limit(0)).unwrap();
+        assert!(!gen.weights_embedded);
+        assert!(gen.source.contains("static dmo_wt dmo_w0_0[216];"));
+        assert!(gen.source.contains("static void dmo_weights_init(void)"));
+        assert!(gen.source.contains("dmo_sm_next"));
+    }
+
+    #[test]
+    fn i8_models_get_quantised_storage() {
+        let g = models::build("tiny_int8").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let unit = emit(&g, &plan, &EmitOptions::new("tiny_int8_model")).unwrap();
+        assert!(unit.source.contains("typedef int8_t dmo_wt;"));
+        assert!(unit.source.contains("typedef int32_t dmo_bt;"));
+        assert!(unit.source.contains("roundf("), "i8 store must quantise");
+        assert!(unit.header.contains("#define DMO_ELEM_BYTES 1"));
+    }
+
+    #[test]
+    fn unplaced_tensor_is_rejected() {
+        let (g, mut plan) = tiny_plan();
+        plan.alloc.offsets[1] = None;
+        let err = emit(&g, &plan, &EmitOptions::new("t")).unwrap_err();
+        assert!(format!("{err:#}").contains("unplaced"), "{err:#}");
+    }
+
+    #[test]
+    fn emission_is_deterministic() {
+        let (g, plan) = tiny_plan();
+        let a = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
+        let b = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
+        assert_eq!(a.source, b.source);
+        assert_eq!(a.header, b.header);
+    }
+
+    #[test]
+    fn artifact_emission_revalidates() {
+        let (g, plan) = tiny_plan();
+        let art = PlanArtifact::from_plan(&g, &plan);
+        let unit = emit_artifact(&g, &art, &EmitOptions::new("tiny_model")).unwrap();
+        assert_eq!(unit.arena_bytes, art.peak);
+        // a tampered artifact must be refused before emission
+        let mut bad = PlanArtifact::from_plan(&g, &plan);
+        bad.peak += 1;
+        assert!(emit_artifact(&g, &bad, &EmitOptions::new("tiny_model")).is_err());
+    }
+}

@@ -102,6 +102,18 @@ fn run_with_regions(
         .collect())
 }
 
+/// Reference outputs on the deterministic synthetic inputs for `seed` —
+/// what [`gen_input`] would feed [`run_reference`]. The ground truth the
+/// C-codegen differential harness compares emitted binaries against.
+pub fn reference_outputs(graph: &Graph, seed: u64) -> Result<Vec<Vec<f32>>> {
+    let inputs: Vec<Vec<f32>> = graph
+        .inputs
+        .iter()
+        .map(|&t| gen_input(graph, t, seed))
+        .collect();
+    run_reference(graph, &inputs, seed)
+}
+
 /// Execute `graph` under `plan` and under the disjoint reference layout
 /// with identical inputs/weights; fail unless outputs are bit-identical.
 /// Returns the (verified) planned-layout outputs.

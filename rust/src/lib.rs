@@ -29,10 +29,20 @@
 //! * [`interp`] — execute a planned graph and validate overlap safety;
 //!   [`interp::run_planned_artifact`] does so straight from a loaded
 //!   artifact.
+//! * [`codegen`] — lower a plan (or loaded artifact) to a standalone
+//!   C99 firmware unit: static arena at the overlapped peak, `#define`d
+//!   tensor offsets verbatim from the plan, flash-resident weights, a
+//!   `dmo_invoke` entry point. [`codegen::harness`] compiles and runs
+//!   the unit and proves it bit-identical to the interpreter.
+//! * [`mcu`] — deployment-fit checks, including the emitted unit's
+//!   flash image (weights + code) via [`codegen::flash_footprint`].
 //!
-//! Plan once, persist, reuse:
+//! The full pipeline is **plan → artifact → emit → compile**: plan
+//! once, persist, then either interpret the artifact or bake it into
+//! firmware.
 //!
 //! ```
+//! use dmo::codegen::{emit_artifact, EmitOptions};
 //! use dmo::planner::{PlanArtifact, Planner};
 //!
 //! # fn main() -> anyhow::Result<()> {
@@ -51,10 +61,18 @@
 //! // The interpreter proves the loaded layout safe by executing it.
 //! let outputs = dmo::interp::run_planned_artifact(&graph, &reloaded, 42)?;
 //! assert!(!outputs.is_empty());
+//!
+//! // And the codegen backend bakes the same layout into firmware C:
+//! // `static uint8_t dmo_arena[<peak>]` + fixed offsets + kernels.
+//! let unit = emit_artifact(&graph, &reloaded, &EmitOptions::new("tiny_model"))?;
+//! assert!(unit.header.contains(&format!("#define DMO_ARENA_BYTES {}", plan.peak())));
+//! // (write `tiny_model.c`/`.h` with `unit.write_to`, then:
+//! //  cc -std=c99 -Wall -Werror tiny_model.c main.c -lm)
 //! # Ok(())
 //! # }
 //! ```
 
+pub mod codegen;
 pub mod coordinator;
 pub mod interp;
 pub mod ir;

@@ -2,18 +2,20 @@
 //!
 //! Subcommands map one-to-one onto the paper's artefacts:
 //! `table2`, `table3`, `figures`, `fit`, `plan`, `split`, `validate`,
-//! `trace-op`, `serve` (see `dmo help`). Plans can be exported as
-//! versioned artifacts (`dmo plan <model> --export p.json`) and reused
-//! across processes (`dmo validate <model> --import p.json`,
-//! `dmo serve --plan p.json`) without re-running the planner search.
+//! `trace-op`, `emit-c`, `serve` (see `dmo help`). Plans can be
+//! exported as versioned artifacts (`dmo plan <model> --export p.json`)
+//! and reused across processes (`dmo validate <model> --import p.json`,
+//! `dmo emit-c --import p.json --out model.c`, `dmo serve --plan
+//! p.json`) without re-running the planner search.
 
 use anyhow::{bail, Context, Result};
+use dmo::codegen::{self, EmitOptions};
 use dmo::ir::{DType, Shape};
 use dmo::planner::{PlanArtifact, PlanCandidate, PlannedModel, Planner};
 use dmo::util::args::{flag, opt, ArgSpec, Args};
 use dmo::{interp, mcu, models, report, trace};
 use std::fs;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -167,27 +169,44 @@ fn run(argv: &[String]) -> Result<()> {
                 None => models::table3_names(),
             };
             println!(
-                "{:32} {:20} {:>9} {:>9}  deploy(orig) deploy(DMO)",
-                "model", "mcu", "arena0", "arenaD"
+                "{:32} {:20} {:>9} {:>9} {:>9}  deploy(orig) deploy(DMO)",
+                "model", "mcu", "arena0", "arenaD", "flash"
             );
             for name in names {
                 let pm = PlannedModel::new(models::build(name)?)?;
                 let row = pm.row();
+                // deployability gates on the emitted unit's full flash
+                // image (weights + code estimate), not weights alone
+                let flash = codegen::flash_footprint(&pm.graph).total();
                 for m in mcu::catalog() {
-                    let f0 = mcu::fit(&pm.graph, &m, row.original);
-                    let f1 = mcu::fit(&pm.graph, &m, row.optimised);
+                    let f0 = mcu::fit_flash(&m, row.original, flash);
+                    let f1 = mcu::fit_flash(&m, row.optimised, flash);
                     println!(
-                        "{:32} {:20} {:>9} {:>9}  {:12} {}",
+                        "{:32} {:20} {:>9} {:>9} {:>9}  {:12} {}",
                         name,
                         m.name,
                         report::fmt_bytes(row.original),
                         report::fmt_bytes(row.optimised),
+                        report::fmt_bytes(flash),
                         if f0.deployable() { "yes" } else { "no" },
                         if f1.deployable() { "yes" } else { "no" },
                     );
                 }
             }
             Ok(())
+        }
+        "emit-c" => {
+            let args = Args::parse(
+                rest,
+                &[
+                    opt("--import", "plan artifact to emit (model taken from it)"),
+                    opt("--out", "output C file (default results/<model>_model.c)"),
+                    opt("--seed", "synthetic weight/input seed (default 42)"),
+                    opt("--embed-limit", "max weight elements embedded as const arrays"),
+                    flag("--check", "compile + run the unit, diff against the interpreter"),
+                ],
+            )?;
+            emit_c(&args)
         }
         "split" => {
             let args = Args::parse(rest, &[])?;
@@ -257,6 +276,89 @@ fn run(argv: &[String]) -> Result<()> {
         }
         other => bail!("unknown command `{other}` — try `dmo help`"),
     }
+}
+
+/// `dmo emit-c`: lower a plan (fresh or `--import`ed artifact) to a
+/// standalone C99 unit + header, report its flash/RAM fit across the
+/// MCU catalog, and optionally (`--check`) compile and run it against
+/// the interpreter's reference outputs.
+fn emit_c(args: &Args) -> Result<()> {
+    let seed: u64 = args.parsed("--seed", 42u64)?;
+    let embed_limit: usize = args.parsed("--embed-limit", 1_000_000usize)?;
+
+    let (graph, plan) = match args.value("--import") {
+        Some(path) => {
+            let artifact = PlanArtifact::load(Path::new(path))?;
+            // a positional model name must agree with the artifact —
+            // silently emitting a different model than the user named
+            // would be firmware for the wrong network
+            if let Some(named) = args.pos(0) {
+                if named != artifact.model {
+                    bail!(
+                        "model `{named}` does not match the artifact's model \
+                         `{}` — drop the positional argument or re-plan",
+                        artifact.model
+                    );
+                }
+            }
+            let g = models::build(&artifact.model)?;
+            let plan = artifact.to_plan(&g)?;
+            println!(
+                "loaded plan artifact {path} (revalidated against `{}`)",
+                artifact.model
+            );
+            (g, plan)
+        }
+        None => {
+            let name = args.pos(0).context(
+                "usage: dmo emit-c <model> [--out PATH] [--seed N] [--check]\n\
+                 \x20      dmo emit-c --import plan.json [--out PATH]",
+            )?;
+            let g = models::build(name)?;
+            let plan = Planner::for_graph(&g).dmo(true).plan()?;
+            (g, plan)
+        }
+    };
+
+    let out: PathBuf = match args.value("--out") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            // EmitOptions sanitises the stem to a C identifier; reuse it
+            // for the default file name so the two always agree
+            let stem = EmitOptions::new(&format!("{}_model", graph.name)).stem;
+            PathBuf::from("results").join(format!("{stem}.c"))
+        }
+    };
+    let stem = out
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .context("--out path has no usable file stem")?
+        .to_string();
+    let opts = EmitOptions::new(&stem).seed(seed).weight_embed_limit(embed_limit);
+
+    let unit = codegen::emit(&graph, &plan, &opts)?;
+    let header_path = unit.write_to(&out)?;
+    println!("wrote {} and {}", out.display(), header_path.display());
+    println!(
+        "weights: {} ({})",
+        report::fmt_bytes(unit.flash.weight_bytes),
+        if unit.weights_embedded {
+            "embedded const arrays"
+        } else {
+            "SplitMix64 generator (over --embed-limit)"
+        }
+    );
+    println!("{}", report::emitted_unit_markdown(&unit));
+
+    if args.flag("--check") {
+        let r = codegen::harness::differential_test_unit(&unit, &graph, opts.seed)?;
+        println!(
+            "differential check passed: {} output elems bit-identical to the \
+             interpreter reference (compiled with `{}`)",
+            r.elems, r.cc
+        );
+    }
+    Ok(())
 }
 
 fn trace_op_spec(which: &str) -> Result<(dmo::ir::OpKind, Shape)> {
@@ -381,7 +483,15 @@ COMMANDS:
   table3 [--out DIR]          memory savings, 11 models (paper Table III)
   figures [--fig N] [--out DIR]
                               regenerate paper figures 1,2,3,6,8,9
-  fit [<model>]               MCU deployment matrix (§IV)
+  fit [<model>]               MCU deployment matrix (§IV), incl. emitted
+                              flash image (weights + code estimate)
+  emit-c <model> [--out PATH] [--seed N] [--embed-limit N] [--check]
+  emit-c --import plan.json [--out PATH] [--check]
+                              emit a standalone C99 firmware unit from a
+                              plan: static arena at the planned peak,
+                              offsets verbatim, flash-resident weights;
+                              --check compiles + runs it and diffs
+                              against the interpreter bit-for-bit
   split <model>               best operation-splitting report (§II-A)
   trace-op <relu|matmul|dwconv|conv>
                               ASCII access-pattern trace (Fig 3)

@@ -71,9 +71,11 @@ pub fn catalog() -> Vec<Mcu> {
 /// Can `model` deploy on `mcu` given an arena of `arena_bytes`?
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Fit {
+    /// The flash image (weights, plus code when checked via
+    /// [`fit_flash`] with an emitted unit's footprint) fits.
     pub weights_fit: bool,
     pub arena_fits: bool,
-    /// weight bytes / flash bytes, scaled by 1000 (‰) for display
+    /// flash image bytes / flash capacity, scaled by 1000 (‰)
     pub flash_permille: usize,
 }
 
@@ -83,14 +85,25 @@ impl Fit {
     }
 }
 
-/// Fit check for a model on an MCU.
-pub fn fit(graph: &Graph, mcu: &Mcu, arena_bytes: usize) -> Fit {
-    let w = graph.weight_bytes();
+/// Fit check against an explicit flash image size — use
+/// [`crate::codegen::flash_footprint`] (weights + code estimate) to
+/// check the unit `dmo emit-c` actually produces, not just its weights.
+pub fn fit_flash(mcu: &Mcu, arena_bytes: usize, flash_needed: usize) -> Fit {
     Fit {
-        weights_fit: w <= mcu.flash_bytes,
+        weights_fit: flash_needed <= mcu.flash_bytes,
         arena_fits: arena_bytes <= mcu.sram_bytes,
-        flash_permille: if mcu.flash_bytes == 0 { 1000 } else { w * 1000 / mcu.flash_bytes },
+        flash_permille: if mcu.flash_bytes == 0 {
+            1000
+        } else {
+            flash_needed * 1000 / mcu.flash_bytes
+        },
     }
+}
+
+/// Weights-only fit check for a model on an MCU (the paper's §IV
+/// accounting, which ignores code size).
+pub fn fit(graph: &Graph, mcu: &Mcu, arena_bytes: usize) -> Fit {
+    fit_flash(mcu, arena_bytes, graph.weight_bytes())
 }
 
 /// One row of the deployment matrix: does DMO change deployability?
@@ -98,19 +111,28 @@ pub fn fit(graph: &Graph, mcu: &Mcu, arena_bytes: usize) -> Fit {
 pub struct DeployRow {
     pub model: String,
     pub mcu: &'static str,
+    /// Flash bytes the emitted unit needs (weights + code estimate).
+    pub flash_bytes: usize,
+    /// The emitted unit's flash image fits this part.
+    pub flash_fits: bool,
     pub without_dmo: bool,
     pub with_dmo: bool,
 }
 
-/// Cross every catalog MCU with a planned model.
+/// Cross every catalog MCU with a planned model. Deployability checks
+/// the full emitted-unit flash footprint (weights + code estimate via
+/// [`crate::codegen::flash_footprint`]), not just SRAM.
 pub fn deploy_matrix(graph: &Graph, row: &SavingRow) -> Vec<DeployRow> {
+    let flash = crate::codegen::flash_footprint(graph).total();
     catalog()
         .iter()
         .map(|m| DeployRow {
             model: graph.name.clone(),
             mcu: m.name,
-            without_dmo: fit(graph, m, row.original).deployable(),
-            with_dmo: fit(graph, m, row.optimised).deployable(),
+            flash_bytes: flash,
+            flash_fits: flash <= m.flash_bytes,
+            without_dmo: fit_flash(m, row.original, flash).deployable(),
+            with_dmo: fit_flash(m, row.optimised, flash).deployable(),
         })
         .collect()
 }
@@ -164,6 +186,22 @@ mod tests {
         let rows = deploy_matrix(&pm.graph, &pm.row());
         assert_eq!(rows.len(), catalog().len());
         // tiny model fits everything, with or without
-        assert!(rows.iter().all(|r| r.with_dmo));
+        assert!(rows.iter().all(|r| r.with_dmo && r.flash_fits));
+        // the matrix accounts for code, not just weights
+        assert!(rows.iter().all(|r| r.flash_bytes > pm.graph.weight_bytes()));
+    }
+
+    #[test]
+    fn flash_image_gates_deployability() {
+        let g = models::build("tiny_int8").unwrap();
+        let stm = &catalog()[0];
+        // arena fits but an oversized flash image must block deployment
+        let f = fit_flash(stm, 16 * 1024, stm.flash_bytes * 2);
+        assert!(f.arena_fits && !f.weights_fit && !f.deployable());
+        assert_eq!(f.flash_permille, 2000);
+        // and the emitted-unit footprint is what deploy_matrix feeds in
+        let flash = crate::codegen::flash_footprint(&g).total();
+        let ok = fit_flash(stm, 16 * 1024, flash);
+        assert!(ok.deployable());
     }
 }

@@ -228,12 +228,30 @@ pub struct OpIo<'a> {
     pub weights: &'a [Vec<f32>],
 }
 
+/// Fused activation. Written as explicit comparisons (not `f32::max` /
+/// `clamp`) so the result is fully specified for `-0.0` ties — the C
+/// emitter (`crate::codegen`) replicates these exact expressions and the
+/// differential harness demands bit-identical outputs.
 #[inline]
 fn act(v: f32, a: Activation) -> f32 {
     match a {
         Activation::None => v,
-        Activation::Relu => v.max(0.0),
-        Activation::Relu6 => v.clamp(0.0, 6.0),
+        Activation::Relu => {
+            if v < 0.0 {
+                0.0
+            } else {
+                v
+            }
+        }
+        Activation::Relu6 => {
+            if v < 0.0 {
+                0.0
+            } else if v > 6.0 {
+                6.0
+            } else {
+                v
+            }
+        }
     }
 }
 
@@ -351,7 +369,13 @@ pub fn execute_op(kind: &OpKind, io: &OpIo<'_>, arena: &mut Arena) -> Result<()>
                                 let ioff = ((iy as usize * iw + ix as usize) * id + c) * t;
                                 let v = arena.load(io.dtype, ib + ioff);
                                 match p.kind {
-                                    PoolKind::Max => acc = acc.max(v),
+                                    // explicit compare (not f32::max): pins
+                                    // -0.0 ties for the C emitter
+                                    PoolKind::Max => {
+                                        if v > acc {
+                                            acc = v;
+                                        }
+                                    }
                                     PoolKind::Avg => acc += v,
                                 }
                                 n += 1;
@@ -385,8 +409,8 @@ pub fn execute_op(kind: &OpKind, io: &OpIo<'_>, arena: &mut Arena) -> Result<()>
             for i in 0..n {
                 let v = arena.load(io.dtype, ib + i * t);
                 let r = match u {
-                    crate::ir::op::UnaryKind::Relu => v.max(0.0),
-                    crate::ir::op::UnaryKind::Relu6 => v.clamp(0.0, 6.0),
+                    crate::ir::op::UnaryKind::Relu => act(v, Activation::Relu),
+                    crate::ir::op::UnaryKind::Relu6 => act(v, Activation::Relu6),
                     crate::ir::op::UnaryKind::Copy => v,
                 };
                 arena.store(io.dtype, ob + i * t, r);
@@ -479,10 +503,13 @@ pub fn execute_op(kind: &OpKind, io: &OpIo<'_>, arena: &mut Arena) -> Result<()>
             let rows = s.num_elements() / d;
             let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
             for r in 0..rows {
-                // pass 1: max
+                // pass 1: max (explicit compare — see `act` on -0.0 ties)
                 let mut m = f32::NEG_INFINITY;
                 for c in 0..d {
-                    m = m.max(arena.load(io.dtype, ib + (r * d + c) * t));
+                    let x = arena.load(io.dtype, ib + (r * d + c) * t);
+                    if x > m {
+                        m = x;
+                    }
                 }
                 // pass 2: sum of exp
                 let mut sum = 0.0;

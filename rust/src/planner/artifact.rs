@@ -333,13 +333,37 @@ impl PlanArtifact {
 
     /// Write the artifact to `path` as JSON, creating parent
     /// directories as needed (matching the CLI's other outputs).
+    ///
+    /// The write is atomic: the document goes to a sibling temporary
+    /// file first and is renamed into place, so a crash mid-save can
+    /// never leave a torn artifact that [`PlanArtifact::load`]
+    /// half-parses — deploy processes watching the path see either the
+    /// old complete file or the new complete file.
     pub fn save(&self, path: &Path) -> Result<(), PlanError> {
         if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
             std::fs::create_dir_all(parent)
                 .map_err(|e| PlanError::Io(format!("creating {}: {e}", parent.display())))?;
         }
-        std::fs::write(path, self.to_json().to_string())
-            .map_err(|e| PlanError::Io(format!("writing {}: {e}", path.display())))
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| PlanError::Io(format!("{} has no file name", path.display())))?;
+        // pid + per-process counter: concurrent saves (threads or
+        // processes) each write their own temp file, so no writer can
+        // rename another's half-written document into place
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SAVE_COUNTER: AtomicUsize = AtomicUsize::new(0);
+        let tmp = path.with_file_name(format!(
+            "{}.tmp.{}.{}",
+            file_name.to_string_lossy(),
+            std::process::id(),
+            SAVE_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| PlanError::Io(format!("writing {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            PlanError::Io(format!("renaming {} into place: {e}", path.display()))
+        })
     }
 
     /// Read an artifact file. Parsing only — call
@@ -521,6 +545,28 @@ mod tests {
             *first = first.wrapping_add(4096);
         }
         assert!(matches!(art.to_plan(&g), Err(PlanError::Malformed(_))));
+    }
+
+    #[test]
+    fn save_is_atomic_and_roundtrips() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let art = PlanArtifact::from_plan(&g, &plan);
+        let dir = std::env::temp_dir().join(format!("dmo-artifact-save-{}", std::process::id()));
+        let path = dir.join("nested").join("plan.json");
+        art.save(&path).unwrap();
+        // the temp sibling must not linger after a successful save
+        let siblings: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(siblings, vec!["plan.json".to_string()], "{siblings:?}");
+        let back = PlanArtifact::load(&path).unwrap();
+        assert_eq!(back, art);
+        // overwriting an existing artifact is also atomic + lossless
+        art.save(&path).unwrap();
+        assert_eq!(PlanArtifact::load(&path).unwrap(), art);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -220,6 +220,36 @@ pub fn table3_csv(rows: &[SavingRow]) -> String {
     s
 }
 
+/// Deployment-fit table for an emitted C unit: flash = the unit's full
+/// image (weights + code estimate), RAM = its `DMO_ARENA_BYTES`.
+/// Consumed by `dmo emit-c` so every emission reports where it fits.
+pub fn emitted_unit_markdown(unit: &crate::codegen::CUnit) -> String {
+    let mut s = format!(
+        "emitted `{}.c`: arena {} (RAM), flash image {} ({} weights + {} code est.)\n\n",
+        unit.stem,
+        fmt_bytes(unit.arena_bytes),
+        fmt_bytes(unit.flash.total()),
+        fmt_bytes(unit.flash.weight_bytes),
+        fmt_bytes(unit.flash.code_bytes),
+    );
+    s.push_str("| MCU | SRAM | arena fits | flash | image fits | deployable |\n");
+    s.push_str("|---|---:|---|---:|---|---|\n");
+    for m in crate::mcu::catalog() {
+        let f = crate::mcu::fit_flash(&m, unit.arena_bytes, unit.flash.total());
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {} | {} |",
+            m.name,
+            fmt_bytes(m.sram_bytes),
+            if f.arena_fits { "yes" } else { "no" },
+            fmt_bytes(m.flash_bytes),
+            if f.weights_fit { "yes" } else { "no" },
+            if f.deployable() { "yes" } else { "no" },
+        );
+    }
+    s
+}
+
 /// Human-readable byte count.
 pub fn fmt_bytes(b: usize) -> String {
     if b >= 1024 * 1024 {
@@ -253,6 +283,22 @@ mod tests {
         assert!(md.contains("| 96 | 64 |"), "paper columns joined: {md}");
         // a model outside the paper catalog gets "-" columns, not zeros
         assert!(md.contains("| - | - | - |"), "missing paper row marked: {md}");
+    }
+
+    #[test]
+    fn emitted_unit_table_covers_catalog() {
+        let g = models::build("tiny").unwrap();
+        let plan = crate::planner::Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let unit =
+            crate::codegen::emit(&g, &plan, &crate::codegen::EmitOptions::new("tiny_model"))
+                .unwrap();
+        let md = emitted_unit_markdown(&unit);
+        for m in crate::mcu::catalog() {
+            assert!(md.contains(m.name), "missing {} in:\n{md}", m.name);
+        }
+        assert!(md.contains(&fmt_bytes(unit.arena_bytes)));
+        // tiny deploys everywhere
+        assert!(!md.contains("| no |"), "{md}");
     }
 
     #[test]

@@ -189,4 +189,62 @@ mod tests {
         assert!(a.flag("--baseline"));
         assert_eq!(a.positional(), &["tiny".to_string(), "extra".to_string()]);
     }
+
+    #[test]
+    fn positional_indexing_is_order_preserving_and_bounded() {
+        let a = Args::parse(&raw(&["a", "--export", "p.json", "b", "c"]), SPEC).unwrap();
+        // the flag's value is consumed, not treated as a positional
+        assert_eq!(a.positional(), &["a".to_string(), "b".to_string(), "c".to_string()]);
+        assert_eq!(a.pos(0), Some("a"));
+        assert_eq!(a.pos(2), Some("c"));
+        assert_eq!(a.pos(3), None, "out-of-range positions are None, not a panic");
+        let empty = Args::parse(&[], SPEC).unwrap();
+        assert_eq!(empty.pos(0), None);
+        assert!(empty.positional().is_empty());
+    }
+
+    #[test]
+    fn single_dash_tokens_are_positional() {
+        // only `--` introduces a flag; `-x` and bare `-` pass through as
+        // positionals (some model names could plausibly start with `-`)
+        let a = Args::parse(&raw(&["-x", "-", "--baseline"]), SPEC).unwrap();
+        assert_eq!(a.positional(), &["-x".to_string(), "-".to_string()]);
+        assert!(a.flag("--baseline"));
+    }
+
+    #[test]
+    fn equals_spelling_with_empty_value_is_kept() {
+        // `--export=` means "explicitly empty", distinct from absent —
+        // the consumer decides whether an empty path is an error
+        let a = Args::parse(&raw(&["--export="]), SPEC).unwrap();
+        assert_eq!(a.value("--export"), Some(""));
+        let b = Args::parse(&raw(&["model"]), SPEC).unwrap();
+        assert_eq!(b.value("--export"), None);
+    }
+
+    #[test]
+    fn equals_value_may_contain_equals_and_dashes() {
+        // only the FIRST `=` splits; the value is taken verbatim
+        let a = Args::parse(&raw(&["--export=a=b.json"]), SPEC).unwrap();
+        assert_eq!(a.value("--export"), Some("a=b.json"));
+        // a value starting with `--` is unambiguous in `=` spelling
+        let b = Args::parse(&raw(&["--export=--weird--.json"]), SPEC).unwrap();
+        assert_eq!(b.value("--export"), Some("--weird--.json"));
+    }
+
+    #[test]
+    fn space_spelling_consumes_next_token_even_if_flag_like() {
+        // `--export --rate` takes `--rate` as the VALUE (declared order
+        // of tokens wins); the remaining stream then has no `--rate`
+        let a = Args::parse(&raw(&["--export", "--rate", "tiny"]), SPEC).unwrap();
+        assert_eq!(a.value("--export"), Some("--rate"));
+        assert_eq!(a.value("--rate"), None);
+        assert_eq!(a.pos(0), Some("tiny"));
+    }
+
+    #[test]
+    fn repeated_flags_last_one_wins() {
+        let a = Args::parse(&raw(&["--export=a.json", "--export=b.json"]), SPEC).unwrap();
+        assert_eq!(a.value("--export"), Some("b.json"));
+    }
 }
