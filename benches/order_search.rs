@@ -1,0 +1,86 @@
+//! Bench: memory-aware execution-order search across the model zoo.
+//!
+//! For every Table III model this measures the DMO-overlapped peak
+//! under the paper's two fixed serialisations (eager, lazy) and under
+//! `Strategy::Search` at default beam/budget, plus the search's wall
+//! time — and asserts the headline property: the searched order is
+//! never worse than the paper's best-of-two. Results are written to
+//! `BENCH_order_search.json` (uploaded by CI as the repo's perf
+//! trajectory) and printed as a table.
+
+use dmo::models;
+use dmo::planner::{Planner, Strategy, DEFAULT_BEAM, DEFAULT_BUDGET};
+use dmo::report::fmt_bytes;
+use dmo::util::json::{num, obj, s, Json};
+use std::time::Instant;
+
+fn main() {
+    println!("=== execution-order search: eager vs lazy vs searched (DMO on) ===\n");
+    println!(
+        "{:32} {:>10} {:>10} {:>10} {:>10} {:>9}",
+        "model", "eager", "lazy", "search", "Δ best-of-2", "wall"
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    for name in models::table3_names() {
+        let g = models::build(name).unwrap();
+        let peak = |strat: Strategy| {
+            Planner::for_graph(&g)
+                .dmo(true)
+                .strategies(&[strat])
+                .plan()
+                .unwrap()
+        };
+        let eager = peak(Strategy::Eager).peak();
+        let lazy = peak(Strategy::Lazy).peak();
+        let t0 = Instant::now();
+        let searched = peak(Strategy::Search {
+            beam: DEFAULT_BEAM,
+            budget: DEFAULT_BUDGET,
+        });
+        let wall = t0.elapsed();
+        let stats = searched.search.expect("search win carries stats");
+        let search = searched.peak();
+
+        let best2 = eager.min(lazy);
+        assert!(
+            search <= best2,
+            "{name}: searched order {search} worse than best-of-two {best2}"
+        );
+        let delta = if search < best2 {
+            format!("-{:.1}%", 100.0 * (best2 - search) as f64 / best2 as f64)
+        } else {
+            "=".to_string()
+        };
+        println!(
+            "{:32} {:>10} {:>10} {:>10} {:>10} {:>8.2}s",
+            name,
+            fmt_bytes(eager),
+            fmt_bytes(lazy),
+            fmt_bytes(search),
+            delta,
+            wall.as_secs_f64()
+        );
+
+        entries.push(obj(vec![
+            ("model", s(name)),
+            ("eager_peak_bytes", num(eager)),
+            ("lazy_peak_bytes", num(lazy)),
+            ("search_peak_bytes", num(search)),
+            ("search_wall_ms", num(wall.as_millis() as usize)),
+            ("beam", num(stats.beam)),
+            ("budget", num(stats.budget)),
+            ("states_expanded", num(stats.expanded)),
+            ("states_pruned", num(stats.pruned)),
+            ("orders_scored", num(stats.orders_scored)),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("bench", s("order_search")),
+        ("models", Json::Arr(entries)),
+    ]);
+    let path = "BENCH_order_search.json";
+    std::fs::write(path, doc.to_string()).unwrap();
+    println!("\nwrote {path}");
+}

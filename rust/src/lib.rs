@@ -41,6 +41,41 @@
 //! once, persist, then either interpret the artifact or bake it into
 //! firmware.
 //!
+//! ## Choosing an execution order
+//!
+//! Connected graphs admit many valid execution orders, and the order
+//! decides which tensors are simultaneously live — and therefore the
+//! peak. The paper serialises each graph twice (eager and lazy, §II-B)
+//! and keeps the better result; [`planner::Strategy::Search`] goes
+//! further and *searches* the order space with a beam over topological
+//! prefixes, scored by the DMO-overlapped incremental footprint
+//! ([`planner::IncrementalCost`]), with dominance pruning on the
+//! (live-set, frontier) state. The eager and lazy orders are always
+//! scored as seeds, so the searched plan is never worse than the
+//! paper's best-of-two — on branchy graphs (inception cells, dense
+//! blocks) it can be strictly better:
+//!
+//! ```
+//! use dmo::planner::Planner;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let graph = dmo::models::build("tiny")?;
+//! let sweep = Planner::for_graph(&graph).dmo(true).plan()?;
+//! let searched = Planner::for_graph(&graph)
+//!     .dmo(true)
+//!     .search(4, 2_000) // beam width, expansion budget
+//!     .plan()?;
+//! assert!(searched.peak() <= sweep.peak());
+//! assert_eq!(searched.strategy.name(), "search");
+//! assert!(searched.search.expect("search stats recorded").expanded > 0);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! `dmo orders` prints the eager/lazy/search comparison across the
+//! model zoo, and `cargo bench --bench order_search` records it (plus
+//! search wall time) to `BENCH_order_search.json`.
+//!
 //! ```
 //! use dmo::codegen::{emit_artifact, EmitOptions};
 //! use dmo::planner::{PlanArtifact, Planner};

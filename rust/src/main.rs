@@ -85,21 +85,29 @@ fn run(argv: &[String]) -> Result<()> {
                     flag("--baseline", "plan without DMO"),
                     flag("--map", "print the allocation map"),
                     flag("--verbose", "print every search candidate"),
+                    opt("--strategy", "serialisation: sweep (default) | eager | lazy | search"),
+                    opt("--beam", "beam width for --strategy=search (default 8)"),
+                    opt("--budget", "expansion budget for --strategy=search (default 50000)"),
                     opt("--export", "write the plan as a reusable artifact"),
                     opt("--import", "load a plan artifact instead of planning"),
                 ],
             )?;
             let name = args
                 .pos(0)
-                .context("usage: dmo plan <model> [--baseline] [--map] [--export PATH] [--import PATH]")?
+                .context("usage: dmo plan <model> [--baseline] [--map] [--strategy=search] [--export PATH] [--import PATH]")?
                 .to_string();
             let g = models::build(&name)?;
             let plan = match args.value("--import") {
                 Some(path) => {
-                    if args.flag("--baseline") || args.flag("--verbose") {
+                    let planning_only = args.flag("--baseline")
+                        || args.flag("--verbose")
+                        || args.value("--strategy").is_some()
+                        || args.value("--beam").is_some()
+                        || args.value("--budget").is_some();
+                    if planning_only {
                         bail!(
-                            "--import loads a finished plan; --baseline/--verbose only \
-                             apply when planning from scratch"
+                            "--import loads a finished plan; --baseline/--verbose/--strategy/\
+                             --beam/--budget only apply when planning from scratch"
                         );
                     }
                     let artifact = PlanArtifact::load(Path::new(path))?;
@@ -109,6 +117,23 @@ fn run(argv: &[String]) -> Result<()> {
                 }
                 None => {
                     let mut session = Planner::for_graph(&g).dmo(!args.flag("--baseline"));
+                    let strategy = args.value("--strategy");
+                    if (args.value("--beam").is_some() || args.value("--budget").is_some())
+                        && strategy != Some("search")
+                    {
+                        bail!("--beam/--budget only apply with --strategy=search");
+                    }
+                    let beam: usize = args.parsed("--beam", dmo::planner::DEFAULT_BEAM)?;
+                    let budget: usize = args.parsed("--budget", dmo::planner::DEFAULT_BUDGET)?;
+                    session = match strategy {
+                        None | Some("sweep") => session,
+                        Some("eager") => session.strategies(&[dmo::planner::Strategy::Eager]),
+                        Some("lazy") => session.strategies(&[dmo::planner::Strategy::Lazy]),
+                        Some("search") => session.search(beam, budget),
+                        Some(other) => bail!(
+                            "unknown strategy `{other}` (sweep | eager | lazy | search)"
+                        ),
+                    };
                     if args.flag("--verbose") {
                         session = session.on_candidate(report_candidate);
                     }
@@ -122,6 +147,18 @@ fn run(argv: &[String]) -> Result<()> {
                 plan.heuristic.name(),
                 plan.alloc.applied.len()
             );
+            if let Some(st) = plan.search {
+                println!(
+                    "  order search: beam {}, budget {}, {} states expanded, {} pruned, \
+                     {} orders scored (surrogate peak {})",
+                    st.beam,
+                    st.budget,
+                    st.expanded,
+                    st.pruned,
+                    st.orders_scored,
+                    report::fmt_bytes(st.surrogate_peak)
+                );
+            }
             for a in &plan.alloc.applied {
                 println!(
                     "  overlap {} ⇢ {}: {}",
@@ -138,6 +175,36 @@ fn run(argv: &[String]) -> Result<()> {
                 println!("{}", trace::render::alloc_map_ascii(&g, &plan, 100));
             }
             Ok(())
+        }
+        "orders" => {
+            let args = Args::parse(
+                rest,
+                &[
+                    OUT_SPEC,
+                    opt("--beam", "search beam width (default 8)"),
+                    opt("--budget", "search expansion budget (default 50000)"),
+                ],
+            )?;
+            let beam: usize = args.parsed("--beam", dmo::planner::DEFAULT_BEAM)?;
+            let budget: usize = args.parsed("--budget", dmo::planner::DEFAULT_BUDGET)?;
+            let names: Vec<&str> = match args.pos(0) {
+                Some(n) => vec![n],
+                None => models::table3_names(),
+            };
+            let mut rows = Vec::new();
+            for name in names {
+                let row = report::order_search_row(name, beam, budget)?;
+                eprintln!(
+                    "  {name}: eager {}, lazy {}, search {}",
+                    report::fmt_bytes(row.eager),
+                    report::fmt_bytes(row.lazy),
+                    report::fmt_bytes(row.search)
+                );
+                rows.push(row);
+            }
+            let md = report::order_search_markdown(&rows);
+            println!("{md}");
+            write_out(&out_dir(&args), "orders.md", &md)
         }
         "table2" => {
             let args = Args::parse(rest, &[OUT_SPEC])?;
@@ -473,9 +540,16 @@ USAGE: dmo <command> [args]   (flags accept both `--key value` and `--key=value`
 COMMANDS:
   models                      list the model zoo
   plan <model> [--baseline] [--map] [--verbose]
+       [--strategy=sweep|eager|lazy|search] [--beam N] [--budget N]
        [--export PATH] [--import PATH]
                               plan a model's arena (or reload an exported
-                              plan artifact); print overlaps
+                              plan artifact); print overlaps.
+                              --strategy=search runs the memory-aware
+                              execution-order search (never worse than
+                              the eager/lazy sweep)
+  orders [<model>] [--beam N] [--budget N] [--out DIR]
+                              eager vs lazy vs searched execution order:
+                              DMO-overlapped peaks across the zoo
   validate <model> [--import PATH]
                               execute the DMO plan (or a loaded artifact),
                               prove bit-exact safety

@@ -191,6 +191,119 @@ impl PairTable {
     }
 }
 
+/// Cost of executing one more op on top of a schedule prefix — see
+/// [`IncrementalCost::step`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepCost {
+    /// Arena bytes any layout needs *while* the op executes: the live
+    /// set, plus the output, minus the best single DMO overlap credit.
+    pub during: usize,
+    /// Live bytes once the op has retired (dying inputs freed; the
+    /// caller additionally frees an output nobody consumes).
+    pub live_after: usize,
+}
+
+/// Incremental form of the §IV modified-heap allocator, for costing
+/// schedule *prefixes* during execution-order search.
+///
+/// The full allocator places every buffer of a complete order; re-running
+/// it per candidate prefix would make search O(n³) and is unnecessary:
+/// at any instant exactly one op executes, so the only overlap the DMO
+/// relaxation can have active is between that op's output and one of its
+/// dying inputs (two dying inputs sharing the output's tail would have to
+/// share bytes with *each other*, which no relaxation permits). The
+/// reachable footprint of a prefix is therefore
+///
+/// ```text
+///   max over executed ops of  (live bytes + out − best credit(op))
+///   credit(op, input) = min(O_s(op, input), |input|, |out|)
+/// ```
+///
+/// which [`IncrementalCost::step`] evaluates in O(inputs) per op from
+/// tables built once per search. It is the same relaxation geometry
+/// [`allocate`] exploits (Fig 4: `out_end − in_start ≤ O_s`), minus
+/// fragmentation — a lower-ish bound that ranks prefixes, while final
+/// candidates are still scored by the real allocator.
+#[derive(Debug, Clone)]
+pub struct IncrementalCost {
+    /// Per op: arena size of its output buffer in bytes.
+    out_size: Vec<usize>,
+    /// Per op: distinct input tensors as `(tensor, size, credit)`;
+    /// `credit` is the most bytes that input may share with the op's
+    /// output when it dies at the op.
+    inputs: Vec<Vec<(TensorId, usize, usize)>>,
+}
+
+impl IncrementalCost {
+    /// Build the per-op tables for `graph` under `os` budgets.
+    pub fn build(graph: &Graph, os: &OsTable) -> IncrementalCost {
+        let out_size: Vec<usize> = graph
+            .ops
+            .iter()
+            .map(|op| graph.tensor(op.output).size_bytes())
+            .collect();
+        let inputs = graph
+            .ops
+            .iter()
+            .enumerate()
+            .map(|(k, op)| {
+                let out_bytes = out_size[k];
+                let mut v: Vec<(TensorId, usize, usize)> = Vec::new();
+                for (idx, &inp) in op.inputs.iter().enumerate() {
+                    let size = graph.tensor(inp).size_bytes();
+                    let credit = if inp == op.output {
+                        0
+                    } else {
+                        os.get(OpId(k), idx).min(size).min(out_bytes)
+                    };
+                    // an op reading the same tensor through two inputs is
+                    // constrained by the tighter budget, as in PairTable
+                    match v.iter_mut().find(|(t, _, _)| *t == inp) {
+                        Some(e) => e.2 = e.2.min(credit),
+                        None => v.push((inp, size, credit)),
+                    }
+                }
+                v
+            })
+            .collect();
+        IncrementalCost { out_size, inputs }
+    }
+
+    /// Output buffer size of `op` in bytes.
+    pub fn out_size(&self, op: OpId) -> usize {
+        self.out_size[op.0]
+    }
+
+    /// Distinct inputs of `op` as `(tensor, size, overlap credit)`.
+    pub fn inputs(&self, op: OpId) -> &[(TensorId, usize, usize)] {
+        &self.inputs[op.0]
+    }
+
+    /// Cost of executing `op` when `live_bytes` are currently live;
+    /// `dies` reports whether a given input tensor's last remaining
+    /// consumer is this op (graph outputs never die).
+    pub fn step(
+        &self,
+        op: OpId,
+        live_bytes: usize,
+        mut dies: impl FnMut(TensorId) -> bool,
+    ) -> StepCost {
+        let out = self.out_size[op.0];
+        let mut credit = 0usize;
+        let mut freed = 0usize;
+        for &(t, size, c) in &self.inputs[op.0] {
+            if dies(t) {
+                freed += size;
+                credit = credit.max(c);
+            }
+        }
+        StepCost {
+            during: live_bytes + out - credit,
+            live_after: live_bytes + out - freed,
+        }
+    }
+}
+
 /// One pairwise constraint between a tensor being placed and an already
 /// placed tensor.
 enum Constraint {
@@ -574,6 +687,39 @@ mod tests {
         let p_off = alloc.offsets[p.0].unwrap();
         let p_end = p_off + g.tensor(p).size_bytes();
         assert!(a_end <= p_off || p_end <= a_off, "a and p must be disjoint");
+    }
+
+    #[test]
+    fn incremental_cost_matches_chain_geometry() {
+        // input(1024 B) -> conv(2048 B) -> dw(512 B): credits bounded by
+        // min(O_s, in, out) and dying inputs freed after the step
+        let g = two_op_graph();
+        let os = OsTable::build(&g, Method::Algorithmic);
+        let inc = IncrementalCost::build(&g, &os);
+        let x = g.inputs[0];
+        let conv_out = g.ops[0].output;
+        let in_b = g.tensor(x).size_bytes();
+        let conv_b = g.tensor(conv_out).size_bytes();
+
+        // op 0: input dies there
+        let sc = inc.step(OpId(0), in_b, |t| t == x);
+        let credit = inc.inputs(OpId(0))[0].2;
+        assert!(credit <= in_b.min(conv_b));
+        assert_eq!(sc.during, in_b + conv_b - credit);
+        assert_eq!(sc.live_after, conv_b);
+
+        // with nothing dying there is no credit and nothing freed
+        let sc = inc.step(OpId(0), in_b, |_| false);
+        assert_eq!(sc.during, in_b + conv_b);
+        assert_eq!(sc.live_after, in_b + conv_b);
+
+        // a disabled table yields zero credits everywhere
+        let inc0 = IncrementalCost::build(&g, &OsTable::disabled(&g));
+        for k in 0..g.ops.len() {
+            for &(_, _, c) in inc0.inputs(OpId(k)) {
+                assert_eq!(c, 0);
+            }
+        }
     }
 
     #[test]

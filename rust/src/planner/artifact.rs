@@ -20,6 +20,7 @@ use super::alloc::{Allocation, AppliedOverlap, Heuristic, OsTable};
 use super::error::PlanError;
 use super::order::{self, ExecOrder, Strategy};
 use super::scope::analyse;
+use super::search::SearchStats;
 use super::Plan;
 use crate::ir::graph::{Graph, OpId, TensorId};
 use crate::overlap::Method;
@@ -138,11 +139,16 @@ pub struct PlanArtifact {
     pub os_per_op: Vec<Vec<usize>>,
     /// Content hash of `method` + `os_per_op`.
     pub os_hash: u64,
+    /// Search provenance, present iff `strategy` is the order search
+    /// (format v2; absent from v1 artifacts, which predate search).
+    pub search: Option<SearchStats>,
 }
 
 impl PlanArtifact {
-    /// Artifact format version this build reads and writes.
-    pub const VERSION: u64 = 1;
+    /// Artifact format version this build reads and writes. Version 1
+    /// (pre order-search, no `search` field) is still accepted by
+    /// [`PlanArtifact::load`] / [`PlanArtifact::to_plan`].
+    pub const VERSION: u64 = 2;
 
     /// Marker stored in the `kind` field of every artifact file.
     pub const KIND: &'static str = "dmo-plan-artifact";
@@ -167,6 +173,7 @@ impl PlanArtifact {
                 .collect(),
             os_per_op: plan.os.per_op.clone(),
             os_hash: os_table_hash(plan.os.method, &plan.os.per_op),
+            search: plan.search,
         }
     }
 
@@ -200,7 +207,7 @@ impl PlanArtifact {
                 .map(|row| Json::Arr(row.iter().map(|&v| num(v)).collect()))
                 .collect(),
         );
-        obj(vec![
+        let mut fields = vec![
             ("kind", s(Self::KIND)),
             ("version", num(self.version as usize)),
             ("model", s(&self.model)),
@@ -214,7 +221,21 @@ impl PlanArtifact {
             ("applied", applied),
             ("os", os),
             ("os_hash", s(&hex(self.os_hash))),
-        ])
+        ];
+        if let Some(st) = &self.search {
+            fields.push((
+                "search",
+                obj(vec![
+                    ("beam", num(st.beam)),
+                    ("budget", num(st.budget)),
+                    ("expanded", num(st.expanded)),
+                    ("pruned", num(st.pruned)),
+                    ("orders_scored", num(st.orders_scored)),
+                    ("surrogate_peak", num(st.surrogate_peak)),
+                ]),
+            ));
+        }
+        obj(fields)
     }
 
     /// Parse an artifact JSON document.
@@ -242,16 +263,43 @@ impl PlanArtifact {
             )));
         }
         let version = usize_field("version")? as u64;
-        if version != Self::VERSION {
+        if version == 0 || version > Self::VERSION {
             return Err(PlanError::UnsupportedVersion {
                 found: version,
                 supported: Self::VERSION,
             });
         }
 
+        // v2: search provenance (absent from v1 and from eager/lazy wins)
+        let search = match v.get("search") {
+            None | Some(Json::Null) => None,
+            Some(st) => {
+                let part = |key: &str| {
+                    st.get(key)
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| PlanError::Malformed(format!("bad `search.{key}`")))
+                };
+                Some(SearchStats {
+                    beam: part("beam")?,
+                    budget: part("budget")?,
+                    expanded: part("expanded")?,
+                    pruned: part("pruned")?,
+                    orders_scored: part("orders_scored")?,
+                    surrogate_peak: part("surrogate_peak")?,
+                })
+            }
+        };
+
         let strategy_name = str_field("strategy")?;
-        let strategy = Strategy::from_name(&strategy_name)
+        let mut strategy = Strategy::from_name(&strategy_name)
             .ok_or_else(|| PlanError::Malformed(format!("unknown strategy `{strategy_name}`")))?;
+        // restore the exact beam/budget the winning search ran with
+        if let (Strategy::Search { .. }, Some(st)) = (strategy, &search) {
+            strategy = Strategy::Search {
+                beam: st.beam,
+                budget: st.budget,
+            };
+        }
         let heuristic_name = str_field("heuristic")?;
         let heuristic = Heuristic::from_name(&heuristic_name)
             .ok_or_else(|| PlanError::Malformed(format!("unknown heuristic `{heuristic_name}`")))?;
@@ -328,6 +376,7 @@ impl PlanArtifact {
             applied,
             os_per_op,
             os_hash: parse_hex(&str_field("os_hash")?)?,
+            search,
         })
     }
 
@@ -389,7 +438,7 @@ impl PlanArtifact {
     /// consistency (table shapes, order validity), and finally the full
     /// pairwise overlap-safety check of the reconstructed layout.
     pub fn to_plan(&self, graph: &Graph) -> Result<Plan, PlanError> {
-        if self.version != Self::VERSION {
+        if self.version == 0 || self.version > Self::VERSION {
             return Err(PlanError::UnsupportedVersion {
                 found: self.version,
                 supported: Self::VERSION,
@@ -472,6 +521,7 @@ impl PlanArtifact {
             strategy: self.strategy,
             heuristic: self.heuristic,
             os,
+            search: self.search,
         })
     }
 }
@@ -567,6 +617,43 @@ mod tests {
         art.save(&path).unwrap();
         assert_eq!(PlanArtifact::load(&path).unwrap(), art);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn searched_plan_round_trips_with_stats_and_exact_strategy() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).search(3, 500).plan().unwrap();
+        let art = PlanArtifact::from_plan(&g, &plan);
+        assert!(art.search.is_some(), "search win must record stats");
+        let text = art.to_json().to_string();
+        let back = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(art, back, "v2 search fields must round-trip");
+        // the exact (non-default) beam/budget come back through the stats
+        assert_eq!(
+            back.strategy,
+            crate::planner::Strategy::Search { beam: 3, budget: 500 }
+        );
+        let re = back.to_plan(&g).unwrap();
+        assert_eq!(re.peak(), plan.peak());
+        assert_eq!(re.order, plan.order);
+        assert_eq!(re.search, plan.search);
+    }
+
+    #[test]
+    fn v1_artifacts_still_load() {
+        // a pre-search artifact: version 1, no `search` field
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let mut art = PlanArtifact::from_plan(&g, &plan);
+        art.version = 1;
+        assert!(art.search.is_none(), "eager/lazy wins carry no stats");
+        let text = art.to_json().to_string();
+        assert!(!text.contains("\"search\""));
+        let back = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.version, 1);
+        let re = back.to_plan(&g).unwrap();
+        assert_eq!(re.peak(), plan.peak());
+        assert!(re.search.is_none());
     }
 
     #[test]

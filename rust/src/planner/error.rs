@@ -25,6 +25,12 @@ pub enum PlanError {
         /// Which axis of the search space is empty.
         axis: &'static str,
     },
+    /// A [`Strategy::Search`](crate::planner::Strategy) was configured
+    /// with unusable parameters (e.g. a zero beam width).
+    BadSearchConfig {
+        /// What is wrong with the configuration.
+        what: &'static str,
+    },
     /// A produced or loaded layout failed the pairwise overlap-safety
     /// checker.
     InvalidLayout(String),
@@ -59,6 +65,9 @@ impl fmt::Display for PlanError {
             }
             PlanError::EmptySearchSpace { axis } => {
                 write!(f, "planner search space is empty: no {axis} configured")
+            }
+            PlanError::BadSearchConfig { what } => {
+                write!(f, "order search misconfigured: {what}")
             }
             PlanError::InvalidLayout(why) => {
                 write!(f, "layout failed overlap-safety validation: {why}")

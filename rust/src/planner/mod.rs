@@ -8,7 +8,9 @@
 //! * [`Planner`] — a builder-style session that configures the §IV
 //!   search (strategy × direction × heuristic, with or without DMO) and
 //!   produces a validated [`Plan`]. Long searches are observable through
-//!   [`Planner::on_candidate`].
+//!   [`Planner::on_candidate`]. Beyond the paper's fixed eager/lazy
+//!   serialisations, [`Strategy::Search`] (see [`search`]) enumerates
+//!   the order axis itself with a memory-aware beam search.
 //! * [`PlanArtifact`] — a versioned, JSON-serializable snapshot of a
 //!   [`Plan`] that can be persisted with [`PlanArtifact::save`], shipped
 //!   across processes, and revalidated against the target graph with
@@ -33,13 +35,18 @@ pub mod error;
 pub mod order;
 pub mod removal;
 pub mod scope;
+pub mod search;
 pub mod split;
 
-pub use alloc::{allocate, check, Allocation, AppliedOverlap, Direction, Heuristic, OsTable, DIRECTIONS, HEURISTICS};
+pub use alloc::{
+    allocate, check, Allocation, AppliedOverlap, Direction, Heuristic, IncrementalCost, OsTable,
+    DIRECTIONS, HEURISTICS,
+};
 pub use artifact::{graph_fingerprint, PlanArtifact};
 pub use error::PlanError;
 pub use order::{serialise, ExecOrder, Strategy, STRATEGIES};
 pub use scope::{analyse, Scope, Scopes};
+pub use search::{SearchStats, DEFAULT_BEAM, DEFAULT_BUDGET};
 
 use crate::ir::graph::Graph;
 use crate::overlap::Method;
@@ -54,6 +61,9 @@ pub struct Plan {
     pub heuristic: Heuristic,
     /// The `O_s` table the layout was checked against.
     pub os: OsTable,
+    /// Present iff the winning order came from [`Strategy::Search`] —
+    /// the run's counters, recorded in the artifact as provenance.
+    pub search: Option<SearchStats>,
 }
 
 impl Plan {
@@ -158,6 +168,14 @@ impl<'a> Planner<'a> {
         self
     }
 
+    /// Plan with the memory-aware execution-order search alone —
+    /// shorthand for `.strategies(&[Strategy::Search { beam, budget }])`.
+    /// The search always scores the eager and lazy orders as seeds, so
+    /// the result is never worse than the default two-strategy sweep.
+    pub fn search(self, beam: usize, budget: usize) -> Self {
+        self.strategies(&[Strategy::Search { beam, budget }])
+    }
+
     /// Restrict the allocation heuristics swept (§IV).
     pub fn heuristics(mut self, heuristics: &[Heuristic]) -> Self {
         self.heuristics = heuristics.to_vec();
@@ -180,8 +198,8 @@ impl<'a> Planner<'a> {
         self
     }
 
-    /// The candidate grid after direction filtering, in sweep order.
-    fn search_space(&self) -> Result<Vec<(Strategy, Heuristic)>, PlanError> {
+    /// The heuristics that survive direction filtering, in sweep order.
+    fn filtered_heuristics(&self) -> Result<Vec<Heuristic>, PlanError> {
         if self.strategies.is_empty() {
             return Err(PlanError::EmptySearchSpace { axis: "strategies" });
         }
@@ -197,18 +215,15 @@ impl<'a> Planner<'a> {
         if heuristics.is_empty() {
             return Err(PlanError::EmptySearchSpace { axis: "heuristics" });
         }
-        let mut grid = Vec::with_capacity(self.strategies.len() * heuristics.len());
-        for &s in &self.strategies {
-            for &h in &heuristics {
-                grid.push((s, h));
-            }
-        }
-        Ok(grid)
+        Ok(heuristics)
     }
 
     /// Run the sweep and return the lowest-peak valid layout (§IV:
     /// "serialised using both an eager and lazy execution strategy with
-    /// the lowest peak memory figure being taken").
+    /// the lowest peak memory figure being taken"). With
+    /// [`Strategy::Search`] in the strategy list, the §II-B order axis
+    /// itself is searched: beam-enumerated candidate orders (plus the
+    /// eager/lazy seeds) are each scored by the full allocator.
     pub fn plan(mut self) -> Result<Plan, PlanError> {
         let graph = self.graph;
         if graph.tensors.is_empty() || graph.ops.is_empty() {
@@ -216,7 +231,16 @@ impl<'a> Planner<'a> {
                 model: graph.name.clone(),
             });
         }
-        let grid = self.search_space()?;
+        let heuristics = self.filtered_heuristics()?;
+        for s in &self.strategies {
+            if let Strategy::Search { beam, .. } = s {
+                if *beam == 0 {
+                    return Err(PlanError::BadSearchConfig {
+                        what: "beam width must be at least 1",
+                    });
+                }
+            }
+        }
 
         // O_s depends only on op geometry, never on serialisation order —
         // build the table once for the whole sweep (perf pass, §Perf).
@@ -226,41 +250,72 @@ impl<'a> Planner<'a> {
             OsTable::disabled(graph)
         };
 
+        // Candidate orders per strategy: one Kahn pass for eager/lazy,
+        // a beam-search batch (seeds included) for search.
+        struct Cand {
+            strategy: Strategy,
+            order: ExecOrder,
+            scopes: Scopes,
+            stats: Option<SearchStats>,
+        }
+        let mut cands: Vec<Cand> = Vec::new();
+        for &strat in &self.strategies {
+            match strat {
+                Strategy::Eager | Strategy::Lazy => {
+                    let order = serialise(graph, strat);
+                    let scopes = analyse(graph, &order);
+                    cands.push(Cand {
+                        strategy: strat,
+                        order,
+                        scopes,
+                        stats: None,
+                    });
+                }
+                Strategy::Search { beam, budget } => {
+                    let outcome = search::search(graph, &os, beam, budget);
+                    for order in outcome.orders {
+                        let scopes = analyse(graph, &order);
+                        cands.push(Cand {
+                            strategy: strat,
+                            order,
+                            scopes,
+                            stats: Some(outcome.stats),
+                        });
+                    }
+                }
+            }
+        }
+
         let mut best: Option<Plan> = None;
-        let total = grid.len();
-        let mut last_order: Option<(Strategy, ExecOrder, Scopes)> = None;
-        for (index, (strat, h)) in grid.into_iter().enumerate() {
-            // Orders are grouped by strategy in sweep order; reuse the
-            // serialisation + scope analysis across the heuristic axis.
-            let reuse = matches!(&last_order, Some((s, _, _)) if *s == strat);
-            if !reuse {
-                let ord = serialise(graph, strat);
-                let scopes = analyse(graph, &ord);
-                last_order = Some((strat, ord, scopes));
-            }
-            let (_, ord, scopes) = last_order.as_ref().expect("order just computed");
-            let a = allocate(graph, scopes, &os, h);
-            let peak = a.peak;
-            let improved = best.as_ref().map_or(true, |b| peak < b.alloc.peak);
-            if improved {
-                best = Some(Plan {
-                    order: ord.clone(),
-                    scopes: scopes.clone(),
-                    alloc: a,
-                    strategy: strat,
-                    heuristic: h,
-                    os: os.clone(),
-                });
-            }
-            if let Some(cb) = self.on_candidate.as_mut() {
-                cb(&PlanCandidate {
-                    strategy: strat,
-                    heuristic: h,
-                    peak,
-                    best_peak: best.as_ref().map(|b| b.alloc.peak).unwrap_or(peak),
-                    index,
-                    total,
-                });
+        let total = cands.len() * heuristics.len();
+        let mut index = 0usize;
+        for cand in &cands {
+            for &h in &heuristics {
+                let a = allocate(graph, &cand.scopes, &os, h);
+                let peak = a.peak;
+                let improved = best.as_ref().map_or(true, |b| peak < b.alloc.peak);
+                if improved {
+                    best = Some(Plan {
+                        order: cand.order.clone(),
+                        scopes: cand.scopes.clone(),
+                        alloc: a,
+                        strategy: cand.strategy,
+                        heuristic: h,
+                        os: os.clone(),
+                        search: cand.stats,
+                    });
+                }
+                if let Some(cb) = self.on_candidate.as_mut() {
+                    cb(&PlanCandidate {
+                        strategy: cand.strategy,
+                        heuristic: h,
+                        peak,
+                        best_peak: best.as_ref().map(|b| b.alloc.peak).unwrap_or(peak),
+                        index,
+                        total,
+                    });
+                }
+                index += 1;
             }
         }
 
@@ -442,6 +497,56 @@ mod tests {
             .unwrap();
         assert_eq!(count, STRATEGIES.len() * HEURISTICS.len());
         assert_eq!(best, plan.peak(), "final best_peak must equal the plan's");
+    }
+
+    #[test]
+    fn search_strategy_never_worse_and_records_stats() {
+        let g = mobilenet_head_i8();
+        let sweep = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let searched = Planner::for_graph(&g)
+            .dmo(true)
+            .search(DEFAULT_BEAM, DEFAULT_BUDGET)
+            .plan()
+            .unwrap();
+        assert!(searched.peak() <= sweep.peak());
+        assert_eq!(searched.strategy.name(), "search");
+        let stats = searched.search.expect("search wins must carry stats");
+        assert_eq!(stats.beam, DEFAULT_BEAM);
+        assert!(stats.expanded > 0);
+        // the head is a chain: every candidate dedupes to the one order
+        assert!(stats.orders_scored >= 1);
+        // eager/lazy wins never carry search stats
+        assert!(sweep.search.is_none());
+    }
+
+    #[test]
+    fn search_callback_covers_every_scored_order() {
+        let g = mobilenet_head_i8();
+        let mut count = 0usize;
+        let mut total = 0usize;
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .search(2, 1_000)
+            .heuristics(&[Heuristic::SizeDesc])
+            .on_candidate(|c| {
+                count += 1;
+                total = c.total;
+            })
+            .plan()
+            .unwrap();
+        assert_eq!(count, total);
+        assert_eq!(count, plan.search.unwrap().orders_scored);
+    }
+
+    #[test]
+    fn zero_beam_is_a_config_error() {
+        let g = mobilenet_head_i8();
+        assert_eq!(
+            Planner::for_graph(&g).search(0, 100).plan().unwrap_err(),
+            PlanError::BadSearchConfig {
+                what: "beam width must be at least 1",
+            }
+        );
     }
 
     #[test]

@@ -22,6 +22,13 @@ pub enum Strategy {
     /// Run each op as late as possible — depth first along branches, so
     /// side branches complete just before their results are consumed.
     Lazy,
+    /// Memory-aware beam search over all topological orders, scored by
+    /// the DMO-overlapped incremental footprint ([`super::search`]).
+    /// `beam` states survive each level; `budget` caps total state
+    /// expansions before the search degrades to greedy completion. The
+    /// eager and lazy orders are always scored as seed candidates, so
+    /// this strategy is never worse than the paper's best-of-two.
+    Search { beam: usize, budget: usize },
 }
 
 impl Strategy {
@@ -29,28 +36,55 @@ impl Strategy {
         match self {
             Strategy::Eager => "eager",
             Strategy::Lazy => "lazy",
+            Strategy::Search { .. } => "search",
+        }
+    }
+
+    /// The search strategy at its default beam width and budget.
+    pub const fn search_default() -> Strategy {
+        Strategy::Search {
+            beam: super::search::DEFAULT_BEAM,
+            budget: super::search::DEFAULT_BUDGET,
         }
     }
 
     /// Parse from the name produced by [`Strategy::name`] — used when
-    /// deserialising plan artifacts.
+    /// deserialising plan artifacts. `"search"` parses at the default
+    /// beam/budget; artifact loading restores the recorded values from
+    /// the stored search stats.
     pub fn from_name(name: &str) -> Option<Strategy> {
         match name {
             "eager" => Some(Strategy::Eager),
             "lazy" => Some(Strategy::Lazy),
+            "search" => Some(Strategy::search_default()),
             _ => None,
         }
     }
 }
 
-/// All strategies, for "best-of" sweeps.
+/// The paper's §IV sweep strategies. [`Strategy::Search`] is opt-in
+/// (it costs orders of magnitude more than a single Kahn pass), so it
+/// is not part of the default best-of sweep.
 pub const STRATEGIES: [Strategy; 2] = [Strategy::Eager, Strategy::Lazy];
 
 /// Serialise `graph` with the given strategy.
+///
+/// For [`Strategy::Search`] this returns the search's preferred order
+/// under the *baseline* (no-overlap) cost model; planning through
+/// [`super::Planner`] instead searches with the session's real `O_s`
+/// budgets and scores every candidate with the full allocator.
 pub fn serialise(graph: &Graph, strategy: Strategy) -> ExecOrder {
     match strategy {
         Strategy::Eager => eager(graph),
         Strategy::Lazy => lazy(graph),
+        Strategy::Search { beam, budget } => {
+            let os = super::alloc::OsTable::disabled(graph);
+            super::search::search(graph, &os, beam, budget)
+                .orders
+                .into_iter()
+                .next()
+                .expect("search always yields at least the seed orders")
+        }
     }
 }
 
@@ -183,6 +217,22 @@ mod tests {
         let d = b.dwconv2d(c, (3, 3), (1, 1), Padding::Same, Activation::Relu);
         let g = b.finish(&[d]);
         assert_eq!(serialise(&g, Strategy::Eager), serialise(&g, Strategy::Lazy));
+    }
+
+    #[test]
+    fn search_strategy_serialises_to_a_valid_order() {
+        let g = branchy();
+        let o = serialise(&g, Strategy::search_default());
+        assert!(is_valid(&g, &o));
+        assert_eq!(o.0.len(), g.ops.len());
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for s in [Strategy::Eager, Strategy::Lazy, Strategy::search_default()] {
+            assert_eq!(Strategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::from_name("zigzag"), None);
     }
 
     #[test]

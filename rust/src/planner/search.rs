@@ -1,0 +1,357 @@
+//! Memory-aware execution-order search — order × overlap, jointly.
+//!
+//! The paper serialises each graph just twice (eager and lazy, §II-B)
+//! and keeps the better layout (§IV). Liberis & Lane ("Neural networks
+//! on microcontrollers: saving memory at inference via operator
+//! reordering", arXiv:1910.05110) showed that *searching* the space of
+//! topological orders yields materially lower peaks on branchy graphs —
+//! and DMO's overlap relaxation (§II-D) changes the cost surface that
+//! search should optimise, so the two problems are solved jointly here:
+//!
+//! * **Enumeration** — beam search over topological prefixes. Every
+//!   state schedules one more ready op per level, so depth d holds only
+//!   valid d-op prefixes and complete states are valid topological
+//!   orders by construction.
+//! * **Scoring** — each extension is costed in O(inputs) by
+//!   [`IncrementalCost`], the incremental form of the §IV modified-heap
+//!   allocator's overlap-relaxed footprint, instead of re-running full
+//!   allocation per candidate prefix.
+//! * **Dominance pruning** — two prefixes over the same op *set* have
+//!   the same live set and the same frontier of ready ops; only their
+//!   internal order (and hence watermark) differs. Per level, states
+//!   are deduplicated on that set and only the lowest-watermark
+//!   representative survives.
+//! * **Budget** — `budget` caps total state expansions. Once spent, the
+//!   beam narrows to width 1 (greedy best-first completion), so search
+//!   degrades gracefully on graphs whose frontier is enormous.
+//!
+//! The searched orders are *candidates*: [`super::Planner`] scores each
+//! against the real allocator (every configured heuristic) and keeps
+//! the best. The eager and lazy serialisations are always appended as
+//! seed candidates, so `Strategy::Search` is never worse than the
+//! paper's best-of-two — the property `rust/tests/order_search.rs`
+//! asserts across the whole model zoo.
+
+use super::alloc::{IncrementalCost, OsTable};
+use super::order::{serialise, ExecOrder, Strategy};
+use crate::ir::graph::{Graph, OpId, TensorKind};
+use std::collections::HashMap;
+
+/// Default beam width (states kept per level).
+pub const DEFAULT_BEAM: usize = 8;
+
+/// Default expansion budget (total successor states generated).
+pub const DEFAULT_BUDGET: usize = 50_000;
+
+/// How many of the beam's complete orders are handed to the full
+/// allocator, beyond the eager/lazy seeds.
+const SCORED_FROM_BEAM: usize = 3;
+
+/// Counters describing one search run — recorded in the winning
+/// [`super::Plan`] and its [`super::PlanArtifact`] as provenance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Beam width the search ran with.
+    pub beam: usize,
+    /// Expansion budget the search ran with.
+    pub budget: usize,
+    /// Successor states generated.
+    pub expanded: usize,
+    /// States discarded by (live-set, frontier) dominance.
+    pub pruned: usize,
+    /// Complete orders handed to the full allocator (beam winners plus
+    /// the eager/lazy seeds).
+    pub orders_scored: usize,
+    /// Best incremental-model watermark among complete beam states —
+    /// the surrogate the search optimised, not the allocated peak.
+    pub surrogate_peak: usize,
+}
+
+/// Result of a search: candidate orders, best surrogate first, with the
+/// eager/lazy seed orders appended (deduplicated).
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub orders: Vec<ExecOrder>,
+    pub stats: SearchStats,
+}
+
+/// One schedule prefix.
+#[derive(Clone)]
+struct State {
+    /// Bitset over op ids: scheduled?
+    done: Vec<u64>,
+    order: Vec<OpId>,
+    /// Per tensor: consumer ops not yet scheduled.
+    remaining: Vec<u32>,
+    /// Per op: producer ops not yet scheduled.
+    unmet: Vec<u32>,
+    /// Ready (schedulable) op ids, in deterministic insertion order.
+    ready: Vec<usize>,
+    live_bytes: usize,
+    /// Incremental-model watermark over the prefix.
+    peak: usize,
+}
+
+/// Graph tables shared by every state.
+struct Ctx {
+    cost: IncrementalCost,
+    /// Per op: distinct consumer ops of its output.
+    succs: Vec<Vec<usize>>,
+    /// Per op: its output tensor id.
+    out_tensor: Vec<usize>,
+    /// Per tensor: is it a graph output (never dies)?
+    is_output: Vec<bool>,
+}
+
+impl State {
+    fn apply(&mut self, op: usize, ctx: &Ctx) {
+        let id = OpId(op);
+        let remaining = &self.remaining;
+        let sc = ctx.cost.step(id, self.live_bytes, |t| {
+            !ctx.is_output[t.0] && remaining[t.0] == 1
+        });
+        self.peak = self.peak.max(sc.during);
+        self.live_bytes = sc.live_after;
+        for &(t, _, _) in ctx.cost.inputs(id) {
+            self.remaining[t.0] -= 1;
+        }
+        // an output nobody consumes (and that is not a model output)
+        // occupies the arena only while its producer runs
+        let out_t = ctx.out_tensor[op];
+        if ctx.succs[op].is_empty() && !ctx.is_output[out_t] {
+            self.live_bytes -= ctx.cost.out_size(id);
+        }
+        self.done[op / 64] |= 1 << (op % 64);
+        self.order.push(id);
+        self.ready.retain(|&r| r != op);
+        for &c in &ctx.succs[op] {
+            self.unmet[c] -= 1;
+            if self.unmet[c] == 0 {
+                self.ready.push(c);
+            }
+        }
+    }
+}
+
+/// Search `graph` for low-peak topological orders under the overlap
+/// budgets in `os`. `beam` is clamped to ≥ 1; a zero `budget` degrades
+/// to pure greedy completion.
+pub fn search(graph: &Graph, os: &OsTable, beam: usize, budget: usize) -> SearchOutcome {
+    let beam = beam.max(1);
+    let n = graph.ops.len();
+    let cost = IncrementalCost::build(graph, os);
+    let words = n.div_ceil(64).max(1);
+
+    // distinct consumer ops per op output, and per-op producer counts
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut unmet0: Vec<u32> = vec![0; n];
+    for (k, opn) in graph.ops.iter().enumerate() {
+        let mut producers: Vec<usize> = Vec::new();
+        for &t in &opn.inputs {
+            if let Some(p) = graph.producer(t) {
+                if !producers.contains(&p.0) {
+                    producers.push(p.0);
+                }
+            }
+        }
+        unmet0[k] = producers.len() as u32;
+        for p in producers {
+            if !succs[p].contains(&k) {
+                succs[p].push(k);
+            }
+        }
+    }
+    let mut remaining0: Vec<u32> = vec![0; graph.tensors.len()];
+    for t in 0..graph.tensors.len() {
+        remaining0[t] = graph.consumers(crate::ir::graph::TensorId(t)).len() as u32;
+    }
+    let is_output: Vec<bool> = graph
+        .tensors
+        .iter()
+        .map(|t| t.kind == TensorKind::Output)
+        .collect();
+    let out_tensor: Vec<usize> = graph.ops.iter().map(|op| op.output.0).collect();
+    let ctx = Ctx {
+        cost,
+        succs,
+        out_tensor,
+        is_output,
+    };
+
+    // model inputs are materialised before op 0 (scope.rs: start = 0)
+    let live0: usize = graph
+        .inputs
+        .iter()
+        .map(|&t| graph.tensor(t).size_bytes())
+        .sum();
+    let ready0: Vec<usize> = (0..n).filter(|&k| unmet0[k] == 0).collect();
+    let init = State {
+        done: vec![0u64; words],
+        order: Vec::with_capacity(n),
+        remaining: remaining0,
+        unmet: unmet0,
+        ready: ready0,
+        live_bytes: live0,
+        peak: live0,
+    };
+
+    let mut stats = SearchStats {
+        beam,
+        budget,
+        expanded: 0,
+        pruned: 0,
+        orders_scored: 0,
+        surrogate_peak: 0,
+    };
+
+    let mut level: Vec<State> = vec![init];
+    for _depth in 0..n {
+        // budget spent: fall back to greedy (width-1) completion
+        let width = if stats.expanded >= budget { 1 } else { beam };
+        let mut next: HashMap<Vec<u64>, State> = HashMap::new();
+        'expand: for st in level.iter().take(width) {
+            for &op in &st.ready {
+                // hard cap while the beam is wide: stop mid-level once a
+                // successor exists so the level still progresses. At
+                // width 1 the whole frontier of the surviving state is
+                // expanded — that *is* the greedy best-first completion
+                // (min-StepCost successor wins the sort below).
+                if stats.expanded >= budget && !next.is_empty() && width > 1 {
+                    break 'expand;
+                }
+                let mut s2 = st.clone();
+                s2.apply(op, &ctx);
+                stats.expanded += 1;
+                match next.entry(s2.done.clone()) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        stats.pruned += 1;
+                        let cur = e.get();
+                        if (s2.peak, s2.live_bytes, &s2.order)
+                            < (cur.peak, cur.live_bytes, &cur.order)
+                        {
+                            e.insert(s2);
+                        }
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(s2);
+                    }
+                }
+            }
+        }
+        let mut states: Vec<State> = next.into_values().collect();
+        // total order (peak, live, order) keeps selection deterministic
+        // even though HashMap iteration is not
+        states.sort_by(|a, b| {
+            (a.peak, a.live_bytes, &a.order).cmp(&(b.peak, b.live_bytes, &b.order))
+        });
+        states.truncate(beam);
+        if states.is_empty() {
+            break; // defensive: cannot happen on a valid DAG
+        }
+        level = states;
+    }
+
+    let mut orders: Vec<ExecOrder> = Vec::new();
+    if let Some(best) = level.first() {
+        if best.order.len() == n {
+            stats.surrogate_peak = best.peak;
+        }
+    }
+    for st in level.into_iter().take(SCORED_FROM_BEAM.min(beam)) {
+        if st.order.len() == n {
+            let o = ExecOrder(st.order);
+            if !orders.contains(&o) {
+                orders.push(o);
+            }
+        }
+    }
+    // seed candidates: the search result may never be worse than the
+    // paper's best-of-two, because these are always scored too
+    for s in [Strategy::Eager, Strategy::Lazy] {
+        let o = serialise(graph, s);
+        if !orders.contains(&o) {
+            orders.push(o);
+        }
+    }
+    stats.orders_scored = orders.len();
+    SearchOutcome { orders, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, Padding};
+    use crate::ir::{DType, GraphBuilder, Shape};
+    use crate::planner::order::is_valid;
+
+    fn branchy() -> Graph {
+        let mut b = GraphBuilder::new("branchy", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 4));
+        let a = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let p = b.conv2d(a, 4, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let q = b.conv2d(a, 4, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let s = b.add(p, q);
+        b.finish(&[s])
+    }
+
+    #[test]
+    fn every_candidate_is_a_valid_topological_order() {
+        let g = branchy();
+        for os in [OsTable::disabled(&g), OsTable::build(&g, crate::overlap::Method::Algorithmic)] {
+            let out = search(&g, &os, 4, 1000);
+            assert!(!out.orders.is_empty());
+            for o in &out.orders {
+                assert!(is_valid(&g, o), "invalid order {:?}", o.0);
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_are_always_candidates() {
+        let g = branchy();
+        let os = OsTable::disabled(&g);
+        let out = search(&g, &os, 2, 100);
+        for s in [Strategy::Eager, Strategy::Lazy] {
+            let seed = serialise(&g, s);
+            assert!(out.orders.contains(&seed), "{} seed missing", s.name());
+        }
+        assert_eq!(out.stats.orders_scored, out.orders.len());
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let g = branchy();
+        let os = OsTable::build(&g, crate::overlap::Method::Algorithmic);
+        let a = search(&g, &os, 4, 1000);
+        let b = search(&g, &os, 4, 1000);
+        assert_eq!(a.orders, b.orders);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn zero_budget_degrades_to_greedy_and_still_completes() {
+        let g = branchy();
+        let os = OsTable::disabled(&g);
+        let out = search(&g, &os, 8, 0);
+        for o in &out.orders {
+            assert!(is_valid(&g, o));
+        }
+        // greedy still expands one state per level
+        assert!(out.stats.expanded >= g.ops.len());
+    }
+
+    #[test]
+    fn surrogate_peak_counts_the_live_watermark() {
+        // sequential two-op chain: watermark is the biggest in+out pair
+        // minus the overlap credit
+        let mut b = GraphBuilder::new("seq", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 4));
+        let c = b.conv2d(x, 8, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
+        let g = b.finish(&[d]);
+        let out = search(&g, &OsTable::disabled(&g), 2, 100);
+        let in_b = g.tensor(x).size_bytes();
+        let conv_b = g.tensor(c).size_bytes();
+        assert_eq!(out.stats.surrogate_peak, in_b + conv_b);
+    }
+}

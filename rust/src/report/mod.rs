@@ -10,7 +10,7 @@ use crate::ir::graph::Graph;
 use crate::ir::DType;
 use crate::models;
 use crate::overlap::{compute_os, Method};
-use crate::planner::{PlannedModel, SavingRow};
+use crate::planner::{PlannedModel, Planner, SavingRow, SearchStats, Strategy};
 use anyhow::Result;
 use std::fmt::Write as _;
 
@@ -220,6 +220,79 @@ pub fn table3_csv(rows: &[SavingRow]) -> String {
     s
 }
 
+/// One model's eager vs lazy vs searched execution order, all three
+/// DMO-overlapped — the §II-B order axis the paper fixed, opened up.
+#[derive(Debug, Clone)]
+pub struct OrderSearchRow {
+    pub model: String,
+    /// Overlapped peak under the eager serialisation.
+    pub eager: usize,
+    /// Overlapped peak under the lazy serialisation.
+    pub lazy: usize,
+    /// Overlapped peak under [`Strategy::Search`].
+    pub search: usize,
+    /// Counters of the search run.
+    pub stats: SearchStats,
+}
+
+impl OrderSearchRow {
+    /// Saving of the searched order relative to the paper's best-of-two.
+    pub fn saving_vs_best_of_two_pct(&self) -> f64 {
+        let best2 = self.eager.min(self.lazy);
+        if best2 == 0 {
+            return 0.0;
+        }
+        100.0 * best2.saturating_sub(self.search) as f64 / best2 as f64
+    }
+}
+
+/// Plan `name` three ways (eager / lazy / search, DMO on) and report
+/// the overlapped peaks side by side.
+pub fn order_search_row(name: &str, beam: usize, budget: usize) -> Result<OrderSearchRow> {
+    let g = models::build(name)?;
+    let peak_for = |strategies: &[Strategy]| -> Result<crate::planner::Plan> {
+        Ok(Planner::for_graph(&g).dmo(true).strategies(strategies).plan()?)
+    };
+    let eager = peak_for(&[Strategy::Eager])?;
+    let lazy = peak_for(&[Strategy::Lazy])?;
+    let searched = peak_for(&[Strategy::Search { beam, budget }])?;
+    let stats = searched
+        .search
+        .expect("a search-strategy win always carries stats");
+    Ok(OrderSearchRow {
+        model: g.name.clone(),
+        eager: eager.peak(),
+        lazy: lazy.peak(),
+        search: searched.peak(),
+        stats,
+    })
+}
+
+/// The order-search comparison as markdown — one row per model, searched
+/// peak against the paper's fixed serialisations.
+pub fn order_search_markdown(rows: &[OrderSearchRow]) -> String {
+    let mut s = String::from(
+        "| Model | Eager (KB) | Lazy (KB) | Search (KB) | vs best-of-two | states expanded |\n|---|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {} | {} |",
+            r.model,
+            r.eager / 1024,
+            r.lazy / 1024,
+            r.search / 1024,
+            if r.search < r.eager.min(r.lazy) {
+                format!("-{:.1}%", r.saving_vs_best_of_two_pct())
+            } else {
+                "=".to_string()
+            },
+            r.stats.expanded
+        );
+    }
+    s
+}
+
 /// Deployment-fit table for an emitted C unit: flash = the unit's full
 /// image (weights + code estimate), RAM = its `DMO_ARENA_BYTES`.
 /// Consumed by `dmo emit-c` so every emission reports where it fits.
@@ -299,6 +372,22 @@ mod tests {
         assert!(md.contains(&fmt_bytes(unit.arena_bytes)));
         // tiny deploys everywhere
         assert!(!md.contains("| no |"), "{md}");
+    }
+
+    #[test]
+    fn order_search_rows_never_beaten_by_the_fixed_orders() {
+        for name in ["tiny", "mobilenet_v1_0.25_128_int8"] {
+            let r = order_search_row(name, 4, 2_000).unwrap();
+            assert!(
+                r.search <= r.eager.min(r.lazy),
+                "{name}: search {} > min(eager {}, lazy {})",
+                r.search,
+                r.eager,
+                r.lazy
+            );
+            let md = order_search_markdown(&[r]);
+            assert!(md.contains(name), "{md}");
+        }
     }
 
     #[test]

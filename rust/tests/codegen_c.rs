@@ -83,10 +83,32 @@ fn kitchen_graph() -> Graph {
 fn golden_check(file_name: &str, actual: &str) {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
     let path = dir.join(file_name);
-    if std::env::var("DMO_BLESS_GOLDEN").is_ok() || !path.exists() {
+    if std::env::var("DMO_BLESS_GOLDEN").is_ok() {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(&path, actual).unwrap();
         eprintln!("blessed golden file {}", path.display());
+        return;
+    }
+    if !path.exists() {
+        // CI must never self-bless: a missing golden there means the
+        // blessed files were not committed, and "compare against what we
+        // just emitted" would vacuously pass. Local first runs still
+        // bless (loudly) so development works from a fresh clone.
+        if std::env::var("CI").is_ok() {
+            panic!(
+                "golden file {} is missing from the checkout — CI never self-blesses. \
+                 Generate it locally with `DMO_BLESS_GOLDEN=1 cargo test --test codegen_c` \
+                 and commit rust/tests/golden/.",
+                path.display()
+            );
+        }
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        eprintln!(
+            "WARNING: blessed missing golden file {} — commit it so CI can compare \
+             against a reviewed reference.",
+            path.display()
+        );
         return;
     }
     let want = std::fs::read_to_string(&path).unwrap();

@@ -1,0 +1,224 @@
+//! Integration tests for the memory-aware execution-order search
+//! (`planner::search`, `Strategy::Search`):
+//!
+//! 1. **Validity** — every candidate order the search emits is a valid
+//!    topological order, on randomly generated branchy graphs.
+//! 2. **Never worse** — across the whole Table III zoo, the searched
+//!    plan's overlapped peak is ≤ min(eager, lazy): the paper's
+//!    best-of-two is a floor, not a ceiling.
+//! 3. **Artifacts** — a plan carrying a searched order round-trips
+//!    through the v2 artifact file format and revalidates by graph
+//!    fingerprint.
+//! 4. **Safety** — a searched, overlapped layout still executes
+//!    bit-identically to disjoint reference buffers.
+
+use dmo::interp::validate_plan;
+use dmo::ir::graph::Graph;
+use dmo::ir::op::{Activation, Padding};
+use dmo::ir::{DType, GraphBuilder, Shape};
+use dmo::planner::{
+    check, order, search, Heuristic, OsTable, PlanArtifact, PlanError, Planner, Strategy,
+    DEFAULT_BEAM, DEFAULT_BUDGET,
+};
+use dmo::util::rng::Rng;
+use dmo::{models, overlap};
+use std::path::PathBuf;
+
+/// Small random model: conv stem, then residual / branchy / pooling
+/// blocks — the topologies where order choice actually matters.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let dtype = if rng.chance(0.5) { DType::F32 } else { DType::I8 };
+    let mut b = GraphBuilder::new("rand", dtype);
+    let res = [8usize, 12, 16][rng.below(3)];
+    let x = b.input(Shape::hwc(res, res, rng.range(1, 4)));
+    let mut h = b.conv2d(x, rng.range(2, 8), (3, 3), (1, 1), Padding::Same, Activation::Relu);
+    for _ in 0..rng.range(1, 5) {
+        match rng.below(4) {
+            0 => {
+                let c = b.shape_of(h).c();
+                let p = b.conv2d(h, c, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+                h = b.add(h, p);
+            }
+            1 => {
+                let a =
+                    b.conv2d(h, rng.range(1, 6), (1, 1), (1, 1), Padding::Same, Activation::Relu);
+                let c =
+                    b.conv2d(h, rng.range(1, 6), (3, 3), (1, 1), Padding::Same, Activation::Relu);
+                h = b.concat(&[a, c]);
+            }
+            2 => {
+                h = b.maxpool(h, (2, 2), (2, 2), Padding::Valid);
+                if b.shape_of(h).h() < 2 {
+                    break;
+                }
+            }
+            _ => {
+                h = b.conv2d(h, rng.range(2, 10), (3, 3), (1, 1), Padding::Same, Activation::Relu);
+            }
+        }
+    }
+    b.finish(&[h])
+}
+
+#[test]
+fn searched_orders_are_valid_topological_orders() {
+    let mut rng = Rng::new(0x5EAC);
+    for case in 0..20 {
+        let g = random_graph(&mut rng);
+        let os = OsTable::build(&g, overlap::Method::Algorithmic);
+        let out = search::search(&g, &os, 4, 2_000);
+        // candidates dedupe: a purely sequential draw admits one order
+        assert!(!out.orders.is_empty(), "case {case}: no candidates");
+        for o in &out.orders {
+            assert!(
+                order::is_valid(&g, o),
+                "case {case}: search produced an invalid order {:?}",
+                o.0
+            );
+        }
+        assert_eq!(out.stats.orders_scored, out.orders.len());
+    }
+}
+
+#[test]
+fn searched_plans_check_and_execute_bit_identically() {
+    let mut rng = Rng::new(0x0DE5);
+    for case in 0..10 {
+        let g = random_graph(&mut rng);
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .search(4, 2_000)
+            .plan()
+            .unwrap();
+        check(&g, &plan.scopes, &plan.os, &plan.alloc)
+            .unwrap_or_else(|e| panic!("case {case}: layout check: {e}"));
+        validate_plan(&g, &plan, 4_000 + case)
+            .unwrap_or_else(|e| panic!("case {case}: bit-exactness: {e:#}"));
+    }
+}
+
+/// The acceptance property: on every Table III model, the searched
+/// order's overlapped peak is never worse than the better of the
+/// paper's two fixed serialisations, at the default beam/budget.
+///
+/// The three planning sessions share their configuration (analytic
+/// `O_s` — O(1) per op, keeps the 11-model debug-mode sweep fast — and
+/// a two-heuristic allocator axis), so the comparison is apples to
+/// apples; `report::order_search_row` and `benches/order_search.rs`
+/// run the same property at the full-fidelity defaults.
+#[test]
+fn zoo_search_never_worse_than_best_of_two() {
+    let heuristics = [Heuristic::SizeDesc, Heuristic::PairFrontier];
+    for name in models::table3_names() {
+        let g = models::build(name).unwrap();
+        let peak = |strat: Strategy| {
+            Planner::for_graph(&g)
+                .dmo(true)
+                .method(overlap::Method::Analytic)
+                .heuristics(&heuristics)
+                .strategies(&[strat])
+                .plan()
+                .unwrap()
+                .peak()
+        };
+        let eager = peak(Strategy::Eager);
+        let lazy = peak(Strategy::Lazy);
+        let searched = peak(Strategy::Search {
+            beam: DEFAULT_BEAM,
+            budget: DEFAULT_BUDGET,
+        });
+        assert!(
+            searched <= eager.min(lazy),
+            "{name}: search {searched} > min(eager {eager}, lazy {lazy})"
+        );
+    }
+}
+
+#[test]
+fn searched_artifact_roundtrips_and_revalidates_by_fingerprint() {
+    let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
+    let plan = Planner::for_graph(&g)
+        .dmo(true)
+        .search(DEFAULT_BEAM, DEFAULT_BUDGET)
+        .plan()
+        .unwrap();
+    assert_eq!(plan.strategy.name(), "search");
+    let art = PlanArtifact::from_plan(&g, &plan);
+    assert_eq!(art.version, PlanArtifact::VERSION);
+    assert!(art.search.is_some(), "search provenance must be recorded");
+
+    let path: PathBuf =
+        std::env::temp_dir().join(format!("dmo_order_search_art_{}.json", std::process::id()));
+    art.save(&path).unwrap();
+    let loaded = PlanArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, art, "searched artifact must round-trip losslessly");
+
+    // revalidates against the graph it was planned for…
+    let re = loaded.to_plan(&g).unwrap();
+    assert_eq!(re.peak(), plan.peak());
+    assert_eq!(re.order, plan.order);
+    assert_eq!(re.strategy, plan.strategy);
+    assert_eq!(re.search, plan.search);
+
+    // …and is refused for any other graph by fingerprint
+    let other = models::build("tiny").unwrap();
+    assert!(matches!(
+        loaded.to_plan(&other),
+        Err(PlanError::GraphMismatch { .. })
+    ));
+
+    // the loaded searched layout still proves itself by execution
+    let out = dmo::interp::run_planned_artifact(&g, &loaded, 42).unwrap();
+    assert_eq!(out.len(), g.outputs.len());
+}
+
+#[test]
+fn cli_plan_strategy_search_exports_a_loadable_artifact() {
+    let bin = env!("CARGO_BIN_EXE_dmo");
+    let dir = std::env::temp_dir().join(format!("dmo-cli-search-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join("tiny.search.plan.json");
+
+    let out = std::process::Command::new(bin)
+        .args([
+            "plan",
+            "tiny",
+            "--strategy=search",
+            "--beam=4",
+            "--budget=2000",
+            "--export",
+            plan_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("search strategy"), "{stdout}");
+    assert!(stdout.contains("order search: beam 4"), "{stdout}");
+
+    let art = PlanArtifact::load(&plan_path).unwrap();
+    assert_eq!(art.strategy, Strategy::Search { beam: 4, budget: 2000 });
+    let g = models::build("tiny").unwrap();
+    art.to_plan(&g).unwrap();
+
+    // unknown strategy names are rejected with the accepted list
+    let bad = std::process::Command::new(bin)
+        .args(["plan", "tiny", "--strategy=zigzag"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("unknown strategy"), "{stderr}");
+
+    // search knobs without the search strategy are an error, not a no-op
+    let bad = std::process::Command::new(bin)
+        .args(["plan", "tiny", "--strategy=lazy", "--beam=16"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("--strategy=search"), "{stderr}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
