@@ -1,0 +1,173 @@
+//! Bench: planner scaling — memoised `O_s` cache + parallel sweep.
+//!
+//! Two axes, recorded to `BENCH_planner_scale.json` (uploaded by CI
+//! next to `BENCH_order_search.json` as the repo's perf trajectory;
+//! summarised in EXPERIMENTS.md §Perf):
+//!
+//! 1. **Cold vs warm `OsTable` builds.** Every zoo model is measured
+//!    with the exact algorithmic engine; a subset is also measured with
+//!    the bottom-up engine, which *executes* each kernel on dummy data
+//!    (§III-B, the paper's Valgrind substitute) and is therefore the
+//!    engine the cache amortises hardest. "Cold" is a fresh build
+//!    (which already dedupes repeated signatures within the model);
+//!    "warm" rebuilds the same table through a primed shared
+//!    [`OsCache`]. The bench asserts the headline property: warm
+//!    bottom-up builds are ≥ 5× faster than cold on at least one zoo
+//!    model.
+//! 2. **Serial vs parallel candidate sweep.** The default multi-
+//!    candidate sweep (eager + lazy × four heuristics) at `.jobs(1)` vs
+//!    `.jobs(all cores)`; plans are asserted byte-identical peaks and
+//!    at least one model must show a parallel wall-clock win.
+
+use dmo::models;
+use dmo::overlap::{Method, OsCache};
+use dmo::planner::{OsTable, Planner};
+use dmo::util::bench::{fmt_dur, time};
+use dmo::util::json::{num, obj, s, Json};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Zoo models the bottom-up cold/warm comparison runs on — moderate
+/// graphs, so the bench stays minutes not hours (the engine executes
+/// every distinct kernel signature once per cold build).
+const BOTTOM_UP_MODELS: [&str; 3] = [
+    "mobilenet_v1_0.25_128_int8",
+    "mobilenet_v1_0.25_224",
+    "mobilenet_v2_0.35_224",
+];
+
+fn ms(d: std::time::Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Cold build, then a warm rebuild through a primed cache. Returns
+/// (cold, warm, speedup, hits, misses) and asserts table equality.
+fn cold_vs_warm(
+    g: &dmo::ir::graph::Graph,
+    method: Method,
+) -> (std::time::Duration, std::time::Duration, f64, usize, usize) {
+    let t0 = Instant::now();
+    let cold_table = OsTable::build(g, method);
+    let cold = t0.elapsed();
+
+    let cache = Arc::new(OsCache::new());
+    let primed = OsTable::build_cached(g, method, &cache);
+    let t0 = Instant::now();
+    let warm_table = OsTable::build_cached(g, method, &cache);
+    let warm = t0.elapsed();
+
+    assert_eq!(cold_table.per_op, primed.per_op, "{}: cache changed O_s", g.name);
+    assert_eq!(cold_table.per_op, warm_table.per_op, "{}: warm build diverged", g.name);
+    let st = cache.stats();
+    let speedup = cold.as_secs_f64() / warm.as_secs_f64().max(1e-9);
+    (cold, warm, speedup, st.hits, st.misses)
+}
+
+fn main() {
+    let jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("=== planner scale: memoised O_s cache + parallel sweep (jobs = {jobs}) ===\n");
+
+    println!(
+        "{:32} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+        "model", "alg cold", "alg warm", "hit/miss", "sweep j=1", "sweep j=N", "speedup"
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut parallel_wins = 0usize;
+    for name in models::table3_names() {
+        let g = models::build(name).unwrap();
+
+        let (alg_cold, alg_warm, _alg_speedup, hits, misses) =
+            cold_vs_warm(&g, Method::Algorithmic);
+
+        let m_serial = time("sweep jobs=1", 2, || {
+            std::hint::black_box(Planner::for_graph(&g).dmo(true).jobs(1).plan().unwrap());
+        });
+        let m_parallel = time("sweep jobs=N", 2, || {
+            std::hint::black_box(Planner::for_graph(&g).dmo(true).jobs(jobs).plan().unwrap());
+        });
+        // the knob must never change the result…
+        let p1 = Planner::for_graph(&g).dmo(true).jobs(1).plan().unwrap();
+        let pn = Planner::for_graph(&g).dmo(true).jobs(jobs).plan().unwrap();
+        assert_eq!(p1.peak(), pn.peak(), "{name}: jobs changed the plan");
+        // …only the wall clock
+        if m_parallel.median < m_serial.median {
+            parallel_wins += 1;
+        }
+        let sweep_speedup =
+            m_serial.median.as_secs_f64() / m_parallel.median.as_secs_f64().max(1e-9);
+
+        println!(
+            "{:32} {:>12} {:>12} {:>8} {:>12} {:>12} {:>7.2}x",
+            name,
+            fmt_dur(alg_cold),
+            fmt_dur(alg_warm),
+            format!("{hits}/{misses}"),
+            fmt_dur(m_serial.median),
+            fmt_dur(m_parallel.median),
+            sweep_speedup
+        );
+
+        entries.push(obj(vec![
+            ("model", s(name)),
+            ("ops", num(g.ops.len())),
+            ("alg_cold_ms", Json::Num(ms(alg_cold))),
+            ("alg_warm_ms", Json::Num(ms(alg_warm))),
+            ("cache_hits", num(hits)),
+            ("cache_misses", num(misses)),
+            ("sweep_serial_ms", Json::Num(ms(m_serial.median))),
+            ("sweep_parallel_ms", Json::Num(ms(m_parallel.median))),
+            ("sweep_speedup", Json::Num(sweep_speedup)),
+        ]));
+    }
+
+    println!("\n--- bottom-up engine (executes kernels; the cache's best case) ---\n");
+    println!(
+        "{:32} {:>12} {:>12} {:>10}",
+        "model", "cold", "warm", "speedup"
+    );
+    let mut bottom_up: Vec<Json> = Vec::new();
+    let mut best_warm_speedup = 0.0f64;
+    for name in BOTTOM_UP_MODELS {
+        let g = models::build(name).unwrap();
+        let (cold, warm, speedup, _, _) = cold_vs_warm(&g, Method::BottomUp);
+        best_warm_speedup = best_warm_speedup.max(speedup);
+        println!(
+            "{:32} {:>12} {:>12} {:>9.1}x",
+            name,
+            fmt_dur(cold),
+            fmt_dur(warm),
+            speedup
+        );
+        bottom_up.push(obj(vec![
+            ("model", s(name)),
+            ("cold_ms", Json::Num(ms(cold))),
+            ("warm_ms", Json::Num(ms(warm))),
+            ("warm_speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("bench", s("planner_scale")),
+        ("jobs", num(jobs)),
+        ("models", Json::Arr(entries)),
+        ("bottom_up", Json::Arr(bottom_up)),
+    ]);
+    let path = "BENCH_planner_scale.json";
+    std::fs::write(path, doc.to_string()).unwrap();
+    println!("\nwrote {path}");
+
+    assert!(
+        best_warm_speedup >= 5.0,
+        "warm bottom-up OsTable builds must be ≥5× faster than cold on at \
+         least one zoo model, best was {best_warm_speedup:.1}×"
+    );
+    assert!(
+        jobs < 2 || parallel_wins > 0,
+        "with {jobs} cores the parallel sweep must beat serial on at least one model"
+    );
+    println!(
+        "warm bottom-up speedup {best_warm_speedup:.1}×; parallel sweep won on \
+         {parallel_wins}/11 models"
+    );
+}

@@ -17,6 +17,7 @@ pub const SERVE_SPEC: &[ArgSpec] = &[
     opt("--seed", "workload RNG seed (default 42)"),
     opt("--plan", "pre-computed plan artifact to start from (skips the planner search)"),
     opt("--model", "model the memory plan is for (default `tiny`)"),
+    opt("--jobs", "planner worker threads for startup planning (default: all cores)"),
 ];
 
 /// Entry point used by `main.rs`.
@@ -32,6 +33,7 @@ pub fn serve_main(args: &Args) -> Result<()> {
         seed: args.parsed("--seed", 42u64)?,
         plan_artifact: args.value("--plan").map(PathBuf::from),
         plan_model: args.value("--model").unwrap_or("tiny").to_string(),
+        jobs: args.parsed("--jobs", 0usize)?,
         ..Default::default()
     };
     println!(

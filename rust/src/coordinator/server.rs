@@ -40,6 +40,10 @@ pub struct ServeConfig {
     pub plan_artifact: Option<PathBuf>,
     /// Model whose DMO arena story the report carries.
     pub plan_model: String,
+    /// Planner worker threads for the startup planning step (`0` =
+    /// all cores). Plans are identical at any count — this is purely a
+    /// startup-latency knob.
+    pub jobs: usize,
     pub requests: u64,
     /// open-loop arrival rate, req/s
     pub rate: f64,
@@ -54,6 +58,7 @@ impl Default for ServeConfig {
             artifacts: crate::runtime::default_artifacts_dir(),
             plan_artifact: None,
             plan_model: "tiny".to_string(),
+            jobs: 0,
             requests: 256,
             rate: 500.0,
             queue_capacity: 64,
@@ -101,7 +106,15 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
             (plan_graph_model.total_tensor_bytes(), plan.peak())
         }
         None => {
-            let pm = crate::planner::PlannedModel::new(plan_graph_model)?;
+            // plan on the configured worker count, through the
+            // process-wide O_s cache: serve loops that restart (or test
+            // harnesses that call `serve` repeatedly in one process)
+            // re-derive nothing
+            let pm = crate::planner::PlannedModel::new_with(
+                plan_graph_model,
+                cfg.jobs,
+                Some(crate::overlap::OsCache::process_shared()),
+            )?;
             let row = pm.row();
             (row.original, row.optimised)
         }

@@ -98,7 +98,11 @@ pub enum UnaryKind {
 }
 
 /// An operation kind with its static parameters.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Eq`/`Hash` so a kind (with its parameters) can participate in the
+/// canonical op signature keying the `O_s` cache
+/// ([`crate::overlap::cache::OpSignature`]).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum OpKind {
     /// Standard 2-D convolution (one activation input; weights are op
     /// attributes and live in flash, not the tensor arena).

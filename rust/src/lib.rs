@@ -76,6 +76,52 @@
 //! model zoo, and `cargo bench --bench order_search` records it (plus
 //! search wall time) to `BENCH_order_search.json`.
 //!
+//! ## Planning at scale
+//!
+//! `O_s` depends only on op geometry, so the planner memoises it
+//! content-addressed ([`overlap::OsCache`]): repeated block shapes are
+//! analysed once per table build, and a shared cache makes later
+//! sessions pure lookups — the pattern `dmo serve` uses at startup via
+//! [`overlap::OsCache::process_shared`]. Independently,
+//! [`planner::Planner::jobs`] spreads the candidate sweep and the
+//! order search's beam expansion over worker threads; results are
+//! reduced in a fixed order, so the worker count changes wall time
+//! only — never the plan:
+//!
+//! ```
+//! use dmo::overlap::OsCache;
+//! use dmo::planner::{PlanArtifact, Planner};
+//! use std::sync::Arc;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let graph = dmo::models::build("tiny")?;
+//! let cache = Arc::new(OsCache::new());
+//!
+//! // first session populates the cache; the parallel second session
+//! // re-uses every O_s entry and still produces the identical artifact
+//! let serial = Planner::for_graph(&graph)
+//!     .dmo(true)
+//!     .jobs(1)
+//!     .os_cache(cache.clone())
+//!     .plan()?;
+//! let parallel = Planner::for_graph(&graph)
+//!     .dmo(true)
+//!     .jobs(4)
+//!     .os_cache(cache.clone())
+//!     .plan()?;
+//!
+//! let a = PlanArtifact::from_plan(&graph, &serial).to_json().to_string();
+//! let b = PlanArtifact::from_plan(&graph, &parallel).to_json().to_string();
+//! assert_eq!(a, b, "worker count is a wall-clock knob, not a result knob");
+//! assert!(cache.stats().hits > 0, "second session was served from the cache");
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! `cargo bench --bench planner_scale` records cold-vs-warm cache and
+//! serial-vs-parallel sweep times to `BENCH_planner_scale.json`; see
+//! EXPERIMENTS.md §Perf.
+//!
 //! ```
 //! use dmo::codegen::{emit_artifact, EmitOptions};
 //! use dmo::planner::{PlanArtifact, Planner};

@@ -88,6 +88,7 @@ fn run(argv: &[String]) -> Result<()> {
                     opt("--strategy", "serialisation: sweep (default) | eager | lazy | search"),
                     opt("--beam", "beam width for --strategy=search (default 8)"),
                     opt("--budget", "expansion budget for --strategy=search (default 50000)"),
+                    opt("--jobs", "planner worker threads (default: all cores; plans are identical at any count)"),
                     opt("--export", "write the plan as a reusable artifact"),
                     opt("--import", "load a plan artifact instead of planning"),
                 ],
@@ -97,17 +98,19 @@ fn run(argv: &[String]) -> Result<()> {
                 .context("usage: dmo plan <model> [--baseline] [--map] [--strategy=search] [--export PATH] [--import PATH]")?
                 .to_string();
             let g = models::build(&name)?;
+            let os_cache = std::sync::Arc::new(dmo::overlap::OsCache::new());
             let plan = match args.value("--import") {
                 Some(path) => {
                     let planning_only = args.flag("--baseline")
                         || args.flag("--verbose")
                         || args.value("--strategy").is_some()
                         || args.value("--beam").is_some()
-                        || args.value("--budget").is_some();
+                        || args.value("--budget").is_some()
+                        || args.value("--jobs").is_some();
                     if planning_only {
                         bail!(
                             "--import loads a finished plan; --baseline/--verbose/--strategy/\
-                             --beam/--budget only apply when planning from scratch"
+                             --beam/--budget/--jobs only apply when planning from scratch"
                         );
                     }
                     let artifact = PlanArtifact::load(Path::new(path))?;
@@ -116,7 +119,10 @@ fn run(argv: &[String]) -> Result<()> {
                     plan
                 }
                 None => {
-                    let mut session = Planner::for_graph(&g).dmo(!args.flag("--baseline"));
+                    let mut session = Planner::for_graph(&g)
+                        .dmo(!args.flag("--baseline"))
+                        .jobs(args.parsed("--jobs", 0usize)?)
+                        .os_cache(os_cache.clone());
                     let strategy = args.value("--strategy");
                     if (args.value("--beam").is_some() || args.value("--budget").is_some())
                         && strategy != Some("search")
@@ -159,6 +165,16 @@ fn run(argv: &[String]) -> Result<()> {
                     report::fmt_bytes(st.surrogate_peak)
                 );
             }
+            let cache_stats = os_cache.stats();
+            if cache_stats.lookups() > 0 {
+                println!(
+                    "  O_s cache: {} hits / {} misses ({} distinct op signatures, {:.0}% hit rate)",
+                    cache_stats.hits,
+                    cache_stats.misses,
+                    os_cache.len(),
+                    100.0 * cache_stats.hit_rate()
+                );
+            }
             for a in &plan.alloc.applied {
                 println!(
                     "  overlap {} ⇢ {}: {}",
@@ -183,22 +199,29 @@ fn run(argv: &[String]) -> Result<()> {
                     OUT_SPEC,
                     opt("--beam", "search beam width (default 8)"),
                     opt("--budget", "search expansion budget (default 50000)"),
+                    opt("--jobs", "planner worker threads (default: all cores)"),
                 ],
             )?;
             let beam: usize = args.parsed("--beam", dmo::planner::DEFAULT_BEAM)?;
             let budget: usize = args.parsed("--budget", dmo::planner::DEFAULT_BUDGET)?;
+            let jobs: usize = args.parsed("--jobs", 0usize)?;
             let names: Vec<&str> = match args.pos(0) {
                 Some(n) => vec![n],
                 None => models::table3_names(),
             };
+            // one cache for the whole report: every row's three sessions
+            // share it, and repeated shapes across models collapse too
+            let cache = dmo::overlap::OsCache::process_shared();
             let mut rows = Vec::new();
             for name in names {
-                let row = report::order_search_row(name, beam, budget)?;
+                let row = report::order_search_row_with(name, beam, budget, jobs, &cache)?;
                 eprintln!(
-                    "  {name}: eager {}, lazy {}, search {}",
+                    "  {name}: eager {}, lazy {}, search {} (O_s cache {} hits / {} misses)",
                     report::fmt_bytes(row.eager),
                     report::fmt_bytes(row.lazy),
-                    report::fmt_bytes(row.search)
+                    report::fmt_bytes(row.search),
+                    row.cache_hits,
+                    row.cache_misses
                 );
                 rows.push(row);
             }
@@ -541,15 +564,18 @@ COMMANDS:
   models                      list the model zoo
   plan <model> [--baseline] [--map] [--verbose]
        [--strategy=sweep|eager|lazy|search] [--beam N] [--budget N]
-       [--export PATH] [--import PATH]
+       [--jobs N] [--export PATH] [--import PATH]
                               plan a model's arena (or reload an exported
-                              plan artifact); print overlaps.
+                              plan artifact); print overlaps and O_s
+                              cache hit/miss counters.
                               --strategy=search runs the memory-aware
                               execution-order search (never worse than
-                              the eager/lazy sweep)
-  orders [<model>] [--beam N] [--budget N] [--out DIR]
+                              the eager/lazy sweep); --jobs parallelises
+                              the sweep + search without changing the plan
+  orders [<model>] [--beam N] [--budget N] [--jobs N] [--out DIR]
                               eager vs lazy vs searched execution order:
-                              DMO-overlapped peaks across the zoo
+                              DMO-overlapped peaks across the zoo, with
+                              per-row O_s cache savings
   validate <model> [--import PATH]
                               execute the DMO plan (or a loaded artifact),
                               prove bit-exact safety
@@ -570,7 +596,9 @@ COMMANDS:
   trace-op <relu|matmul|dwconv|conv>
                               ASCII access-pattern trace (Fig 3)
   serve [--requests N] [--rate R] [--batch B] [--plan PATH] [--model M]
-                              end-to-end serving on the AOT'd model,
-                              optionally starting from a plan artifact"
+        [--jobs N]            end-to-end serving on the AOT'd model,
+                              optionally starting from a plan artifact;
+                              startup planning shares the process-wide
+                              O_s cache and runs on --jobs workers"
     );
 }

@@ -1,0 +1,295 @@
+//! Content-addressed memoisation of [`compute_os`](super::compute_os).
+//!
+//! `O_s` depends only on an op's *geometry* — its kind (with all static
+//! parameters), input/output shapes, element type — and on the engine
+//! used to compute it. It does **not** depend on which graph the op sits
+//! in, on tensor identities, or on the execution order. Zoo models
+//! repeat the same block shapes dozens of times (every ResNet stage,
+//! every MobileNet depthwise/pointwise pair), and a planning sweep
+//! re-derives the very same table per session, so memoising on the
+//! canonical [`OpSignature`] collapses all of that to one analysis per
+//! distinct signature.
+//!
+//! The pay-off is largest for [`Method::BottomUp`], which *executes*
+//! the kernel on dummy data with an event probe attached (§III-B, the
+//! paper's Valgrind substitute) — milliseconds to seconds per op —
+//! but even the exact algorithmic engine walks `O(Steps)` per call.
+//!
+//! [`OsCache`] is interior-mutable and thread-safe: wrap it in an
+//! [`Arc`] and share one instance across
+//! [`Planner`](crate::planner::Planner) sessions, `dmo serve`
+//! processes' planning step, and the `dmo orders` report
+//! ([`OsCache::process_shared`] hands out the process-wide instance).
+//! Parallel sweep workers hit the same cache; the value is computed
+//! outside the lock so a slow bottom-up trace never serialises other
+//! lookups. Hit/miss counters make the savings observable
+//! ([`OsCache::stats`]), not just benchmarkable
+//! (`benches/planner_scale.rs`, EXPERIMENTS.md §Perf).
+
+use super::{compute_os, Method, SafeOverlap};
+use crate::ir::op::OpKind;
+use crate::ir::shape::Shape;
+use crate::ir::DType;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Canonical identity of one `compute_os` call: everything the result
+/// depends on, and nothing else. Two ops anywhere in any graph with
+/// equal signatures have byte-identical `O_s` vectors.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct OpSignature {
+    /// Op kind including all static parameters (kernel, stride,
+    /// dilation, padding, fused activation, …).
+    pub kind: OpKind,
+    /// Activation input shapes, in input order.
+    pub in_shapes: Vec<Shape>,
+    /// Output shape.
+    pub out_shape: Shape,
+    /// Element type (`O_s` is reported in bytes — multiples of `T_s`).
+    pub dtype: DType,
+    /// Engine the overlap was computed with; the three engines may
+    /// legitimately disagree (the analytic bound under-estimates by
+    /// design, §III-E), so they never share entries.
+    pub method: Method,
+}
+
+impl OpSignature {
+    /// Build the signature for one `compute_os` call.
+    pub fn of(
+        method: Method,
+        kind: &OpKind,
+        in_shapes: &[&Shape],
+        out_shape: &Shape,
+        dtype: DType,
+    ) -> OpSignature {
+        OpSignature {
+            kind: kind.clone(),
+            in_shapes: in_shapes.iter().map(|s| (*s).clone()).collect(),
+            out_shape: out_shape.clone(),
+            dtype,
+            method,
+        }
+    }
+}
+
+/// Lookup counters of an [`OsCache`] — cheap, lock-free reads.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: usize,
+    /// Lookups that had to run the engine (one per distinct signature).
+    pub misses: usize,
+}
+
+impl CacheStats {
+    /// Total lookups served.
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups answered without running an engine.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups() as f64
+    }
+}
+
+/// Thread-safe, content-addressed `compute_os` memo table.
+///
+/// ```
+/// use dmo::ir::op::{OpKind, UnaryKind};
+/// use dmo::ir::{DType, Shape};
+/// use dmo::overlap::{compute_os, Method, OsCache};
+///
+/// let cache = OsCache::new();
+/// let shape = Shape::hwc(8, 8, 4);
+/// let kind = OpKind::Unary(UnaryKind::Relu);
+/// let direct = compute_os(Method::Algorithmic, &kind, &[&shape], &shape, DType::F32);
+/// let cached = cache.get_or_compute(Method::Algorithmic, &kind, &[&shape], &shape, DType::F32);
+/// assert_eq!(direct, cached);
+/// let warm = cache.get_or_compute(Method::Algorithmic, &kind, &[&shape], &shape, DType::F32);
+/// assert_eq!(direct, warm);
+/// assert_eq!((cache.stats().hits, cache.stats().misses), (1, 1));
+/// ```
+#[derive(Debug, Default)]
+pub struct OsCache {
+    map: Mutex<HashMap<OpSignature, SafeOverlap>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl OsCache {
+    /// An empty cache.
+    pub fn new() -> OsCache {
+        OsCache::default()
+    }
+
+    /// The process-wide shared cache. `dmo orders` rows, `dmo serve`
+    /// startup planning and any other in-process consumer that wants
+    /// cross-session reuse without threading an [`Arc`] around all use
+    /// this one instance.
+    pub fn process_shared() -> Arc<OsCache> {
+        static SHARED: OnceLock<Arc<OsCache>> = OnceLock::new();
+        SHARED.get_or_init(|| Arc::new(OsCache::new())).clone()
+    }
+
+    /// `compute_os`, memoised: return the cached overlap for this
+    /// signature or run `method`'s engine exactly once and remember the
+    /// result.
+    ///
+    /// The engine runs *outside* the map lock — a multi-second
+    /// bottom-up trace must not serialise unrelated lookups from
+    /// parallel sweep workers. Two threads racing on the same cold
+    /// signature may both compute it (deterministically equal values;
+    /// the first insert wins), which trades a rare duplicated analysis
+    /// for never blocking readers.
+    pub fn get_or_compute(
+        &self,
+        method: Method,
+        kind: &OpKind,
+        in_shapes: &[&Shape],
+        out_shape: &Shape,
+        dtype: DType,
+    ) -> SafeOverlap {
+        let sig = OpSignature::of(method, kind, in_shapes, out_shape, dtype);
+        if let Some(hit) = self.lock().get(&sig).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        let value = compute_os(method, kind, in_shapes, out_shape, dtype);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.lock().entry(sig).or_insert_with(|| value.clone());
+        value
+    }
+
+    /// Current hit/miss counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of distinct signatures held.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Drop every entry and reset the counters.
+    pub fn clear(&self) {
+        self.lock().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<OpSignature, SafeOverlap>> {
+        // a panic while holding the lock can only happen inside std
+        // HashMap ops; treat poisoning as unrecoverable
+        self.map.lock().expect("O_s cache lock poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, Conv2DParams, Padding, UnaryKind};
+
+    fn conv(kernel: (usize, usize), stride: (usize, usize)) -> OpKind {
+        OpKind::Conv2D(Conv2DParams {
+            kernel,
+            stride,
+            dilation: (1, 1),
+            padding: Padding::Same,
+            out_channels: 4,
+            act: Activation::None,
+        })
+    }
+
+    #[test]
+    fn distinct_signatures_do_not_alias() {
+        let cache = OsCache::new();
+        let x = Shape::hwc(8, 8, 3);
+        let out = crate::ops::infer_output(&conv((3, 3), (1, 1)), &[&x]).unwrap();
+        let a = cache.get_or_compute(Method::Algorithmic, &conv((3, 3), (1, 1)), &[&x], &out, DType::F32);
+        // same geometry, different stride ⇒ different signature + value
+        let out2 = crate::ops::infer_output(&conv((3, 3), (2, 2)), &[&x]).unwrap();
+        let b = cache.get_or_compute(Method::Algorithmic, &conv((3, 3), (2, 2)), &[&x], &out2, DType::F32);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(
+            a,
+            compute_os(Method::Algorithmic, &conv((3, 3), (1, 1)), &[&x], &out, DType::F32)
+        );
+        assert_eq!(
+            b,
+            compute_os(Method::Algorithmic, &conv((3, 3), (2, 2)), &[&x], &out2, DType::F32)
+        );
+    }
+
+    #[test]
+    fn methods_never_share_entries() {
+        let cache = OsCache::new();
+        let x = Shape::hwc(6, 6, 2);
+        let k = OpKind::Unary(UnaryKind::Relu);
+        let exact = cache.get_or_compute(Method::Algorithmic, &k, &[&x], &x, DType::F32);
+        let analytic = cache.get_or_compute(Method::Analytic, &k, &[&x], &x, DType::F32);
+        assert_eq!(cache.stats().misses, 2, "same geometry, two engines, two entries");
+        assert_eq!(exact, compute_os(Method::Algorithmic, &k, &[&x], &x, DType::F32));
+        assert_eq!(analytic, compute_os(Method::Analytic, &k, &[&x], &x, DType::F32));
+    }
+
+    #[test]
+    fn concurrent_lookups_agree_and_count() {
+        let cache = Arc::new(OsCache::new());
+        let x = Shape::hwc(10, 10, 3);
+        let kind = conv((3, 3), (1, 1));
+        let out = crate::ops::infer_output(&kind, &[&x]).unwrap();
+        let expect = compute_os(Method::Algorithmic, &kind, &[&x], &out, DType::F32);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let cache = &cache;
+                let (kind, x, out, expect) = (&kind, &x, &out, &expect);
+                scope.spawn(move || {
+                    for _ in 0..8 {
+                        let got =
+                            cache.get_or_compute(Method::Algorithmic, kind, &[x], out, DType::F32);
+                        assert_eq!(&got, expect);
+                    }
+                });
+            }
+        });
+        let st = cache.stats();
+        assert_eq!(st.lookups(), 32);
+        assert_eq!(cache.len(), 1, "one signature no matter how many racers");
+        assert!(st.hits >= 28, "at most one duplicated compute per racer: {st:?}");
+    }
+
+    #[test]
+    fn clear_resets_contents_and_counters() {
+        let cache = OsCache::new();
+        let x = Shape::hwc(4, 4, 2);
+        let k = OpKind::Unary(UnaryKind::Relu6);
+        cache.get_or_compute(Method::Analytic, &k, &[&x], &x, DType::I8);
+        cache.get_or_compute(Method::Analytic, &k, &[&x], &x, DType::I8);
+        assert!(!cache.is_empty());
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn hit_rate_is_well_defined() {
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+        let s = CacheStats { hits: 3, misses: 1 };
+        assert_eq!(s.lookups(), 4);
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

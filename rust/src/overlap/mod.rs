@@ -27,7 +27,10 @@
 
 pub mod algorithmic;
 pub mod analytic;
+pub mod cache;
 pub mod trace;
+
+pub use cache::{CacheStats, OpSignature, OsCache};
 
 use crate::ir::op::OpKind;
 use crate::ir::shape::Shape;
@@ -47,7 +50,8 @@ impl SafeOverlap {
 }
 
 /// Which engine computed an overlap — used in reports and benches.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `Hash` so it can key the [`cache::OsCache`] memo table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
     BottomUp,
     Algorithmic,

@@ -15,7 +15,7 @@
 
 use super::scope::{Scope, Scopes};
 use crate::ir::graph::{Graph, OpId, TensorId, TensorKind};
-use crate::overlap::{compute_os, Method};
+use crate::overlap::{Method, OsCache};
 
 /// Cached `O_s` values per op per input index, in bytes.
 #[derive(Debug, Clone)]
@@ -26,7 +26,21 @@ pub struct OsTable {
 
 impl OsTable {
     /// Compute `O_s` for every (op, input) in `graph` with `method`.
+    ///
+    /// Repeated op signatures within the graph (every repeated
+    /// conv/dw block of the zoo models) are analysed once via a
+    /// build-local [`OsCache`]; pass a longer-lived cache to
+    /// [`OsTable::build_cached`] to also share results across builds,
+    /// sessions and threads.
     pub fn build(graph: &Graph, method: Method) -> OsTable {
+        Self::build_cached(graph, method, &OsCache::new())
+    }
+
+    /// [`OsTable::build`] through a caller-supplied memo table: every
+    /// (op, input) `O_s` is looked up by canonical op signature and
+    /// computed at most once per distinct signature across *all* users
+    /// of `cache`.
+    pub fn build_cached(graph: &Graph, method: Method, cache: &OsCache) -> OsTable {
         let per_op = graph
             .ops
             .iter()
@@ -34,7 +48,9 @@ impl OsTable {
                 let in_shapes: Vec<_> = op.inputs.iter().map(|&t| &graph.tensor(t).shape).collect();
                 let out_shape = &graph.tensor(op.output).shape;
                 let dtype = graph.tensor(op.output).dtype;
-                compute_os(method, &op.kind, &in_shapes, out_shape, dtype).per_input
+                cache
+                    .get_or_compute(method, &op.kind, &in_shapes, out_shape, dtype)
+                    .per_input
             })
             .collect();
         OsTable { per_op, method }

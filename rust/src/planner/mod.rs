@@ -49,7 +49,8 @@ pub use scope::{analyse, Scope, Scopes};
 pub use search::{SearchStats, DEFAULT_BEAM, DEFAULT_BUDGET};
 
 use crate::ir::graph::Graph;
-use crate::overlap::Method;
+use crate::overlap::{Method, OsCache};
+use std::sync::Arc;
 
 /// A complete, validated memory plan.
 #[derive(Debug, Clone)]
@@ -122,6 +123,8 @@ pub struct Planner<'a> {
     strategies: Vec<Strategy>,
     heuristics: Vec<Heuristic>,
     directions: Vec<Direction>,
+    jobs: usize,
+    os_cache: Option<Arc<OsCache>>,
     on_candidate: Option<Box<dyn FnMut(&PlanCandidate) + 'a>>,
 }
 
@@ -136,6 +139,8 @@ impl<'a> Planner<'a> {
             strategies: STRATEGIES.to_vec(),
             heuristics: HEURISTICS.to_vec(),
             directions: DIRECTIONS.to_vec(),
+            jobs: 0,
+            os_cache: None,
             on_candidate: None,
         }
     }
@@ -190,12 +195,49 @@ impl<'a> Planner<'a> {
         self
     }
 
+    /// Worker threads for the candidate sweep and the order search's
+    /// per-level expansion. `0` (the default) means "all available
+    /// cores". Every `jobs` value produces a byte-identical plan: work
+    /// is distributed by index and reduced in index order, so
+    /// parallelism changes wall time only — the winning candidate, the
+    /// [`Planner::on_candidate`] sequence (always invoked on the
+    /// calling thread, in sweep order) and the serialized
+    /// [`PlanArtifact`] are all invariant.
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    /// Memoise `O_s` computation through a shared [`OsCache`].
+    ///
+    /// Without a cache the session still dedupes repeated op signatures
+    /// *within* its own table build; attaching one extends the reuse
+    /// across sessions, threads and processes-lifetime consumers (the
+    /// serving coordinator, the `dmo orders` report). See
+    /// [`OsCache::process_shared`] for the easy process-wide instance.
+    pub fn os_cache(mut self, cache: Arc<OsCache>) -> Self {
+        self.os_cache = Some(cache);
+        self
+    }
+
     /// Observe every candidate the sweep evaluates — progress reporting
     /// for long searches (NasNet's ~600-op graph takes seconds per
     /// candidate).
     pub fn on_candidate<F: FnMut(&PlanCandidate) + 'a>(mut self, f: F) -> Self {
         self.on_candidate = Some(Box::new(f));
         self
+    }
+
+    /// Resolved worker count: the configured `.jobs(n)` or, at the
+    /// default `0`, whatever parallelism the host offers.
+    fn effective_jobs(&self) -> usize {
+        if self.jobs > 0 {
+            self.jobs
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
     }
 
     /// The heuristics that survive direction filtering, in sweep order.
@@ -242,10 +284,17 @@ impl<'a> Planner<'a> {
             }
         }
 
+        let jobs = self.effective_jobs();
+
         // O_s depends only on op geometry, never on serialisation order —
-        // build the table once for the whole sweep (perf pass, §Perf).
+        // build the table once for the whole sweep (perf pass, §Perf),
+        // through the attached cache when the session has one so
+        // repeated signatures (and repeated sessions) pay once.
         let os = if self.dmo {
-            OsTable::build(graph, self.method)
+            match &self.os_cache {
+                Some(cache) => OsTable::build_cached(graph, self.method, cache),
+                None => OsTable::build(graph, self.method),
+            }
         } else {
             OsTable::disabled(graph)
         };
@@ -272,7 +321,7 @@ impl<'a> Planner<'a> {
                     });
                 }
                 Strategy::Search { beam, budget } => {
-                    let outcome = search::search(graph, &os, beam, budget);
+                    let outcome = search::search_with(graph, &os, beam, budget, jobs);
                     for order in outcome.orders {
                         let scopes = analyse(graph, &order);
                         cands.push(Cand {
@@ -286,36 +335,61 @@ impl<'a> Planner<'a> {
             }
         }
 
+        // The sweep grid, flattened in sweep order. Each cell's
+        // allocation is independent, so on big graphs cells are
+        // precomputed on `jobs` workers; the winner selection and the
+        // `on_candidate` stream below then reduce strictly in index
+        // order, which makes parallel and serial sweeps byte-identical
+        // (same argmin under ties, same callback sequence, on the
+        // calling thread). Small graphs allocate lazily inside the
+        // reduction instead — no thread spawns for microsecond sweeps,
+        // and `--verbose` progress streams per candidate as it always
+        // did. The gate depends only on the graph, never on `jobs`.
+        let cells: Vec<(usize, Heuristic)> = (0..cands.len())
+            .flat_map(|ci| heuristics.iter().map(move |&h| (ci, h)))
+            .collect();
+        let parallel = jobs > 1 && cells.len() >= 2 && graph.ops.len() >= 16;
+        let mut precomputed: Vec<Option<Allocation>> = Vec::new();
+        if parallel {
+            precomputed = crate::util::par::par_map_indexed(cells.len(), jobs, |i| {
+                let (ci, h) = cells[i];
+                allocate(graph, &cands[ci].scopes, &os, h)
+            })
+            .into_iter()
+            .map(Some)
+            .collect();
+        }
+
         let mut best: Option<Plan> = None;
-        let total = cands.len() * heuristics.len();
-        let mut index = 0usize;
-        for cand in &cands {
-            for &h in &heuristics {
-                let a = allocate(graph, &cand.scopes, &os, h);
-                let peak = a.peak;
-                let improved = best.as_ref().map_or(true, |b| peak < b.alloc.peak);
-                if improved {
-                    best = Some(Plan {
-                        order: cand.order.clone(),
-                        scopes: cand.scopes.clone(),
-                        alloc: a,
-                        strategy: cand.strategy,
-                        heuristic: h,
-                        os: os.clone(),
-                        search: cand.stats,
-                    });
-                }
-                if let Some(cb) = self.on_candidate.as_mut() {
-                    cb(&PlanCandidate {
-                        strategy: cand.strategy,
-                        heuristic: h,
-                        peak,
-                        best_peak: best.as_ref().map(|b| b.alloc.peak).unwrap_or(peak),
-                        index,
-                        total,
-                    });
-                }
-                index += 1;
+        let total = cells.len();
+        for (index, &(ci, h)) in cells.iter().enumerate() {
+            let cand = &cands[ci];
+            let a = match precomputed.get_mut(index) {
+                Some(slot) => slot.take().expect("every sweep cell allocated"),
+                None => allocate(graph, &cand.scopes, &os, h),
+            };
+            let peak = a.peak;
+            let improved = best.as_ref().map_or(true, |b| peak < b.alloc.peak);
+            if improved {
+                best = Some(Plan {
+                    order: cand.order.clone(),
+                    scopes: cand.scopes.clone(),
+                    alloc: a,
+                    strategy: cand.strategy,
+                    heuristic: h,
+                    os: os.clone(),
+                    search: cand.stats,
+                });
+            }
+            if let Some(cb) = self.on_candidate.as_mut() {
+                cb(&PlanCandidate {
+                    strategy: cand.strategy,
+                    heuristic: h,
+                    peak,
+                    best_peak: best.as_ref().map(|b| b.alloc.peak).unwrap_or(peak),
+                    index,
+                    total,
+                });
             }
         }
 
@@ -359,8 +433,24 @@ pub struct PlannedModel {
 impl PlannedModel {
     /// Plan `graph` with and without DMO (full §IV sweep each).
     pub fn new(graph: Graph) -> Result<PlannedModel, PlanError> {
-        let baseline = Planner::for_graph(&graph).plan()?;
-        let dmo = Planner::for_graph(&graph).dmo(true).plan()?;
+        Self::new_with(graph, 0, None)
+    }
+
+    /// [`PlannedModel::new`] with an explicit worker count (`0` = all
+    /// cores) and an optional shared `O_s` cache — the serving
+    /// coordinator passes [`OsCache::process_shared`] here so repeated
+    /// startups in one process never re-derive a table.
+    pub fn new_with(
+        graph: Graph,
+        jobs: usize,
+        cache: Option<Arc<OsCache>>,
+    ) -> Result<PlannedModel, PlanError> {
+        let baseline = Planner::for_graph(&graph).jobs(jobs).plan()?;
+        let mut session = Planner::for_graph(&graph).dmo(true).jobs(jobs);
+        if let Some(cache) = cache {
+            session = session.os_cache(cache);
+        }
+        let dmo = session.plan()?;
         Ok(PlannedModel {
             graph,
             baseline,
@@ -536,6 +626,61 @@ mod tests {
             .unwrap();
         assert_eq!(count, total);
         assert_eq!(count, plan.search.unwrap().orders_scored);
+    }
+
+    #[test]
+    fn job_count_never_changes_the_plan() {
+        let g = mobilenet_head_i8();
+        let artifact = |jobs: usize| {
+            let plan = Planner::for_graph(&g).dmo(true).jobs(jobs).plan().unwrap();
+            PlanArtifact::from_plan(&g, &plan).to_json().to_string()
+        };
+        let serial = artifact(1);
+        for jobs in [2usize, 4, 8] {
+            assert_eq!(serial, artifact(jobs), "jobs {jobs} diverged from serial");
+        }
+    }
+
+    #[test]
+    fn callback_order_is_identical_across_job_counts() {
+        let g = mobilenet_head_i8();
+        let seen = |jobs: usize| {
+            let mut events: Vec<(usize, usize, usize)> = Vec::new();
+            Planner::for_graph(&g)
+                .dmo(true)
+                .jobs(jobs)
+                .on_candidate(|c| events.push((c.index, c.peak, c.best_peak)))
+                .plan()
+                .unwrap();
+            events
+        };
+        assert_eq!(seen(1), seen(4), "candidate stream must not depend on jobs");
+    }
+
+    #[test]
+    fn shared_cache_is_reused_across_sessions() {
+        let g = mobilenet_head_i8();
+        let cache = std::sync::Arc::new(crate::overlap::OsCache::new());
+        let p1 = Planner::for_graph(&g)
+            .dmo(true)
+            .os_cache(cache.clone())
+            .plan()
+            .unwrap();
+        let first = cache.stats();
+        assert!(first.misses > 0, "first session must populate the cache");
+        let p2 = Planner::for_graph(&g)
+            .dmo(true)
+            .os_cache(cache.clone())
+            .plan()
+            .unwrap();
+        let second = cache.stats();
+        assert_eq!(second.misses, first.misses, "second session must be all hits");
+        assert!(second.hits > first.hits);
+        assert_eq!(p1.peak(), p2.peak());
+        assert_eq!(p1.os.per_op, p2.os.per_op, "cached table must equal the recomputed one");
+        // and a cached build equals an uncached build outright
+        let uncached = OsTable::build(&g, crate::overlap::Method::Algorithmic);
+        assert_eq!(p1.os.per_op, uncached.per_op);
     }
 
     #[test]

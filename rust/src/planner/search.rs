@@ -24,6 +24,11 @@
 //! * **Budget** — `budget` caps total state expansions. Once spent, the
 //!   beam narrows to width 1 (greedy best-first completion), so search
 //!   degrades gracefully on graphs whose frontier is enormous.
+//! * **Parallel expansion** — [`search_with`] spreads each level's
+//!   state-clone + op-apply work over worker threads; successors are
+//!   merged back in a fixed task order, so every `jobs` value produces
+//!   byte-identical orders and stats (asserted zoo-wide by
+//!   `rust/tests/planner_parallel.rs`).
 //!
 //! The searched orders are *candidates*: [`super::Planner`] scores each
 //! against the real allocator (every configured heuristic) and keeps
@@ -35,6 +40,7 @@
 use super::alloc::{IncrementalCost, OsTable};
 use super::order::{serialise, ExecOrder, Strategy};
 use crate::ir::graph::{Graph, OpId, TensorKind};
+use crate::util::par::par_map_indexed;
 use std::collections::HashMap;
 
 /// Default beam width (states kept per level).
@@ -135,9 +141,32 @@ impl State {
 
 /// Search `graph` for low-peak topological orders under the overlap
 /// budgets in `os`. `beam` is clamped to ≥ 1; a zero `budget` degrades
-/// to pure greedy completion.
+/// to pure greedy completion. Single-threaded; see [`search_with`] for
+/// the parallel-expansion variant (both produce identical outcomes).
 pub fn search(graph: &Graph, os: &OsTable, beam: usize, budget: usize) -> SearchOutcome {
+    search_with(graph, os, beam, budget, 1)
+}
+
+/// [`search`] with per-level successor generation spread over `jobs`
+/// worker threads.
+///
+/// Each level's expansion work — clone a frontier state, apply one
+/// ready op — is flattened into an index-ordered task list; workers
+/// claim tasks from an atomic counter and the dominance merge then
+/// replays the results **in task order** on the calling thread. The
+/// budget cutoff is applied to the task list up front (a wide level
+/// stops after exactly `budget − expanded` successors, the same point
+/// the serial loop stops at), so orders, stats and tie-breaks are
+/// byte-identical for every `jobs` value.
+pub fn search_with(
+    graph: &Graph,
+    os: &OsTable,
+    beam: usize,
+    budget: usize,
+    jobs: usize,
+) -> SearchOutcome {
     let beam = beam.max(1);
+    let jobs = jobs.max(1);
     let n = graph.ops.len();
     let cost = IncrementalCost::build(graph, os);
     let words = n.div_ceil(64).max(1);
@@ -208,33 +237,43 @@ pub fn search(graph: &Graph, os: &OsTable, beam: usize, budget: usize) -> Search
     for _depth in 0..n {
         // budget spent: fall back to greedy (width-1) completion
         let width = if stats.expanded >= budget { 1 } else { beam };
-        let mut next: HashMap<Vec<u64>, State> = HashMap::new();
-        'expand: for st in level.iter().take(width) {
+
+        // flatten this level's expansion into (frontier state, ready op)
+        // tasks, in the order the serial loop would visit them
+        let mut tasks: Vec<(usize, usize)> = Vec::new();
+        for (si, st) in level.iter().take(width).enumerate() {
             for &op in &st.ready {
-                // hard cap while the beam is wide: stop mid-level once a
-                // successor exists so the level still progresses. At
-                // width 1 the whole frontier of the surviving state is
-                // expanded — that *is* the greedy best-first completion
-                // (min-StepCost successor wins the sort below).
-                if stats.expanded >= budget && !next.is_empty() && width > 1 {
-                    break 'expand;
-                }
-                let mut s2 = st.clone();
-                s2.apply(op, &ctx);
-                stats.expanded += 1;
-                match next.entry(s2.done.clone()) {
-                    std::collections::hash_map::Entry::Occupied(mut e) => {
-                        stats.pruned += 1;
-                        let cur = e.get();
-                        if (s2.peak, s2.live_bytes, &s2.order)
-                            < (cur.peak, cur.live_bytes, &cur.order)
-                        {
-                            e.insert(s2);
-                        }
-                    }
-                    std::collections::hash_map::Entry::Vacant(e) => {
+                tasks.push((si, op));
+            }
+        }
+        // hard cap while the beam is wide: a wide level stops after
+        // exactly `budget − expanded` successors (≥ 1, since width > 1
+        // implies the budget is not yet spent), so the level still
+        // progresses. At width 1 the whole frontier of the surviving
+        // state is expanded — that *is* the greedy best-first
+        // completion (min-StepCost successor wins the sort below).
+        if width > 1 {
+            let remaining = budget - stats.expanded;
+            tasks.truncate(tasks.len().min(remaining));
+        }
+
+        // generate successors (possibly on `jobs` workers), then merge
+        // them in task order — identical to the serial loop's pruning
+        let succs = expand_level(&level, &tasks, &ctx, jobs);
+        stats.expanded += succs.len();
+        let mut next: HashMap<Vec<u64>, State> = HashMap::new();
+        for s2 in succs {
+            match next.entry(s2.done.clone()) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    stats.pruned += 1;
+                    let cur = e.get();
+                    if (s2.peak, s2.live_bytes, &s2.order) < (cur.peak, cur.live_bytes, &cur.order)
+                    {
                         e.insert(s2);
                     }
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(s2);
                 }
             }
         }
@@ -275,6 +314,19 @@ pub fn search(graph: &Graph, os: &OsTable, beam: usize, budget: usize) -> Search
     }
     stats.orders_scored = orders.len();
     SearchOutcome { orders, stats }
+}
+
+/// Run one level's `(state index, op)` expansion tasks, returning the
+/// successor states in task order regardless of worker scheduling —
+/// [`par_map_indexed`] reassembles results by index, so the downstream
+/// dominance merge is deterministic.
+fn expand_level(level: &[State], tasks: &[(usize, usize)], ctx: &Ctx, jobs: usize) -> Vec<State> {
+    par_map_indexed(tasks.len(), jobs, |i| {
+        let (si, op) = tasks[i];
+        let mut s2 = level[si].clone();
+        s2.apply(op, ctx);
+        s2
+    })
 }
 
 #[cfg(test)]
@@ -326,6 +378,22 @@ mod tests {
         let b = search(&g, &os, 4, 1000);
         assert_eq!(a.orders, b.orders);
         assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn parallel_expansion_matches_serial_exactly() {
+        let g = branchy();
+        let os = OsTable::build(&g, crate::overlap::Method::Algorithmic);
+        // tight budgets included: the mid-sweep cutoff must land on the
+        // same successor regardless of worker count
+        for budget in [0usize, 3, 10, 1000] {
+            let serial = search_with(&g, &os, 4, budget, 1);
+            for jobs in [2usize, 4, 8] {
+                let par = search_with(&g, &os, 4, budget, jobs);
+                assert_eq!(serial.orders, par.orders, "budget {budget} jobs {jobs}");
+                assert_eq!(serial.stats, par.stats, "budget {budget} jobs {jobs}");
+            }
+        }
     }
 
     #[test]

@@ -9,10 +9,11 @@
 use crate::ir::graph::Graph;
 use crate::ir::DType;
 use crate::models;
-use crate::overlap::{compute_os, Method};
+use crate::overlap::{compute_os, Method, OsCache};
 use crate::planner::{PlannedModel, Planner, SavingRow, SearchStats, Strategy};
 use anyhow::Result;
 use std::fmt::Write as _;
+use std::sync::Arc;
 
 /// Paper's Table III reference values (KB), for side-by-side reports.
 pub fn paper_table3() -> Vec<(&'static str, usize, usize)> {
@@ -233,6 +234,13 @@ pub struct OrderSearchRow {
     pub search: usize,
     /// Counters of the search run.
     pub stats: SearchStats,
+    /// `O_s` cache hits while producing this row (the three sessions
+    /// share one cache, so the lazy and search sessions re-use every
+    /// entry the eager session computed — and with
+    /// [`OsCache::process_shared`] later rows re-use earlier models').
+    pub cache_hits: usize,
+    /// `O_s` engine runs charged to this row (distinct new signatures).
+    pub cache_misses: usize,
 }
 
 impl OrderSearchRow {
@@ -247,11 +255,34 @@ impl OrderSearchRow {
 }
 
 /// Plan `name` three ways (eager / lazy / search, DMO on) and report
-/// the overlapped peaks side by side.
+/// the overlapped peaks side by side. Uses a row-local `O_s` cache and
+/// the default worker count; `dmo orders` calls
+/// [`order_search_row_with`] to share one cache across the whole zoo.
 pub fn order_search_row(name: &str, beam: usize, budget: usize) -> Result<OrderSearchRow> {
+    order_search_row_with(name, beam, budget, 0, &Arc::new(OsCache::new()))
+}
+
+/// [`order_search_row`] with an explicit worker count (`0` = all
+/// cores) and a shared `O_s` cache. All three planning sessions of the
+/// row run through `cache`, and the row records the hit/miss delta it
+/// caused, so the savings are visible in the report — not only in
+/// `benches/planner_scale.rs`.
+pub fn order_search_row_with(
+    name: &str,
+    beam: usize,
+    budget: usize,
+    jobs: usize,
+    cache: &Arc<OsCache>,
+) -> Result<OrderSearchRow> {
     let g = models::build(name)?;
+    let before = cache.stats();
     let peak_for = |strategies: &[Strategy]| -> Result<crate::planner::Plan> {
-        Ok(Planner::for_graph(&g).dmo(true).strategies(strategies).plan()?)
+        Ok(Planner::for_graph(&g)
+            .dmo(true)
+            .jobs(jobs)
+            .os_cache(cache.clone())
+            .strategies(strategies)
+            .plan()?)
     };
     let eager = peak_for(&[Strategy::Eager])?;
     let lazy = peak_for(&[Strategy::Lazy])?;
@@ -259,12 +290,15 @@ pub fn order_search_row(name: &str, beam: usize, budget: usize) -> Result<OrderS
     let stats = searched
         .search
         .expect("a search-strategy win always carries stats");
+    let after = cache.stats();
     Ok(OrderSearchRow {
         model: g.name.clone(),
         eager: eager.peak(),
         lazy: lazy.peak(),
         search: searched.peak(),
         stats,
+        cache_hits: after.hits - before.hits,
+        cache_misses: after.misses - before.misses,
     })
 }
 
@@ -272,12 +306,12 @@ pub fn order_search_row(name: &str, beam: usize, budget: usize) -> Result<OrderS
 /// peak against the paper's fixed serialisations.
 pub fn order_search_markdown(rows: &[OrderSearchRow]) -> String {
     let mut s = String::from(
-        "| Model | Eager (KB) | Lazy (KB) | Search (KB) | vs best-of-two | states expanded |\n|---|---:|---:|---:|---:|---:|\n",
+        "| Model | Eager (KB) | Lazy (KB) | Search (KB) | vs best-of-two | states expanded | O_s cache (hit/miss) |\n|---|---:|---:|---:|---:|---:|---:|\n",
     );
     for r in rows {
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {}/{} |",
             r.model,
             r.eager / 1024,
             r.lazy / 1024,
@@ -287,7 +321,9 @@ pub fn order_search_markdown(rows: &[OrderSearchRow]) -> String {
             } else {
                 "=".to_string()
             },
-            r.stats.expanded
+            r.stats.expanded,
+            r.cache_hits,
+            r.cache_misses
         );
     }
     s
@@ -385,9 +421,28 @@ mod tests {
                 r.eager,
                 r.lazy
             );
+            // the three sessions share one cache: the eager session
+            // populates it, the lazy + search sessions only hit
+            assert!(r.cache_misses > 0, "{name}: first session must miss");
+            assert!(
+                r.cache_hits >= 2 * r.cache_misses,
+                "{name}: later sessions must reuse every entry ({}/{})",
+                r.cache_hits,
+                r.cache_misses
+            );
             let md = order_search_markdown(&[r]);
             assert!(md.contains(name), "{md}");
         }
+    }
+
+    #[test]
+    fn shared_cache_carries_across_order_search_rows() {
+        let cache = Arc::new(OsCache::new());
+        let first = order_search_row_with("tiny", 2, 500, 1, &cache).unwrap();
+        let again = order_search_row_with("tiny", 2, 500, 1, &cache).unwrap();
+        assert!(first.cache_misses > 0);
+        assert_eq!(again.cache_misses, 0, "second row re-plans the same model warm");
+        assert_eq!((first.eager, first.lazy, first.search), (again.eager, again.lazy, again.search));
     }
 
     #[test]

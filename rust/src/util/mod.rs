@@ -8,4 +8,5 @@
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod rng;

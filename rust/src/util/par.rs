@@ -1,0 +1,89 @@
+//! Deterministic indexed parallel map (the vendored dependency set has
+//! no rayon).
+//!
+//! The planner's parallel phases — the candidate × heuristic sweep and
+//! the order search's per-level beam expansion — share one shape: run
+//! `n` independent, index-addressed tasks on a few worker threads and
+//! consume the results **in index order**, so that every downstream
+//! reduction (argmin under ties, dominance merging, progress callbacks)
+//! is byte-identical to the serial run. This helper is that shape.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Compute `f(0)..f(n-1)` on up to `jobs` scoped worker threads and
+/// return the results in index order.
+///
+/// Tasks are claimed from a shared atomic counter rather than chunked
+/// statically — per-index costs vary wildly (beam states have very
+/// different frontier sizes), so pre-partitioning would idle early
+/// finishers. Small inputs (`n < 4`) and `jobs <= 1` run inline with no
+/// threads. A panic in any worker propagates to the caller.
+pub fn par_map_indexed<T, F>(n: usize, jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = jobs.min(n);
+    if workers <= 1 || n < 4 {
+        return (0..n).map(f).collect();
+    }
+    let claim = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = claim.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for handle in handles {
+            for (i, value) in handle.join().expect("parallel worker panicked") {
+                slots[i] = Some(value);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|v| v.expect("every claimed index produced a value"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_index_order_for_any_job_count() {
+        let squares: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for jobs in [0usize, 1, 2, 4, 16, 200] {
+            assert_eq!(par_map_indexed(100, jobs, |i| i * i), squares, "jobs {jobs}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_run_inline() {
+        assert_eq!(par_map_indexed(0, 8, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map_indexed(3, 8, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn uneven_task_costs_still_land_in_order() {
+        let out = par_map_indexed(32, 4, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(out, (0..32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,202 @@
+//! Integration tests for the memoised/parallel planning pipeline:
+//!
+//! 1. **Determinism under parallelism** — across the whole Table III
+//!    zoo, `.jobs(1)` and `.jobs(4)` produce byte-identical serialized
+//!    [`PlanArtifact`]s, for the default eager/lazy sweep *and* for
+//!    `Strategy::Search` (the acceptance property of the parallel
+//!    planner: worker count is a wall-clock knob, never a result knob).
+//! 2. **Cache transparency** — cached `compute_os` results equal
+//!    uncached ones across randomized op signatures (no collision or
+//!    aliasing in the content-addressed key), for every engine,
+//!    including the kernel-executing bottom-up method.
+//! 3. **Table equivalence** — `OsTable::build_cached` through a shared,
+//!    pre-warmed cache equals a plain `OsTable::build`.
+
+use dmo::ir::graph::Graph;
+use dmo::ir::op::{
+    Activation, BinaryKind, Conv2DParams, DepthwiseParams, OpKind, Padding, PoolKind, PoolParams,
+    UnaryKind,
+};
+use dmo::ir::{DType, Shape};
+use dmo::models;
+use dmo::overlap::{compute_os, Method, OsCache};
+use dmo::planner::{Heuristic, OsTable, PlanArtifact, Planner, Strategy};
+use dmo::util::rng::Rng;
+use std::sync::Arc;
+
+/// Analytic `O_s` + a two-heuristic allocator axis: the same
+/// configuration `rust/tests/order_search.rs` uses to keep the 11-model
+/// debug-mode sweeps fast, applied consistently to both jobs values.
+const TEST_HEURISTICS: [Heuristic; 2] = [Heuristic::SizeDesc, Heuristic::PairFrontier];
+
+fn sweep_artifact(g: &Graph, jobs: usize) -> String {
+    let plan = Planner::for_graph(g)
+        .dmo(true)
+        .method(Method::Analytic)
+        .heuristics(&TEST_HEURISTICS)
+        .jobs(jobs)
+        .plan()
+        .unwrap();
+    PlanArtifact::from_plan(g, &plan).to_json().to_string()
+}
+
+fn search_artifact(g: &Graph, jobs: usize) -> String {
+    let plan = Planner::for_graph(g)
+        .dmo(true)
+        .method(Method::Analytic)
+        .heuristics(&TEST_HEURISTICS)
+        .strategies(&[Strategy::Search {
+            beam: 4,
+            budget: 2_000,
+        }])
+        .jobs(jobs)
+        .plan()
+        .unwrap();
+    PlanArtifact::from_plan(g, &plan).to_json().to_string()
+}
+
+#[test]
+fn zoo_sweep_artifacts_identical_across_job_counts() {
+    for name in models::table3_names() {
+        let g = models::build(name).unwrap();
+        let serial = sweep_artifact(&g, 1);
+        let parallel = sweep_artifact(&g, 4);
+        assert_eq!(serial, parallel, "{name}: sweep artifact differs between jobs 1 and 4");
+    }
+}
+
+#[test]
+fn zoo_search_artifacts_identical_across_job_counts() {
+    for name in models::table3_names() {
+        let g = models::build(name).unwrap();
+        let serial = search_artifact(&g, 1);
+        let parallel = search_artifact(&g, 4);
+        assert_eq!(serial, parallel, "{name}: search artifact differs between jobs 1 and 4");
+    }
+}
+
+/// Random op signature over the kinds all three engines support, with
+/// shapes small enough that the bottom-up engine (which executes the
+/// kernel) stays cheap in debug mode.
+fn random_signature(rng: &mut Rng) -> (OpKind, Vec<Shape>) {
+    let h = rng.range(3, 9);
+    let w = rng.range(3, 9);
+    let c = rng.range(1, 4);
+    let x = Shape::hwc(h, w, c);
+    let stride = [1usize, 2][rng.below(2)];
+    let padding = if rng.chance(0.5) { Padding::Same } else { Padding::Valid };
+    match rng.below(5) {
+        0 => (
+            OpKind::Conv2D(Conv2DParams {
+                kernel: (rng.range(1, 3), rng.range(1, 3)),
+                stride: (stride, stride),
+                dilation: (1, 1),
+                padding,
+                out_channels: rng.range(1, 6),
+                act: [Activation::None, Activation::Relu, Activation::Relu6][rng.below(3)],
+            }),
+            vec![x],
+        ),
+        1 => (
+            OpKind::DepthwiseConv2D(DepthwiseParams {
+                kernel: (3, 3),
+                stride: (stride, stride),
+                dilation: (1, 1),
+                padding: Padding::Same,
+                depth_multiplier: rng.range(1, 2),
+                act: Activation::None,
+            }),
+            vec![x],
+        ),
+        2 => (
+            OpKind::Pool(PoolParams {
+                kind: if rng.chance(0.5) { PoolKind::Max } else { PoolKind::Avg },
+                kernel: (2, 2),
+                stride: (2, 2),
+                padding: Padding::Valid,
+            }),
+            vec![x],
+        ),
+        3 => (
+            OpKind::Unary([UnaryKind::Relu, UnaryKind::Relu6, UnaryKind::Copy][rng.below(3)]),
+            vec![x],
+        ),
+        _ => (
+            OpKind::Binary(if rng.chance(0.5) { BinaryKind::Add } else { BinaryKind::Mul }),
+            vec![x.clone(), x],
+        ),
+    }
+}
+
+#[test]
+fn cached_os_equals_uncached_across_random_signatures() {
+    let mut rng = Rng::new(0x05CA_C4E0);
+    let cache = OsCache::new();
+    let mut distinct = 0usize;
+    for case in 0..60 {
+        let (kind, in_shapes) = random_signature(&mut rng);
+        let refs: Vec<&Shape> = in_shapes.iter().collect();
+        let out = dmo::ops::infer_output(&kind, &refs).unwrap();
+        let dtype = if rng.chance(0.5) { DType::F32 } else { DType::I8 };
+        for method in [Method::Algorithmic, Method::Analytic, Method::BottomUp] {
+            let before = cache.stats();
+            let direct = compute_os(method, &kind, &refs, &out, dtype);
+            let cached = cache.get_or_compute(method, &kind, &refs, &out, dtype);
+            assert_eq!(direct, cached, "case {case} {method:?}: cold lookup diverged");
+            let warm = cache.get_or_compute(method, &kind, &refs, &out, dtype);
+            assert_eq!(direct, warm, "case {case} {method:?}: warm lookup diverged");
+            let after = cache.stats();
+            // the signature may repeat across cases; whichever way, the
+            // second lookup of this pair is always a hit
+            assert!(after.hits >= before.hits + 1, "case {case} {method:?}: no hit recorded");
+            if after.misses > before.misses {
+                distinct += 1;
+                assert_eq!(after.misses, before.misses + 1);
+            }
+        }
+    }
+    assert_eq!(cache.len(), distinct, "one entry per distinct signature, no aliasing");
+    assert!(distinct >= 30, "the generator must produce real variety, got {distinct}");
+}
+
+#[test]
+fn cached_table_build_equals_uncached_for_zoo_models() {
+    let cache = Arc::new(OsCache::new());
+    for name in ["tiny", "mobilenet_v1_0.25_128_int8"] {
+        let g = models::build(name).unwrap();
+        let plain = OsTable::build(&g, Method::Algorithmic);
+        let cold = OsTable::build_cached(&g, Method::Algorithmic, &cache);
+        let warm = OsTable::build_cached(&g, Method::Algorithmic, &cache);
+        assert_eq!(plain.per_op, cold.per_op, "{name}: cached build diverged");
+        assert_eq!(plain.per_op, warm.per_op, "{name}: warm build diverged");
+        assert_eq!(plain.method, warm.method);
+    }
+    let st = cache.stats();
+    assert!(st.hits > 0, "second builds must hit: {st:?}");
+    assert!(st.misses > 0);
+    assert_eq!(cache.len(), st.misses);
+}
+
+/// A plan produced through a shared cache and parallel workers is the
+/// very same artifact as the plain serial one — the end-to-end
+/// composition of both tentpole features.
+#[test]
+fn cache_plus_parallelism_never_changes_the_artifact() {
+    let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
+    let plain = Planner::for_graph(&g).dmo(true).jobs(1).plan().unwrap();
+    let cache = Arc::new(OsCache::new());
+    // warm the cache with a throwaway session first
+    let _ = Planner::for_graph(&g).dmo(true).os_cache(cache.clone()).plan().unwrap();
+    let tuned = Planner::for_graph(&g)
+        .dmo(true)
+        .jobs(4)
+        .os_cache(cache.clone())
+        .plan()
+        .unwrap();
+    assert_eq!(
+        PlanArtifact::from_plan(&g, &plain).to_json().to_string(),
+        PlanArtifact::from_plan(&g, &tuned).to_json().to_string(),
+        "shared cache + jobs must be invisible in the artifact"
+    );
+    assert!(cache.stats().hits > 0);
+}
