@@ -1,0 +1,108 @@
+//! Bench: §II-A operation splitting as a planning action, per zoo model.
+//!
+//! For every Table III model this plans twice with DMO on — the plain
+//! searched plan and the searched+split plan (`allow_splits`) — and
+//! records the best split vs no-split peak plus the recompute/reassembly
+//! overhead the winning rewrite pays. Asserts the headline properties:
+//! the split session is never worse than the unsplit one, and at least
+//! one model's split plan strictly beats its best unsplit layout (the
+//! §II-A MobileNet case). Results go to `BENCH_split.json`, uploaded by
+//! CI as part of the perf trajectory.
+
+use dmo::ir::graph::OpId;
+use dmo::models;
+use dmo::planner::split::analyse_pair;
+use dmo::planner::{Planner, DEFAULT_BEAM, DEFAULT_BUDGET};
+use dmo::report::fmt_bytes;
+use dmo::util::json::{num, obj, s, Json};
+use std::time::Instant;
+
+const MAX_PARTS: usize = 4;
+
+fn main() {
+    println!("=== §II-A operation splitting: searched split vs no-split (DMO on) ===\n");
+    println!(
+        "{:32} {:>10} {:>10} {:>8} {:>12} {:>12} {:>9}",
+        "model", "no-split", "split", "Δ", "recomputed", "reassembled", "wall"
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut wins = 0usize;
+    for name in models::table3_names() {
+        let g = models::build(name).unwrap();
+        let unsplit = Planner::for_graph(&g)
+            .dmo(true)
+            .search(DEFAULT_BEAM, DEFAULT_BUDGET)
+            .plan()
+            .unwrap();
+        let t0 = Instant::now();
+        let split = Planner::for_graph(&g)
+            .dmo(true)
+            .search(DEFAULT_BEAM, DEFAULT_BUDGET)
+            .allow_splits(MAX_PARTS)
+            .plan()
+            .unwrap();
+        let wall = t0.elapsed();
+        assert!(
+            split.peak() <= unsplit.peak(),
+            "{name}: split-enabled session {} worse than unsplit {}",
+            split.peak(),
+            unsplit.peak()
+        );
+
+        // recompute overhead of the winning rewrite, if one won
+        let (recomputed, assembled, spec) = match &split.rewrite {
+            Some(rw) => {
+                let sp = rw.splits[0];
+                let rep = analyse_pair(&g, OpId(sp.first), OpId(sp.second), sp.parts).unwrap();
+                wins += 1;
+                (
+                    rep.recomputed_elems,
+                    rep.assembled_elems,
+                    format!("{}→{}×{}", sp.first, sp.second, sp.parts),
+                )
+            }
+            None => (0, 0, "-".to_string()),
+        };
+        let delta = if split.peak() < unsplit.peak() {
+            format!(
+                "-{:.1}%",
+                100.0 * (unsplit.peak() - split.peak()) as f64 / unsplit.peak() as f64
+            )
+        } else {
+            "=".to_string()
+        };
+        println!(
+            "{:32} {:>10} {:>10} {:>8} {:>12} {:>12} {:>8.2}s",
+            name,
+            fmt_bytes(unsplit.peak()),
+            fmt_bytes(split.peak()),
+            delta,
+            recomputed,
+            assembled,
+            wall.as_secs_f64()
+        );
+
+        entries.push(obj(vec![
+            ("model", s(name)),
+            ("no_split_peak_bytes", num(unsplit.peak())),
+            ("split_peak_bytes", num(split.peak())),
+            ("split_won", Json::Bool(split.rewrite.is_some())),
+            ("split_spec", s(&spec)),
+            ("recomputed_elems", num(recomputed)),
+            ("assembled_elems", num(assembled)),
+            ("max_parts", num(MAX_PARTS)),
+            ("split_plan_wall_ms", num(wall.as_millis() as usize)),
+        ]));
+    }
+
+    assert!(
+        wins >= 1,
+        "at least one zoo model's searched+split plan must beat its best unsplit order"
+    );
+
+    let doc = obj(vec![("bench", s("split_savings")), ("models", Json::Arr(entries))]);
+    let path = "BENCH_split.json";
+    std::fs::write(path, doc.to_string()).unwrap();
+    println!("\nwrote {path} ({wins} models improved by splitting)");
+}

@@ -255,6 +255,32 @@ mod tests {
     }
 
     #[test]
+    fn split_plan_emitted_c_is_bit_identical_to_the_unsplit_reference() {
+        if cc_or_skip().is_none() {
+            return;
+        }
+        // the §II-A pair: the split rewrite wins, so the emitted unit
+        // contains banded kernels + concat-rows reassembly — and must
+        // still match the *unsplit* interpreter reference bit for bit
+        use crate::ir::op::{Activation, Padding};
+        use crate::ir::{DType, GraphBuilder, Shape};
+        let mut b = GraphBuilder::new("split_pair", DType::I8);
+        let x = b.input(Shape::hwc(64, 64, 8));
+        let c = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
+        let g = b.finish(&[d]);
+        let plan = Planner::for_graph(&g).dmo(true).allow_splits(4).plan().unwrap();
+        assert!(plan.rewrite.is_some(), "split must win this pair");
+        let unit = emit(&g, &plan, &EmitOptions::new("split_pair_model")).unwrap();
+        assert!(unit.source.contains("dmo_band_conv2d"), "banded conv kernel emitted");
+        assert!(unit.source.contains("dmo_band_dwconv2d"), "banded dw kernel emitted");
+        // each split op's weights appear once, shared by its bands
+        assert_eq!(unit.source.matches("static const dmo_wt dmo_w1_0").count(), 1);
+        let r = differential_test(&g, &plan, 42).unwrap();
+        assert_eq!(r.arena_bytes, plan.peak());
+    }
+
+    #[test]
     fn generator_mode_matches_embedded_weights() {
         if cc_or_skip().is_none() {
             return;

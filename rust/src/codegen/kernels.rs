@@ -35,6 +35,12 @@ pub(crate) enum Kernel {
     Concat,
     Pad,
     Softmax,
+    /// §II-A banded variants: full-frame padding/clipping geometry,
+    /// band-local addressing. Banded unary ops and concat-rows
+    /// reassembly reuse [`Kernel::Unary`] (they are offset copies).
+    BandConv2D,
+    BandDwConv2D,
+    BandPool,
 }
 
 impl Kernel {
@@ -52,12 +58,23 @@ impl Kernel {
             OpKind::Concat => Kernel::Concat,
             OpKind::Pad { .. } => Kernel::Pad,
             OpKind::Softmax => Kernel::Softmax,
+            OpKind::Band(b) => match b.inner.as_ref() {
+                OpKind::Conv2D(_) => Kernel::BandConv2D,
+                OpKind::DepthwiseConv2D(_) => Kernel::BandDwConv2D,
+                OpKind::Pool(_) => Kernel::BandPool,
+                // elementwise bands are plain offset copies
+                _ => Kernel::Unary,
+            },
+            OpKind::ConcatRows => Kernel::Unary,
         }
     }
 
     /// Does this kernel call the shared `dmo_act` helper?
     pub(crate) fn uses_act(self) -> bool {
-        matches!(self, Kernel::Conv2D | Kernel::DwConv2D | Kernel::Fc)
+        matches!(
+            self,
+            Kernel::Conv2D | Kernel::DwConv2D | Kernel::Fc | Kernel::BandConv2D | Kernel::BandDwConv2D
+        )
     }
 
     /// C source of the kernel function.
@@ -74,6 +91,9 @@ impl Kernel {
             Kernel::Concat => CONCAT,
             Kernel::Pad => PAD,
             Kernel::Softmax => SOFTMAX,
+            Kernel::BandConv2D => BAND_CONV2D,
+            Kernel::BandDwConv2D => BAND_DWCONV2D,
+            Kernel::BandPool => BAND_POOL,
         }
     }
 }
@@ -363,6 +383,118 @@ static void dmo_softmax(size_t ib, size_t ob, int rows, int d) {
 }
 ";
 
+const BAND_CONV2D: &str = "\
+static void dmo_band_conv2d(size_t ib, size_t ob, int fih, int iw, int id, int ir0,
+                            int oy0, int orows, int ow, int od,
+                            int kh, int kw, int sh, int sw, int dh, int dw, int ph, int pw, int a,
+                            const dmo_wt *w, const dmo_bt *bias) {
+    for (int oyl = 0; oyl < orows; oyl++) {
+        int oy = oy0 + oyl;
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int oc = 0; oc < od; oc++) {
+                float total = (float)bias[oc];
+                for (int ky = 0; ky < kh; ky++) {
+                    int iy = y0 + ky * dh;
+                    if (iy < 0 || iy >= fih) {
+                        continue;
+                    }
+                    for (int kx = 0; kx < kw; kx++) {
+                        int ix = x0 + kx * dw;
+                        if (ix < 0 || ix >= iw) {
+                            continue;
+                        }
+                        for (int ic = 0; ic < id; ic++) {
+                            float v = dmo_load(ib + (size_t)(((iy - ir0) * iw + ix) * id + ic) * DMO_ELEM_BYTES);
+                            total += v * (float)w[((ky * kw + kx) * id + ic) * od + oc];
+                        }
+                    }
+                }
+                dmo_store(ob + (size_t)((oyl * ow + ox) * od + oc) * DMO_ELEM_BYTES, dmo_act(total, a));
+            }
+        }
+    }
+}
+";
+
+const BAND_DWCONV2D: &str = "\
+static void dmo_band_dwconv2d(size_t ib, size_t ob, int fih, int iw, int id, int ir0,
+                              int oy0, int orows, int ow, int od,
+                              int kh, int kw, int sh, int sw, int dh, int dw, int ph, int pw,
+                              int mult, int bias_n, int a, const dmo_wt *w, const dmo_bt *bias) {
+    for (int oyl = 0; oyl < orows; oyl++) {
+        int oy = oy0 + oyl;
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int ic = 0; ic < id; ic++) {
+                for (int m = 0; m < mult; m++) {
+                    int oc = ic * mult + m;
+                    float total = (float)bias[oc < bias_n ? oc : bias_n - 1];
+                    for (int ky = 0; ky < kh; ky++) {
+                        int iy = y0 + ky * dh;
+                        if (iy < 0 || iy >= fih) {
+                            continue;
+                        }
+                        for (int kx = 0; kx < kw; kx++) {
+                            int ix = x0 + kx * dw;
+                            if (ix < 0 || ix >= iw) {
+                                continue;
+                            }
+                            float v = dmo_load(ib + (size_t)(((iy - ir0) * iw + ix) * id + ic) * DMO_ELEM_BYTES);
+                            total += v * (float)w[((ky * kw + kx) * id + ic) * mult + m];
+                        }
+                    }
+                    dmo_store(ob + (size_t)((oyl * ow + ox) * od + oc) * DMO_ELEM_BYTES, dmo_act(total, a));
+                }
+            }
+        }
+    }
+}
+";
+
+const BAND_POOL: &str = "\
+static void dmo_band_pool(size_t ib, size_t ob, int fih, int iw, int id, int ir0,
+                          int oy0, int orows, int ow, int od,
+                          int kh, int kw, int sh, int sw, int ph, int pw, int kind) {
+    for (int oyl = 0; oyl < orows; oyl++) {
+        int oy = oy0 + oyl;
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int c = 0; c < od; c++) {
+                float acc = kind == 0 ? -INFINITY : 0.0f;
+                int n = 0;
+                for (int ky = 0; ky < kh; ky++) {
+                    int iy = y0 + ky;
+                    if (iy < 0 || iy >= fih) {
+                        continue;
+                    }
+                    for (int kx = 0; kx < kw; kx++) {
+                        int ix = x0 + kx;
+                        if (ix < 0 || ix >= iw) {
+                            continue;
+                        }
+                        float v = dmo_load(ib + (size_t)(((iy - ir0) * iw + ix) * id + c) * DMO_ELEM_BYTES);
+                        if (kind == 0) {
+                            if (v > acc) {
+                                acc = v;
+                            }
+                        } else {
+                            acc += v;
+                        }
+                        n++;
+                    }
+                }
+                float r = kind == 0 ? acc : acc / (float)(n > 0 ? n : 1);
+                dmo_store(ob + (size_t)((oyl * ow + ox) * od + c) * DMO_ELEM_BYTES, r);
+            }
+        }
+    }
+}
+";
+
 /// Arena element accessors, specialised per activation dtype. The `i8`
 /// store replicates the interpreter's quantisation exactly: libm
 /// `roundf` (round half away from zero, what Rust's `f32::round` is),
@@ -468,6 +600,9 @@ mod tests {
             Kernel::Concat,
             Kernel::Pad,
             Kernel::Softmax,
+            Kernel::BandConv2D,
+            Kernel::BandDwConv2D,
+            Kernel::BandPool,
         ] {
             let src = k.source();
             assert!(src.starts_with("static void dmo_"), "{src}");

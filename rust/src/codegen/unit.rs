@@ -109,7 +109,14 @@ impl CUnit {
 }
 
 /// Lower `plan` for `graph` into a C unit.
+///
+/// `graph` is the graph the caller planned; when the plan carries a
+/// §II-A split rewrite the banded graph it actually indexes is resolved
+/// via [`Plan::graph_for`] — the emitted firmware then contains the
+/// banded kernels and the concat-rows reassembly, with each split op's
+/// weights stored in flash once and shared by its bands.
 pub fn emit(graph: &Graph, plan: &Plan, opts: &EmitOptions) -> Result<CUnit> {
+    let graph = plan.graph_for(graph);
     ensure!(!graph.ops.is_empty(), "cannot emit an empty graph");
     ensure!(
         plan.alloc.offsets.len() == graph.tensors.len(),
@@ -136,10 +143,11 @@ pub fn emit(graph: &Graph, plan: &Plan, opts: &EmitOptions) -> Result<CUnit> {
         );
     }
 
+    // count each weight group once — split bands share their source
+    // op's arrays, both here and in the emitted unit
     let total_weight_elems: usize = graph
-        .ops
-        .iter()
-        .flat_map(|op| op.weights.iter())
+        .unique_weight_ops()
+        .flat_map(|(_, op)| op.weights.iter())
         .map(|w| w.shape.num_elements())
         .sum();
     let embed = total_weight_elems <= opts.weight_embed_limit;
@@ -391,13 +399,15 @@ impl Emitter<'_> {
     }
 
     fn emit_weights(&self, c: &mut String) {
-        c.push_str("/* Weights (synthetic SplitMix64 stream, seed DMO_WEIGHT_SEED). */\n");
-        for (oi, op) in self.graph.ops.iter().enumerate() {
-            if op.weights.is_empty() {
-                continue;
-            }
+        c.push_str(
+            "/* Weights (synthetic SplitMix64 stream, seed DMO_WEIGHT_SEED).\n \
+             * One array set per weight key: the bands of a split op share\n \
+             * the original op's arrays. */\n",
+        );
+        for (oi, op) in self.graph.unique_weight_ops() {
+            let key = op.weight_key(oi);
             if self.embed {
-                let vals = gen_weights(op, self.opts.seed ^ oi as u64);
+                let vals = gen_weights(op, self.opts.seed ^ key as u64);
                 for (j, (w, tv)) in op.weights.iter().zip(&vals).enumerate() {
                     let ctype = if j == 0 { "dmo_wt" } else { "dmo_bt" };
                     let lits: Vec<String> = if self.dtype == DType::I8 {
@@ -407,7 +417,7 @@ impl Emitter<'_> {
                     };
                     let _ = writeln!(
                         c,
-                        "static const {ctype} dmo_w{oi}_{j}[{}] = {{",
+                        "static const {ctype} dmo_w{key}_{j}[{}] = {{",
                         w.shape.num_elements()
                     );
                     c.push_str(&wrap_values(&lits, 10));
@@ -418,7 +428,7 @@ impl Emitter<'_> {
                     let ctype = if j == 0 { "dmo_wt" } else { "dmo_bt" };
                     let _ = writeln!(
                         c,
-                        "static {ctype} dmo_w{oi}_{j}[{}];",
+                        "static {ctype} dmo_w{key}_{j}[{}];",
                         w.shape.num_elements()
                     );
                 }
@@ -429,17 +439,15 @@ impl Emitter<'_> {
             c.push_str(SPLITMIX);
             c.push('\n');
             c.push_str("static void dmo_weights_init(void) {\n    uint64_t s;\n");
-            for (oi, op) in self.graph.ops.iter().enumerate() {
-                if op.weights.is_empty() {
-                    continue;
-                }
-                let opseed = (self.opts.seed ^ oi as u64) ^ 0xD0D0_0000_0000_0000;
-                let _ = writeln!(c, "    s = {opseed:#x}ULL; /* op {oi} */");
+            for (oi, op) in self.graph.unique_weight_ops() {
+                let key = op.weight_key(oi);
+                let opseed = (self.opts.seed ^ key as u64) ^ 0xD0D0_0000_0000_0000;
+                let _ = writeln!(c, "    s = {opseed:#x}ULL; /* weight key {key} */");
                 for (j, w) in op.weights.iter().enumerate() {
                     let fill = if j == 0 { "dmo_fill_wt" } else { "dmo_fill_bt" };
                     let _ = writeln!(
                         c,
-                        "    {fill}(dmo_w{oi}_{j}, {}, &s);",
+                        "    {fill}(dmo_w{key}_{j}, {}, &s);",
                         w.shape.num_elements()
                     );
                 }
@@ -452,12 +460,13 @@ impl Emitter<'_> {
         let off = |t: TensorId| format!("DMO_OFF_T{}", t.0);
         let in0 = self.graph.tensor(op.inputs[0]);
         let out = self.graph.tensor(op.output);
+        let wk = op.weight_key(oi);
         match &op.kind {
             OpKind::Conv2D(p) => {
                 let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
                 let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
                 format!(
-                    "dmo_conv2d({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {}, {}, {}, dmo_w{oi}_0, dmo_w{oi}_1);",
+                    "dmo_conv2d({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {}, {}, {}, dmo_w{wk}_0, dmo_w{wk}_1);",
                     off(op.inputs[0]),
                     off(op.output),
                     p.kernel.0,
@@ -475,7 +484,7 @@ impl Emitter<'_> {
                 let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
                 let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
                 format!(
-                    "dmo_dwconv2d({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {}, {}, {}, {}, {}, dmo_w{oi}_0, dmo_w{oi}_1);",
+                    "dmo_dwconv2d({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {}, {}, {}, {}, {}, dmo_w{wk}_0, dmo_w{wk}_1);",
                     off(op.inputs[0]),
                     off(op.output),
                     p.kernel.0,
@@ -540,14 +549,14 @@ impl Emitter<'_> {
                 },
             ),
             OpKind::FullyConnected { out_features, act } => format!(
-                "dmo_fc({}, {}, {}, {out_features}, {}, dmo_w{oi}_0, dmo_w{oi}_1);",
+                "dmo_fc({}, {}, {}, {out_features}, {}, dmo_w{wk}_0, dmo_w{wk}_1);",
                 off(op.inputs[0]),
                 off(op.output),
                 in0.shape.num_elements(),
                 act_id(*act),
             ),
             OpKind::MatMulAccum { out_features } => format!(
-                "dmo_matmul({}, {}, {}, {out_features}, dmo_w{oi}_0, dmo_w{oi}_1);",
+                "dmo_matmul({}, {}, {}, {out_features}, dmo_w{wk}_0, dmo_w{wk}_1);",
                 off(op.inputs[0]),
                 off(op.output),
                 in0.shape.num_elements(),
@@ -588,6 +597,92 @@ impl Emitter<'_> {
                     off(op.output),
                     out.shape.num_elements() / d,
                 )
+            }
+            OpKind::Band(b) => {
+                let (iw, id) = (in0.shape.w(), in0.shape.c());
+                let (orows, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
+                let ph = b.pad_h();
+                match b.inner.as_ref() {
+                    OpKind::Conv2D(p) => format!(
+                        "dmo_band_conv2d({}, {}, {}, {iw}, {id}, {}, {}, {orows}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {ph}, {}, {}, dmo_w{wk}_0, dmo_w{wk}_1);",
+                        off(op.inputs[0]),
+                        off(op.output),
+                        b.full_in_h,
+                        b.in_row0,
+                        b.out_row0,
+                        p.kernel.0,
+                        p.kernel.1,
+                        p.stride.0,
+                        p.stride.1,
+                        p.dilation.0,
+                        p.dilation.1,
+                        pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1),
+                        act_id(p.act),
+                    ),
+                    OpKind::DepthwiseConv2D(p) => format!(
+                        "dmo_band_dwconv2d({}, {}, {}, {iw}, {id}, {}, {}, {orows}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {ph}, {}, {}, {}, {}, dmo_w{wk}_0, dmo_w{wk}_1);",
+                        off(op.inputs[0]),
+                        off(op.output),
+                        b.full_in_h,
+                        b.in_row0,
+                        b.out_row0,
+                        p.kernel.0,
+                        p.kernel.1,
+                        p.stride.0,
+                        p.stride.1,
+                        p.dilation.0,
+                        p.dilation.1,
+                        pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1),
+                        p.depth_multiplier,
+                        op.weights[1].shape.num_elements(),
+                        act_id(p.act),
+                    ),
+                    OpKind::Pool(p) => format!(
+                        "dmo_band_pool({}, {}, {}, {iw}, {id}, {}, {}, {orows}, {ow}, {od}, {}, {}, {}, {}, {ph}, {}, {});",
+                        off(op.inputs[0]),
+                        off(op.output),
+                        b.full_in_h,
+                        b.in_row0,
+                        b.out_row0,
+                        p.kernel.0,
+                        p.kernel.1,
+                        p.stride.0,
+                        p.stride.1,
+                        pad_before(iw, ow, p.kernel.1, p.stride.1, 1),
+                        pool_kind_id(p.kind),
+                    ),
+                    OpKind::Unary(u) => {
+                        // elementwise band: an offset copy of the mapped rows
+                        let delta =
+                            (b.out_row0 - b.in_row0) * iw * id * self.dtype.size_bytes();
+                        format!(
+                            "dmo_unary({} + {delta}, {}, {}, {});",
+                            off(op.inputs[0]),
+                            off(op.output),
+                            out.shape.num_elements(),
+                            unary_kind_id(*u),
+                        )
+                    }
+                    other => unreachable!("band inner `{}` is not emittable", other.name()),
+                }
+            }
+            OpKind::ConcatRows => {
+                // reassembly: sequential copies into the output at
+                // ascending row offsets — same sweep as the interpreter
+                let mut stmts = Vec::new();
+                let mut base = 0usize;
+                for &t in &op.inputs {
+                    let n = self.graph.tensor(t).shape.num_elements();
+                    stmts.push(format!(
+                        "dmo_unary({}, {} + {}, {n}, {});",
+                        off(t),
+                        off(op.output),
+                        base * self.dtype.size_bytes(),
+                        unary_kind_id(crate::ir::op::UnaryKind::Copy),
+                    ));
+                    base += n;
+                }
+                format!("{{\n        {}\n    }}", stmts.join("\n        "))
             }
         }
     }

@@ -18,6 +18,7 @@ pub const SERVE_SPEC: &[ArgSpec] = &[
     opt("--plan", "pre-computed plan artifact to start from (skips the planner search)"),
     opt("--model", "model the memory plan is for (default `tiny`)"),
     opt("--jobs", "planner worker threads for startup planning (default: all cores)"),
+    opt("--os-cache", "persisted O_s cache file: loaded before startup planning, saved after — cold replicas start warm"),
 ];
 
 /// Entry point used by `main.rs`.
@@ -34,6 +35,7 @@ pub fn serve_main(args: &Args) -> Result<()> {
         plan_artifact: args.value("--plan").map(PathBuf::from),
         plan_model: args.value("--model").unwrap_or("tiny").to_string(),
         jobs: args.parsed("--jobs", 0usize)?,
+        os_cache_path: args.value("--os-cache").map(PathBuf::from),
         ..Default::default()
     };
     println!(

@@ -44,6 +44,10 @@ pub struct ServeConfig {
     /// all cores). Plans are identical at any count — this is purely a
     /// startup-latency knob.
     pub jobs: usize,
+    /// Persisted `O_s` cache file: loaded (if present) before startup
+    /// planning and saved after, so fresh serve replicas start warm
+    /// across *process* boundaries, not just within one process.
+    pub os_cache_path: Option<PathBuf>,
     pub requests: u64,
     /// open-loop arrival rate, req/s
     pub rate: f64,
@@ -59,6 +63,7 @@ impl Default for ServeConfig {
             plan_artifact: None,
             plan_model: "tiny".to_string(),
             jobs: 0,
+            os_cache_path: None,
             requests: 256,
             rate: 500.0,
             queue_capacity: 64,
@@ -109,12 +114,31 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
             // plan on the configured worker count, through the
             // process-wide O_s cache: serve loops that restart (or test
             // harnesses that call `serve` repeatedly in one process)
-            // re-derive nothing
+            // re-derive nothing. With `--os-cache` the cache is also
+            // warmed from / persisted to disk, so a *fresh process*
+            // (cold replica, CI bench) starts warm too.
+            let cache = crate::overlap::OsCache::process_shared();
+            if let Some(p) = &cfg.os_cache_path {
+                if p.exists() {
+                    match cache.load(p) {
+                        Ok(n) => eprintln!("O_s cache: loaded {n} entries from {}", p.display()),
+                        Err(e) => {
+                            eprintln!("O_s cache: ignoring {} ({e:#}); starting cold", p.display())
+                        }
+                    }
+                }
+            }
             let pm = crate::planner::PlannedModel::new_with(
                 plan_graph_model,
                 cfg.jobs,
-                Some(crate::overlap::OsCache::process_shared()),
+                Some(cache.clone()),
             )?;
+            if let Some(p) = &cfg.os_cache_path {
+                match cache.save(p) {
+                    Ok(n) => eprintln!("O_s cache: saved {n} entries to {}", p.display()),
+                    Err(e) => eprintln!("O_s cache: could not save to {}: {e:#}", p.display()),
+                }
+            }
             let row = pm.row();
             (row.original, row.optimised)
         }

@@ -25,7 +25,14 @@ pub fn gen_input(graph: &Graph, t: TensorId, seed: u64) -> Vec<f32> {
 
 /// Execute `graph` in `plan`'s layout on `plan.order`. Returns the model
 /// outputs (as f32, whatever the dtype).
+///
+/// `graph` is the graph the caller planned — when the plan carries a
+/// §II-A split rewrite, the banded graph the order/offsets actually
+/// refer to is resolved via [`Plan::graph_for`]. The rewrite preserves
+/// input/output tensor ids, so callers feed and read the same tensors
+/// either way.
 pub fn run_plan(graph: &Graph, plan: &Plan, inputs: &[Vec<f32>], seed: u64) -> Result<Vec<Vec<f32>>> {
+    let graph = plan.graph_for(graph);
     let regions: Vec<Option<Region>> = (0..graph.tensors.len())
         .map(|t| {
             plan.alloc.offsets[t]
@@ -80,7 +87,9 @@ fn run_with_regions(
             .map(|&t| regions[t.0].context("op input unplaced"))
             .collect::<Result<_>>()?;
         let out_region = regions[op.output.0].context("op output unplaced")?;
-        let weights = gen_weights(op, seed ^ opid.0 as u64);
+        // seed by weight provenance: the bands of a split op draw the
+        // same stream the original (unsplit) op would
+        let weights = gen_weights(op, seed ^ op.weight_key(opid.0) as u64);
         let io = OpIo {
             in_shapes: &in_shapes,
             in_regions: &in_regions,
@@ -117,6 +126,12 @@ pub fn reference_outputs(graph: &Graph, seed: u64) -> Result<Vec<Vec<f32>>> {
 /// Execute `graph` under `plan` and under the disjoint reference layout
 /// with identical inputs/weights; fail unless outputs are bit-identical.
 /// Returns the (verified) planned-layout outputs.
+///
+/// For §II-A split plans this is the correctness anchor across the
+/// rewrite boundary: the planned run executes the *banded* graph in its
+/// overlapping arena, while the reference executes the *unsplit* graph
+/// in disjoint buffers — halo recomputation, weight provenance and
+/// reassembly all have to line up exactly for the bits to match.
 fn execute_and_prove(graph: &Graph, plan: &Plan, seed: u64) -> Result<Vec<Vec<f32>>> {
     let inputs: Vec<Vec<f32>> = graph
         .inputs

@@ -65,6 +65,22 @@ pub struct OpNode {
     pub output: TensorId,
     /// Flash-resident weights/biases.
     pub weights: Vec<WeightInfo>,
+    /// Identity of this op's synthetic weight stream; `None` means "my
+    /// own op index". Graph rewrites (§II-A operation splitting) point
+    /// every band of a split op at the *original* op's index, so all
+    /// bands draw the one weight tensor the unsplit op would — the
+    /// prerequisite for banded execution being bit-identical to the
+    /// unsplit reference. Ops sharing a `weight_seed` share one flash
+    /// weight array (see [`Graph::weight_bytes`] and the C emitter).
+    pub weight_seed: Option<usize>,
+}
+
+impl OpNode {
+    /// The weight-stream key of op `own_index`: the rewrite-provenance
+    /// index when set, the op's own index otherwise.
+    pub fn weight_key(&self, own_index: usize) -> usize {
+        self.weight_seed.unwrap_or(own_index)
+    }
 }
 
 /// A tensor-op graph. `ops` is stored in a valid execution order
@@ -107,11 +123,28 @@ impl Graph {
             .map(|(i, _)| OpId(i))
     }
 
-    /// Total weight bytes — the flash footprint discussed in §IV.
-    pub fn weight_bytes(&self) -> usize {
+    /// The ops owning a distinct weight group, in op order: the first
+    /// op carrying each weight key. Bands of a §II-A split share their
+    /// source op's key ([`OpNode::weight_seed`]), so flash accounting
+    /// ([`Graph::weight_bytes`]) and the C emitter's array emission
+    /// iterate this one definition in lockstep.
+    pub fn unique_weight_ops(&self) -> impl Iterator<Item = (usize, &OpNode)> {
+        let mut seen = std::collections::HashSet::new();
         self.ops
             .iter()
-            .flat_map(|op| op.weights.iter())
+            .enumerate()
+            .filter(move |(i, op)| !op.weights.is_empty() && seen.insert(op.weight_key(*i)))
+    }
+
+    /// Total weight bytes — the flash footprint discussed in §IV.
+    ///
+    /// Ops sharing a weight stream (the bands of a §II-A split all
+    /// carry the original op's [`OpNode::weight_seed`]) store their
+    /// weights in flash **once**, so each distinct weight key is
+    /// counted once.
+    pub fn weight_bytes(&self) -> usize {
+        self.unique_weight_ops()
+            .flat_map(|(_, op)| op.weights.iter())
             .map(|w| w.size_bytes())
             .sum()
     }
@@ -227,6 +260,7 @@ impl GraphBuilder {
             inputs: inputs.to_vec(),
             output: out,
             weights,
+            weight_seed: None,
         });
         out
     }

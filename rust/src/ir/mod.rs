@@ -10,9 +10,11 @@
 pub mod dtype;
 pub mod graph;
 pub mod op;
+pub mod rewrite;
 pub mod shape;
 
 pub use dtype::DType;
 pub use graph::{Graph, GraphBuilder, OpId, OpNode, TensorId, TensorInfo, TensorKind, WeightInfo};
-pub use op::{Activation, OpKind, Padding};
+pub use op::{Activation, BandParams, OpKind, Padding};
+pub use rewrite::{split_pair, Provenance, SplitSpec};
 pub use shape::Shape;

@@ -97,6 +97,67 @@ pub enum UnaryKind {
     Copy,
 }
 
+/// Static parameters of a §II-A *banded* window op: the underlying op
+/// restricted to a horizontal band of its output rows, with its input
+/// and output tensors holding only the rows the band touches.
+///
+/// All padding / clipping geometry is computed against the **full**
+/// frame (`full_in_h` / `full_out_h`), so each output element of a band
+/// is produced by exactly the arithmetic the unsplit op would use —
+/// banded execution is bit-identical to full execution by construction
+/// (the invariant `ir::rewrite::split_pair` and the interpreter's
+/// split-safety proofs rely on).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BandParams {
+    /// The full op this band is a slice of. Restricted to the window
+    /// family ([`OpKind::bandable`]): conv2d, dwconv2d, pool, unary.
+    pub inner: Box<OpKind>,
+    /// Height of the full (virtual) input frame — `P_h` and bounds
+    /// clipping are derived from this, not the band's tensor height.
+    pub full_in_h: usize,
+    /// Global row index of the input tensor's row 0 within the full
+    /// input frame (`0` when the op reads the whole input tensor).
+    pub in_row0: usize,
+    /// Height of the full (virtual) output frame.
+    pub full_out_h: usize,
+    /// First output row this band computes (global).
+    pub out_row0: usize,
+    /// Number of output rows this band computes.
+    pub out_rows: usize,
+}
+
+impl BandParams {
+    /// `(kernel_h, stride_h, dilation_h)` of the inner op.
+    pub fn window_h(&self) -> (usize, usize, usize) {
+        match self.inner.as_ref() {
+            OpKind::Conv2D(p) => (p.kernel.0, p.stride.0, p.dilation.0),
+            OpKind::DepthwiseConv2D(p) => (p.kernel.0, p.stride.0, p.dilation.0),
+            OpKind::Pool(p) => (p.kernel.0, p.stride.0, 1),
+            _ => (1, 1, 1),
+        }
+    }
+
+    /// `P_h` of the full-frame geometry (Eq 5).
+    pub fn pad_h(&self) -> usize {
+        let (kh, sh, dh) = self.window_h();
+        pad_before(self.full_in_h, self.full_out_h, kh, sh, dh)
+    }
+
+    /// Global input-row range `[lo, hi)` (clipped to the full frame)
+    /// this band's receptive field reads. Empty when the band's whole
+    /// window falls in padding.
+    pub fn in_rows_needed(&self) -> (usize, usize) {
+        let (kh, sh, dh) = self.window_h();
+        let ph = self.pad_h() as isize;
+        let lo = (self.out_row0 as isize * sh as isize - ph).clamp(0, self.full_in_h as isize);
+        let hi = ((self.out_row0 + self.out_rows - 1) as isize * sh as isize - ph
+            + ((kh - 1) * dh) as isize
+            + 1)
+            .clamp(0, self.full_in_h as isize);
+        (lo as usize, hi.max(lo) as usize)
+    }
+}
+
 /// An operation kind with its static parameters.
 ///
 /// `Eq`/`Hash` so a kind (with its parameters) can participate in the
@@ -142,6 +203,17 @@ pub enum OpKind {
     Reshape {
         to: Shape,
     },
+    /// §II-A banded slice of a window op — computes only the output
+    /// rows in [`BandParams::out_row0`], reading the input rows the
+    /// receptive-field halo requires. Produced by
+    /// [`crate::ir::rewrite::split_pair`]; never emitted by the model
+    /// builders.
+    Band(BandParams),
+    /// Concatenate along the row (H) axis — reassembles the banded
+    /// outputs of a split pair into the full tensor downstream
+    /// consumers expect. Row-major NHWC makes this a pure sequential
+    /// copy per input.
+    ConcatRows,
 }
 
 impl OpKind {
@@ -170,17 +242,35 @@ impl OpKind {
             OpKind::Pad { .. } => "pad",
             OpKind::Softmax => "softmax",
             OpKind::Reshape { .. } => "reshape",
+            OpKind::Band(b) => match b.inner.as_ref() {
+                OpKind::Conv2D(_) => "band-conv2d",
+                OpKind::DepthwiseConv2D(_) => "band-dwconv2d",
+                OpKind::Pool(_) => "band-pool",
+                _ => "band",
+            },
+            OpKind::ConcatRows => "concat-rows",
         }
     }
 
-    /// Number of activation inputs this kind consumes (Concat is variadic
-    /// and returns `None`).
+    /// Number of activation inputs this kind consumes (the concats are
+    /// variadic and return `None`).
     pub fn arity(&self) -> Option<usize> {
         match self {
             OpKind::Binary(_) => Some(2),
-            OpKind::Concat => None,
+            OpKind::Concat | OpKind::ConcatRows => None,
             _ => Some(1),
         }
+    }
+
+    /// Can this kind be sliced into horizontal bands by
+    /// [`crate::ir::rewrite::split_pair`]? The window family: output
+    /// row `r` depends only on a contiguous input-row window, so a band
+    /// of output rows needs only a band of input rows.
+    pub fn bandable(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2D(_) | OpKind::DepthwiseConv2D(_) | OpKind::Pool(_) | OpKind::Unary(_)
+        )
     }
 }
 

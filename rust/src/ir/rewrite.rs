@@ -1,0 +1,464 @@
+//! Graph rewrites — §II-A operation splitting as a first-class,
+//! executable transform.
+//!
+//! The paper splits a chained window-op pair into `k` vertical bands by
+//! hand (MobileNet v1: 96 KB → 66 KB peak) and calls automatic
+//! application future work. [`split_pair`] *is* that application: it
+//! materialises the banded computation as real graph ops —
+//! [`OpKind::Band`] slices whose halo recomputation is explicit in
+//! their shapes, plus an [`OpKind::ConcatRows`] reassembly — so the
+//! rewritten graph plans, interprets, emits as C and fit-checks through
+//! every downstream layer unchanged.
+//!
+//! Structure of the rewrite for a pair `first → second` split `parts`
+//! ways (`in → first → mid → second → out` becomes):
+//!
+//! ```text
+//! in ─┬─ band(first, rows m0p..m1p) ─ mid_band_p ─ band(second, rows o0p..o1p) ─ out_band_p ─┐
+//!     └─ … one chain per part p …                                                           ├─ concat-rows → out
+//!                                                                                           ┘
+//! ```
+//!
+//! Only one intermediate band is live at a time, so the peak drops to
+//! roughly `in + band + out` — at the price of recomputing the
+//! receptive-field halo rows shared by adjacent bands (§II-A's memory ↔
+//! compute trade, quantified by [`crate::planner::split::analyse_pair`]).
+//!
+//! Every rewritten op records where it came from ([`Provenance`]) and
+//! points its synthetic weight stream at the original op
+//! ([`crate::ir::graph::OpNode::weight_seed`]), which is what makes
+//! banded execution bit-identical to the unsplit reference — the
+//! correctness anchor `interp::validate_plan` enforces.
+
+use super::graph::{Graph, OpId, OpNode, TensorId, TensorInfo, TensorKind};
+use super::op::{BandParams, OpKind};
+use super::shape::Shape;
+use anyhow::{ensure, Result};
+
+/// One recorded split application: ops `first → second` of the graph it
+/// is applied to, banded into (up to) `parts` row bands. Serialised in
+/// [`crate::planner::PlanArtifact`] v3 so a split plan can be re-derived
+/// from the base graph in another process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SplitSpec {
+    /// Producer op index in the graph the spec applies to.
+    pub first: usize,
+    /// Consumer op index (must be the sole consumer of `first`'s output).
+    pub second: usize,
+    /// Number of row bands.
+    pub parts: usize,
+}
+
+/// Where a rewritten op came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpOrigin {
+    /// Copied unchanged; the id is the op's index in the source graph.
+    Kept(OpId),
+    /// Band `part` (of `parts`) of source op `of`.
+    Band { of: OpId, part: usize, parts: usize },
+    /// The concat-rows op reassembling source op `of`'s output.
+    Assemble { of: OpId },
+}
+
+/// Per-op provenance of a rewritten graph, indexed by the new op id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    pub per_op: Vec<OpOrigin>,
+}
+
+impl Provenance {
+    /// Origin of rewritten op `op`.
+    pub fn origin(&self, op: OpId) -> OpOrigin {
+        self.per_op[op.0]
+    }
+
+    /// Identity provenance for an unrewritten graph.
+    pub fn identity(n_ops: usize) -> Provenance {
+        Provenance {
+            per_op: (0..n_ops).map(|i| OpOrigin::Kept(OpId(i))).collect(),
+        }
+    }
+}
+
+/// A rewritten graph plus the map back to its source.
+#[derive(Debug, Clone)]
+pub struct SplitResult {
+    pub graph: Graph,
+    pub provenance: Provenance,
+}
+
+/// Per-part banded geometry: output rows `[out0, out1)` of the pair's
+/// final output, and the intermediate rows `[mid0, mid1)` the part must
+/// compute (adjacent parts' mid ranges overlap by the halo).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BandPlan {
+    pub out0: usize,
+    pub out1: usize,
+    pub mid0: usize,
+    pub mid1: usize,
+}
+
+/// Check whether the chain `first → second` can be split. Errors
+/// describe the first violated precondition.
+pub fn split_eligible(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<()> {
+    ensure!(parts >= 2, "parts must be >= 2");
+    ensure!(
+        first.0 < graph.ops.len() && second.0 < graph.ops.len(),
+        "op id out of range"
+    );
+    ensure!(
+        first.0 < second.0,
+        "producer must precede consumer in op order"
+    );
+    let f = graph.op(first);
+    let s = graph.op(second);
+    ensure!(f.kind.bandable(), "first op `{}` is not bandable", f.name);
+    ensure!(s.kind.bandable(), "second op `{}` is not bandable", s.name);
+    ensure!(
+        f.inputs.len() == 1 && s.inputs.len() == 1 && s.inputs[0] == f.output,
+        "second op must consume exactly the first op's output"
+    );
+    ensure!(
+        graph.consumers(f.output) == vec![second],
+        "intermediate `{}` must have exactly one consumer",
+        graph.tensor(f.output).name
+    );
+    ensure!(
+        graph.tensor(f.output).kind == TensorKind::Intermediate,
+        "cannot band through a graph input/output tensor"
+    );
+    let inp = graph.tensor(f.inputs[0]);
+    let mid = graph.tensor(f.output);
+    let out = graph.tensor(s.output);
+    ensure!(
+        inp.shape.rank() == 4 && mid.shape.rank() == 4 && out.shape.rank() == 4,
+        "need an NHWC chain"
+    );
+    ensure!(
+        out.shape.h() >= parts,
+        "output has {} rows, cannot split into {} bands",
+        out.shape.h(),
+        parts
+    );
+    Ok(())
+}
+
+/// The balanced row partition a `parts`-way split of `first → second`
+/// uses: part `p` produces output rows `[p·O_h/parts, (p+1)·O_h/parts)`
+/// through the intermediate rows its receptive field needs. Shared by
+/// the rewrite itself and the §II-A analysis
+/// ([`crate::planner::split::analyse_pair`]), so predicted and
+/// materialised geometry can never diverge.
+pub fn band_plan(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<Vec<BandPlan>> {
+    split_eligible(graph, first, second, parts)?;
+    let s = graph.op(second);
+    let mh = graph.tensor(graph.op(first).output).shape.h();
+    let oh = graph.tensor(s.output).shape.h();
+    let mut plans = Vec::with_capacity(parts);
+    for p in 0..parts {
+        let out0 = p * oh / parts;
+        let out1 = (p + 1) * oh / parts;
+        let probe = BandParams {
+            inner: Box::new(s.kind.clone()),
+            full_in_h: mh,
+            in_row0: 0,
+            full_out_h: oh,
+            out_row0: out0,
+            out_rows: out1 - out0,
+        };
+        let (mid0, mid1) = probe.in_rows_needed();
+        ensure!(
+            mid1 > mid0,
+            "band {p} of `{}` reads no intermediate rows (degenerate geometry)",
+            s.name
+        );
+        plans.push(BandPlan {
+            out0,
+            out1,
+            mid0,
+            mid1,
+        });
+    }
+    Ok(plans)
+}
+
+/// Materialise the §II-A split of `first → second` into `parts` bands.
+///
+/// The returned graph keeps every original tensor id (the bypassed
+/// intermediate becomes an orphan the planner skips) and appends the
+/// band tensors; downstream consumers of the pair's output are
+/// untouched because the reassembled tensor keeps its id. All ops carry
+/// explicit [`OpNode::weight_seed`] provenance so weight streams — and
+/// therefore numerics — match the unsplit graph exactly.
+pub fn split_pair(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<SplitResult> {
+    let plans = band_plan(graph, first, second, parts)?;
+    let f = graph.op(first).clone();
+    let s = graph.op(second).clone();
+    let fin = f.inputs[0];
+    let mid_info = graph.tensor(f.output).clone();
+    let out_info = graph.tensor(s.output).clone();
+    let in_h = graph.tensor(fin).shape.h();
+    let (mh, mw, mc) = (mid_info.shape.h(), mid_info.shape.w(), mid_info.shape.c());
+    let (oh, ow, oc) = (out_info.shape.h(), out_info.shape.w(), out_info.shape.c());
+
+    let mut g = Graph {
+        name: graph.name.clone(),
+        tensors: graph.tensors.clone(),
+        ops: Vec::with_capacity(graph.ops.len() + 2 * plans.len() - 1),
+        inputs: graph.inputs.clone(),
+        outputs: graph.outputs.clone(),
+    };
+    let mut per_op: Vec<OpOrigin> = Vec::with_capacity(g.ops.capacity());
+
+    // band tensors, appended past the existing ids
+    let mut mid_bands = Vec::with_capacity(plans.len());
+    let mut out_bands = Vec::with_capacity(plans.len());
+    for (p, bp) in plans.iter().enumerate() {
+        let mt = TensorId(g.tensors.len());
+        g.tensors.push(TensorInfo {
+            name: format!("{}_band{p}", mid_info.name),
+            shape: Shape::hwc(bp.mid1 - bp.mid0, mw, mc),
+            dtype: mid_info.dtype,
+            kind: TensorKind::Intermediate,
+        });
+        mid_bands.push(mt);
+        let ot = TensorId(g.tensors.len());
+        g.tensors.push(TensorInfo {
+            name: format!("{}_band{p}", out_info.name),
+            shape: Shape::hwc(bp.out1 - bp.out0, ow, oc),
+            dtype: out_info.dtype,
+            kind: TensorKind::Intermediate,
+        });
+        out_bands.push(ot);
+    }
+
+    for (i, op) in graph.ops.iter().enumerate() {
+        if i == first.0 {
+            continue; // re-emitted as bands at `second`'s slot
+        }
+        if i == second.0 {
+            for (p, bp) in plans.iter().enumerate() {
+                g.ops.push(OpNode {
+                    name: format!("{}_band{p}", f.name),
+                    kind: OpKind::Band(BandParams {
+                        inner: Box::new(f.kind.clone()),
+                        full_in_h: in_h,
+                        in_row0: 0,
+                        full_out_h: mh,
+                        out_row0: bp.mid0,
+                        out_rows: bp.mid1 - bp.mid0,
+                    }),
+                    inputs: vec![fin],
+                    output: mid_bands[p],
+                    weights: f.weights.clone(),
+                    weight_seed: Some(f.weight_key(first.0)),
+                });
+                per_op.push(OpOrigin::Band {
+                    of: first,
+                    part: p,
+                    parts: plans.len(),
+                });
+                g.ops.push(OpNode {
+                    name: format!("{}_band{p}", s.name),
+                    kind: OpKind::Band(BandParams {
+                        inner: Box::new(s.kind.clone()),
+                        full_in_h: mh,
+                        in_row0: bp.mid0,
+                        full_out_h: oh,
+                        out_row0: bp.out0,
+                        out_rows: bp.out1 - bp.out0,
+                    }),
+                    inputs: vec![mid_bands[p]],
+                    output: out_bands[p],
+                    weights: s.weights.clone(),
+                    weight_seed: Some(s.weight_key(second.0)),
+                });
+                per_op.push(OpOrigin::Band {
+                    of: second,
+                    part: p,
+                    parts: plans.len(),
+                });
+            }
+            g.ops.push(OpNode {
+                name: format!("{}_assemble", s.name),
+                kind: OpKind::ConcatRows,
+                inputs: out_bands.clone(),
+                output: s.output,
+                weights: Vec::new(),
+                weight_seed: Some(s.weight_key(second.0)),
+            });
+            per_op.push(OpOrigin::Assemble { of: second });
+            continue;
+        }
+        let mut kept = op.clone();
+        kept.weight_seed = Some(op.weight_key(i));
+        g.ops.push(kept);
+        per_op.push(OpOrigin::Kept(OpId(i)));
+    }
+
+    g.validate()?;
+    Ok(SplitResult {
+        graph: g,
+        provenance: Provenance { per_op },
+    })
+}
+
+/// Apply a recorded sequence of splits (each spec indexes into the graph
+/// produced by the previous application) and return the final graph with
+/// provenance composed back to the base graph where possible.
+pub fn apply_splits(graph: &Graph, splits: &[SplitSpec]) -> Result<(Graph, Provenance)> {
+    let mut g = graph.clone();
+    let mut prov = Provenance::identity(graph.ops.len());
+    for spec in splits {
+        let r = split_pair(&g, OpId(spec.first), OpId(spec.second), spec.parts)?;
+        let per_op = r
+            .provenance
+            .per_op
+            .iter()
+            .map(|o| match *o {
+                OpOrigin::Kept(prev) => prov.per_op[prev.0],
+                OpOrigin::Band { of, part, parts } => match prov.per_op[of.0] {
+                    OpOrigin::Kept(orig) => OpOrigin::Band {
+                        of: orig,
+                        part,
+                        parts,
+                    },
+                    // splitting an already-rewritten op: keep the nearest
+                    // ancestor id (weight provenance still composes via
+                    // `weight_seed`, which chains through `weight_key`)
+                    _ => OpOrigin::Band { of, part, parts },
+                },
+                OpOrigin::Assemble { of } => match prov.per_op[of.0] {
+                    OpOrigin::Kept(orig) => OpOrigin::Assemble { of: orig },
+                    _ => OpOrigin::Assemble { of },
+                },
+            })
+            .collect();
+        prov = Provenance { per_op };
+        g = r.graph;
+    }
+    Ok((g, prov))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::{gen_input, run_reference};
+    use crate::ir::op::{Activation, Padding};
+    use crate::ir::{DType, GraphBuilder};
+
+    /// The §II-A MobileNet shape: 1x1 conv doubling bytes, then a
+    /// stride-2 depthwise conv.
+    fn pair_graph(dtype: DType) -> Graph {
+        let mut b = GraphBuilder::new("pair", dtype);
+        let x = b.input(Shape::hwc(16, 16, 4));
+        let c = b.conv2d(x, 8, (1, 1), (1, 1), Padding::Same, Activation::Relu6);
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
+        b.finish(&[d])
+    }
+
+    #[test]
+    fn split_pair_materialises_bands_and_validates() {
+        let g = pair_graph(DType::F32);
+        let r = split_pair(&g, OpId(0), OpId(1), 4).unwrap();
+        // 4 × (A, B) + concat
+        assert_eq!(r.graph.ops.len(), 9);
+        assert_eq!(r.provenance.per_op.len(), 9);
+        assert!(matches!(
+            r.provenance.origin(OpId(0)),
+            OpOrigin::Band { of: OpId(0), part: 0, parts: 4 }
+        ));
+        assert!(matches!(r.provenance.origin(OpId(8)), OpOrigin::Assemble { of: OpId(1) }));
+        // the reassembled output keeps its tensor id
+        assert_eq!(r.graph.ops[8].output, g.ops[1].output);
+        // weight provenance points every band at the original op
+        assert_eq!(r.graph.ops[0].weight_seed, Some(0));
+        assert_eq!(r.graph.ops[2].weight_seed, Some(0));
+        assert_eq!(r.graph.ops[1].weight_seed, Some(1));
+        // … and flash stores each original weight tensor once
+        assert_eq!(r.graph.weight_bytes(), g.weight_bytes());
+    }
+
+    #[test]
+    fn banded_execution_is_bit_identical_to_unsplit() {
+        for dtype in [DType::F32, DType::I8] {
+            let g = pair_graph(dtype);
+            let inputs: Vec<Vec<f32>> =
+                g.inputs.iter().map(|&t| gen_input(&g, t, 7)).collect();
+            let want = run_reference(&g, &inputs, 7).unwrap();
+            for parts in [2usize, 3, 4, 7] {
+                let r = split_pair(&g, OpId(0), OpId(1), parts).unwrap();
+                let got = run_reference(&r.graph, &inputs, 7).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().flatten().zip(want.iter().flatten()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} parts={parts}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_row_counts_partition_exactly() {
+        // 15 output rows into 4 bands: 3 + 4 + 4 + 4
+        let mut b = GraphBuilder::new("odd", DType::F32);
+        let x = b.input(Shape::hwc(15, 8, 2));
+        let c = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let d = b.maxpool(c, (3, 3), (1, 1), Padding::Same);
+        let g = b.finish(&[d]);
+        let plans = band_plan(&g, OpId(0), OpId(1), 4).unwrap();
+        assert_eq!(plans.len(), 4);
+        assert_eq!(plans[0].out0, 0);
+        assert_eq!(plans.last().unwrap().out1, 15);
+        let covered: usize = plans.iter().map(|p| p.out1 - p.out0).sum();
+        assert_eq!(covered, 15);
+        // halo: adjacent mid ranges overlap
+        assert!(plans[1].mid0 < plans[0].mid1);
+        let r = split_pair(&g, OpId(0), OpId(1), 4).unwrap();
+        let inputs: Vec<Vec<f32>> = g.inputs.iter().map(|&t| gen_input(&g, t, 3)).collect();
+        assert_eq!(
+            run_reference(&g, &inputs, 3).unwrap(),
+            run_reference(&r.graph, &inputs, 3).unwrap()
+        );
+    }
+
+    #[test]
+    fn ineligible_pairs_are_rejected() {
+        // multi-consumer intermediate
+        let mut b = GraphBuilder::new("fanout", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 2));
+        let c = b.conv2d(x, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let p = b.conv2d(c, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let q = b.add(c, p);
+        let g = b.finish(&[q]);
+        assert!(split_eligible(&g, OpId(0), OpId(1), 2).is_err());
+        // non-chain (siblings)
+        let mut b = GraphBuilder::new("sib", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 2));
+        let a = b.conv2d(x, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let c = b.conv2d(x, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let s = b.add(a, c);
+        let g = b.finish(&[s]);
+        assert!(split_eligible(&g, OpId(0), OpId(1), 2).is_err());
+        // more parts than output rows
+        let g = pair_graph(DType::F32);
+        assert!(split_eligible(&g, OpId(0), OpId(1), 64).is_err());
+    }
+
+    #[test]
+    fn apply_splits_round_trips_deterministically() {
+        let g = pair_graph(DType::F32);
+        let spec = SplitSpec {
+            first: 0,
+            second: 1,
+            parts: 3,
+        };
+        let (a, prov_a) = apply_splits(&g, &[spec]).unwrap();
+        let (b, prov_b) = apply_splits(&g, &[spec]).unwrap();
+        assert_eq!(
+            crate::planner::graph_fingerprint(&a),
+            crate::planner::graph_fingerprint(&b)
+        );
+        assert_eq!(prov_a, prov_b);
+        assert_eq!(a.ops.len(), g.ops.len() + 2 * 3 + 1 - 2);
+    }
+}

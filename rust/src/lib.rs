@@ -76,6 +76,55 @@
 //! model zoo, and `cargo bench --bench order_search` records it (plus
 //! search wall time) to `BENCH_order_search.json`.
 //!
+//! ## When to split (§II-A)
+//!
+//! Reordering only rearranges which tensors are live together. When one
+//! chained window-op pair dominates the peak — MobileNet's channel-
+//! expanding 1×1 conv feeding a downsampling depthwise conv — §II-A
+//! *operation splitting* bands the pair into `k` horizontal slices so
+//! only `≈ 1/k` of the intermediate is live at once, recomputing the
+//! halo rows adjacent bands share. [`ir::rewrite::split_pair`]
+//! materialises the rewrite as real [`ir::op::OpKind::Band`] /
+//! [`ir::op::OpKind::ConcatRows`] ops, and
+//! [`planner::Planner::allow_splits`] folds it into the plan search:
+//! split candidates compete with every unsplit order and win only on a
+//! strictly lower allocator-scored peak. Split when the intermediate
+//! dominates and the pair's output is small (reassembly keeps `2×out`
+//! live for one step); prefer the fewest parts that clear the SRAM
+//! target, since the recompute overhead grows with `k`:
+//!
+//! ```
+//! use dmo::ir::op::{Activation, Padding};
+//! use dmo::ir::{DType, GraphBuilder, Shape};
+//! use dmo::planner::Planner;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // the §II-A shape: 32 KB input → 64 KB intermediate → 16 KB output
+//! let mut b = GraphBuilder::new("pair", DType::I8);
+//! let x = b.input(Shape::hwc(64, 64, 8));
+//! let c = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Same, Activation::None);
+//! let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
+//! let graph = b.finish(&[d]);
+//!
+//! let unsplit = Planner::for_graph(&graph).dmo(true).plan()?;
+//! let split = Planner::for_graph(&graph).dmo(true).allow_splits(4).plan()?;
+//! assert!(split.peak() < unsplit.peak(), "banding beats every unsplit order here");
+//! let rewrite = split.rewrite.as_ref().expect("the winning plan carries the rewrite");
+//! assert_eq!(rewrite.splits.len(), 1);
+//!
+//! // the banded plan executes bit-identically to the *unsplit* reference
+//! dmo::interp::validate_plan(&graph, &split, 42)?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The winning plan, split or not, flows unchanged through
+//! [`planner::PlanArtifact`] (format v3 records the split specs and
+//! re-derives the rewrite on load), [`interp`], [`codegen`] (banded
+//! kernels; each split op's weights stored in flash once) and
+//! [`mcu::deploy_matrix_planned`] — where §II-A is what puts the
+//! smallest MobileNet on a 64 KB-SRAM part that DMO alone just misses.
+//!
 //! ## Planning at scale
 //!
 //! `O_s` depends only on op geometry, so the planner memoises it

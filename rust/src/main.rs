@@ -41,8 +41,12 @@ fn write_out(dir: &str, file: &str, content: &str) -> Result<()> {
 
 /// Stderr progress line for `--verbose` planning sessions.
 fn report_candidate(c: &PlanCandidate) {
+    let split = match c.split {
+        Some(sp) => format!(" + split({}→{}×{})", sp.first, sp.second, sp.parts),
+        None => String::new(),
+    };
     eprintln!(
-        "  [{}/{}] {} + {} → peak {} (best {})",
+        "  [{}/{}] {} + {}{split} → peak {} (best {})",
         c.index + 1,
         c.total,
         c.strategy.name(),
@@ -50,6 +54,26 @@ fn report_candidate(c: &PlanCandidate) {
         report::fmt_bytes(c.peak),
         report::fmt_bytes(c.best_peak)
     );
+}
+
+/// Load a persisted `O_s` cache if the flagged file exists; a corrupt or
+/// stale file degrades to a cold start with a warning, never a failure.
+fn load_os_cache(cache: &dmo::overlap::OsCache, path: &str) {
+    if !Path::new(path).exists() {
+        return;
+    }
+    match cache.load(Path::new(path)) {
+        Ok(n) => eprintln!("  O_s cache: loaded {n} entries from {path}"),
+        Err(e) => eprintln!("  O_s cache: ignoring {path} ({e:#}); starting cold"),
+    }
+}
+
+/// Persist the `O_s` cache after a run (best-effort).
+fn save_os_cache(cache: &dmo::overlap::OsCache, path: &str) {
+    match cache.save(Path::new(path)) {
+        Ok(n) => eprintln!("  O_s cache: saved {n} entries to {path}"),
+        Err(e) => eprintln!("  O_s cache: could not save to {path}: {e:#}"),
+    }
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -89,16 +113,19 @@ fn run(argv: &[String]) -> Result<()> {
                     opt("--beam", "beam width for --strategy=search (default 8)"),
                     opt("--budget", "expansion budget for --strategy=search (default 50000)"),
                     opt("--jobs", "planner worker threads (default: all cores; plans are identical at any count)"),
+                    opt("--splits", "allow §II-A operation splitting into up to N bands (0 = off)"),
+                    opt("--os-cache", "persisted O_s cache file (loaded if present, saved after planning)"),
                     opt("--export", "write the plan as a reusable artifact"),
                     opt("--import", "load a plan artifact instead of planning"),
                 ],
             )?;
             let name = args
                 .pos(0)
-                .context("usage: dmo plan <model> [--baseline] [--map] [--strategy=search] [--export PATH] [--import PATH]")?
+                .context("usage: dmo plan <model> [--baseline] [--map] [--strategy=search] [--splits N] [--export PATH] [--import PATH]")?
                 .to_string();
             let g = models::build(&name)?;
             let os_cache = std::sync::Arc::new(dmo::overlap::OsCache::new());
+            let os_cache_path = args.value("--os-cache").map(str::to_string);
             let plan = match args.value("--import") {
                 Some(path) => {
                     let planning_only = args.flag("--baseline")
@@ -106,11 +133,14 @@ fn run(argv: &[String]) -> Result<()> {
                         || args.value("--strategy").is_some()
                         || args.value("--beam").is_some()
                         || args.value("--budget").is_some()
-                        || args.value("--jobs").is_some();
+                        || args.value("--jobs").is_some()
+                        || args.value("--splits").is_some()
+                        || args.value("--os-cache").is_some();
                     if planning_only {
                         bail!(
                             "--import loads a finished plan; --baseline/--verbose/--strategy/\
-                             --beam/--budget/--jobs only apply when planning from scratch"
+                             --beam/--budget/--jobs/--splits/--os-cache only apply when \
+                             planning from scratch"
                         );
                     }
                     let artifact = PlanArtifact::load(Path::new(path))?;
@@ -119,6 +149,9 @@ fn run(argv: &[String]) -> Result<()> {
                     plan
                 }
                 None => {
+                    if let Some(p) = &os_cache_path {
+                        load_os_cache(&os_cache, p);
+                    }
                     let mut session = Planner::for_graph(&g)
                         .dmo(!args.flag("--baseline"))
                         .jobs(args.parsed("--jobs", 0usize)?)
@@ -131,6 +164,7 @@ fn run(argv: &[String]) -> Result<()> {
                     }
                     let beam: usize = args.parsed("--beam", dmo::planner::DEFAULT_BEAM)?;
                     let budget: usize = args.parsed("--budget", dmo::planner::DEFAULT_BUDGET)?;
+                    let splits: usize = args.parsed("--splits", 0usize)?;
                     session = match strategy {
                         None | Some("sweep") => session,
                         Some("eager") => session.strategies(&[dmo::planner::Strategy::Eager]),
@@ -140,10 +174,17 @@ fn run(argv: &[String]) -> Result<()> {
                             "unknown strategy `{other}` (sweep | eager | lazy | search)"
                         ),
                     };
+                    if splits > 0 {
+                        session = session.allow_splits(splits);
+                    }
                     if args.flag("--verbose") {
                         session = session.on_candidate(report_candidate);
                     }
-                    session.plan()?
+                    let plan = session.plan()?;
+                    if let Some(p) = &os_cache_path {
+                        save_os_cache(&os_cache, p);
+                    }
+                    plan
                 }
             };
             println!(
@@ -175,11 +216,25 @@ fn run(argv: &[String]) -> Result<()> {
                     100.0 * cache_stats.hit_rate()
                 );
             }
+            if let Some(rw) = &plan.rewrite {
+                for sp in &rw.splits {
+                    println!(
+                        "  split: ops {}→{} banded ×{} ({} ops → {}; §II-A rewrite carried in the plan)",
+                        sp.first,
+                        sp.second,
+                        sp.parts,
+                        g.ops.len(),
+                        rw.graph.ops.len()
+                    );
+                }
+            }
+            // split plans index the rewritten graph — resolve for names
+            let pg = plan.graph_for(&g);
             for a in &plan.alloc.applied {
                 println!(
                     "  overlap {} ⇢ {}: {}",
-                    g.tensor(a.input).name,
-                    g.tensor(a.output).name,
+                    pg.tensor(a.input).name,
+                    pg.tensor(a.output).name,
                     report::fmt_bytes(a.bytes)
                 );
             }
@@ -200,26 +255,37 @@ fn run(argv: &[String]) -> Result<()> {
                     opt("--beam", "search beam width (default 8)"),
                     opt("--budget", "search expansion budget (default 50000)"),
                     opt("--jobs", "planner worker threads (default: all cores)"),
+                    opt("--splits", "add a searched+split session per row, up to N bands (0 = off)"),
+                    opt("--os-cache", "persisted O_s cache file (loaded if present, saved after the report)"),
                 ],
             )?;
             let beam: usize = args.parsed("--beam", dmo::planner::DEFAULT_BEAM)?;
             let budget: usize = args.parsed("--budget", dmo::planner::DEFAULT_BUDGET)?;
             let jobs: usize = args.parsed("--jobs", 0usize)?;
+            let splits: usize = args.parsed("--splits", 0usize)?;
             let names: Vec<&str> = match args.pos(0) {
                 Some(n) => vec![n],
                 None => models::table3_names(),
             };
-            // one cache for the whole report: every row's three sessions
-            // share it, and repeated shapes across models collapse too
+            // one cache for the whole report: every row's sessions share
+            // it, and repeated shapes across models collapse too
             let cache = dmo::overlap::OsCache::process_shared();
+            if let Some(p) = args.value("--os-cache") {
+                load_os_cache(&cache, p);
+            }
             let mut rows = Vec::new();
             for name in names {
-                let row = report::order_search_row_with(name, beam, budget, jobs, &cache)?;
+                let row =
+                    report::order_search_row_splits(name, beam, budget, jobs, &cache, splits)?;
                 eprintln!(
-                    "  {name}: eager {}, lazy {}, search {} (O_s cache {} hits / {} misses)",
+                    "  {name}: eager {}, lazy {}, search {}{} (O_s cache {} hits / {} misses)",
                     report::fmt_bytes(row.eager),
                     report::fmt_bytes(row.lazy),
                     report::fmt_bytes(row.search),
+                    match row.split {
+                        Some(p) => format!(", split {}", report::fmt_bytes(p)),
+                        None => String::new(),
+                    },
                     row.cache_hits,
                     row.cache_misses
                 );
@@ -227,6 +293,9 @@ fn run(argv: &[String]) -> Result<()> {
             }
             let md = report::order_search_markdown(&rows);
             println!("{md}");
+            if let Some(p) = args.value("--os-cache") {
+                save_os_cache(&cache, p);
+            }
             write_out(&out_dir(&args), "orders.md", &md)
         }
         "table2" => {
@@ -253,33 +322,48 @@ fn run(argv: &[String]) -> Result<()> {
             figures(&args)
         }
         "fit" => {
-            let args = Args::parse(rest, &[])?;
+            let args = Args::parse(
+                rest,
+                &[opt(
+                    "--splits",
+                    "also plan with §II-A splitting (up to N bands) and add a deploy(split) column",
+                )],
+            )?;
+            let splits: usize = args.parsed("--splits", 0usize)?;
             let names: Vec<&str> = match args.pos(0) {
                 Some(n) => vec![n],
                 None => models::table3_names(),
             };
             println!(
-                "{:32} {:20} {:>9} {:>9} {:>9}  deploy(orig) deploy(DMO)",
+                "{:32} {:20} {:>9} {:>9} {:>9}  deploy(orig) deploy(DMO) deploy(split)",
                 "model", "mcu", "arena0", "arenaD", "flash"
             );
             for name in names {
-                let pm = PlannedModel::new(models::build(name)?)?;
-                let row = pm.row();
+                let pm = if splits >= 2 {
+                    PlannedModel::new_split(models::build(name)?, splits, 0, None)?
+                } else {
+                    PlannedModel::new(models::build(name)?)?
+                };
                 // deployability gates on the emitted unit's full flash
-                // image (weights + code estimate), not weights alone
-                let flash = codegen::flash_footprint(&pm.graph).total();
-                for m in mcu::catalog() {
-                    let f0 = mcu::fit_flash(&m, row.original, flash);
-                    let f1 = mcu::fit_flash(&m, row.optimised, flash);
+                // image (weights + code estimate), not weights alone;
+                // the split column gates on the *rewritten* unit's image
+                let row = pm.row();
+                for r in mcu::deploy_matrix_planned(&pm) {
                     println!(
-                        "{:32} {:20} {:>9} {:>9} {:>9}  {:12} {}",
+                        "{:32} {:20} {:>9} {:>9} {:>9}  {:12} {:11} {}",
                         name,
-                        m.name,
+                        r.mcu,
                         report::fmt_bytes(row.original),
                         report::fmt_bytes(row.optimised),
-                        report::fmt_bytes(flash),
-                        if f0.deployable() { "yes" } else { "no" },
-                        if f1.deployable() { "yes" } else { "no" },
+                        report::fmt_bytes(r.flash_bytes),
+                        if r.without_dmo { "yes" } else { "no" },
+                        if r.with_dmo { "yes" } else { "no" },
+                        match r.with_split {
+                            Some(true) if r.rescued_by_split() => "yes (rescued)",
+                            Some(true) => "yes",
+                            Some(false) => "no",
+                            None => "-",
+                        },
                     );
                 }
             }
@@ -299,19 +383,30 @@ fn run(argv: &[String]) -> Result<()> {
             emit_c(&args)
         }
         "split" => {
-            let args = Args::parse(rest, &[])?;
-            let name = args.pos(0).context("usage: dmo split <model>")?;
+            let args = Args::parse(
+                rest,
+                &[opt("--parts", "max bands to consider (default 8)")],
+            )?;
+            let parts: usize = args.parsed("--parts", 8usize)?;
+            let name = args.pos(0).context("usage: dmo split <model> [--parts N]")?;
             let g = models::build(name)?;
-            match dmo::planner::split::best_split(&g, 8) {
+            match dmo::planner::split::best_split(&g, parts) {
                 Some(r) => {
                     println!(
-                        "{name}: split ops {}→{} into {} parts: {} → {} pair peak, {} elems recomputed",
+                        "{name}: split ops {}→{} into {} bands: {} → {} pair peak, \
+                         {} elems recomputed + {} copied by reassembly",
                         r.first.0,
                         r.second.0,
                         r.parts,
                         report::fmt_bytes(r.peak_before),
                         report::fmt_bytes(r.peak_after),
-                        r.recomputed_elems
+                        r.recomputed_elems,
+                        r.assembled_elems
+                    );
+                    println!(
+                        "  plan it end-to-end with `dmo plan {name} --splits={}` — the winning \
+                         plan carries the rewrite through artifact/interp/emit-c",
+                        r.parts
                     );
                 }
                 None => println!("{name}: no profitable split found"),
@@ -564,18 +659,29 @@ COMMANDS:
   models                      list the model zoo
   plan <model> [--baseline] [--map] [--verbose]
        [--strategy=sweep|eager|lazy|search] [--beam N] [--budget N]
-       [--jobs N] [--export PATH] [--import PATH]
+       [--jobs N] [--splits N] [--os-cache PATH]
+       [--export PATH] [--import PATH]
                               plan a model's arena (or reload an exported
                               plan artifact); print overlaps and O_s
                               cache hit/miss counters.
                               --strategy=search runs the memory-aware
                               execution-order search (never worse than
                               the eager/lazy sweep); --jobs parallelises
-                              the sweep + search without changing the plan
-  orders [<model>] [--beam N] [--budget N] [--jobs N] [--out DIR]
+                              the sweep + search without changing the plan.
+                              --splits=N additionally sweeps §II-A
+                              operation-splitting rewrites (peak pairs
+                              banded into up to N row bands) — a split
+                              plan wins only when it strictly beats every
+                              unsplit layout, and then flows through
+                              --export / validate / emit-c unchanged.
+                              --os-cache persists the O_s cache across
+                              processes (cold runs start warm)
+  orders [<model>] [--beam N] [--budget N] [--jobs N] [--splits N]
+         [--os-cache PATH] [--out DIR]
                               eager vs lazy vs searched execution order:
                               DMO-overlapped peaks across the zoo, with
-                              per-row O_s cache savings
+                              per-row O_s cache savings; --splits adds a
+                              searched+split session and split columns
   validate <model> [--import PATH]
                               execute the DMO plan (or a loaded artifact),
                               prove bit-exact safety
@@ -583,8 +689,10 @@ COMMANDS:
   table3 [--out DIR]          memory savings, 11 models (paper Table III)
   figures [--fig N] [--out DIR]
                               regenerate paper figures 1,2,3,6,8,9
-  fit [<model>]               MCU deployment matrix (§IV), incl. emitted
-                              flash image (weights + code estimate)
+  fit [<model>] [--splits N]  MCU deployment matrix (§IV), incl. emitted
+                              flash image (weights + code estimate);
+                              --splits adds a deploy(split) column showing
+                              targets rescued by §II-A banding
   emit-c <model> [--out PATH] [--seed N] [--embed-limit N] [--check]
   emit-c --import plan.json [--out PATH] [--check]
                               emit a standalone C99 firmware unit from a
@@ -592,13 +700,17 @@ COMMANDS:
                               offsets verbatim, flash-resident weights;
                               --check compiles + runs it and diffs
                               against the interpreter bit-for-bit
-  split <model>               best operation-splitting report (§II-A)
+  split <model> [--parts N]   best operation-splitting report (§II-A);
+                              `dmo plan --splits=N` applies it for real
   trace-op <relu|matmul|dwconv|conv>
                               ASCII access-pattern trace (Fig 3)
   serve [--requests N] [--rate R] [--batch B] [--plan PATH] [--model M]
-        [--jobs N]            end-to-end serving on the AOT'd model,
+        [--jobs N] [--os-cache PATH]
+                              end-to-end serving on the AOT'd model,
                               optionally starting from a plan artifact;
                               startup planning shares the process-wide
-                              O_s cache and runs on --jobs workers"
+                              O_s cache (persisted via --os-cache so cold
+                              replicas start warm) and runs on --jobs
+                              workers"
     );
 }

@@ -65,6 +65,16 @@ pub fn catalog() -> Vec<Mcu> {
             flash_bytes: 2 * 1024 * 1024,
             sram_bytes: 264 * 1024,
         },
+        Mcu {
+            // mid-range M4 with 64 KB SRAM: the class of part the
+            // paper's smallest MobileNet *just* misses even with DMO
+            // (64 KB + a few bytes of arena) — §II-A splitting is what
+            // puts it on this device
+            name: "STM32F303RE",
+            core: "Cortex-M4",
+            flash_bytes: 512 * 1024,
+            sram_bytes: 64 * 1024,
+        },
     ]
 }
 
@@ -106,7 +116,8 @@ pub fn fit(graph: &Graph, mcu: &Mcu, arena_bytes: usize) -> Fit {
     fit_flash(mcu, arena_bytes, graph.weight_bytes())
 }
 
-/// One row of the deployment matrix: does DMO change deployability?
+/// One row of the deployment matrix: does DMO — or §II-A splitting —
+/// change deployability?
 #[derive(Debug, Clone)]
 pub struct DeployRow {
     pub model: String,
@@ -117,13 +128,39 @@ pub struct DeployRow {
     pub flash_fits: bool,
     pub without_dmo: bool,
     pub with_dmo: bool,
+    /// Deployability of the best split plan, when one was computed and
+    /// a split rewrite won (`None` = no split plan to compare).
+    pub with_split: Option<bool>,
+}
+
+impl DeployRow {
+    /// A (model, target) pair that becomes deployable *only* through
+    /// §II-A splitting — the rescue the paper's future-work section
+    /// promises.
+    pub fn rescued_by_split(&self) -> bool {
+        self.with_split == Some(true) && !self.with_dmo && !self.without_dmo
+    }
 }
 
 /// Cross every catalog MCU with a planned model. Deployability checks
 /// the full emitted-unit flash footprint (weights + code estimate via
 /// [`crate::codegen::flash_footprint`]), not just SRAM.
 pub fn deploy_matrix(graph: &Graph, row: &SavingRow) -> Vec<DeployRow> {
+    deploy_matrix_split(graph, row, None)
+}
+
+/// [`deploy_matrix`] with an optional split plan: `split` carries the
+/// split plan's peak and the rewritten (banded) graph, whose flash
+/// footprint gates the split column — weights are stored once per
+/// original op ([`Graph::weight_bytes`] dedupes), but the banded
+/// kernels and extra call sites cost code bytes.
+pub fn deploy_matrix_split(
+    graph: &Graph,
+    row: &SavingRow,
+    split: Option<(usize, &Graph)>,
+) -> Vec<DeployRow> {
     let flash = crate::codegen::flash_footprint(graph).total();
+    let split_flash = split.map(|(_, g)| crate::codegen::flash_footprint(g).total());
     catalog()
         .iter()
         .map(|m| DeployRow {
@@ -133,8 +170,22 @@ pub fn deploy_matrix(graph: &Graph, row: &SavingRow) -> Vec<DeployRow> {
             flash_fits: flash <= m.flash_bytes,
             without_dmo: fit_flash(m, row.original, flash).deployable(),
             with_dmo: fit_flash(m, row.optimised, flash).deployable(),
+            with_split: split.map(|(peak, _)| {
+                fit_flash(m, peak, split_flash.unwrap_or(flash)).deployable()
+            }),
         })
         .collect()
+}
+
+/// Deployment matrix for a fully planned model, including the split
+/// column when [`crate::planner::PlannedModel::new_split`] found a
+/// winning rewrite.
+pub fn deploy_matrix_planned(pm: &crate::planner::PlannedModel) -> Vec<DeployRow> {
+    let split = pm
+        .split
+        .as_ref()
+        .and_then(|p| p.rewrite.as_ref().map(|r| (p.peak(), &r.graph)));
+    deploy_matrix_split(&pm.graph, &pm.row(), split)
 }
 
 #[cfg(test)]
@@ -189,6 +240,38 @@ mod tests {
         assert!(rows.iter().all(|r| r.with_dmo && r.flash_fits));
         // the matrix accounts for code, not just weights
         assert!(rows.iter().all(|r| r.flash_bytes > pm.graph.weight_bytes()));
+    }
+
+    /// The §II-A pay-off the paper leaves as future work: the smallest
+    /// MobileNet's DMO arena is 64 KB *plus a few bytes*, so a 64 KB
+    /// part refuses it — only the split plan (≈61 KB) deploys there.
+    #[test]
+    fn split_rescues_mnv1_on_the_64kb_part() {
+        let pm = PlannedModel::new_split(
+            models::build("mobilenet_v1_0.25_128_int8").unwrap(),
+            4,
+            0,
+            None,
+        )
+        .unwrap();
+        let split = pm.split.as_ref().expect("splitting must win on mnv1");
+        assert!(split.peak() < pm.dmo.peak());
+        assert!(split.peak() <= 64 * 1024, "split peak {} > 64 KB", split.peak());
+        let rows = deploy_matrix_planned(&pm);
+        let f303 = rows.iter().find(|r| r.mcu == "STM32F303RE").unwrap();
+        assert!(!f303.without_dmo, "96 KB arena cannot fit 64 KB SRAM");
+        assert!(!f303.with_dmo, "64 KB + ε arena cannot fit 64 KB SRAM");
+        assert_eq!(f303.with_split, Some(true));
+        assert!(f303.rescued_by_split());
+        assert_eq!(rows.iter().filter(|r| r.rescued_by_split()).count(), 1);
+    }
+
+    #[test]
+    fn unsplit_matrix_carries_no_split_column() {
+        let pm = PlannedModel::new(models::build("tiny_int8").unwrap()).unwrap();
+        let rows = deploy_matrix(&pm.graph, &pm.row());
+        assert!(rows.iter().all(|r| r.with_split.is_none()));
+        assert!(rows.iter().all(|r| !r.rescued_by_split()));
     }
 
     #[test]

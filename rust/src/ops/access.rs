@@ -31,7 +31,9 @@ pub fn step_count(kind: &OpKind, in_shapes: &[&Shape], out_shape: &Shape) -> usi
         | OpKind::Concat
         | OpKind::Pad { .. }
         | OpKind::Softmax
-        | OpKind::Reshape { .. } => out_shape.num_elements(),
+        | OpKind::Reshape { .. }
+        | OpKind::Band(_)
+        | OpKind::ConcatRows => out_shape.num_elements(),
         OpKind::MatMulAccum { out_features } => {
             // zero-init sweep + one update per (k, o)
             out_features + in_shapes[0].num_elements() * out_features
@@ -215,6 +217,99 @@ pub fn for_each_step(kind: &OpKind, in_shapes: &[&Shape], out_shape: &Shape, f: 
                     reads[0] = Some(r * d + c);
                     f(r * d + c, &reads);
                 }
+            }
+        }
+        OpKind::Band(b) => {
+            // mirror of the banded exec sweep: global-frame window
+            // clipping, band-local addressing
+            let (xs, os) = (in_shapes[0], out_shape);
+            let (iw, id) = (xs.w(), xs.c());
+            let (obh, ow, od) = (os.h(), os.w(), os.c());
+            let ph = b.pad_h() as isize;
+            let mut reads = [None];
+            match b.inner.as_ref() {
+                OpKind::Conv2D(p) => {
+                    let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+                    for oyl in 0..obh {
+                        let oy = b.out_row0 + oyl;
+                        for ox in 0..ow {
+                            let min_read = min_window_read(
+                                oy, ox, p.kernel, p.stride, p.dilation, (ph, pw), (b.full_in_h, iw),
+                            )
+                            .map(|(iy, ix)| ((iy - b.in_row0) * iw + ix) * id);
+                            reads[0] = min_read;
+                            for oc in 0..od {
+                                f((oyl * ow + ox) * od + oc, &reads);
+                            }
+                        }
+                    }
+                }
+                OpKind::DepthwiseConv2D(p) => {
+                    let mult = p.depth_multiplier;
+                    let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+                    for oyl in 0..obh {
+                        let oy = b.out_row0 + oyl;
+                        for ox in 0..ow {
+                            let cell = min_window_read(
+                                oy, ox, p.kernel, p.stride, p.dilation, (ph, pw), (b.full_in_h, iw),
+                            );
+                            for ic in 0..id {
+                                reads[0] =
+                                    cell.map(|(iy, ix)| ((iy - b.in_row0) * iw + ix) * id + ic);
+                                for m in 0..mult {
+                                    f((oyl * ow + ox) * od + ic * mult + m, &reads);
+                                }
+                            }
+                        }
+                    }
+                }
+                OpKind::Pool(p) => {
+                    let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, 1) as isize;
+                    for oyl in 0..obh {
+                        let oy = b.out_row0 + oyl;
+                        for ox in 0..ow {
+                            let cell = min_window_read(
+                                oy, ox, p.kernel, p.stride, (1, 1), (ph, pw), (b.full_in_h, iw),
+                            );
+                            for c in 0..od {
+                                reads[0] =
+                                    cell.map(|(iy, ix)| ((iy - b.in_row0) * iw + ix) * id + c);
+                                f((oyl * ow + ox) * od + c, &reads);
+                            }
+                        }
+                    }
+                }
+                OpKind::Unary(_) => {
+                    let delta = (b.out_row0 - b.in_row0) * iw * id;
+                    let n = out_shape.num_elements();
+                    for i in 0..n {
+                        reads[0] = Some(delta + i);
+                        f(i, &reads);
+                    }
+                }
+                // unreachable for validated graphs; treat as read-less
+                _ => {
+                    let n = out_shape.num_elements();
+                    for i in 0..n {
+                        f(i, &reads);
+                    }
+                }
+            }
+        }
+        OpKind::ConcatRows => {
+            let n_in = in_shapes.len();
+            let mut reads = vec![None; n_in];
+            let mut base = 0usize;
+            for (j, xs) in in_shapes.iter().enumerate() {
+                let n = xs.num_elements();
+                for i in 0..n {
+                    for r in reads.iter_mut() {
+                        *r = None;
+                    }
+                    reads[j] = Some(i);
+                    f(base + i, &reads);
+                }
+                base += n;
             }
         }
     }

@@ -531,6 +531,168 @@ pub fn execute_op(kind: &OpKind, io: &OpIo<'_>, arena: &mut Arena) -> Result<()>
                 arena.store(io.dtype, ob + i * t, v);
             }
         }
+        // §II-A banded window op: every output element is produced by the
+        // exact arithmetic of the inner (full) op — padding and clipping
+        // use the full-frame geometry, only the loop bounds and the
+        // band-local addressing differ. Bit-identity with the unsplit op
+        // follows element-wise.
+        OpKind::Band(b) => {
+            let (xs, os) = (io.in_shapes[0], io.out_shape);
+            let (iw, id) = (xs.w(), xs.c());
+            let (obh, ow, od) = (os.h(), os.w(), os.c());
+            let ph = b.pad_h() as isize;
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            match b.inner.as_ref() {
+                OpKind::Conv2D(p) => {
+                    let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+                    let (wts, bias) = (&io.weights[0], &io.weights[1]);
+                    ensure!(wts.len() == p.kernel.0 * p.kernel.1 * id * od, "band conv weight size");
+                    for oyl in 0..obh {
+                        let oy = b.out_row0 + oyl;
+                        for ox in 0..ow {
+                            let y0 = oy as isize * p.stride.0 as isize - ph;
+                            let x0 = ox as isize * p.stride.1 as isize - pw;
+                            for oc in 0..od {
+                                let mut total = bias[oc];
+                                for ky in 0..p.kernel.0 {
+                                    let iy = y0 + (ky * p.dilation.0) as isize;
+                                    if iy < 0 || iy as usize >= b.full_in_h {
+                                        continue;
+                                    }
+                                    let iyl = iy as usize - b.in_row0;
+                                    for kx in 0..p.kernel.1 {
+                                        let ix = x0 + (kx * p.dilation.1) as isize;
+                                        if ix < 0 || ix as usize >= iw {
+                                            continue;
+                                        }
+                                        for ic in 0..id {
+                                            let ioff = ((iyl * iw + ix as usize) * id + ic) * t;
+                                            let v = arena.load(io.dtype, ib + ioff);
+                                            let wv = wts[((ky * p.kernel.1 + kx) * id + ic) * od + oc];
+                                            total += v * wv;
+                                        }
+                                    }
+                                }
+                                let ooff = ((oyl * ow + ox) * od + oc) * t;
+                                arena.store(io.dtype, ob + ooff, act(total, p.act));
+                            }
+                        }
+                    }
+                }
+                OpKind::DepthwiseConv2D(p) => {
+                    let mult = p.depth_multiplier;
+                    let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+                    let (wts, bias) = (&io.weights[0], &io.weights[1]);
+                    ensure!(wts.len() == p.kernel.0 * p.kernel.1 * id * mult, "band dw weight size");
+                    for oyl in 0..obh {
+                        let oy = b.out_row0 + oyl;
+                        for ox in 0..ow {
+                            let y0 = oy as isize * p.stride.0 as isize - ph;
+                            let x0 = ox as isize * p.stride.1 as isize - pw;
+                            for ic in 0..id {
+                                for m in 0..mult {
+                                    let oc = ic * mult + m;
+                                    let mut total = bias[oc.min(bias.len() - 1)];
+                                    for ky in 0..p.kernel.0 {
+                                        let iy = y0 + (ky * p.dilation.0) as isize;
+                                        if iy < 0 || iy as usize >= b.full_in_h {
+                                            continue;
+                                        }
+                                        let iyl = iy as usize - b.in_row0;
+                                        for kx in 0..p.kernel.1 {
+                                            let ix = x0 + (kx * p.dilation.1) as isize;
+                                            if ix < 0 || ix as usize >= iw {
+                                                continue;
+                                            }
+                                            let ioff = ((iyl * iw + ix as usize) * id + ic) * t;
+                                            let v = arena.load(io.dtype, ib + ioff);
+                                            let wv = wts[((ky * p.kernel.1 + kx) * id + ic) * mult + m];
+                                            total += v * wv;
+                                        }
+                                    }
+                                    let ooff = ((oyl * ow + ox) * od + oc) * t;
+                                    arena.store(io.dtype, ob + ooff, act(total, p.act));
+                                }
+                            }
+                        }
+                    }
+                }
+                OpKind::Pool(p) => {
+                    let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, 1) as isize;
+                    for oyl in 0..obh {
+                        let oy = b.out_row0 + oyl;
+                        for ox in 0..ow {
+                            let y0 = oy as isize * p.stride.0 as isize - ph;
+                            let x0 = ox as isize * p.stride.1 as isize - pw;
+                            for c in 0..od {
+                                let mut acc = match p.kind {
+                                    PoolKind::Max => f32::NEG_INFINITY,
+                                    PoolKind::Avg => 0.0,
+                                };
+                                let mut n = 0usize;
+                                for ky in 0..p.kernel.0 {
+                                    let iy = y0 + ky as isize;
+                                    if iy < 0 || iy as usize >= b.full_in_h {
+                                        continue;
+                                    }
+                                    let iyl = iy as usize - b.in_row0;
+                                    for kx in 0..p.kernel.1 {
+                                        let ix = x0 + kx as isize;
+                                        if ix < 0 || ix as usize >= iw {
+                                            continue;
+                                        }
+                                        let v = arena.load(io.dtype, ib + ((iyl * iw + ix as usize) * id + c) * t);
+                                        match p.kind {
+                                            PoolKind::Max => {
+                                                if v > acc {
+                                                    acc = v;
+                                                }
+                                            }
+                                            PoolKind::Avg => acc += v,
+                                        }
+                                        n += 1;
+                                    }
+                                }
+                                let v = match p.kind {
+                                    PoolKind::Max => acc,
+                                    PoolKind::Avg => acc / n.max(1) as f32,
+                                };
+                                arena.store(io.dtype, ob + ((oyl * ow + ox) * od + c) * t, v);
+                            }
+                        }
+                    }
+                }
+                OpKind::Unary(u) => {
+                    // rows map 1:1: the band is a contiguous input sub-range
+                    let delta = (b.out_row0 - b.in_row0) * iw * id;
+                    let n = os.num_elements();
+                    for i in 0..n {
+                        let v = arena.load(io.dtype, ib + (delta + i) * t);
+                        let r = match u {
+                            crate::ir::op::UnaryKind::Relu => act(v, Activation::Relu),
+                            crate::ir::op::UnaryKind::Relu6 => act(v, Activation::Relu6),
+                            crate::ir::op::UnaryKind::Copy => v,
+                        };
+                        arena.store(io.dtype, ob + i * t, r);
+                    }
+                }
+                other => anyhow::bail!("op kind `{}` cannot execute as a band", other.name()),
+            }
+        }
+        OpKind::ConcatRows => {
+            // row-major NHWC: row-axis concat is a sequential copy per input
+            let ob = io.out_region.base;
+            let mut base = 0usize;
+            for (j, xs) in io.in_shapes.iter().enumerate() {
+                let n = xs.num_elements();
+                let ibj = io.in_regions[j].base;
+                for i in 0..n {
+                    let v = arena.load(io.dtype, ibj + i * t);
+                    arena.store(io.dtype, ob + (base + i) * t, v);
+                }
+                base += n;
+            }
+        }
     }
     Ok(())
 }

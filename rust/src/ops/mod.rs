@@ -108,6 +108,76 @@ pub fn infer_output(kind: &OpKind, inputs: &[&Shape]) -> Result<Shape> {
             }
             Ok(to.clone())
         }
+        OpKind::Band(b) => {
+            ensure!(inputs.len() == 1, "band takes 1 input");
+            let s = inputs[0];
+            ensure!(s.rank() == 4, "band input must be NHWC");
+            ensure!(b.inner.bandable(), "inner op `{}` is not bandable", b.inner.name());
+            ensure!(b.out_rows >= 1, "band must compute at least one row");
+            ensure!(
+                b.out_row0 + b.out_rows <= b.full_out_h,
+                "band rows {}..{} exceed full output height {}",
+                b.out_row0,
+                b.out_row0 + b.out_rows,
+                b.full_out_h
+            );
+            ensure!(
+                b.in_row0 + s.h() <= b.full_in_h,
+                "band input rows {}..{} exceed full input height {}",
+                b.in_row0,
+                b.in_row0 + s.h(),
+                b.full_in_h
+            );
+            // full-frame H geometry must be self-consistent …
+            let (kh, sh, dh) = b.window_h();
+            let padding = match b.inner.as_ref() {
+                OpKind::Conv2D(p) => Some(p.padding),
+                OpKind::DepthwiseConv2D(p) => Some(p.padding),
+                OpKind::Pool(p) => Some(p.padding),
+                _ => None,
+            };
+            if let Some(pad) = padding {
+                ensure!(
+                    out_dim(b.full_in_h, kh, sh, dh, pad) == b.full_out_h,
+                    "band full-frame geometry inconsistent: in_h {} -> out_h {} under the inner op",
+                    b.full_in_h,
+                    b.full_out_h
+                );
+            } else {
+                ensure!(
+                    b.full_in_h == b.full_out_h,
+                    "elementwise band needs matching full frame heights"
+                );
+            }
+            // … and the input band must cover the receptive field.
+            let (lo, hi) = b.in_rows_needed();
+            if hi > lo {
+                ensure!(
+                    b.in_row0 <= lo && hi <= b.in_row0 + s.h(),
+                    "band needs input rows {lo}..{hi} but holds {}..{}",
+                    b.in_row0,
+                    b.in_row0 + s.h()
+                );
+            }
+            // width/channels follow the inner op over the full-width band
+            let full_in = Shape::hwc(b.full_in_h, s.w(), s.c());
+            let full_out = infer_output(&b.inner, &[&full_in])?;
+            Ok(Shape::hwc(b.out_rows, full_out.w(), full_out.c()))
+        }
+        OpKind::ConcatRows => {
+            ensure!(!inputs.is_empty(), "concat-rows needs inputs");
+            let first = inputs[0];
+            ensure!(first.rank() == 4, "concat-rows inputs must be NHWC");
+            let mut h = 0;
+            for s in inputs {
+                ensure!(
+                    s.w() == first.w() && s.c() == first.c(),
+                    "concat-rows width/channel dims must match"
+                );
+                h += s.h();
+            }
+            Ok(Shape::hwc(h, first.w(), first.c()))
+        }
     }
 }
 

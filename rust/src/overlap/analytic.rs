@@ -210,10 +210,17 @@ pub fn os_analytic(
         OpKind::Softmax => vec![ob],
         // accumulate per channel in a register, channels ascend
         OpKind::GlobalAvgPool => vec![ob],
-        // the analytic family does not cover these; conservative zero
-        OpKind::FullyConnected { .. } | OpKind::MatMulAccum { .. } | OpKind::Concat | OpKind::Pad { .. } => {
-            in_shapes.iter().map(|_| 0).collect()
-        }
+        // the analytic family does not cover these; conservative zero.
+        // Banded ops (§II-A splits) stay zero too: the split pair's
+        // longer tensor scopes suppress DMO overlap on the banded
+        // region (§II-A caveat) — the exact algorithmic engine still
+        // measures whatever overlap genuinely survives.
+        OpKind::FullyConnected { .. }
+        | OpKind::MatMulAccum { .. }
+        | OpKind::Concat
+        | OpKind::Pad { .. }
+        | OpKind::Band(_)
+        | OpKind::ConcatRows => in_shapes.iter().map(|_| 0).collect(),
         OpKind::DepthwiseConv2D(_) | OpKind::Pool(_) => {
             let lb = linear_bound(kind, in_shapes, out_shape).expect("window op");
             vec![os_from_mind(lb.min_d(), in_shapes[0], out_shape, dtype)]

@@ -30,7 +30,9 @@ use super::{compute_os, Method, SafeOverlap};
 use crate::ir::op::OpKind;
 use crate::ir::shape::Shape;
 use crate::ir::DType;
+use crate::util::json::{num, obj, s, Json};
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -117,8 +119,24 @@ impl CacheStats {
 #[derive(Debug, Default)]
 pub struct OsCache {
     map: Mutex<HashMap<OpSignature, SafeOverlap>>,
+    /// Entries loaded from a persisted cache file, keyed by signature
+    /// hash (the file cannot reconstruct full signatures, and does not
+    /// need to: lookups hash the query). Promoted into `map` on first
+    /// hit so subsequent lookups skip the second probe.
+    disk: Mutex<HashMap<u64, SafeOverlap>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+}
+
+/// 64-bit FNV-1a over a signature's canonical debug form — the content
+/// address persisted cache files use. Stable within one build of this
+/// crate; [`OsCache::DISK_VERSION`] is bumped whenever the signature
+/// types change shape, so a stale file degrades to a cold start rather
+/// than wrong lookups.
+fn sig_hash(sig: &OpSignature) -> u64 {
+    let mut h = crate::util::fnv::Fnv::new();
+    h.bytes(format!("{sig:?}").as_bytes());
+    h.finish()
 }
 
 impl OsCache {
@@ -159,6 +177,21 @@ impl OsCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return hit;
         }
+        // a persisted entry counts as a hit — the engine never runs.
+        // The disk map keys a 64-bit content hash, not the full
+        // signature; reject hits whose arity cannot belong to this op
+        // (the residual same-arity collision risk is documented on
+        // `sig_hash` and accepted as astronomically unlikely).
+        let from_disk = self
+            .disk_lock()
+            .get(&sig_hash(&sig))
+            .filter(|hit| hit.per_input.len() == in_shapes.len())
+            .cloned();
+        if let Some(hit) = from_disk {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.lock().entry(sig).or_insert_with(|| hit.clone());
+            return hit;
+        }
         let value = compute_os(method, kind, in_shapes, out_shape, dtype);
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.lock().entry(sig).or_insert_with(|| value.clone());
@@ -183,11 +216,154 @@ impl OsCache {
         self.lock().is_empty()
     }
 
-    /// Drop every entry and reset the counters.
+    /// Drop every entry (including disk-loaded ones) and reset the
+    /// counters.
     pub fn clear(&self) {
         self.lock().clear();
+        self.disk_lock().clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+    }
+
+    /// File-format marker of a persisted cache.
+    pub const DISK_KIND: &'static str = "dmo-os-cache";
+    /// File-format version. Bump when [`OpSignature`]'s debug form (the
+    /// content address) changes shape — old files then load as empty
+    /// rather than aliasing wrong entries.
+    pub const DISK_VERSION: u64 = 1;
+    /// Revision of the `O_s` engines themselves, recorded in every
+    /// persisted cache and checked on load. A persisted entry bypasses
+    /// the engine *and* the planner's safety checker validates against
+    /// the same cached table, so serving values computed by an older,
+    /// since-changed engine would be silently unsafe across a build
+    /// boundary. **Bump this whenever any change can alter a
+    /// [`compute_os`] result** (engine math, access streams, kernel
+    /// sweep orders) — stale files then degrade to a cold start.
+    pub const ENGINE_REV: u64 = 1;
+
+    /// Load a cache persisted by [`OsCache::save`] and merge its
+    /// entries (existing in-memory entries win). Returns the number of
+    /// entries loaded. The file is versioned and content-hashed like a
+    /// [`crate::planner::PlanArtifact`]: a wrong kind, version or hash
+    /// is an error — callers typically warn and start cold.
+    pub fn load(&self, path: &Path) -> anyhow::Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text)?;
+        anyhow::ensure!(
+            v.get("kind").and_then(|k| k.as_str()) == Some(Self::DISK_KIND),
+            "{} is not an O_s cache file",
+            path.display()
+        );
+        let version = v.get("version").and_then(|x| x.as_usize()).unwrap_or(0);
+        anyhow::ensure!(
+            version as u64 == Self::DISK_VERSION,
+            "unsupported O_s cache version {version} (this build reads {})",
+            Self::DISK_VERSION
+        );
+        let engine = v.get("engine").and_then(|x| x.as_usize()).unwrap_or(0);
+        anyhow::ensure!(
+            engine as u64 == Self::ENGINE_REV,
+            "O_s cache was computed by engine revision {engine}; this build is revision {} — \
+             refusing stale overlap values",
+            Self::ENGINE_REV
+        );
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("O_s cache file has no entries array"))?;
+        let mut parsed: Vec<(u64, Vec<usize>)> = Vec::with_capacity(entries.len());
+        for e in entries {
+            let sig = e
+                .get("sig")
+                .and_then(|x| x.as_str())
+                .and_then(|x| u64::from_str_radix(x, 16).ok())
+                .ok_or_else(|| anyhow::anyhow!("bad `sig` in O_s cache entry"))?;
+            let os = e
+                .get("os")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("bad `os` in O_s cache entry"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("non-numeric O_s")))
+                .collect::<anyhow::Result<Vec<usize>>>()?;
+            parsed.push((sig, os));
+        }
+        let recorded = v
+            .get("hash")
+            .and_then(|x| x.as_str())
+            .and_then(|x| u64::from_str_radix(x, 16).ok())
+            .ok_or_else(|| anyhow::anyhow!("O_s cache file has no content hash"))?;
+        anyhow::ensure!(
+            entries_hash(&parsed) == recorded,
+            "O_s cache content does not match its recorded hash"
+        );
+        let n = parsed.len();
+        let mut disk = self.disk_lock();
+        for (sig, os) in parsed {
+            disk.entry(sig).or_insert(SafeOverlap { per_input: os });
+        }
+        Ok(n)
+    }
+
+    /// Persist every entry (computed and previously loaded) to `path`,
+    /// atomically (tmp + rename, like `PlanArtifact::save`). Returns
+    /// the number of entries written. Warm caches accumulate: saving
+    /// after a run writes the union of what was loaded and what this
+    /// process computed.
+    pub fn save(&self, path: &Path) -> anyhow::Result<usize> {
+        let mut union: HashMap<u64, Vec<usize>> = HashMap::new();
+        for (sig, os) in self.disk_lock().iter() {
+            union.insert(*sig, os.per_input.clone());
+        }
+        for (sig, os) in self.lock().iter() {
+            union.insert(sig_hash(sig), os.per_input.clone());
+        }
+        let mut entries: Vec<(u64, Vec<usize>)> = union.into_iter().collect();
+        entries.sort();
+        let hash = entries_hash(&entries);
+        let doc = obj(vec![
+            ("kind", s(Self::DISK_KIND)),
+            ("version", num(Self::DISK_VERSION as usize)),
+            ("engine", num(Self::ENGINE_REV as usize)),
+            ("hash", s(&format!("{hash:016x}"))),
+            (
+                "entries",
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|(sig, os)| {
+                            obj(vec![
+                                ("sig", s(&format!("{sig:016x}"))),
+                                ("os", Json::Arr(os.iter().map(|&v| num(v)).collect())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
+        }
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("{} has no file name", path.display()))?;
+        // pid + per-process counter, as PlanArtifact::save: concurrent
+        // savers never rename each other's half-written document
+        static SAVE_COUNTER: AtomicUsize = AtomicUsize::new(0);
+        let tmp = path.with_file_name(format!(
+            "{}.tmp.{}.{}",
+            file_name.to_string_lossy(),
+            std::process::id(),
+            SAVE_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, doc.to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            anyhow::anyhow!("renaming {} into place: {e}", path.display())
+        })?;
+        Ok(entries.len())
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<OpSignature, SafeOverlap>> {
@@ -195,6 +371,25 @@ impl OsCache {
         // HashMap ops; treat poisoning as unrecoverable
         self.map.lock().expect("O_s cache lock poisoned")
     }
+
+    fn disk_lock(&self) -> std::sync::MutexGuard<'_, HashMap<u64, SafeOverlap>> {
+        self.disk.lock().expect("O_s disk cache lock poisoned")
+    }
+}
+
+/// Content hash of a persisted cache's entry list (order-sensitive —
+/// the writer sorts by signature hash).
+fn entries_hash(entries: &[(u64, Vec<usize>)]) -> u64 {
+    let mut h = crate::util::fnv::Fnv::new();
+    h.word(entries.len());
+    for (sig, os) in entries {
+        h.word(*sig as usize);
+        h.word(os.len());
+        for &v in os {
+            h.word(v);
+        }
+    }
+    h.finish()
 }
 
 #[cfg(test)]
@@ -283,6 +478,50 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn disk_round_trip_warms_a_cold_process() {
+        let dir = std::env::temp_dir().join(format!("dmo-oscache-{}", std::process::id()));
+        let path = dir.join("os_cache.json");
+        let warm = OsCache::new();
+        let x = Shape::hwc(12, 12, 3);
+        let kind = conv((3, 3), (2, 2));
+        let out = crate::ops::infer_output(&kind, &[&x]).unwrap();
+        let expect = warm.get_or_compute(Method::Algorithmic, &kind, &[&x], &out, DType::F32);
+        assert_eq!(warm.save(&path).unwrap(), 1);
+
+        // a cold instance (≈ a fresh process) answers from the file —
+        // the lookup counts as a hit because no engine ran
+        let cold = OsCache::new();
+        assert_eq!(cold.load(&path).unwrap(), 1);
+        let got = cold.get_or_compute(Method::Algorithmic, &kind, &[&x], &out, DType::F32);
+        assert_eq!(got, expect);
+        assert_eq!(cold.stats(), CacheStats { hits: 1, misses: 0 });
+        // promoted entries keep answering without re-probing the file map
+        let again = cold.get_or_compute(Method::Algorithmic, &kind, &[&x], &out, DType::F32);
+        assert_eq!(again, expect);
+        assert_eq!(cold.stats().hits, 2);
+
+        // saving after more work persists the union
+        let y = Shape::hwc(6, 6, 2);
+        let k2 = OpKind::Unary(UnaryKind::Relu);
+        cold.get_or_compute(Method::Analytic, &k2, &[&y], &y, DType::I8);
+        assert_eq!(cold.save(&path).unwrap(), 2);
+        assert_eq!(OsCache::new().load(&path).unwrap(), 2);
+
+        // a different engine revision is refused outright (stale math)
+        let good = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, good.replace("\"engine\":1", "\"engine\":999")).unwrap();
+        assert!(OsCache::new().load(&path).is_err());
+
+        // tampered content fails the recorded hash
+        std::fs::write(&path, good.replace("\"os\":[", "\"os\":[9999,")).unwrap();
+        assert!(OsCache::new().load(&path).is_err());
+        // and a wrong kind is refused outright
+        std::fs::write(&path, "{\"kind\":\"something-else\",\"version\":1}").unwrap();
+        assert!(OsCache::new().load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

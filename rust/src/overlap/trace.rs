@@ -206,6 +206,9 @@ pub fn dummy_weights(kind: &OpKind, in_shapes: &[&Shape], _dtype: DType) -> Vec<
             let k = in_shapes[0].num_elements();
             vec![mk(k * out_features), mk(*out_features)]
         }
+        // a band carries the full inner op's weights (every band of a
+        // split reads the same filter)
+        OpKind::Band(b) => dummy_weights(&b.inner, in_shapes, _dtype),
         _ => vec![],
     }
 }

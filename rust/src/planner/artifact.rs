@@ -21,36 +21,13 @@ use super::error::PlanError;
 use super::order::{self, ExecOrder, Strategy};
 use super::scope::analyse;
 use super::search::SearchStats;
-use super::Plan;
+use super::{Plan, PlanRewrite};
 use crate::ir::graph::{Graph, OpId, TensorId};
+use crate::ir::rewrite::{self, SplitSpec};
 use crate::overlap::Method;
+use crate::util::fnv::Fnv;
 use crate::util::json::{num, obj, s, Json};
 use std::path::Path;
-
-/// 64-bit FNV-1a, the repository's deterministic structural hash.
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Fnv {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn bytes(&mut self, bs: &[u8]) {
-        for &b in bs {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-
-    fn word(&mut self, v: usize) {
-        self.bytes(&(v as u64).to_le_bytes());
-    }
-
-    fn str(&mut self, v: &str) {
-        self.word(v.len());
-        self.bytes(v.as_bytes());
-    }
-}
 
 /// Structural fingerprint of a graph: name, tensors (shape, dtype,
 /// kind), ops (kind incl. parameters, input/output wiring) and the
@@ -76,6 +53,13 @@ pub fn graph_fingerprint(graph: &Graph) -> u64 {
             h.word(t.0);
         }
         h.word(op.output.0);
+        // weight provenance changes execution (which stream an op
+        // draws), so rewritten graphs hash it; base graphs (all `None`)
+        // keep their pre-split fingerprints
+        if let Some(ws) = op.weight_seed {
+            h.str("ws");
+            h.word(ws);
+        }
     }
     h.word(graph.inputs.len());
     for &t in &graph.inputs {
@@ -85,7 +69,7 @@ pub fn graph_fingerprint(graph: &Graph) -> u64 {
     for &t in &graph.outputs {
         h.word(t.0);
     }
-    h.0
+    h.finish()
 }
 
 /// Content hash of an `O_s` table (method + every per-input budget).
@@ -99,7 +83,7 @@ fn os_table_hash(method: Method, per_op: &[Vec<usize>]) -> u64 {
             h.word(v);
         }
     }
-    h.0
+    h.finish()
 }
 
 fn hex(v: u64) -> String {
@@ -142,18 +126,31 @@ pub struct PlanArtifact {
     /// Search provenance, present iff `strategy` is the order search
     /// (format v2; absent from v1 artifacts, which predate search).
     pub search: Option<SearchStats>,
+    /// §II-A split rewrites the plan was computed on, in application
+    /// order (format v3; empty for unsplit plans and for v1/v2
+    /// artifacts). When non-empty, `order`/`offsets`/`os` index the
+    /// re-derived rewritten graph, and `fingerprint` still names the
+    /// *base* graph the consumer passes to [`PlanArtifact::to_plan`].
+    pub splits: Vec<SplitSpec>,
+    /// Fingerprint of the rewritten graph (v3, present iff `splits` is
+    /// non-empty) — re-verified after re-deriving the rewrite on load.
+    pub split_fingerprint: Option<u64>,
 }
 
 impl PlanArtifact {
     /// Artifact format version this build reads and writes. Version 1
-    /// (pre order-search, no `search` field) is still accepted by
-    /// [`PlanArtifact::load`] / [`PlanArtifact::to_plan`].
-    pub const VERSION: u64 = 2;
+    /// (pre order-search, no `search` field) and version 2 (no split
+    /// rewrites) are still accepted by [`PlanArtifact::load`] /
+    /// [`PlanArtifact::to_plan`].
+    pub const VERSION: u64 = 3;
 
     /// Marker stored in the `kind` field of every artifact file.
     pub const KIND: &'static str = "dmo-plan-artifact";
 
-    /// Snapshot a validated plan for `graph`.
+    /// Snapshot a validated plan for `graph` — the *base* graph the
+    /// planning session ran on. When the plan carries a split rewrite,
+    /// the artifact records the specs (and the rewritten graph's
+    /// fingerprint) so the rewrite is re-derived, not trusted, on load.
     pub fn from_plan(graph: &Graph, plan: &Plan) -> PlanArtifact {
         PlanArtifact {
             version: Self::VERSION,
@@ -174,6 +171,12 @@ impl PlanArtifact {
             os_per_op: plan.os.per_op.clone(),
             os_hash: os_table_hash(plan.os.method, &plan.os.per_op),
             search: plan.search,
+            splits: plan
+                .rewrite
+                .as_ref()
+                .map(|r| r.splits.clone())
+                .unwrap_or_default(),
+            split_fingerprint: plan.rewrite.as_ref().map(|r| graph_fingerprint(&r.graph)),
         }
     }
 
@@ -235,6 +238,26 @@ impl PlanArtifact {
                 ]),
             ));
         }
+        if !self.splits.is_empty() {
+            fields.push((
+                "splits",
+                Json::Arr(
+                    self.splits
+                        .iter()
+                        .map(|sp| {
+                            obj(vec![
+                                ("first", num(sp.first)),
+                                ("second", num(sp.second)),
+                                ("parts", num(sp.parts)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+            if let Some(fp) = self.split_fingerprint {
+                fields.push(("split_fingerprint", s(&hex(fp))));
+            }
+        }
         obj(fields)
     }
 
@@ -268,6 +291,40 @@ impl PlanArtifact {
                 found: version,
                 supported: Self::VERSION,
             });
+        }
+
+        // v3: split rewrite specs (absent from v1/v2 and unsplit plans)
+        let splits = match v.get("splits") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| PlanError::Malformed("field `splits` must be an array".into()))?
+                .iter()
+                .map(|entry| {
+                    let part = |key: &str| {
+                        entry
+                            .get(key)
+                            .and_then(|x| x.as_usize())
+                            .ok_or_else(|| PlanError::Malformed(format!("bad `splits.{key}`")))
+                    };
+                    Ok(SplitSpec {
+                        first: part("first")?,
+                        second: part("second")?,
+                        parts: part("parts")?,
+                    })
+                })
+                .collect::<Result<Vec<_>, PlanError>>()?,
+        };
+        let split_fingerprint = match v.get("split_fingerprint") {
+            None | Some(Json::Null) => None,
+            Some(x) => Some(parse_hex(x.as_str().ok_or_else(|| {
+                PlanError::Malformed("field `split_fingerprint` must be a string".into())
+            })?)?),
+        };
+        if !splits.is_empty() && split_fingerprint.is_none() {
+            return Err(PlanError::Malformed(
+                "split artifact is missing `split_fingerprint`".into(),
+            ));
         }
 
         // v2: search provenance (absent from v1 and from eager/lazy wins)
@@ -377,6 +434,8 @@ impl PlanArtifact {
             os_per_op,
             os_hash: parse_hex(&str_field("os_hash")?)?,
             search,
+            splits,
+            split_fingerprint,
         })
     }
 
@@ -456,30 +515,58 @@ impl PlanArtifact {
                 "O_s table does not match its recorded hash".into(),
             ));
         }
-        if self.offsets.len() != graph.tensors.len() {
+
+        // v3 split plans: re-derive the rewrite from the (verified) base
+        // graph — the banded graph is never trusted from the file, only
+        // its fingerprint is, so a tampered spec cannot smuggle in a
+        // different computation.
+        let rewrite_info = if self.splits.is_empty() {
+            None
+        } else {
+            let (rw_graph, provenance) = rewrite::apply_splits(graph, &self.splits)
+                .map_err(|e| PlanError::Malformed(format!("re-deriving split rewrite: {e:#}")))?;
+            let fp = graph_fingerprint(&rw_graph);
+            if Some(fp) != self.split_fingerprint {
+                return Err(PlanError::Malformed(
+                    "re-derived split graph does not match its recorded fingerprint".into(),
+                ));
+            }
+            Some(PlanRewrite {
+                splits: self.splits.clone(),
+                graph: rw_graph,
+                provenance,
+            })
+        };
+        // every structural check below runs against the graph the plan
+        // actually indexes — the rewrite when present, the base otherwise
+        let planned: &Graph = rewrite_info.as_ref().map(|r| &r.graph).unwrap_or(graph);
+
+        if self.offsets.len() != planned.tensors.len() {
             return Err(PlanError::Malformed(format!(
                 "offset table covers {} tensors, graph has {}",
                 self.offsets.len(),
-                graph.tensors.len()
+                planned.tensors.len()
             )));
         }
-        if self.os_per_op.len() != graph.ops.len()
+        if self.os_per_op.len() != planned.ops.len()
             || self
                 .os_per_op
                 .iter()
-                .zip(&graph.ops)
+                .zip(&planned.ops)
                 .any(|(row, op)| row.len() != op.inputs.len())
         {
             return Err(PlanError::Malformed(
                 "O_s table shape does not match the graph's ops".into(),
             ));
         }
-        if self.order.iter().any(|&i| i >= graph.ops.len())
+        if self.order.iter().any(|&i| i >= planned.ops.len())
             || self
                 .applied
                 .iter()
                 .any(|&(op, i, o, _)| {
-                    op >= graph.ops.len() || i >= graph.tensors.len() || o >= graph.tensors.len()
+                    op >= planned.ops.len()
+                        || i >= planned.tensors.len()
+                        || o >= planned.tensors.len()
                 })
         {
             return Err(PlanError::Malformed(
@@ -488,12 +575,12 @@ impl PlanArtifact {
         }
 
         let order = ExecOrder(self.order.iter().map(|&i| OpId(i)).collect());
-        if !order::is_valid(graph, &order) {
+        if !order::is_valid(planned, &order) {
             return Err(PlanError::InvalidLayout(
                 "stored execution order is not a valid topological order".into(),
             ));
         }
-        let scopes = analyse(graph, &order);
+        let scopes = analyse(planned, &order);
         let os = OsTable {
             per_op: self.os_per_op.clone(),
             method: self.method,
@@ -512,7 +599,7 @@ impl PlanArtifact {
                 })
                 .collect(),
         };
-        super::check(graph, &scopes, &os, &alloc)
+        super::check(planned, &scopes, &os, &alloc)
             .map_err(|e| PlanError::InvalidLayout(format!("{e:#}")))?;
         Ok(Plan {
             order,
@@ -522,6 +609,7 @@ impl PlanArtifact {
             heuristic: self.heuristic,
             os,
             search: self.search,
+            rewrite: rewrite_info,
         })
     }
 }
@@ -654,6 +742,61 @@ mod tests {
         let re = back.to_plan(&g).unwrap();
         assert_eq!(re.peak(), plan.peak());
         assert!(re.search.is_none());
+    }
+
+    #[test]
+    fn split_plan_round_trips_through_v3() {
+        use crate::ir::op::{Activation, Padding};
+        use crate::ir::{DType, GraphBuilder, Shape};
+        // the §II-A pair: splitting strictly beats every unsplit layout
+        let mut b = GraphBuilder::new("v3pair", DType::I8);
+        let x = b.input(Shape::hwc(64, 64, 8));
+        let c = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
+        let g = b.finish(&[d]);
+        let plan = Planner::for_graph(&g).dmo(true).allow_splits(4).plan().unwrap();
+        assert!(plan.rewrite.is_some(), "split must win the §II-A pair");
+        let art = PlanArtifact::from_plan(&g, &plan);
+        assert_eq!(art.version, 3);
+        assert!(!art.splits.is_empty());
+        assert!(art.split_fingerprint.is_some());
+        // fingerprint names the *base* graph the consumer holds
+        assert_eq!(art.fingerprint, graph_fingerprint(&g));
+        let text = art.to_json().to_string();
+        assert!(text.contains("\"splits\""));
+        let back = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(art, back);
+        let re = back.to_plan(&g).unwrap();
+        assert_eq!(re.peak(), plan.peak());
+        assert_eq!(re.order, plan.order);
+        assert_eq!(re.alloc.offsets, plan.alloc.offsets);
+        let rw = re.rewrite.expect("split rewrite must be re-derived on load");
+        assert_eq!(rw.splits, plan.rewrite.as_ref().unwrap().splits);
+        // a tampered spec re-derives a different graph and is refused
+        let mut bad = art.clone();
+        bad.splits[0].parts = 2;
+        assert!(matches!(bad.to_plan(&g), Err(PlanError::Malformed(_))));
+        // a split artifact without its fingerprint is malformed
+        let mut no_fp = art.clone();
+        no_fp.split_fingerprint = None;
+        let bad_text = no_fp.to_json().to_string();
+        assert!(PlanArtifact::from_json(&Json::parse(&bad_text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn unsplit_v3_artifacts_match_v2_shape() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let art = PlanArtifact::from_plan(&g, &plan);
+        assert!(art.splits.is_empty() && art.split_fingerprint.is_none());
+        let text = art.to_json().to_string();
+        assert!(!text.contains("\"splits\""), "unsplit plans carry no split fields");
+        // a v2 reader field-set still loads (we parse our own v2 files)
+        let mut v2 = art.clone();
+        v2.version = 2;
+        let back = PlanArtifact::from_json(&Json::parse(&v2.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.version, 2);
+        assert_eq!(back.to_plan(&g).unwrap().peak(), plan.peak());
     }
 
     #[test]

@@ -49,8 +49,27 @@ pub use scope::{analyse, Scope, Scopes};
 pub use search::{SearchStats, DEFAULT_BEAM, DEFAULT_BUDGET};
 
 use crate::ir::graph::Graph;
+use crate::ir::rewrite;
 use crate::overlap::{Method, OsCache};
+pub use crate::ir::rewrite::{Provenance, SplitSpec};
 use std::sync::Arc;
+
+/// The §II-A split rewrite a plan was computed on: a plan is no longer
+/// just "an order + offsets over the input graph" — it may be "a
+/// rewritten graph + order + offsets". Consumers resolve the graph the
+/// plan's indices refer to with [`Plan::graph_for`].
+#[derive(Debug, Clone)]
+pub struct PlanRewrite {
+    /// Applied split specs, in application order (each indexes into the
+    /// graph produced by the previous application). Recorded in
+    /// [`PlanArtifact`] v3 so the rewrite can be re-derived elsewhere.
+    pub splits: Vec<SplitSpec>,
+    /// The rewritten (banded) graph the plan's order, offsets and `O_s`
+    /// table refer to. Input/output tensor ids match the base graph.
+    pub graph: Graph,
+    /// Map from rewritten ops back to the base graph's ops.
+    pub provenance: Provenance,
+}
 
 /// A complete, validated memory plan.
 #[derive(Debug, Clone)]
@@ -65,12 +84,23 @@ pub struct Plan {
     /// Present iff the winning order came from [`Strategy::Search`] —
     /// the run's counters, recorded in the artifact as provenance.
     pub search: Option<SearchStats>,
+    /// Present iff the winning candidate planned a split-rewritten
+    /// graph ([`Planner::allow_splits`]); the plan's order/offsets then
+    /// index [`PlanRewrite::graph`], not the session's input graph.
+    pub rewrite: Option<PlanRewrite>,
 }
 
 impl Plan {
     /// Arena bytes required.
     pub fn peak(&self) -> usize {
         self.alloc.peak
+    }
+
+    /// The graph this plan's order/offsets actually describe: the split
+    /// rewrite when one won, otherwise `base` (the graph the session
+    /// planned).
+    pub fn graph_for<'a>(&'a self, base: &'a Graph) -> &'a Graph {
+        self.rewrite.as_ref().map(|r| &r.graph).unwrap_or(base)
     }
 }
 
@@ -82,6 +112,9 @@ pub struct PlanCandidate {
     pub strategy: Strategy,
     /// Allocation heuristic of this candidate.
     pub heuristic: Heuristic,
+    /// The §II-A split rewrite this candidate planned, if any
+    /// (`None` = the unsplit input graph).
+    pub split: Option<SplitSpec>,
     /// Arena peak this candidate achieved.
     pub peak: usize,
     /// Best (lowest) peak seen so far, including this candidate.
@@ -124,6 +157,8 @@ pub struct Planner<'a> {
     heuristics: Vec<Heuristic>,
     directions: Vec<Direction>,
     jobs: usize,
+    max_split_parts: usize,
+    split_limit: usize,
     os_cache: Option<Arc<OsCache>>,
     on_candidate: Option<Box<dyn FnMut(&PlanCandidate) + 'a>>,
 }
@@ -140,6 +175,8 @@ impl<'a> Planner<'a> {
             heuristics: HEURISTICS.to_vec(),
             directions: DIRECTIONS.to_vec(),
             jobs: 0,
+            max_split_parts: 0,
+            split_limit: 3,
             os_cache: None,
             on_candidate: None,
         }
@@ -192,6 +229,29 @@ impl<'a> Planner<'a> {
     /// kept only when `d` is listed here.
     pub fn directions(mut self, directions: &[Direction]) -> Self {
         self.directions = directions.to_vec();
+        self
+    }
+
+    /// Allow §II-A operation splitting as a planning action: the sweep
+    /// additionally plans the graph's most promising split rewrites
+    /// (each peak-defining pair banded into up to `max_parts` bands via
+    /// [`crate::ir::rewrite::split_pair`]) through the very same
+    /// strategy × heuristic grid — including [`Strategy::Search`], so
+    /// reordering and splitting are searched jointly. A split candidate
+    /// wins only when its allocator-scored peak is *strictly* lower
+    /// than every unsplit candidate; the winning plan then carries the
+    /// rewrite in [`Plan::rewrite`]. `0` (the default) disables
+    /// splitting; `max_parts >= 2` enables it.
+    pub fn allow_splits(mut self, max_parts: usize) -> Self {
+        self.max_split_parts = max_parts;
+        self
+    }
+
+    /// Cap how many distinct split *pairs* the sweep plans (default 3 —
+    /// each candidate re-runs the full strategy sweep on its rewritten
+    /// graph, so this bounds planning time).
+    pub fn split_limit(mut self, limit: usize) -> Self {
+        self.split_limit = limit;
         self
     }
 
@@ -265,7 +325,10 @@ impl<'a> Planner<'a> {
     /// the lowest peak memory figure being taken"). With
     /// [`Strategy::Search`] in the strategy list, the §II-B order axis
     /// itself is searched: beam-enumerated candidate orders (plus the
-    /// eager/lazy seeds) are each scored by the full allocator.
+    /// eager/lazy seeds) are each scored by the full allocator. With
+    /// [`Planner::allow_splits`], the graph's peak-defining split
+    /// rewrites are swept through the same grid — splitting competes
+    /// with reordering on equal (allocator-scored) terms.
     pub fn plan(mut self) -> Result<Plan, PlanError> {
         let graph = self.graph;
         if graph.tensors.is_empty() || graph.ops.is_empty() {
@@ -283,20 +346,34 @@ impl<'a> Planner<'a> {
                 }
             }
         }
+        if self.max_split_parts == 1 {
+            return Err(PlanError::BadSearchConfig {
+                what: "allow_splits needs at least 2 parts (0 disables splitting)",
+            });
+        }
 
         let jobs = self.effective_jobs();
 
         // O_s depends only on op geometry, never on serialisation order —
-        // build the table once for the whole sweep (perf pass, §Perf),
-        // through the attached cache when the session has one so
-        // repeated signatures (and repeated sessions) pay once.
-        let os = if self.dmo {
-            match &self.os_cache {
-                Some(cache) => OsTable::build_cached(graph, self.method, cache),
-                None => OsTable::build(graph, self.method),
+        // build each variant's table once for the whole sweep (perf
+        // pass, §Perf), always through a cache: the attached one when
+        // the session has it, else a session-local one, so split
+        // variants (which share almost every signature with the base
+        // graph) collapse to analysing the banded ops only.
+        let session_cache;
+        let cache_ref: &OsCache = match &self.os_cache {
+            Some(cache) => cache,
+            None => {
+                session_cache = OsCache::new();
+                &session_cache
             }
-        } else {
-            OsTable::disabled(graph)
+        };
+        let build_os = |g: &Graph| -> OsTable {
+            if self.dmo {
+                OsTable::build_cached(g, self.method, cache_ref)
+            } else {
+                OsTable::disabled(g)
+            }
         };
 
         // Candidate orders per strategy: one Kahn pass for eager/lazy,
@@ -307,31 +384,69 @@ impl<'a> Planner<'a> {
             scopes: Scopes,
             stats: Option<SearchStats>,
         }
-        let mut cands: Vec<Cand> = Vec::new();
-        for &strat in &self.strategies {
-            match strat {
-                Strategy::Eager | Strategy::Lazy => {
-                    let order = serialise(graph, strat);
-                    let scopes = analyse(graph, &order);
-                    cands.push(Cand {
-                        strategy: strat,
-                        order,
-                        scopes,
-                        stats: None,
-                    });
-                }
-                Strategy::Search { beam, budget } => {
-                    let outcome = search::search_with(graph, &os, beam, budget, jobs);
-                    for order in outcome.orders {
-                        let scopes = analyse(graph, &order);
+        let make_cands = |g: &Graph, os: &OsTable| -> Vec<Cand> {
+            let mut cands: Vec<Cand> = Vec::new();
+            for &strat in &self.strategies {
+                match strat {
+                    Strategy::Eager | Strategy::Lazy => {
+                        let order = serialise(g, strat);
+                        let scopes = analyse(g, &order);
                         cands.push(Cand {
                             strategy: strat,
                             order,
                             scopes,
-                            stats: Some(outcome.stats),
+                            stats: None,
                         });
                     }
+                    Strategy::Search { beam, budget } => {
+                        let outcome = search::search_with(g, os, beam, budget, jobs);
+                        for order in outcome.orders {
+                            let scopes = analyse(g, &order);
+                            cands.push(Cand {
+                                strategy: strat,
+                                order,
+                                scopes,
+                                stats: Some(outcome.stats),
+                            });
+                        }
+                    }
                 }
+            }
+            cands
+        };
+
+        // One sweep *variant* per planned graph: the input graph first
+        // (so an unsplit candidate wins all ties), then each proposed
+        // split rewrite. Each variant re-runs the full strategy sweep —
+        // a split changes the graph, so its best order must be searched
+        // anew rather than inherited.
+        struct Variant {
+            rewrite: Option<(SplitSpec, Graph, Provenance)>,
+            os: OsTable,
+            cands: Vec<Cand>,
+        }
+        let mut variants: Vec<Variant> = Vec::new();
+        {
+            let os = build_os(graph);
+            let cands = make_cands(graph, &os);
+            variants.push(Variant {
+                rewrite: None,
+                os,
+                cands,
+            });
+        }
+        if self.max_split_parts >= 2 {
+            for rep in split::candidates(graph, self.max_split_parts, self.split_limit) {
+                let Ok(rw) = rewrite::split_pair(graph, rep.first, rep.second, rep.parts) else {
+                    continue; // candidates() pre-checked; stay defensive
+                };
+                let os = build_os(&rw.graph);
+                let cands = make_cands(&rw.graph, &os);
+                variants.push(Variant {
+                    rewrite: Some((rep.spec(), rw.graph, rw.provenance)),
+                    os,
+                    cands,
+                });
             }
         }
 
@@ -345,58 +460,90 @@ impl<'a> Planner<'a> {
         // reduction instead — no thread spawns for microsecond sweeps,
         // and `--verbose` progress streams per candidate as it always
         // did. The gate depends only on the graph, never on `jobs`.
-        let cells: Vec<(usize, Heuristic)> = (0..cands.len())
-            .flat_map(|ci| heuristics.iter().map(move |&h| (ci, h)))
-            .collect();
+        let mut cells: Vec<(usize, usize, Heuristic)> = Vec::new();
+        for (vi, v) in variants.iter().enumerate() {
+            for ci in 0..v.cands.len() {
+                for &h in &heuristics {
+                    cells.push((vi, ci, h));
+                }
+            }
+        }
+        fn vgraph<'a>(variants: &'a [Variant], base: &'a Graph, vi: usize) -> &'a Graph {
+            variants[vi]
+                .rewrite
+                .as_ref()
+                .map(|(_, g, _)| g)
+                .unwrap_or(base)
+        }
         let parallel = jobs > 1 && cells.len() >= 2 && graph.ops.len() >= 16;
         let mut precomputed: Vec<Option<Allocation>> = Vec::new();
         if parallel {
             precomputed = crate::util::par::par_map_indexed(cells.len(), jobs, |i| {
-                let (ci, h) = cells[i];
-                allocate(graph, &cands[ci].scopes, &os, h)
+                let (vi, ci, h) = cells[i];
+                allocate(
+                    vgraph(&variants, graph, vi),
+                    &variants[vi].cands[ci].scopes,
+                    &variants[vi].os,
+                    h,
+                )
             })
             .into_iter()
             .map(Some)
             .collect();
         }
 
-        let mut best: Option<Plan> = None;
+        // track the winner by cell index and keep only its Allocation;
+        // the Plan (graph/scope/table clones) is built once after the
+        // sweep instead of per improvement
+        let mut best: Option<(usize, usize, Heuristic, Allocation)> = None;
         let total = cells.len();
-        for (index, &(ci, h)) in cells.iter().enumerate() {
-            let cand = &cands[ci];
+        for (index, &(vi, ci, h)) in cells.iter().enumerate() {
+            let v = &variants[vi];
+            let cand = &v.cands[ci];
             let a = match precomputed.get_mut(index) {
                 Some(slot) => slot.take().expect("every sweep cell allocated"),
-                None => allocate(graph, &cand.scopes, &os, h),
+                None => allocate(vgraph(&variants, graph, vi), &cand.scopes, &v.os, h),
             };
             let peak = a.peak;
-            let improved = best.as_ref().map_or(true, |b| peak < b.alloc.peak);
+            // strict `<`: a split rewrite must *beat* the best unsplit
+            // layout to win (base cells come first in sweep order)
+            let improved = best.as_ref().map_or(true, |(_, _, _, ba)| peak < ba.peak);
             if improved {
-                best = Some(Plan {
-                    order: cand.order.clone(),
-                    scopes: cand.scopes.clone(),
-                    alloc: a,
-                    strategy: cand.strategy,
-                    heuristic: h,
-                    os: os.clone(),
-                    search: cand.stats,
-                });
+                best = Some((vi, ci, h, a));
             }
             if let Some(cb) = self.on_candidate.as_mut() {
                 cb(&PlanCandidate {
                     strategy: cand.strategy,
                     heuristic: h,
+                    split: v.rewrite.as_ref().map(|(spec, _, _)| *spec),
                     peak,
-                    best_peak: best.as_ref().map(|b| b.alloc.peak).unwrap_or(peak),
+                    best_peak: best.as_ref().map(|(_, _, _, ba)| ba.peak).unwrap_or(peak),
                     index,
                     total,
                 });
             }
         }
 
-        let plan = best.ok_or_else(|| PlanError::EmptyGraph {
+        let (vi, ci, heuristic, alloc) = best.ok_or_else(|| PlanError::EmptyGraph {
             model: graph.name.clone(),
         })?;
-        check(graph, &plan.scopes, &plan.os, &plan.alloc)
+        let v = &variants[vi];
+        let cand = &v.cands[ci];
+        let plan = Plan {
+            order: cand.order.clone(),
+            scopes: cand.scopes.clone(),
+            alloc,
+            strategy: cand.strategy,
+            heuristic,
+            os: v.os.clone(),
+            search: cand.stats,
+            rewrite: v.rewrite.as_ref().map(|(spec, g, prov)| PlanRewrite {
+                splits: vec![*spec],
+                graph: g.clone(),
+                provenance: prov.clone(),
+            }),
+        };
+        check(plan.graph_for(graph), &plan.scopes, &plan.os, &plan.alloc)
             .map_err(|e| PlanError::InvalidLayout(format!("{e:#}")))?;
         Ok(plan)
     }
@@ -428,6 +575,10 @@ pub struct PlannedModel {
     pub graph: Graph,
     pub baseline: Plan,
     pub dmo: Plan,
+    /// Best split-enabled plan (DMO on, [`Planner::allow_splits`]),
+    /// recorded by [`PlannedModel::new_split`] only when a §II-A split
+    /// rewrite strictly beat the unsplit DMO plan.
+    pub split: Option<Plan>,
 }
 
 impl PlannedModel {
@@ -455,7 +606,38 @@ impl PlannedModel {
             graph,
             baseline,
             dmo,
+            split: None,
         })
+    }
+
+    /// [`PlannedModel::new_with`] plus a third, split-enabled DMO
+    /// session (`allow_splits(max_parts)`); `split` is populated iff a
+    /// split rewrite won it — i.e. splitting beat every unsplit layout.
+    pub fn new_split(
+        graph: Graph,
+        max_parts: usize,
+        jobs: usize,
+        cache: Option<Arc<OsCache>>,
+    ) -> Result<PlannedModel, PlanError> {
+        let mut pm = Self::new_with(graph, jobs, cache.clone())?;
+        // splitting disabled, or no eligible pair ⇒ the split session
+        // would rebuild the exact unsplit sweep only to discard it (or,
+        // for max_parts == 1, error out) — skip it outright
+        if max_parts < 2 || split::candidates(&pm.graph, max_parts, 1).is_empty() {
+            return Ok(pm);
+        }
+        let mut session = Planner::for_graph(&pm.graph)
+            .dmo(true)
+            .jobs(jobs)
+            .allow_splits(max_parts);
+        if let Some(cache) = cache {
+            session = session.os_cache(cache);
+        }
+        let split = session.plan()?;
+        if split.rewrite.is_some() && split.peak() < pm.dmo.peak() {
+            pm.split = Some(split);
+        }
+        Ok(pm)
     }
 
     /// The Table-III row for this model.
@@ -465,6 +647,11 @@ impl PlannedModel {
             original: self.baseline.peak(),
             optimised: self.dmo.peak().min(self.baseline.peak()),
         }
+    }
+
+    /// Peak of the best split plan, when splitting won.
+    pub fn split_peak(&self) -> Option<usize> {
+        self.split.as_ref().map(|p| p.peak())
     }
 }
 
@@ -681,6 +868,112 @@ mod tests {
         // and a cached build equals an uncached build outright
         let uncached = OsTable::build(&g, crate::overlap::Method::Algorithmic);
         assert_eq!(p1.os.per_op, uncached.per_op);
+    }
+
+    /// The §II-A pair: conv 1x1 doubling bytes into a stride-2 dwconv —
+    /// the intermediate dominates and splitting must win.
+    fn split_pair_i8() -> Graph {
+        let mut b = GraphBuilder::new("splitwin", DType::I8);
+        let x = b.input(Shape::hwc(64, 64, 8));
+        let c = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
+        b.finish(&[d])
+    }
+
+    #[test]
+    fn split_rewrite_wins_the_paper_pair_and_executes_bit_identically() {
+        let g = split_pair_i8();
+        let unsplit = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let split = Planner::for_graph(&g).dmo(true).allow_splits(4).plan().unwrap();
+        assert!(
+            split.peak() < unsplit.peak(),
+            "split {} must beat unsplit {}",
+            split.peak(),
+            unsplit.peak()
+        );
+        let rw = split.rewrite.as_ref().expect("split rewrite must be recorded");
+        assert_eq!(rw.splits.len(), 1);
+        assert_eq!(split.order.0.len(), rw.graph.ops.len());
+        assert_eq!(split.alloc.offsets.len(), rw.graph.tensors.len());
+        // the correctness anchor: banded execution in the planned
+        // (overlapping) arena is bit-identical to the unsplit reference
+        crate::interp::validate_plan(&g, &split, 11).unwrap();
+    }
+
+    #[test]
+    fn splits_never_hurt_and_lose_ties_to_unsplit_plans() {
+        // on the DMO-friendly mobilenet head, splitting cannot beat the
+        // overlapped plan — the session must return the unsplit winner
+        let g = mobilenet_head_i8();
+        let plain = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let with = Planner::for_graph(&g).dmo(true).allow_splits(4).plan().unwrap();
+        assert!(with.peak() <= plain.peak());
+        if with.peak() == plain.peak() {
+            assert!(with.rewrite.is_none(), "ties must keep the unsplit plan");
+        }
+    }
+
+    #[test]
+    fn split_sessions_report_split_candidates() {
+        let g = split_pair_i8();
+        let mut split_cells = 0usize;
+        let mut plain_cells = 0usize;
+        let mut total = 0usize;
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .allow_splits(4)
+            .on_candidate(|c| {
+                if c.split.is_some() {
+                    split_cells += 1;
+                } else {
+                    plain_cells += 1;
+                }
+                total = c.total;
+            })
+            .plan()
+            .unwrap();
+        assert!(plain_cells > 0 && split_cells > 0);
+        assert_eq!(total, plain_cells + split_cells, "total is fixed up front");
+        assert!(plan.rewrite.is_some());
+    }
+
+    #[test]
+    fn one_part_split_config_is_an_error() {
+        let g = split_pair_i8();
+        assert_eq!(
+            Planner::for_graph(&g).allow_splits(1).plan().unwrap_err(),
+            PlanError::BadSearchConfig {
+                what: "allow_splits needs at least 2 parts (0 disables splitting)",
+            }
+        );
+    }
+
+    #[test]
+    fn search_and_splits_compose() {
+        let g = split_pair_i8();
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .search(4, 2_000)
+            .allow_splits(4)
+            .plan()
+            .unwrap();
+        // joint search: the winner is a searched order over a split graph
+        assert!(plan.rewrite.is_some());
+        assert_eq!(plan.strategy.name(), "search");
+        assert!(plan.search.is_some());
+        crate::interp::validate_plan(&g, &plan, 5).unwrap();
+    }
+
+    #[test]
+    fn planned_model_records_split_only_when_it_wins() {
+        let pm = PlannedModel::new_split(split_pair_i8(), 4, 0, None).unwrap();
+        let split = pm.split.as_ref().expect("split must win here");
+        assert!(split.peak() < pm.dmo.peak());
+        assert_eq!(pm.split_peak(), Some(split.peak()));
+        let pm2 = PlannedModel::new_split(mobilenet_head_i8(), 4, 0, None).unwrap();
+        if let Some(s) = &pm2.split {
+            assert!(s.peak() < pm2.dmo.peak());
+        }
     }
 
     #[test]

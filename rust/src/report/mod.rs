@@ -241,6 +241,12 @@ pub struct OrderSearchRow {
     pub cache_hits: usize,
     /// `O_s` engine runs charged to this row (distinct new signatures).
     pub cache_misses: usize,
+    /// Overlapped peak of the search session with §II-A splitting
+    /// allowed (`--splits=N`); `None` when the row ran without splits.
+    pub split: Option<usize>,
+    /// The winning split rewrite of that session, when one beat every
+    /// unsplit order.
+    pub split_spec: Option<crate::planner::SplitSpec>,
 }
 
 impl OrderSearchRow {
@@ -251,6 +257,20 @@ impl OrderSearchRow {
             return 0.0;
         }
         100.0 * best2.saturating_sub(self.search) as f64 / best2 as f64
+    }
+
+    /// Best peak over every session of the row, splits included.
+    pub fn best_peak(&self) -> usize {
+        self.eager
+            .min(self.lazy)
+            .min(self.search)
+            .min(self.split.unwrap_or(usize::MAX))
+    }
+
+    /// Did the split session strictly beat the best *unsplit* order?
+    pub fn split_wins(&self) -> bool {
+        self.split_spec.is_some()
+            && self.split.is_some_and(|s| s < self.eager.min(self.lazy).min(self.search))
     }
 }
 
@@ -274,6 +294,21 @@ pub fn order_search_row_with(
     jobs: usize,
     cache: &Arc<OsCache>,
 ) -> Result<OrderSearchRow> {
+    order_search_row_splits(name, beam, budget, jobs, cache, 0)
+}
+
+/// [`order_search_row_with`] plus, when `max_parts >= 2`, a fourth
+/// session that searches orders *and* §II-A splits jointly
+/// ([`Planner::allow_splits`]) — the row then reports whether banding a
+/// peak-defining pair beat every unsplit execution order.
+pub fn order_search_row_splits(
+    name: &str,
+    beam: usize,
+    budget: usize,
+    jobs: usize,
+    cache: &Arc<OsCache>,
+    max_parts: usize,
+) -> Result<OrderSearchRow> {
     let g = models::build(name)?;
     let before = cache.stats();
     let peak_for = |strategies: &[Strategy]| -> Result<crate::planner::Plan> {
@@ -290,6 +325,23 @@ pub fn order_search_row_with(
     let stats = searched
         .search
         .expect("a search-strategy win always carries stats");
+    let (split, split_spec) = if max_parts < 2 {
+        (None, None)
+    } else if crate::planner::split::candidates(&g, max_parts, 1).is_empty() {
+        // no eligible pair: the split session would repeat the search
+        // session verbatim — reuse its peak and report "none profitable"
+        (Some(searched.peak()), None)
+    } else {
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .jobs(jobs)
+            .os_cache(cache.clone())
+            .strategies(&[Strategy::Search { beam, budget }])
+            .allow_splits(max_parts)
+            .plan()?;
+        let spec = plan.rewrite.as_ref().and_then(|r| r.splits.first().copied());
+        (Some(plan.peak()), spec)
+    };
     let after = cache.stats();
     Ok(OrderSearchRow {
         model: g.name.clone(),
@@ -299,6 +351,8 @@ pub fn order_search_row_with(
         stats,
         cache_hits: after.hits - before.hits,
         cache_misses: after.misses - before.misses,
+        split,
+        split_spec,
     })
 }
 
@@ -306,12 +360,25 @@ pub fn order_search_row_with(
 /// peak against the paper's fixed serialisations.
 pub fn order_search_markdown(rows: &[OrderSearchRow]) -> String {
     let mut s = String::from(
-        "| Model | Eager (KB) | Lazy (KB) | Search (KB) | vs best-of-two | states expanded | O_s cache (hit/miss) |\n|---|---:|---:|---:|---:|---:|---:|\n",
+        "| Model | Eager (KB) | Lazy (KB) | Search (KB) | vs best-of-two | Split (KB) | split pair | states expanded | O_s cache (hit/miss) |\n|---|---:|---:|---:|---:|---:|---|---:|---:|\n",
     );
     for r in rows {
+        let (split_kb, split_pair) = match r.split {
+            Some(p) => (
+                format!("{}", p / 1024),
+                match &r.split_spec {
+                    Some(sp) if r.split_wins() => {
+                        format!("ops {}→{} ×{}", sp.first, sp.second, sp.parts)
+                    }
+                    Some(sp) => format!("ops {}→{} ×{} (no win)", sp.first, sp.second, sp.parts),
+                    None => "none profitable".to_string(),
+                },
+            ),
+            None => ("-".to_string(), "-".to_string()),
+        };
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | {} | {} | {}/{} |",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {}/{} |",
             r.model,
             r.eager / 1024,
             r.lazy / 1024,
@@ -321,6 +388,8 @@ pub fn order_search_markdown(rows: &[OrderSearchRow]) -> String {
             } else {
                 "=".to_string()
             },
+            split_kb,
+            split_pair,
             r.stats.expanded,
             r.cache_hits,
             r.cache_misses
@@ -433,6 +502,34 @@ mod tests {
             let md = order_search_markdown(&[r]);
             assert!(md.contains(name), "{md}");
         }
+    }
+
+    #[test]
+    fn split_order_row_reports_the_win() {
+        // the §II-A acceptance case: on the smallest MobileNet the
+        // searched+split plan beats the best unsplit order
+        let cache = Arc::new(OsCache::new());
+        let r =
+            order_search_row_splits("mobilenet_v1_0.25_128_int8", 4, 2_000, 1, &cache, 4).unwrap();
+        let split = r.split.expect("--splits row must carry a split peak");
+        assert!(split <= r.search);
+        assert!(
+            r.split_wins(),
+            "split {} must beat eager {} / lazy {} / search {}",
+            split,
+            r.eager,
+            r.lazy,
+            r.search
+        );
+        assert_eq!(r.best_peak(), split);
+        let md = order_search_markdown(&[r]);
+        assert!(md.contains("Split (KB)"), "{md}");
+        assert!(md.contains("ops "), "{md}");
+        // rows without splits render placeholders
+        let plain = order_search_row_with("tiny", 2, 500, 1, &Arc::new(OsCache::new())).unwrap();
+        assert!(plain.split.is_none());
+        let md2 = order_search_markdown(&[plain]);
+        assert!(md2.contains("| - | - |"), "{md2}");
     }
 
     #[test]

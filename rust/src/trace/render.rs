@@ -15,6 +15,7 @@ use anyhow::Result;
 /// axis), columns = arena memory buckets; each tensor's rectangle is
 /// drawn with a rotating letter, `#` marking peak-defining buffers.
 pub fn alloc_map_ascii(graph: &Graph, plan: &Plan, width: usize) -> String {
+    let graph = plan.graph_for(graph); // split plans index the rewritten graph
     let peak = plan.peak().max(1);
     let n_slots = plan.order.0.len() + 1;
     let mut rows = vec![vec!['.'; width]; n_slots];
@@ -50,6 +51,7 @@ pub fn alloc_map_ascii(graph: &Graph, plan: &Plan, width: usize) -> String {
 
 /// Fig 1 / Fig 9 data: CSV `tensor,offset,size,scope_start,scope_end`.
 pub fn alloc_map_csv(graph: &Graph, plan: &Plan) -> String {
+    let graph = plan.graph_for(graph); // split plans index the rewritten graph
     let mut s = String::from("tensor,offset,size,scope_start,scope_end\n");
     for t in 0..graph.tensors.len() {
         let (Some(off), Some(scope)) = (plan.alloc.offsets[t], plan.scopes.scopes[t]) else {
@@ -102,6 +104,7 @@ fn run_traced(
     sink: Box<dyn crate::ops::exec::EventSink>,
 ) -> Result<()> {
     use crate::ops::exec::gen_weights;
+    let graph = plan.graph_for(graph); // split plans index the rewritten graph
     let regions: Vec<Option<Region>> = (0..graph.tensors.len())
         .map(|t| {
             plan.alloc.offsets[t].map(|off| Region::new(off, graph.tensor(TensorId(t)).size_bytes()))
@@ -116,7 +119,7 @@ fn run_traced(
         let op = graph.op(opid);
         let in_shapes: Vec<&Shape> = op.inputs.iter().map(|&t| &graph.tensor(t).shape).collect();
         let in_regions: Vec<Region> = op.inputs.iter().map(|&t| regions[t.0].unwrap()).collect();
-        let weights = gen_weights(op, seed ^ opid.0 as u64);
+        let weights = gen_weights(op, seed ^ op.weight_key(opid.0) as u64);
         let io = OpIo {
             in_shapes: &in_shapes,
             in_regions: &in_regions,

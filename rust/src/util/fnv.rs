@@ -1,0 +1,63 @@
+//! Shared 64-bit FNV-1a — the repository's deterministic structural
+//! hash, used by plan-artifact fingerprints and the persisted `O_s`
+//! cache's content addresses. One implementation so the constants can
+//! never drift between users.
+
+/// Incremental FNV-1a hasher.
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// Fold one machine word (hashed as a little-endian `u64`).
+    pub fn word(&mut self, v: usize) {
+        self.bytes(&(v as u64).to_le_bytes());
+    }
+
+    /// Fold a length-prefixed string.
+    pub fn str(&mut self, v: &str) {
+        self.word(v.len());
+        self.bytes(v.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector_and_order_sensitivity() {
+        // FNV-1a of the empty input is the offset basis
+        assert_eq!(Fnv::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut a = Fnv::new();
+        a.str("ab");
+        let mut b = Fnv::new();
+        b.str("ba");
+        assert_ne!(a.finish(), b.finish());
+        // word() is the little-endian u64 fold str() builds on
+        let mut w = Fnv::new();
+        w.word(2);
+        let mut manual = Fnv::new();
+        manual.bytes(&2u64.to_le_bytes());
+        assert_eq!(w.finish(), manual.finish());
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod fnv;
 pub mod json;
 pub mod par;
 pub mod rng;

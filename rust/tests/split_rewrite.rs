@@ -1,0 +1,153 @@
+//! Zoo-wide properties of the §II-A split rewrite.
+//!
+//! Two invariants, checked for every model's peak-defining eligible
+//! pair:
+//!
+//! 1. **Bit-identity** — a forced 2-band split of the pair interprets
+//!    bit-identically to the unsplit reference (halo recomputation,
+//!    shared weight streams and row reassembly must all line up).
+//! 2. **Prediction = measurement** — `analyse_pair`'s `peak_after` (the
+//!    banded schedule's live-set watermark) equals the peak the real
+//!    §IV allocator measures on the materialised rewrite of the pair.
+//!
+//! Plus the end-to-end acceptance path: a real model whose split plan
+//! round-trips through a v3 artifact and executes, proven safe, from
+//! the loaded artifact.
+
+use dmo::interp;
+use dmo::ir::graph::{Graph, OpId};
+use dmo::ir::op::OpKind;
+use dmo::ir::rewrite::{split_eligible, split_pair};
+use dmo::models;
+use dmo::planner::split::{analyse_pair, isolate_pair};
+use dmo::planner::{allocate, analyse, serialise, OsTable, PlanArtifact, Planner, Strategy, HEURISTICS};
+
+/// The graph's highest-pressure *eligible* pair — what a forced split
+/// targets.
+fn peak_pair(g: &Graph) -> Option<(OpId, OpId)> {
+    let mut best: Option<(usize, OpId, OpId)> = None;
+    for (i, f) in g.ops.iter().enumerate() {
+        let consumers = g.consumers(f.output);
+        if consumers.len() != 1 {
+            continue;
+        }
+        let c = consumers[0];
+        if split_eligible(g, OpId(i), c, 2).is_err() {
+            continue;
+        }
+        let in_b = g.tensor(f.inputs[0]).size_bytes();
+        let mid_b = g.tensor(f.output).size_bytes();
+        let out_b = g.tensor(g.op(c).output).size_bytes();
+        let pressure = (in_b + mid_b).max(mid_b + out_b);
+        if best.map_or(true, |(bp, _, _)| pressure > bp) {
+            best = Some((pressure, OpId(i), c));
+        }
+    }
+    best.map(|(_, a, b)| (a, b))
+}
+
+/// Rough multiply-accumulate count of a graph — gates the (slow, debug
+/// mode) execution half of the property on big stem pairs.
+fn mac_estimate(g: &Graph) -> usize {
+    g.ops
+        .iter()
+        .map(|op| {
+            let out = g.tensor(op.output).shape.num_elements();
+            match &op.kind {
+                OpKind::Conv2D(p) => {
+                    out * p.kernel.0 * p.kernel.1 * g.tensor(op.inputs[0]).shape.c()
+                }
+                OpKind::DepthwiseConv2D(p) => out * p.kernel.0 * p.kernel.1,
+                OpKind::Pool(p) => out * p.kernel.0 * p.kernel.1,
+                _ => out,
+            }
+        })
+        .sum()
+}
+
+#[test]
+fn forced_parts2_split_on_every_zoo_peak_pair() {
+    let mut eligible = 0usize;
+    let mut executed = 0usize;
+    for name in models::all_names() {
+        let g = models::build(name).unwrap();
+        let Some((first, second)) = peak_pair(&g) else {
+            continue;
+        };
+        eligible += 1;
+
+        // the isolated pair is the exact subgraph the analysis models
+        let iso = isolate_pair(&g, first, second).unwrap();
+        let in_situ = analyse_pair(&g, first, second, 2).unwrap();
+        let predicted = analyse_pair(&iso, OpId(0), OpId(1), 2).unwrap();
+        assert_eq!(
+            predicted.peak_after, in_situ.peak_after,
+            "{name}: isolated and in-situ analyses must agree"
+        );
+
+        // prediction = allocator measurement on the materialised rewrite
+        let rw = split_pair(&iso, OpId(0), OpId(1), 2).unwrap();
+        rw.graph.validate().unwrap();
+        let order = serialise(&rw.graph, Strategy::Eager);
+        let scopes = analyse(&rw.graph, &order);
+        let os = OsTable::disabled(&rw.graph);
+        let measured = HEURISTICS
+            .iter()
+            .map(|&h| allocate(&rw.graph, &scopes, &os, h).peak)
+            .min()
+            .unwrap();
+        assert_eq!(
+            measured, predicted.peak_after,
+            "{name}: predicted pair peak must match the allocator's"
+        );
+
+        // bit-identity of the banded execution (skipped for enormous
+        // stem pairs — debug-mode conv loops, the property is the same)
+        if mac_estimate(&iso) > 20_000_000 {
+            eprintln!("{name}: skipping exec half (stem pair too hot for debug mode)");
+            continue;
+        }
+        let inputs: Vec<Vec<f32>> = iso
+            .inputs
+            .iter()
+            .map(|&t| interp::gen_input(&iso, t, 9))
+            .collect();
+        let want = interp::run_reference(&iso, &inputs, 9).unwrap();
+        let got = interp::run_reference(&rw.graph, &inputs, 9).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (a, b) in got.iter().flatten().zip(want.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name}: banded exec diverged");
+        }
+        executed += 1;
+    }
+    assert!(eligible >= 9, "expected eligible peak pairs across the zoo, got {eligible}");
+    assert!(executed >= 5, "expected executable pairs across the zoo, got {executed}");
+}
+
+#[test]
+fn mnv1_split_plan_round_trips_through_v3_artifact_and_executes() {
+    let g = models::build("mobilenet_v1_0.25_128_int8").unwrap();
+    let plan = Planner::for_graph(&g).dmo(true).allow_splits(4).plan().unwrap();
+    let rw = plan.rewrite.as_ref().expect("splitting must win on mnv1-0.25-128");
+    assert!(
+        plan.peak() <= 64 * 1024,
+        "split plan peak {} must dip under the 64 KB bar DMO alone misses",
+        plan.peak()
+    );
+    // the banded region really is banded
+    assert!(rw.graph.ops.iter().any(|op| matches!(op.kind, OpKind::Band(_))));
+    assert!(rw.graph.ops.iter().any(|op| matches!(op.kind, OpKind::ConcatRows)));
+
+    let dir = std::env::temp_dir().join(format!("dmo-split-art-{}", std::process::id()));
+    let path = dir.join("mnv1_split.json");
+    PlanArtifact::from_plan(&g, &plan).save(&path).unwrap();
+    let loaded = PlanArtifact::load(&path).unwrap();
+    assert_eq!(loaded.version, PlanArtifact::VERSION);
+    assert!(!loaded.splits.is_empty());
+
+    // deploy-time entry point: revalidate, execute in the overlapped
+    // banded arena, prove bit-identical to the unsplit reference
+    let out = interp::run_planned_artifact(&g, &loaded, 42).unwrap();
+    assert!(!out.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
