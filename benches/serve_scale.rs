@@ -1,0 +1,184 @@
+//! Bench: fleet serving at scale — mixed-model traffic over pooled
+//! DMO-planned arenas.
+//!
+//! Drives 10^4 (default; `--requests` up to 10^6) closed-loop requests
+//! across ≥3 models through `dmo::fleet::fleet_serve` and records
+//! per-model latency percentiles, throughput and arena-pool counters to
+//! `BENCH_serve_scale.json` (uploaded by CI next to the other BENCH_*
+//! artifacts; summarised in EXPERIMENTS.md §Serving).
+//!
+//! The bench *asserts* the subsystem's headline property instead of
+//! trusting it: each model's plan fixes its arena size before the first
+//! request (§II-D), so with K pooled arenas ≥ the worker count the
+//! steady-state serving path allocates **zero** arenas — every model
+//! must finish with `pool_allocs == 0` and `pool_hit_rate == 1.0`.
+//!
+//! Usage: `cargo bench --bench serve_scale -- [--requests N]
+//! [--models a,b,c] [--arenas K] [--workers N] [--queue C] [--rate R]
+//! [--seed S]`
+
+use dmo::fleet::{fleet_serve, FleetConfig, ModelSpec};
+use dmo::util::args::{opt, ArgSpec, Args};
+use dmo::util::json::{num, obj, s, Json};
+
+const SPEC: &[ArgSpec] = &[
+    opt("--requests", "total requests across the fleet (default 10000)"),
+    opt("--models", "comma-separated model list (default tiny,tiny_int8,tiny_wide)"),
+    opt("--arenas", "pooled arenas per model (default 4)"),
+    opt("--workers", "serving worker threads (default 4)"),
+    opt("--queue", "per-model admission queue capacity (default 64)"),
+    opt("--rate", "open-loop arrival rate, req/s (default 0 = closed loop)"),
+    opt("--seed", "workload seed (default 42)"),
+];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, SPEC).unwrap();
+    let requests: u64 = args.parsed("--requests", 10_000u64).unwrap();
+    let names: Vec<String> = args
+        .value("--models")
+        .unwrap_or("tiny,tiny_int8,tiny_wide")
+        .split(',')
+        .map(|n| n.trim().to_string())
+        .filter(|n| !n.is_empty())
+        .collect();
+    let arenas: usize = args.parsed("--arenas", 4usize).unwrap();
+    let workers: usize = args.parsed("--workers", 4usize).unwrap();
+    let queue: usize = args.parsed("--queue", 64usize).unwrap();
+    let rate: f64 = args.parsed("--rate", 0.0f64).unwrap();
+    let seed: u64 = args.parsed("--seed", 42u64).unwrap();
+
+    assert!(
+        names.len() >= 3,
+        "serve_scale measures mixed-model traffic: need ≥3 models, got {names:?}"
+    );
+    println!(
+        "=== serve scale: {} requests over {} models, {} arenas/model, {} workers ({}) ===\n",
+        requests,
+        names.len(),
+        arenas,
+        workers,
+        if rate > 0.0 {
+            format!("open loop @ {rate} req/s")
+        } else {
+            "closed loop".to_string()
+        }
+    );
+
+    let cfg = FleetConfig {
+        models: names.iter().map(|n| ModelSpec::planned(n)).collect(),
+        arenas,
+        workers,
+        queue_capacity: queue,
+        requests,
+        rate,
+        mix: Vec::new(),
+        seed,
+        jobs: 0,
+        reload_watch: None,
+    };
+    let report = fleet_serve(&cfg).unwrap();
+
+    println!(
+        "{:<14} {:>9} {:>6} {:>9} {:>9} {:>9} {:>10} {:>8} {:>7} {:>5}",
+        "model", "done", "shed", "p50 µs", "p95 µs", "p99 µs", "arena B", "pool", "allocs", "maxq"
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    for m in &report.per_model {
+        let l = m.metrics.latency();
+        println!(
+            "{:<14} {:>9} {:>6} {:>9.0} {:>9.0} {:>9.0} {:>10} {:>7.1}% {:>7} {:>5}",
+            m.model,
+            m.completed,
+            m.shed,
+            l.p50_us,
+            l.p95_us,
+            l.p99_us,
+            m.arena_bytes,
+            100.0 * m.pool_hit_rate,
+            m.pool_allocs,
+            m.max_queue_depth
+        );
+        entries.push(obj(vec![
+            ("model", s(&m.model)),
+            ("completed", num(m.completed)),
+            ("shed", num(m.shed)),
+            ("mean_us", Json::Num(l.mean_us)),
+            ("p50_us", Json::Num(l.p50_us)),
+            ("p95_us", Json::Num(l.p95_us)),
+            ("p99_us", Json::Num(l.p99_us)),
+            ("max_us", Json::Num(l.max_us)),
+            ("arena_bytes", num(m.arena_bytes)),
+            ("pool_hits", num(m.pool_hits)),
+            ("pool_allocs", num(m.pool_allocs)),
+            ("pool_hit_rate", Json::Num(m.pool_hit_rate)),
+            ("max_queue_depth", num(m.max_queue_depth)),
+            ("generation", num(m.generation as usize)),
+        ]));
+    }
+    println!(
+        "\ncompleted {} ({} shed) in {:.3} s — {:.0} req/s aggregate",
+        report.completed,
+        report.shed,
+        report.wall.as_secs_f64(),
+        report.throughput_rps
+    );
+
+    let doc = obj(vec![
+        ("bench", s("serve_scale")),
+        ("requests", num(requests as usize)),
+        ("models", num(names.len())),
+        ("arenas", num(arenas)),
+        ("workers", num(workers)),
+        ("queue_capacity", num(queue)),
+        ("rate_rps", Json::Num(rate)),
+        ("completed", num(report.completed)),
+        ("shed", num(report.shed)),
+        ("wall_s", Json::Num(report.wall.as_secs_f64())),
+        ("throughput_rps", Json::Num(report.throughput_rps)),
+        ("per_model", Json::Arr(entries)),
+    ]);
+    let path = "BENCH_serve_scale.json";
+    std::fs::write(path, doc.to_string()).unwrap();
+    println!("wrote {path}");
+
+    // ---- the properties this bench exists to enforce -----------------
+    assert_eq!(
+        report.completed as u64 + report.shed as u64,
+        requests,
+        "every request must be either completed or accounted as shed"
+    );
+    if rate <= 0.0 {
+        assert_eq!(report.shed, 0, "closed-loop backpressure never sheds");
+    }
+    for m in &report.per_model {
+        assert!(
+            m.completed > 0,
+            "mixed traffic must actually reach `{}`",
+            m.model
+        );
+    }
+    if arenas >= workers {
+        // per-model in-flight concurrency can never exceed the worker
+        // count, so a pool of K ≥ workers arenas makes the steady-state
+        // path allocation-free — exactly, not approximately
+        for m in &report.per_model {
+            assert_eq!(
+                m.pool_allocs, 0,
+                "`{}` allocated an arena after warm-up (pool K={arenas}, {workers} workers)",
+                m.model
+            );
+            assert_eq!(
+                m.pool_hit_rate, 1.0,
+                "`{}` pool hit rate {} != 1.0",
+                m.model, m.pool_hit_rate
+            );
+        }
+        println!(
+            "pooled-arena path allocation-free across {} models ✓",
+            report.per_model.len()
+        );
+    } else {
+        println!("note: --arenas {arenas} < --workers {workers}; skipping the zero-alloc assertion");
+    }
+}

@@ -114,4 +114,59 @@ mod tests {
         let b = Batcher::new(BatchPolicy::default());
         assert!(b.next_batch(&q).is_none());
     }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.push(0u32);
+        q.push(1);
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            window: Duration::from_millis(30),
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&q).unwrap();
+        // under-full batch ships at the deadline — it neither waits for
+        // max_batch companions nor returns before the window closes
+        assert_eq!(batch, vec![0, 1]);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_mid_window_flushes_partial_batch_immediately() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        q.push(0);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(10));
+            q2.close();
+        });
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            window: Duration::from_secs(5),
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&q).unwrap();
+        h.join().unwrap();
+        assert_eq!(batch, vec![0], "admitted request still ships");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "close must cut the window short, not wait it out"
+        );
+        assert!(b.next_batch(&q).is_none());
+    }
+
+    #[test]
+    fn batch_of_one_with_capacity_one_queue() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(9u32);
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 1,
+            window: Duration::from_secs(5),
+        });
+        let t0 = Instant::now();
+        // max_batch=1 is satisfied by the first pop — no window wait
+        assert_eq!(b.next_batch(&q).unwrap(), vec![9]);
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
 }

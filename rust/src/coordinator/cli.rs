@@ -1,7 +1,13 @@
 //! `dmo serve` — CLI front-end for the serving loop.
+//!
+//! Two modes share the subcommand: the single-model PJRT loop
+//! (default), and — when `--models` is given — the multi-model fleet
+//! (`crate::fleet`): pooled arenas, per-model fair admission, and
+//! artifact hot-reload via `--reload-watch`.
 
 use super::server::{serve, ServeConfig};
 use super::BatchPolicy;
+use crate::fleet::{fleet_serve, FleetConfig, ModelSpec};
 use crate::util::args::{opt, ArgSpec, Args};
 use anyhow::Result;
 use std::path::PathBuf;
@@ -9,9 +15,9 @@ use std::time::Duration;
 
 /// Flags accepted by `dmo serve`.
 pub const SERVE_SPEC: &[ArgSpec] = &[
-    opt("--requests", "number of requests to generate (default 256)"),
-    opt("--rate", "open-loop arrival rate, req/s (default 500)"),
-    opt("--queue", "bounded queue capacity (default 64)"),
+    opt("--requests", "number of requests to generate (default 256; fleet 1024)"),
+    opt("--rate", "open-loop arrival rate, req/s (default 500; fleet 0 = closed loop)"),
+    opt("--queue", "bounded queue capacity, per model in fleet mode (default 64)"),
     opt("--batch", "max dynamic batch size (default 8)"),
     opt("--window-us", "batching window in µs (default 2000)"),
     opt("--seed", "workload RNG seed (default 42)"),
@@ -19,10 +25,18 @@ pub const SERVE_SPEC: &[ArgSpec] = &[
     opt("--model", "model the memory plan is for (default `tiny`)"),
     opt("--jobs", "planner worker threads for startup planning (default: all cores)"),
     opt("--os-cache", "persisted O_s cache file: loaded before startup planning, saved after — cold replicas start warm"),
+    opt("--models", "comma-separated model list — switches to multi-model fleet serving"),
+    opt("--arenas", "fleet: pooled arenas per model (default 4)"),
+    opt("--workers", "fleet: serving worker threads (default: all cores)"),
+    opt("--mix", "fleet: comma-separated traffic weights, one per model (default uniform)"),
+    opt("--reload-watch", "fleet: directory watched for `<model>.plan.json` hot-reload drops"),
 ];
 
 /// Entry point used by `main.rs`.
 pub fn serve_main(args: &Args) -> Result<()> {
+    if args.value("--models").is_some() {
+        return fleet_main(args);
+    }
     let cfg = ServeConfig {
         requests: args.parsed("--requests", 256u64)?,
         rate: args.parsed("--rate", 500.0f64)?,
@@ -65,5 +79,97 @@ pub fn serve_main(args: &Args) -> Result<()> {
         crate::report::fmt_bytes(report.arena_original),
         crate::report::fmt_bytes(report.arena_dmo)
     );
+    Ok(())
+}
+
+/// `dmo serve --models a,b,c` — the multi-model fleet loop.
+fn fleet_main(args: &Args) -> Result<()> {
+    let names: Vec<String> = args
+        .value("--models")
+        .unwrap_or_default()
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!names.is_empty(), "--models needs at least one model name");
+    let reload_watch = args.value("--reload-watch").map(PathBuf::from);
+    let models: Vec<ModelSpec> = names
+        .iter()
+        .map(|n| ModelSpec {
+            name: n.clone(),
+            // a watched directory that already holds an artifact for the
+            // model seeds the initial generation from it
+            artifact: reload_watch
+                .as_ref()
+                .map(|d| d.join(format!("{n}.plan.json")))
+                .filter(|p| p.exists()),
+        })
+        .collect();
+    let mix: Vec<f64> = match args.value("--mix") {
+        None => Vec::new(),
+        Some(s) => s
+            .split(',')
+            .map(|w| {
+                w.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--mix: cannot parse weight `{w}`"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let cfg = FleetConfig {
+        models,
+        arenas: args.parsed("--arenas", 4usize)?,
+        workers: args.parsed("--workers", 0usize)?,
+        queue_capacity: args.parsed("--queue", 64usize)?,
+        requests: args.parsed("--requests", 1024u64)?,
+        rate: args.parsed("--rate", 0.0f64)?,
+        mix,
+        seed: args.parsed("--seed", 42u64)?,
+        jobs: args.parsed("--jobs", 0usize)?,
+        reload_watch,
+    };
+    println!(
+        "fleet: {} models × {} arenas, {} workers, queue {}/model, {} requests ({})",
+        names.len(),
+        cfg.arenas,
+        if cfg.workers == 0 { "all-core".to_string() } else { cfg.workers.to_string() },
+        cfg.queue_capacity,
+        cfg.requests,
+        if cfg.rate > 0.0 {
+            format!("open loop @ {} req/s, shedding", cfg.rate)
+        } else {
+            "closed loop".to_string()
+        },
+    );
+    if let Some(d) = &cfg.reload_watch {
+        println!("hot-reload      : watching {} for <model>.plan.json", d.display());
+    }
+    let report = fleet_serve(&cfg)?;
+    println!(
+        "completed       : {} ({} shed) in {:.3} s — {:.0} req/s",
+        report.completed,
+        report.shed,
+        report.wall.as_secs_f64(),
+        report.throughput_rps
+    );
+    for m in &report.per_model {
+        let l = m.metrics.latency();
+        println!(
+            "  {:<14} gen {} ({} reloads): {} done, {} shed | p50 {:.0} p95 {:.0} p99 {:.0} µs \
+             | arena {} | pool hit {:.1}% ({} allocs) | max queue {}",
+            m.model,
+            m.generation,
+            m.reloads,
+            m.completed,
+            m.shed,
+            l.p50_us,
+            l.p95_us,
+            l.p99_us,
+            crate::report::fmt_bytes(m.arena_bytes),
+            100.0 * m.pool_hit_rate,
+            m.pool_allocs,
+            m.max_queue_depth
+        );
+    }
     Ok(())
 }

@@ -57,6 +57,12 @@ impl Metrics {
         self.latencies.push(latency);
     }
 
+    /// Count one shed (rejected-at-admission) request. `Metrics` is the
+    /// single source of truth for shedding — reports read it from here.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
     pub fn record_batch(&mut self, actual: usize, padded: usize) {
         self.batches.push(actual);
         self.padded.push(padded);

@@ -166,4 +166,50 @@ mod tests {
         assert!(r.is_none());
         assert!(t0.elapsed() >= Duration::from_millis(25));
     }
+
+    #[test]
+    fn close_wakes_consumer_blocked_in_pop() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        // the blocked consumer must wake with `None`, not hang forever
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn close_wakes_producer_blocked_in_push() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        assert!(q.push(1));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(2)); // full → blocks
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(!h.join().unwrap(), "woken producer sees the close");
+        // what was admitted before the close still drains
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn capacity_zero_clamps_to_one() {
+        let q = BoundedQueue::new(0);
+        assert!(q.try_push(1).is_ok(), "clamped capacity admits one item");
+        assert!(q.try_push(2).is_err(), "…and exactly one");
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn pop_until_returns_item_arriving_before_deadline() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(10));
+            q2.try_push(7).unwrap();
+        });
+        let r = q.pop_until(Instant::now() + Duration::from_millis(500));
+        h.join().unwrap();
+        assert_eq!(r, Some(7), "mid-wait arrival beats the deadline");
+    }
 }

@@ -232,8 +232,14 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         completed += 1;
         checksum += reply.probs.iter().map(|p| *p as f64).sum::<f64>();
     }
-    let (metrics, platform) = worker.join().expect("worker panicked")?;
+    let (mut metrics, platform) = worker.join().expect("worker panicked")?;
     let wall = t0.elapsed();
+    // fold the producer's shed count into the run metrics: `Metrics` is
+    // the single source of truth for shedding and the report reads it
+    // from there (the fleet path records sheds the same way)
+    for _ in 0..shed {
+        metrics.record_shed();
+    }
 
     // sanity: softmax outputs sum to ~1 per request
     let expect = completed as f64;
@@ -244,7 +250,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
 
     Ok(ServeReport {
         completed,
-        shed,
+        shed: metrics.shed,
         wall,
         throughput_rps: completed as f64 / wall.as_secs_f64(),
         metrics,

@@ -1,0 +1,32 @@
+//! L3.5 fleet serving: many DMO-planned models in one process.
+//!
+//! The paper makes planning a pre-inference step (§II-D): the arena size
+//! and layout are fixed before the first request arrives. This module is
+//! the serving layer that cashes that property in at scale:
+//!
+//! - [`Registry`] — N models, each loaded from (or planned into) a
+//!   revalidated [`crate::planner::PlanArtifact`] and proven bit-exact
+//!   before serving; hot-reload swaps generations behind an `Arc`
+//!   without dropping in-flight requests.
+//! - [`ArenaPool`] — K pre-sized arenas per model generation; steady
+//!   state performs **zero** per-request arena allocation, and the pool
+//!   counts hits/allocs so benches assert it rather than trust it.
+//! - [`Admission`] — per-model bounded queues drained round-robin by a
+//!   shared worker pool: backpressure for closed-loop producers,
+//!   shedding for open-loop ones, fairness across models either way.
+//! - [`Fleet`] / [`fleet_serve`] — the running server and the
+//!   deterministic mixed-model load generator behind
+//!   `dmo serve --models a,b,c` and `benches/serve_scale.rs`.
+
+pub mod admission;
+pub mod pool;
+pub mod registry;
+pub mod server;
+
+pub use admission::Admission;
+pub use pool::{ArenaPool, PooledArena};
+pub use registry::{ModelSpec, ModelState, Registry, ReloadInfo};
+pub use server::{
+    fleet_serve, AdmissionPolicy, Fleet, FleetConfig, FleetReply, FleetReport, FleetRequest,
+    ModelReport,
+};

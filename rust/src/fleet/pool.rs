@@ -1,0 +1,190 @@
+//! Pooled arenas: pre-sized execution buffers reused across requests.
+//!
+//! A DMO plan fixes the model's arena size at planning time (§II-D), so
+//! the serving layer can allocate the K arenas a model will ever need
+//! *once*, at registration, and hand them out per request. At steady
+//! state no request allocates: an inference acquires a pooled arena,
+//! executes the planned layout in place, and returns the buffer on drop.
+//! The pool keeps an allocation counter so benches and tests can assert
+//! that property (`allocs == 0` / `hit_rate() == 1.0`) instead of
+//! trusting it.
+//!
+//! Reuse is safe without zeroing because a validated plan writes every
+//! region before reading it (inputs are stored up front; every op fully
+//! stores — or bias-initialises, for the accumulating matmul — its
+//! output before consumers load it). `rust/tests/fleet_serving.rs`
+//! proves it by executing on a deliberately dirtied arena and demanding
+//! bit-identical outputs.
+
+use crate::ops::exec::Arena;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A fixed-size pool of same-sized [`Arena`]s for one model generation.
+pub struct ArenaPool {
+    /// Arena size in bytes — the plan's peak.
+    size: usize,
+    /// Target resident count (K); returns beyond K are dropped.
+    capacity: usize,
+    free: Mutex<Vec<Arena>>,
+    /// Acquires served by a pooled arena.
+    hits: AtomicUsize,
+    /// Acquires that had to allocate because the pool ran dry — the
+    /// counter that must stay 0 at steady state.
+    allocs: AtomicUsize,
+}
+
+impl ArenaPool {
+    /// Pre-size `capacity` arenas of `size` bytes. This is the only
+    /// allocation a well-provisioned model ever performs.
+    pub fn new(size: usize, capacity: usize) -> ArenaPool {
+        let capacity = capacity.max(1);
+        ArenaPool {
+            size,
+            capacity,
+            free: Mutex::new((0..capacity).map(|_| Arena::new(size)).collect()),
+            hits: AtomicUsize::new(0),
+            allocs: AtomicUsize::new(0),
+        }
+    }
+
+    /// Arena size in bytes every pooled buffer has.
+    pub fn arena_bytes(&self) -> usize {
+        self.size
+    }
+
+    /// Target resident arena count (K).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Take an arena, preferring a pooled one; allocates (and counts it)
+    /// only when more than `capacity` acquisitions are in flight.
+    pub fn acquire(self: &Arc<Self>) -> PooledArena {
+        let pooled = self.free.lock().unwrap().pop();
+        let arena = match pooled {
+            Some(a) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                a
+            }
+            None => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                Arena::new(self.size)
+            }
+        };
+        PooledArena {
+            arena: Some(arena),
+            pool: Arc::clone(self),
+        }
+    }
+
+    /// Acquires served from the pool.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Arenas allocated after construction (pool misses).
+    pub fn allocs(&self) -> usize {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of acquisitions served without allocating (1.0 when the
+    /// pool has seen no traffic yet).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, a) = (self.hits(), self.allocs());
+        if h + a == 0 {
+            return 1.0;
+        }
+        h as f64 / (h + a) as f64
+    }
+
+    /// Arenas currently resident and idle.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    fn release(&self, arena: Arena) {
+        let mut free = self.free.lock().unwrap();
+        // never retain beyond K, and never retain a foreign-sized arena
+        // (the pool is per model-generation, so sizes only mismatch if a
+        // caller moved a guard across pools — drop, don't poison)
+        if free.len() < self.capacity && arena.len() == self.size {
+            free.push(arena);
+        }
+    }
+}
+
+/// RAII guard over a pooled [`Arena`]; returns the buffer on drop.
+pub struct PooledArena {
+    arena: Option<Arena>,
+    pool: Arc<ArenaPool>,
+}
+
+impl Deref for PooledArena {
+    type Target = Arena;
+    fn deref(&self) -> &Arena {
+        self.arena.as_ref().expect("arena taken")
+    }
+}
+
+impl DerefMut for PooledArena {
+    fn deref_mut(&mut self) -> &mut Arena {
+        self.arena.as_mut().expect("arena taken")
+    }
+}
+
+impl Drop for PooledArena {
+    fn drop(&mut self) {
+        if let Some(a) = self.arena.take() {
+            self.pool.release(a);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_never_allocates() {
+        let pool = Arc::new(ArenaPool::new(128, 2));
+        for _ in 0..100 {
+            let a = pool.acquire();
+            assert_eq!(a.len(), 128);
+        }
+        assert_eq!(pool.allocs(), 0);
+        assert_eq!(pool.hits(), 100);
+        assert_eq!(pool.hit_rate(), 1.0);
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn oversubscription_allocates_then_trims_back_to_capacity() {
+        let pool = Arc::new(ArenaPool::new(64, 2));
+        let g1 = pool.acquire();
+        let g2 = pool.acquire();
+        let g3 = pool.acquire(); // pool dry → counted allocation
+        assert_eq!(pool.allocs(), 1);
+        assert_eq!(pool.hits(), 2);
+        assert!(pool.hit_rate() < 1.0);
+        drop(g1);
+        drop(g2);
+        drop(g3); // third return exceeds capacity and is dropped
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn empty_pool_reports_perfect_rate() {
+        let pool = ArenaPool::new(16, 1);
+        assert_eq!(pool.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn capacity_zero_clamps_to_one() {
+        let pool = Arc::new(ArenaPool::new(16, 0));
+        assert_eq!(pool.capacity(), 1);
+        let _g = pool.acquire();
+        assert_eq!(pool.allocs(), 0);
+    }
+}

@@ -1,0 +1,373 @@
+//! Model registry: N DMO-planned models in one process, each behind a
+//! generation-counted atomically-swappable state.
+//!
+//! Every registered model is a [`ModelState`]: the base graph, the
+//! revalidated plan (loaded from a [`PlanArtifact`] or planned at
+//! registration), the precomputed per-tensor arena regions and per-op
+//! weights, and a pooled-arena set sized to the plan's peak. The state
+//! is immutable once built; **hot-reload** swaps a freshly validated
+//! state in behind an `Arc` while in-flight requests keep executing on
+//! the old generation until their clones drop — no request is ever torn
+//! between two layouts, and a stale artifact (fingerprint mismatch) is
+//! rejected without touching the serving state.
+
+use super::pool::{ArenaPool, PooledArena};
+use crate::interp;
+use crate::ir::graph::{Graph, TensorId};
+use crate::ops::exec::{execute_op, gen_weights, OpIo, Region};
+use crate::planner::{Plan, PlanArtifact, Planner};
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How a fleet model is sourced at registration.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Zoo name (`dmo models`).
+    pub name: String,
+    /// Plan artifact to start from; `None` plans at registration.
+    pub artifact: Option<PathBuf>,
+}
+
+impl ModelSpec {
+    pub fn planned(name: &str) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            artifact: None,
+        }
+    }
+}
+
+/// One immutable model generation: everything a request needs, resolved.
+pub struct ModelState {
+    pub name: String,
+    /// Monotonic per-slot generation; bumped by every successful reload.
+    pub generation: u64,
+    /// The base graph the artifact was validated against.
+    pub graph: Graph,
+    /// The artifact this generation serves (re-exportable).
+    pub artifact: PlanArtifact,
+    /// The revalidated plan (owns the split rewrite when present).
+    pub plan: Plan,
+    /// Arena byte region per tensor of the *planned* graph.
+    regions: Vec<Option<Region>>,
+    /// Per-op weights of the planned graph, generated once — request
+    /// execution never re-derives weights.
+    weights: Vec<Vec<Vec<f32>>>,
+    /// Seed the weights (and the validation run) were generated with.
+    pub weight_seed: u64,
+    /// K pre-sized arenas; sized to `plan.peak()` for this generation.
+    pub pool: Arc<ArenaPool>,
+}
+
+impl ModelState {
+    /// Build and *prove* a generation: revalidate the artifact against
+    /// the graph (fingerprint + layout checks), execute the planned
+    /// layout bit-identically against the disjoint reference
+    /// ([`interp::validate_plan`]), then precompute regions and weights.
+    pub fn new(
+        name: &str,
+        graph: Graph,
+        artifact: PlanArtifact,
+        generation: u64,
+        arenas: usize,
+        weight_seed: u64,
+    ) -> Result<ModelState> {
+        let plan = artifact
+            .to_plan(&graph)
+            .with_context(|| format!("revalidating plan artifact for `{name}`"))?;
+        interp::validate_plan(&graph, &plan, weight_seed)
+            .with_context(|| format!("proving `{name}` plan safe before serving"))?;
+        let pg = plan.graph_for(&graph);
+        let regions: Vec<Option<Region>> = (0..pg.tensors.len())
+            .map(|t| {
+                plan.alloc.offsets[t]
+                    .map(|off| Region::new(off, pg.tensor(TensorId(t)).size_bytes()))
+            })
+            .collect();
+        let weights: Vec<Vec<Vec<f32>>> = pg
+            .ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| gen_weights(op, weight_seed ^ op.weight_key(i) as u64))
+            .collect();
+        let pool = Arc::new(ArenaPool::new(plan.peak(), arenas));
+        Ok(ModelState {
+            name: name.to_string(),
+            generation,
+            graph,
+            artifact,
+            plan,
+            regions,
+            weights,
+            weight_seed,
+            pool,
+        })
+    }
+
+    /// The graph the plan's order/offsets index (the §II-A rewrite when
+    /// the plan carries one, the base graph otherwise).
+    pub fn planned_graph(&self) -> &Graph {
+        self.plan.graph_for(&self.graph)
+    }
+
+    /// Elements the single model input expects per request.
+    pub fn input_elements(&self) -> usize {
+        self.graph
+            .tensor(self.graph.inputs[0])
+            .shape
+            .num_elements()
+    }
+
+    /// Acquire a pooled arena sized for this generation.
+    pub fn acquire_arena(&self) -> PooledArena {
+        self.pool.acquire()
+    }
+
+    /// Execute one request in `arena` (acquired from this generation's
+    /// pool) and return the model's first output. No allocation beyond
+    /// the output vector: regions and weights are precomputed, and the
+    /// arena is reused as-is — a validated plan writes every region
+    /// before reading it, so stale bytes from the previous request can
+    /// never leak into the result.
+    pub fn execute(&self, arena: &mut crate::ops::exec::Arena, input: &[f32]) -> Result<Vec<f32>> {
+        let pg = self.planned_graph();
+        ensure!(
+            pg.inputs.len() == 1 && pg.outputs.len() == 1,
+            "fleet serving expects single-input single-output models, `{}` has {}/{}",
+            self.name,
+            pg.inputs.len(),
+            pg.outputs.len()
+        );
+        ensure!(
+            arena.len() == self.plan.peak(),
+            "arena size {} does not match plan peak {} — arena from another generation?",
+            arena.len(),
+            self.plan.peak()
+        );
+        let in_id = pg.inputs[0];
+        let in_info = pg.tensor(in_id);
+        ensure!(
+            input.len() == in_info.shape.num_elements(),
+            "input length {} != expected {}",
+            input.len(),
+            in_info.shape.num_elements()
+        );
+        arena.write_tensor(
+            in_info.dtype,
+            self.regions[in_id.0].context("input tensor unplaced")?,
+            input,
+        );
+        for &opid in &self.plan.order.0 {
+            let op = pg.op(opid);
+            let in_shapes: Vec<&crate::ir::Shape> =
+                op.inputs.iter().map(|&t| &pg.tensor(t).shape).collect();
+            let in_regions: Vec<Region> = op
+                .inputs
+                .iter()
+                .map(|&t| self.regions[t.0].context("op input unplaced"))
+                .collect::<Result<_>>()?;
+            let io = OpIo {
+                in_shapes: &in_shapes,
+                in_regions: &in_regions,
+                out_shape: &pg.tensor(op.output).shape,
+                out_region: self.regions[op.output.0].context("op output unplaced")?,
+                dtype: pg.tensor(op.output).dtype,
+                weights: &self.weights[opid.0],
+            };
+            execute_op(&op.kind, &io, arena)
+                .with_context(|| format!("executing {}", op.name))?;
+        }
+        let out_id = pg.outputs[0];
+        let out_info = pg.tensor(out_id);
+        Ok(arena.read_tensor(
+            out_info.dtype,
+            self.regions[out_id.0].context("output tensor unplaced")?,
+            out_info.shape.num_elements(),
+        ))
+    }
+}
+
+/// Result of a successful hot-reload.
+#[derive(Debug, Clone, Copy)]
+pub struct ReloadInfo {
+    pub generation: u64,
+    pub old_peak: usize,
+    pub new_peak: usize,
+}
+
+struct Slot {
+    name: String,
+    current: Mutex<Arc<ModelState>>,
+    reloads: AtomicUsize,
+}
+
+/// The fleet's model table: index-addressed slots, each holding the
+/// current [`ModelState`] generation behind a swappable `Arc`.
+pub struct Registry {
+    slots: Vec<Slot>,
+}
+
+impl Registry {
+    /// Load every spec: build the graph, load (or compute) its plan
+    /// artifact, and prove each resulting state safe. Planning shares
+    /// the process-wide `O_s` cache, so fleets of related models warm
+    /// each other up.
+    pub fn load(specs: &[ModelSpec], arenas: usize, jobs: usize, weight_seed: u64) -> Result<Registry> {
+        ensure!(!specs.is_empty(), "fleet needs at least one model");
+        let cache = crate::overlap::OsCache::process_shared();
+        let mut slots = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let graph = crate::models::build(&spec.name)?;
+            let artifact = match &spec.artifact {
+                Some(path) => PlanArtifact::load(path)
+                    .with_context(|| format!("loading plan artifact {}", path.display()))?,
+                None => {
+                    let plan = Planner::for_graph(&graph)
+                        .dmo(true)
+                        .jobs(jobs)
+                        .os_cache(cache.clone())
+                        .plan()
+                        .with_context(|| format!("planning `{}` at registration", spec.name))?;
+                    PlanArtifact::from_plan(&graph, &plan)
+                }
+            };
+            let state = ModelState::new(&spec.name, graph, artifact, 0, arenas, weight_seed)?;
+            slots.push(Slot {
+                name: spec.name.clone(),
+                current: Mutex::new(Arc::new(state)),
+                reloads: AtomicUsize::new(0),
+            });
+        }
+        Ok(Registry { slots })
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.slots.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// First slot index serving `name` (models may be registered twice —
+    /// two slots, two pools — for A/B traffic splits).
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.slots.iter().position(|s| s.name == name)
+    }
+
+    /// The current generation of slot `m`. The clone keeps that
+    /// generation alive for the caller even across a concurrent reload.
+    pub fn current(&self, m: usize) -> Arc<ModelState> {
+        self.slots[m].current.lock().unwrap().clone()
+    }
+
+    /// Times slot `m` was successfully hot-reloaded.
+    pub fn reloads(&self, m: usize) -> usize {
+        self.slots[m].reloads.load(Ordering::Relaxed)
+    }
+
+    /// Atomically swap slot `m` to a re-planned artifact.
+    ///
+    /// The artifact is fully validated (fingerprint, layout safety and a
+    /// bit-exact execution proof) against the slot's graph *before* the
+    /// swap; any failure leaves the old generation serving untouched.
+    /// After the swap, new requests see the new generation (and its
+    /// freshly pre-sized arena pool) while in-flight requests drain on
+    /// the old `Arc`.
+    pub fn reload(&self, m: usize, artifact: PlanArtifact) -> Result<ReloadInfo> {
+        let slot = &self.slots[m];
+        let (old_generation, old_peak, graph, arenas, weight_seed) = {
+            let cur = slot.current.lock().unwrap();
+            (
+                cur.generation,
+                cur.plan.peak(),
+                cur.graph.clone(),
+                cur.pool.capacity(),
+                cur.weight_seed,
+            )
+        };
+        // validate OUTSIDE the slot lock: a slow (or failing) artifact
+        // must never stall or corrupt the serving path
+        let state = ModelState::new(
+            &slot.name,
+            graph,
+            artifact,
+            old_generation + 1,
+            arenas,
+            weight_seed,
+        )
+        .with_context(|| format!("hot-reload rejected for `{}`", slot.name))?;
+        let info = ReloadInfo {
+            generation: state.generation,
+            old_peak,
+            new_peak: state.plan.peak(),
+        };
+        *slot.current.lock().unwrap() = Arc::new(state);
+        slot.reloads.fetch_add(1, Ordering::Relaxed);
+        Ok(info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_loads_plans_and_serves_current() {
+        let specs = [ModelSpec::planned("tiny"), ModelSpec::planned("tiny_int8")];
+        let reg = Registry::load(&specs, 2, 1, 42).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["tiny", "tiny_int8"]);
+        assert_eq!(reg.index_of("tiny_int8"), Some(1));
+        let s = reg.current(0);
+        assert_eq!(s.generation, 0);
+        assert_eq!(s.pool.arena_bytes(), s.plan.peak());
+        assert_eq!(s.input_elements(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn reload_with_matching_fingerprint_bumps_generation() {
+        let reg = Registry::load(&[ModelSpec::planned("tiny")], 2, 1, 42).unwrap();
+        let g = crate::models::build("tiny").unwrap();
+        // a different planning session over the same graph: same
+        // fingerprint, possibly different layout — a valid re-plan
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .strategies(&[crate::planner::Strategy::Eager])
+            .plan()
+            .unwrap();
+        let old = reg.current(0);
+        let info = reg.reload(0, PlanArtifact::from_plan(&g, &plan)).unwrap();
+        assert_eq!(info.generation, 1);
+        let new = reg.current(0);
+        assert_eq!(new.generation, 1);
+        assert_eq!(new.plan.peak(), info.new_peak);
+        assert_eq!(reg.reloads(0), 1);
+        // the old generation is still alive and executable for holders
+        let mut arena = old.acquire_arena();
+        let input = vec![0.5f32; old.input_elements()];
+        old.execute(&mut arena, &input).unwrap();
+    }
+
+    #[test]
+    fn reload_with_stale_fingerprint_is_rejected_and_old_keeps_serving() {
+        let reg = Registry::load(&[ModelSpec::planned("tiny")], 2, 1, 42).unwrap();
+        // an artifact planned for a *different* graph
+        let other = crate::models::build("tiny_int8").unwrap();
+        let plan = Planner::for_graph(&other).dmo(true).plan().unwrap();
+        let err = reg.reload(0, PlanArtifact::from_plan(&other, &plan));
+        assert!(err.is_err(), "fingerprint mismatch must be rejected");
+        let cur = reg.current(0);
+        assert_eq!(cur.generation, 0, "old generation must keep serving");
+        assert_eq!(reg.reloads(0), 0);
+        let mut arena = cur.acquire_arena();
+        let input = vec![0.25f32; cur.input_elements()];
+        cur.execute(&mut arena, &input).unwrap();
+    }
+}

@@ -1,0 +1,381 @@
+//! Fleet serving loop: mixed-model traffic → per-model admission →
+//! shared worker pool → pooled-arena planned execution → replies.
+//!
+//! [`Fleet`] is the long-lived handle: start it on a [`Registry`],
+//! submit requests (blocking or shedding), hot-reload artifacts while
+//! requests are in flight, and shut down to collect per-model reports.
+//! [`fleet_serve`] wraps it in a deterministic load generator — the
+//! `dmo serve --models …` entry point and the `serve_scale` bench both
+//! drive that function.
+
+use super::admission::Admission;
+use super::registry::{ModelSpec, Registry, ReloadInfo};
+use crate::coordinator::Metrics;
+use crate::planner::PlanArtifact;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant, SystemTime};
+
+/// One in-flight fleet request.
+pub struct FleetRequest {
+    pub id: u64,
+    pub data: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<FleetReply>,
+}
+
+/// One completed fleet inference.
+pub struct FleetReply {
+    pub id: u64,
+    pub model: usize,
+    /// Generation of the [`super::ModelState`] that served the request —
+    /// hot-reload tests read this to see the swap happen mid-stream.
+    pub generation: u64,
+    pub output: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Overload behaviour at the admission edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the producer while the model's queue is full (closed loop).
+    Block,
+    /// Reject immediately and count a shed (open loop keeps its clock).
+    Shed,
+}
+
+/// A running fleet: registry + admission + worker pool (+ watcher).
+pub struct Fleet {
+    pub registry: Arc<Registry>,
+    admission: Arc<Admission<FleetRequest>>,
+    metrics: Arc<Vec<Mutex<Metrics>>>,
+    workers: Vec<thread::JoinHandle<Result<()>>>,
+    watcher: Option<(Arc<AtomicBool>, thread::JoinHandle<()>)>,
+}
+
+impl Fleet {
+    /// Spawn `workers` threads draining the fair admission queues.
+    /// `queue_capacity` bounds each model's queue.
+    pub fn start(registry: Registry, workers: usize, queue_capacity: usize) -> Fleet {
+        let registry = Arc::new(registry);
+        let admission = Arc::new(Admission::new(registry.len(), queue_capacity));
+        let metrics: Arc<Vec<Mutex<Metrics>>> =
+            Arc::new((0..registry.len()).map(|_| Mutex::new(Metrics::default())).collect());
+        let n = if workers == 0 {
+            thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        let handles = (0..n)
+            .map(|w| {
+                let reg = registry.clone();
+                let adm = admission.clone();
+                let met = metrics.clone();
+                thread::Builder::new()
+                    .name(format!("fleet-worker-{w}"))
+                    .spawn(move || -> Result<()> {
+                        while let Some((m, req)) = adm.take() {
+                            // the Arc pins this request to one generation;
+                            // a concurrent reload drains behind it
+                            let state = reg.current(m);
+                            let mut arena = state.acquire_arena();
+                            let output = state
+                                .execute(&mut arena, &req.data)
+                                .with_context(|| format!("serving `{}`", state.name))?;
+                            drop(arena); // back to the pool before bookkeeping
+                            let latency = req.enqueued.elapsed();
+                            met[m].lock().unwrap().record(latency);
+                            let _ = req.reply.send(FleetReply {
+                                id: req.id,
+                                model: m,
+                                generation: state.generation,
+                                output,
+                                latency,
+                            });
+                        }
+                        Ok(())
+                    })
+                    .expect("spawning fleet worker")
+            })
+            .collect();
+        Fleet {
+            registry,
+            admission,
+            metrics,
+            workers: handles,
+            watcher: None,
+        }
+    }
+
+    /// Admit a request for model `m` under `policy`. Returns `false`
+    /// when the request was shed (recorded in that model's [`Metrics`] —
+    /// the single source of truth the reports read) or the fleet is
+    /// closed.
+    pub fn submit(&self, m: usize, req: FleetRequest, policy: AdmissionPolicy) -> bool {
+        let outcome = match policy {
+            AdmissionPolicy::Block => self.admission.submit(m, req),
+            AdmissionPolicy::Shed => self.admission.try_submit(m, req),
+        };
+        match outcome {
+            Ok(()) => true,
+            Err(_rejected) => {
+                self.metrics[m].lock().unwrap().record_shed();
+                false
+            }
+        }
+    }
+
+    /// Hot-reload slot `m` from a re-planned artifact (see
+    /// [`Registry::reload`] for the validation and drain semantics).
+    pub fn reload(&self, m: usize, artifact: PlanArtifact) -> Result<ReloadInfo> {
+        self.registry.reload(m, artifact)
+    }
+
+    /// Watch `dir` for `<model>.plan.json` artifact drops and hot-reload
+    /// the matching slot on every change. Files already present when the
+    /// watch starts are treated as seen (the registry loaded them — or
+    /// chose not to — at startup). A bad artifact is logged and skipped;
+    /// the old generation keeps serving.
+    pub fn watch(&mut self, dir: PathBuf, poll: Duration) {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let registry = self.registry.clone();
+        let handle = thread::Builder::new()
+            .name("fleet-reload-watch".into())
+            .spawn(move || {
+                let paths: Vec<PathBuf> = registry
+                    .names()
+                    .iter()
+                    .map(|n| dir.join(format!("{n}.plan.json")))
+                    .collect();
+                let mtime = |p: &PathBuf| -> Option<SystemTime> {
+                    std::fs::metadata(p).and_then(|m| m.modified()).ok()
+                };
+                let mut seen: Vec<Option<SystemTime>> = paths.iter().map(&mtime).collect();
+                while !flag.load(Ordering::Relaxed) {
+                    for (m, path) in paths.iter().enumerate() {
+                        let now = mtime(path);
+                        if now.is_some() && now != seen[m] {
+                            seen[m] = now; // one attempt per change, even if it fails
+                            match PlanArtifact::load(path).map_err(anyhow::Error::from)
+                                .and_then(|a| registry.reload(m, a))
+                            {
+                                Ok(info) => eprintln!(
+                                    "fleet: hot-reloaded `{}` → generation {} (arena {} → {})",
+                                    registry.names()[m],
+                                    info.generation,
+                                    info.old_peak,
+                                    info.new_peak
+                                ),
+                                Err(e) => eprintln!(
+                                    "fleet: reload of `{}` from {} rejected ({e:#}); old \
+                                     generation keeps serving",
+                                    registry.names()[m],
+                                    path.display()
+                                ),
+                            }
+                        }
+                    }
+                    thread::sleep(poll);
+                }
+            })
+            .expect("spawning reload watcher");
+        self.watcher = Some((stop, handle));
+    }
+
+    /// Current queue depth for model `m` (live admission telemetry).
+    pub fn queue_depth(&self, m: usize) -> usize {
+        self.admission.depth(m)
+    }
+
+    /// Stop admitting, drain the queues, join every worker and the
+    /// watcher, and assemble the per-model reports.
+    pub fn shutdown(mut self) -> Result<Vec<ModelReport>> {
+        self.admission.close();
+        if let Some((stop, handle)) = self.watcher.take() {
+            stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
+        for h in self.workers.drain(..) {
+            h.join().expect("fleet worker panicked")?;
+        }
+        let max_depths = self.admission.max_depths();
+        let reports = (0..self.registry.len())
+            .map(|m| {
+                let metrics = self.metrics[m].lock().unwrap().clone();
+                let state = self.registry.current(m);
+                ModelReport {
+                    model: state.name.clone(),
+                    completed: metrics.latencies.len(),
+                    shed: metrics.shed,
+                    arena_bytes: state.plan.peak(),
+                    pool_hits: state.pool.hits(),
+                    pool_allocs: state.pool.allocs(),
+                    pool_hit_rate: state.pool.hit_rate(),
+                    max_queue_depth: max_depths[m],
+                    generation: state.generation,
+                    reloads: self.registry.reloads(m),
+                    metrics,
+                }
+            })
+            .collect();
+        Ok(reports)
+    }
+}
+
+/// Per-model serving summary. `shed` and `completed` both come out of
+/// the model's [`Metrics`] — there is exactly one source of truth.
+#[derive(Debug, Clone)]
+pub struct ModelReport {
+    pub model: String,
+    pub completed: usize,
+    pub shed: usize,
+    pub metrics: Metrics,
+    /// Arena bytes of the *current* generation (post-reload size).
+    pub arena_bytes: usize,
+    pub pool_hits: usize,
+    pub pool_allocs: usize,
+    pub pool_hit_rate: f64,
+    pub max_queue_depth: usize,
+    pub generation: u64,
+    pub reloads: usize,
+}
+
+/// Fleet load-generation configuration (`dmo serve --models …`).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub models: Vec<ModelSpec>,
+    /// Pooled arenas per model (K).
+    pub arenas: usize,
+    /// Worker threads (0 = all cores).
+    pub workers: usize,
+    /// Per-model admission queue capacity.
+    pub queue_capacity: usize,
+    pub requests: u64,
+    /// Open-loop Poisson arrival rate in req/s with shedding admission;
+    /// `<= 0` runs closed-loop (as fast as backpressure admits).
+    pub rate: f64,
+    /// Per-model traffic weights (empty = uniform).
+    pub mix: Vec<f64>,
+    pub seed: u64,
+    /// Planner worker threads for models registered without an artifact.
+    pub jobs: usize,
+    /// Directory to watch for `<model>.plan.json` hot-reload drops.
+    pub reload_watch: Option<PathBuf>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            models: vec![ModelSpec::planned("tiny")],
+            arenas: 4,
+            workers: 0,
+            queue_capacity: 64,
+            requests: 1024,
+            rate: 0.0,
+            mix: Vec::new(),
+            seed: 42,
+            jobs: 0,
+            reload_watch: None,
+        }
+    }
+}
+
+/// Whole-run summary returned by [`fleet_serve`].
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub wall: Duration,
+    pub completed: usize,
+    pub shed: usize,
+    pub throughput_rps: f64,
+    pub per_model: Vec<ModelReport>,
+}
+
+/// Run the fleet under a deterministic mixed-model workload: start a
+/// registry + worker pool, emit `cfg.requests` requests across the
+/// models (weighted by `cfg.mix`), collect every reply, shut down.
+/// Closed-loop runs (`rate <= 0`) use blocking admission, so
+/// `completed == requests`; open-loop runs shed on full queues and the
+/// report proves `completed == requests - shed` either way.
+pub fn fleet_serve(cfg: &FleetConfig) -> Result<FleetReport> {
+    let registry = Registry::load(&cfg.models, cfg.arenas, cfg.jobs, cfg.seed)?;
+    let elems: Vec<usize> = (0..registry.len())
+        .map(|m| registry.current(m).input_elements())
+        .collect();
+    let mut fleet = Fleet::start(registry, cfg.workers, cfg.queue_capacity);
+    if let Some(dir) = &cfg.reload_watch {
+        fleet.watch(dir.clone(), Duration::from_millis(100));
+    }
+
+    let n_models = elems.len();
+    anyhow::ensure!(
+        cfg.mix.is_empty() || cfg.mix.len() == n_models,
+        "--mix needs one weight per model ({} given, {} models)",
+        cfg.mix.len(),
+        n_models
+    );
+    let weights: Vec<f64> = if cfg.mix.is_empty() {
+        vec![1.0; n_models]
+    } else {
+        cfg.mix.clone()
+    };
+    let total_w: f64 = weights.iter().sum();
+    anyhow::ensure!(total_w > 0.0, "--mix weights must sum to a positive value");
+
+    let policy = if cfg.rate > 0.0 {
+        AdmissionPolicy::Shed
+    } else {
+        AdmissionPolicy::Block
+    };
+    let (reply_tx, reply_rx) = mpsc::channel::<FleetReply>();
+    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xF1EE_7000);
+    let t0 = Instant::now();
+    for id in 0..cfg.requests {
+        if cfg.rate > 0.0 {
+            thread::sleep(Duration::from_secs_f64(rng.exp(cfg.rate)));
+        }
+        // weighted model pick, then a deterministic per-(model,id) payload
+        let mut pick = rng.next_f64() * total_w;
+        let mut m = n_models - 1;
+        for (i, w) in weights.iter().enumerate() {
+            if pick < *w {
+                m = i;
+                break;
+            }
+            pick -= w;
+        }
+        let mut pr = crate::util::rng::Rng::new(cfg.seed ^ (id << 8) ^ m as u64);
+        let data: Vec<f32> = (0..elems[m]).map(|_| pr.uniform(-1.0, 1.0)).collect();
+        let req = FleetRequest {
+            id,
+            data,
+            enqueued: Instant::now(),
+            reply: reply_tx.clone(),
+        };
+        fleet.submit(m, req, policy);
+    }
+    drop(reply_tx);
+
+    let completed = reply_rx.iter().count();
+    let wall = t0.elapsed();
+    let per_model = fleet.shutdown()?;
+
+    let shed: usize = per_model.iter().map(|r| r.shed).sum();
+    let by_metrics: usize = per_model.iter().map(|r| r.completed).sum();
+    anyhow::ensure!(
+        completed == by_metrics && completed as u64 + shed as u64 == cfg.requests,
+        "reply accounting broke: {completed} replies, {by_metrics} recorded, \
+         {shed} shed, {} requested",
+        cfg.requests
+    );
+    Ok(FleetReport {
+        wall,
+        completed,
+        shed,
+        throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
+        per_model,
+    })
+}

@@ -171,6 +171,43 @@
 //! serial-vs-parallel sweep times to `BENCH_planner_scale.json`; see
 //! EXPERIMENTS.md §Perf.
 //!
+//! ## Serving a fleet
+//!
+//! Planning fixes each model's arena size before the first request
+//! (§II-D), so the [`fleet`] layer pre-sizes K pooled arenas per model
+//! and serves N models from one process with **zero per-request arena
+//! allocation at steady state** — a property the pool counts and the
+//! report asserts rather than assumes. Per-model bounded queues are
+//! drained round-robin (one model's burst never starves another), and
+//! artifacts hot-reload behind a generation-counted `Arc` while
+//! in-flight requests drain on the old layout:
+//!
+//! ```
+//! use dmo::fleet::{fleet_serve, FleetConfig, ModelSpec};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let report = fleet_serve(&FleetConfig {
+//!     models: vec![ModelSpec::planned("tiny"), ModelSpec::planned("tiny_int8")],
+//!     arenas: 2,
+//!     workers: 2,
+//!     requests: 64,
+//!     ..FleetConfig::default()
+//! })?;
+//! assert_eq!(report.completed, 64); // closed loop: nothing shed
+//! assert_eq!(report.shed, 0);
+//! for m in &report.per_model {
+//!     assert_eq!(m.pool_allocs, 0, "steady state never allocates an arena");
+//!     assert_eq!(m.pool_hit_rate, 1.0);
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! `dmo serve --models tiny,tiny_int8,tiny_wide` runs the same loop from
+//! the CLI, and `cargo bench --bench serve_scale` records mixed-traffic
+//! latency/throughput to `BENCH_serve_scale.json`; see EXPERIMENTS.md
+//! §Serving.
+//!
 //! ```
 //! use dmo::codegen::{emit_artifact, EmitOptions};
 //! use dmo::planner::{PlanArtifact, Planner};
@@ -204,6 +241,7 @@
 
 pub mod codegen;
 pub mod coordinator;
+pub mod fleet;
 pub mod interp;
 pub mod ir;
 pub mod mcu;

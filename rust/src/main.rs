@@ -711,6 +711,16 @@ COMMANDS:
                               startup planning shares the process-wide
                               O_s cache (persisted via --os-cache so cold
                               replicas start warm) and runs on --jobs
-                              workers"
+                              workers
+  serve --models a,b,c [--arenas K] [--workers N] [--queue C] [--mix W]
+        [--rate R] [--requests N] [--reload-watch DIR]
+                              fleet serving: N DMO-planned models in one
+                              process, K pooled arenas per model (zero
+                              per-request allocation at steady state),
+                              per-model bounded queues drained fairly;
+                              --rate>0 sheds on overload (open loop),
+                              default blocks (closed loop);
+                              --reload-watch hot-swaps <model>.plan.json
+                              artifacts without dropping requests"
     );
 }

@@ -68,6 +68,7 @@ pub fn build(name: &str) -> anyhow::Result<Graph> {
         "resnet_50_v2" => resnet::build_50_v2(DType::F32),
         "tiny" => tiny::build(DType::F32),
         "tiny_int8" => tiny::build(DType::I8),
+        "tiny_wide" => tiny::build_wide(DType::F32),
         other => anyhow::bail!("unknown model `{other}` (see `dmo models`)"),
     })
 }
@@ -75,7 +76,7 @@ pub fn build(name: &str) -> anyhow::Result<Graph> {
 /// All buildable names (catalog + extras).
 pub fn all_names() -> Vec<&'static str> {
     let mut v = table3_names();
-    v.extend(["mobilenet_v1_0.25_128", "tiny", "tiny_int8"]);
+    v.extend(["mobilenet_v1_0.25_128", "tiny", "tiny_int8", "tiny_wide"]);
     v
 }
 

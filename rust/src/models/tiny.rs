@@ -32,6 +32,26 @@ pub fn build(dtype: DType) -> Graph {
     b.finish(&[out])
 }
 
+/// Build `tiny_wide`: the same topology with doubled channel widths
+/// (16 → 32 → 64). Same input resolution and class count, but a
+/// distinct fingerprint, arena peak and per-request cost — the third
+/// model of the fleet-serving bench's mixed traffic, cheap enough for
+/// 10^4+ interpreted requests yet genuinely different from `tiny`.
+pub fn build_wide(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("tiny_wide", dtype);
+    let x = b.input(Shape::hwc(RES, RES, 3));
+    let h = b.conv2d(x, 16, (3, 3), (2, 2), Padding::Same, Activation::Relu6); // 16x16x16
+    let h = b.dwconv2d(h, (3, 3), (1, 1), Padding::Same, Activation::Relu6);
+    let h = b.conv2d(h, 32, (1, 1), (1, 1), Padding::Same, Activation::Relu6); // 16x16x32
+    let h = b.dwconv2d(h, (3, 3), (2, 2), Padding::Same, Activation::Relu6); // 8x8x32
+    let h = b.conv2d(h, 64, (1, 1), (1, 1), Padding::Same, Activation::Relu6); // 8x8x64
+    let h = b.global_avg_pool(h);
+    let h = b.reshape(h, Shape::new(&[1, 64]));
+    let h = b.fully_connected(h, CLASSES, Activation::None);
+    let out = b.softmax(h);
+    b.finish(&[out])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -43,5 +63,19 @@ mod tests {
         assert_eq!(g.tensor(g.ops[4].output).shape, Shape::hwc(8, 8, 32));
         assert_eq!(g.ops.len(), 9);
         assert_eq!(g.outputs.len(), 1);
+    }
+
+    #[test]
+    fn wide_shapes_and_distinct_fingerprint() {
+        let g = build_wide(DType::F32);
+        assert_eq!(g.tensor(g.ops[0].output).shape, Shape::hwc(16, 16, 16));
+        assert_eq!(g.tensor(g.ops[4].output).shape, Shape::hwc(8, 8, 64));
+        assert_eq!(g.ops.len(), 9);
+        // wider channels → a different plan fingerprint than `tiny`, so
+        // hot-reload cross-model artifact swaps are rejectable
+        assert_ne!(
+            crate::planner::artifact::graph_fingerprint(&g),
+            crate::planner::artifact::graph_fingerprint(&build(DType::F32)),
+        );
     }
 }

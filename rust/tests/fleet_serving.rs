@@ -1,0 +1,274 @@
+//! Fleet serving end-to-end: pooled-arena execution correctness,
+//! closed- and open-loop accounting, and artifact hot-reload under
+//! in-flight traffic.
+
+use dmo::fleet::{
+    fleet_serve, AdmissionPolicy, Fleet, FleetConfig, FleetReply, FleetRequest, ModelSpec,
+    Registry,
+};
+use dmo::interp;
+use dmo::ir::DType;
+use dmo::planner::{PlanArtifact, Planner, Strategy};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+const SEED: u64 = 42;
+
+fn deterministic_input(elems: usize, salt: u64) -> Vec<f32> {
+    let mut rng = dmo::util::rng::Rng::new(SEED ^ salt);
+    (0..elems).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+fn assert_bit_identical(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// The pooled path must be bit-identical to the disjoint reference —
+/// including on an arena deliberately filled with garbage from a
+/// "previous request", because a validated plan writes every region
+/// before reading it.
+#[test]
+fn pooled_execution_is_bit_identical_even_on_a_dirtied_arena() {
+    let reg = Registry::load(&[ModelSpec::planned("tiny")], 1, 1, SEED).unwrap();
+    let state = reg.current(0);
+    let input = deterministic_input(state.input_elements(), 0xD1);
+    let reference =
+        interp::run_reference(&state.graph, &[input.clone()], SEED).unwrap().remove(0);
+
+    let mut arena = state.acquire_arena();
+    let clean = state.execute(&mut arena, &input).unwrap();
+    assert_bit_identical(&clean, &reference, "clean arena vs reference");
+
+    // poison every byte, as if a hostile previous request left residue
+    for off in 0..arena.len() {
+        arena.poke(DType::I8, off, -77.0);
+    }
+    let dirty = state.execute(&mut arena, &input).unwrap();
+    assert_bit_identical(&dirty, &reference, "dirtied arena vs reference");
+}
+
+/// Closed loop over three models: everything completes, nothing sheds,
+/// and the pooled-arena path never allocates after registration.
+#[test]
+fn closed_loop_fleet_completes_everything_without_allocating() {
+    let report = fleet_serve(&FleetConfig {
+        models: vec![
+            ModelSpec::planned("tiny"),
+            ModelSpec::planned("tiny_int8"),
+            ModelSpec::planned("tiny_wide"),
+        ],
+        arenas: 2,
+        workers: 2,
+        queue_capacity: 16,
+        requests: 300,
+        rate: 0.0,
+        seed: 7,
+        jobs: 1,
+        ..FleetConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.completed, 300);
+    assert_eq!(report.shed, 0, "backpressure admission never sheds");
+    assert_eq!(report.per_model.len(), 3);
+    let mut total = 0;
+    for m in &report.per_model {
+        assert!(m.completed > 0, "uniform mix must reach `{}`", m.model);
+        assert_eq!(m.shed, m.metrics.shed, "report shed must come from Metrics");
+        assert_eq!(m.pool_allocs, 0, "`{}` allocated at steady state", m.model);
+        assert_eq!(m.pool_hit_rate, 1.0);
+        assert_eq!(m.metrics.latency().count, m.completed);
+        total += m.completed;
+    }
+    assert_eq!(total, 300);
+}
+
+/// Open loop with a deliberately overwhelmed single worker: sheds are
+/// recorded in per-model `Metrics` (the single source of truth) and
+/// `completed + shed == requests` still balances exactly.
+#[test]
+fn open_loop_sheds_into_metrics_and_accounting_balances() {
+    let requests = 400u64;
+    let report = fleet_serve(&FleetConfig {
+        models: vec![ModelSpec::planned("tiny")],
+        arenas: 1,
+        workers: 1,
+        queue_capacity: 1,
+        requests,
+        rate: 1e6, // ~1 µs arrival gaps into a 1-deep queue
+        seed: 11,
+        jobs: 1,
+        ..FleetConfig::default()
+    })
+    .unwrap();
+    assert_eq!(
+        report.completed as u64 + report.shed as u64,
+        requests,
+        "every request is either served or counted shed"
+    );
+    assert!(
+        report.shed > 0,
+        "a 1-deep queue under µs arrivals must shed (completed {})",
+        report.completed
+    );
+    let m = &report.per_model[0];
+    assert_eq!(m.shed, report.shed);
+    assert_eq!(m.shed, m.metrics.shed, "ModelReport.shed reads Metrics.shed");
+    assert_eq!(m.completed, report.completed);
+}
+
+fn submit_blocking(fleet: &Fleet, id: u64, data: Vec<f32>, tx: &mpsc::Sender<FleetReply>) {
+    let ok = fleet.submit(
+        0,
+        FleetRequest {
+            id,
+            data,
+            enqueued: Instant::now(),
+            reply: tx.clone(),
+        },
+        AdmissionPolicy::Block,
+    );
+    assert!(ok, "blocking submit on an open fleet cannot fail");
+}
+
+/// A valid re-plan swapped in mid-stream: zero replies lost across the
+/// swap, requests executed after it see the new generation, and the
+/// registry immediately reports the new arena size.
+#[test]
+fn hot_reload_mid_stream_drops_nothing_and_swaps_generation() {
+    let reg = Registry::load(&[ModelSpec::planned("tiny")], 2, 1, SEED).unwrap();
+    let fleet = Fleet::start(reg, 2, 64);
+    let elems = fleet.registry.current(0).input_elements();
+    let (tx, rx) = mpsc::channel::<FleetReply>();
+
+    for id in 0..100u64 {
+        submit_blocking(&fleet, id, deterministic_input(elems, id), &tx);
+    }
+    let before: Vec<FleetReply> = (0..100).map(|_| rx.recv().unwrap()).collect();
+    assert!(
+        before.iter().all(|r| r.generation == 0),
+        "pre-reload replies all come from generation 0"
+    );
+
+    // a different planning session over the same graph — same
+    // fingerprint, a valid hot-reload
+    let g = dmo::models::build("tiny").unwrap();
+    let replan = Planner::for_graph(&g)
+        .dmo(true)
+        .strategies(&[Strategy::Eager])
+        .plan()
+        .unwrap();
+    let info = fleet.reload(0, PlanArtifact::from_plan(&g, &replan)).unwrap();
+    assert_eq!(info.generation, 1);
+    assert_eq!(
+        fleet.registry.current(0).plan.peak(),
+        info.new_peak,
+        "new requests see the new generation's arena size immediately"
+    );
+
+    for id in 100..200u64 {
+        submit_blocking(&fleet, id, deterministic_input(elems, id), &tx);
+    }
+    drop(tx);
+    let after: Vec<FleetReply> = rx.iter().collect();
+    assert_eq!(after.len(), 100, "zero replies lost across the swap");
+    assert!(
+        after.iter().all(|r| r.generation == 1),
+        "post-reload submissions execute on generation 1"
+    );
+
+    let reports = fleet.shutdown().unwrap();
+    assert_eq!(reports[0].completed, 200, "completed == requests - shed");
+    assert_eq!(reports[0].shed, 0);
+    assert_eq!(reports[0].generation, 1);
+    assert_eq!(reports[0].reloads, 1);
+}
+
+/// A stale-fingerprint artifact (planned for a different graph) is
+/// rejected without killing the server: the old generation keeps
+/// serving and the slot records no reload.
+#[test]
+fn stale_fingerprint_artifact_is_rejected_and_serving_continues() {
+    let reg = Registry::load(&[ModelSpec::planned("tiny")], 1, 1, SEED).unwrap();
+    let fleet = Fleet::start(reg, 1, 8);
+    let elems = fleet.registry.current(0).input_elements();
+    let (tx, rx) = mpsc::channel::<FleetReply>();
+    submit_blocking(&fleet, 0, deterministic_input(elems, 0), &tx);
+    assert_eq!(rx.recv().unwrap().generation, 0);
+
+    let other = dmo::models::build("tiny_wide").unwrap();
+    let plan = Planner::for_graph(&other).dmo(true).plan().unwrap();
+    let err = fleet.reload(0, PlanArtifact::from_plan(&other, &plan));
+    assert!(err.is_err(), "cross-model artifact must be rejected");
+
+    // the server is alive and still on generation 0
+    submit_blocking(&fleet, 1, deterministic_input(elems, 1), &tx);
+    drop(tx);
+    let reply = rx.recv().unwrap();
+    assert_eq!(reply.generation, 0, "old generation keeps serving");
+
+    let reports = fleet.shutdown().unwrap();
+    assert_eq!(reports[0].completed, 2);
+    assert_eq!(reports[0].generation, 0);
+    assert_eq!(reports[0].reloads, 0);
+}
+
+/// `--reload-watch` end to end: dropping a re-planned artifact into the
+/// watched directory hot-swaps the generation; dropping a mismatched
+/// one afterwards is rejected while the server keeps serving.
+#[test]
+fn reload_watch_picks_up_artifact_drops() {
+    let dir = std::env::temp_dir().join(format!("dmo_fleet_watch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact_path = dir.join("tiny.plan.json");
+    let _ = std::fs::remove_file(&artifact_path);
+
+    let reg = Registry::load(&[ModelSpec::planned("tiny")], 1, 1, SEED).unwrap();
+    let mut fleet = Fleet::start(reg, 1, 8);
+    fleet.watch(dir.clone(), Duration::from_millis(10));
+
+    let g = dmo::models::build("tiny").unwrap();
+    let replan = Planner::for_graph(&g)
+        .dmo(true)
+        .strategies(&[Strategy::Lazy])
+        .plan()
+        .unwrap();
+    PlanArtifact::from_plan(&g, &replan).save(&artifact_path).unwrap();
+
+    // the watcher validates off the serving path; poll for the swap
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while fleet.registry.current(0).generation != 1 {
+        assert!(
+            Instant::now() < deadline,
+            "watcher did not pick up the artifact drop in time"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // now a stale artifact lands in the same file: rejected, server fine
+    let other = dmo::models::build("tiny_int8").unwrap();
+    let bad = Planner::for_graph(&other).dmo(true).plan().unwrap();
+    PlanArtifact::from_plan(&other, &bad).save(&artifact_path).unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(
+        fleet.registry.current(0).generation,
+        1,
+        "rejected artifact must not change the serving generation"
+    );
+
+    let elems = fleet.registry.current(0).input_elements();
+    let (tx, rx) = mpsc::channel::<FleetReply>();
+    submit_blocking(&fleet, 0, deterministic_input(elems, 9), &tx);
+    drop(tx);
+    assert_eq!(rx.recv().unwrap().generation, 1, "server still serving post-rejection");
+
+    let reports = fleet.shutdown().unwrap();
+    assert_eq!(reports[0].reloads, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
