@@ -76,6 +76,7 @@ fn main() {
         seed,
         jobs: 0,
         reload_watch: None,
+        metrics_out: None,
     };
     let report = fleet_serve(&cfg).unwrap();
 
@@ -113,6 +114,7 @@ fn main() {
             ("pool_allocs", num(m.pool_allocs)),
             ("pool_hit_rate", Json::Num(m.pool_hit_rate)),
             ("max_queue_depth", num(m.max_queue_depth)),
+            ("queue_capacity", num(m.queue_capacity)),
             ("generation", num(m.generation as usize)),
         ]));
     }

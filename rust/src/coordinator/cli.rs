@@ -9,7 +9,7 @@ use super::server::{serve, ServeConfig};
 use super::BatchPolicy;
 use crate::fleet::{fleet_serve, FleetConfig, ModelSpec};
 use crate::util::args::{opt, ArgSpec, Args};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -30,10 +30,33 @@ pub const SERVE_SPEC: &[ArgSpec] = &[
     opt("--workers", "fleet: serving worker threads (default: all cores)"),
     opt("--mix", "fleet: comma-separated traffic weights, one per model (default uniform)"),
     opt("--reload-watch", "fleet: directory watched for `<model>.plan.json` hot-reload drops"),
+    opt("--metrics-out", "Prometheus text snapshot file (fleet: rewritten every 500 ms + at shutdown)"),
+    opt("--trace-out", "Chrome trace-event JSON of the run (load in Perfetto / chrome://tracing)"),
 ];
 
 /// Entry point used by `main.rs`.
 pub fn serve_main(args: &Args) -> Result<()> {
+    let trace_out = args.value("--trace-out").map(PathBuf::from);
+    if trace_out.is_some() {
+        crate::obs::trace::enable();
+    }
+    let result = serve_dispatch(args);
+    if let Some(path) = trace_out {
+        crate::obs::trace::disable();
+        let events = crate::obs::trace::drain();
+        let json = crate::obs::trace::export_chrome(&events).to_string();
+        std::fs::write(&path, json)
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        println!(
+            "trace           : {} events → {} (load in Perfetto)",
+            events.len(),
+            path.display()
+        );
+    }
+    result
+}
+
+fn serve_dispatch(args: &Args) -> Result<()> {
     if args.value("--models").is_some() {
         return fleet_main(args);
     }
@@ -50,6 +73,7 @@ pub fn serve_main(args: &Args) -> Result<()> {
         plan_model: args.value("--model").unwrap_or("tiny").to_string(),
         jobs: args.parsed("--jobs", 0usize)?,
         os_cache_path: args.value("--os-cache").map(PathBuf::from),
+        metrics_out: args.value("--metrics-out").map(PathBuf::from),
         ..Default::default()
     };
     println!(
@@ -75,10 +99,17 @@ pub fn serve_main(args: &Args) -> Result<()> {
         100.0 * report.metrics.batch_efficiency()
     );
     println!(
+        "queue           : max depth {} of {}",
+        report.queue_max_depth, cfg.queue_capacity
+    );
+    println!(
         "on-device arena : {} original → {} with DMO",
         crate::report::fmt_bytes(report.arena_original),
         crate::report::fmt_bytes(report.arena_dmo)
     );
+    if let Some(p) = &cfg.metrics_out {
+        println!("metrics         : snapshot written to {}", p.display());
+    }
     Ok(())
 }
 
@@ -127,6 +158,7 @@ fn fleet_main(args: &Args) -> Result<()> {
         seed: args.parsed("--seed", 42u64)?,
         jobs: args.parsed("--jobs", 0usize)?,
         reload_watch,
+        metrics_out: args.value("--metrics-out").map(PathBuf::from),
     };
     println!(
         "fleet: {} models × {} arenas, {} workers, queue {}/model, {} requests ({})",
@@ -156,7 +188,7 @@ fn fleet_main(args: &Args) -> Result<()> {
         let l = m.metrics.latency();
         println!(
             "  {:<14} gen {} ({} reloads): {} done, {} shed | p50 {:.0} p95 {:.0} p99 {:.0} µs \
-             | arena {} | pool hit {:.1}% ({} allocs) | max queue {}",
+             | arena {} | pool hit {:.1}% ({} allocs) | max queue {}/{}",
             m.model,
             m.generation,
             m.reloads,
@@ -168,8 +200,12 @@ fn fleet_main(args: &Args) -> Result<()> {
             crate::report::fmt_bytes(m.arena_bytes),
             100.0 * m.pool_hit_rate,
             m.pool_allocs,
-            m.max_queue_depth
+            m.max_queue_depth,
+            m.queue_capacity
         );
+    }
+    if let Some(p) = &cfg.metrics_out {
+        println!("metrics         : snapshot written to {}", p.display());
     }
     Ok(())
 }

@@ -1,6 +1,15 @@
 //! Serving metrics: latency distribution, throughput, batch efficiency.
+//!
+//! `Metrics` is O(1) in the request count: latencies accumulate into a
+//! fixed-size log-bucket [`LatencyHistogram`] (exact count/sum/max,
+//! bucket-bounded percentiles) instead of an unbounded sample vector, and
+//! batch statistics are scalar accumulators. A fleet serving 10^6+
+//! requests holds a few hundred counters per model, not a million
+//! `Duration`s.
 
 use std::time::Duration;
+
+use crate::obs::hist::LatencyHistogram;
 
 /// Latency percentiles over a completed run.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -14,7 +23,9 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
-    /// Compute from raw samples (any order).
+    /// Compute from raw samples (any order), with exact nearest-rank
+    /// percentiles: the p-th percentile is the smallest sample such that
+    /// at least `p·n` samples are ≤ it (`idx = ceil(p·n) − 1`).
     pub fn from_samples(samples: &[Duration]) -> LatencyStats {
         if samples.is_empty() {
             return LatencyStats {
@@ -29,8 +40,8 @@ impl LatencyStats {
         let mut us: Vec<f64> = samples.iter().map(|d| d.as_secs_f64() * 1e6).collect();
         us.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pct = |p: f64| -> f64 {
-            let idx = ((us.len() as f64 - 1.0) * p).round() as usize;
-            us[idx]
+            let rank = ((p * us.len() as f64).ceil() as usize).clamp(1, us.len());
+            us[rank - 1]
         };
         LatencyStats {
             count: us.len(),
@@ -43,18 +54,19 @@ impl LatencyStats {
     }
 }
 
-/// Accumulated run metrics.
+/// Accumulated run metrics — constant-size regardless of request count.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
-    pub latencies: Vec<Duration>,
-    pub batches: Vec<usize>,
-    pub padded: Vec<usize>,
+    hist: LatencyHistogram,
+    batch_count: usize,
+    batch_real: usize,
+    batch_lanes: usize,
     pub shed: usize,
 }
 
 impl Metrics {
     pub fn record(&mut self, latency: Duration) {
-        self.latencies.push(latency);
+        self.hist.record(latency.as_micros().min(u64::MAX as u128) as u64);
     }
 
     /// Count one shed (rejected-at-admission) request. `Metrics` is the
@@ -64,30 +76,49 @@ impl Metrics {
     }
 
     pub fn record_batch(&mut self, actual: usize, padded: usize) {
-        self.batches.push(actual);
-        self.padded.push(padded);
+        self.batch_count += 1;
+        self.batch_real += actual;
+        self.batch_lanes += padded;
     }
 
+    /// Number of recorded latency samples (completed requests). Exact.
+    pub fn count(&self) -> usize {
+        self.hist.count() as usize
+    }
+
+    /// The underlying histogram (for Prometheus export).
+    pub fn histogram(&self) -> &LatencyHistogram {
+        &self.hist
+    }
+
+    /// Latency stats from the histogram: `count`/`mean`/`max` exact,
+    /// percentiles bounded above by the bucket width (≤ 25%) and clamped
+    /// to the exact max, so p50 ≤ p95 ≤ p99 ≤ max always holds.
     pub fn latency(&self) -> LatencyStats {
-        LatencyStats::from_samples(&self.latencies)
+        LatencyStats {
+            count: self.hist.count() as usize,
+            mean_us: self.hist.mean_us(),
+            p50_us: self.hist.percentile_us(0.50),
+            p95_us: self.hist.percentile_us(0.95),
+            p99_us: self.hist.percentile_us(0.99),
+            max_us: self.hist.max_us() as f64,
+        }
     }
 
     /// Mean requests per executed batch.
     pub fn mean_batch(&self) -> f64 {
-        if self.batches.is_empty() {
+        if self.batch_count == 0 {
             return 0.0;
         }
-        self.batches.iter().sum::<usize>() as f64 / self.batches.len() as f64
+        self.batch_real as f64 / self.batch_count as f64
     }
 
     /// Fraction of executed lanes that carried real requests.
     pub fn batch_efficiency(&self) -> f64 {
-        let real: usize = self.batches.iter().sum();
-        let lanes: usize = self.padded.iter().sum();
-        if lanes == 0 {
+        if self.batch_lanes == 0 {
             return 1.0;
         }
-        real as f64 / lanes as f64
+        self.batch_real as f64 / self.batch_lanes as f64
     }
 }
 
@@ -106,6 +137,21 @@ mod tests {
     }
 
     #[test]
+    fn nearest_rank_small_sample() {
+        // 10 samples 1..=10 µs: nearest-rank gives p50 = 5th sample, and
+        // p99 must report the max, not under-report it (the old
+        // `((len−1)·p).round()` formula gave p99 = samples[9·0.99 ≈ 9] ✓
+        // but p50 = samples[4.5 → 5] = 6 µs and p95 = samples[8.55 → 9]
+        // = 10 — rounding half-up from an interpolated index, not a rank)
+        let samples: Vec<Duration> = (1..=10).map(Duration::from_micros).collect();
+        let s = LatencyStats::from_samples(&samples);
+        assert_eq!(s.p50_us, 5.0, "ceil(0.50·10)−1 = index 4 → 5 µs");
+        assert_eq!(s.p95_us, 10.0, "ceil(0.95·10)−1 = index 9 → 10 µs");
+        assert_eq!(s.p99_us, 10.0, "ceil(0.99·10)−1 = index 9 → 10 µs");
+        assert_eq!(s.max_us, 10.0);
+    }
+
+    #[test]
     fn empty_is_zero() {
         let s = LatencyStats::from_samples(&[]);
         assert_eq!(s.count, 0);
@@ -119,5 +165,22 @@ mod tests {
         m.record_batch(4, 4);
         assert!((m.batch_efficiency() - 7.0 / 8.0).abs() < 1e-9);
         assert!((m.mean_batch() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_metrics_bounded_and_ordered() {
+        let mut m = Metrics::default();
+        for us in 1..=100_000u64 {
+            m.record(Duration::from_micros(us));
+        }
+        let s = m.latency();
+        assert_eq!(s.count, 100_000);
+        assert_eq!(m.count(), 100_000);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+        assert_eq!(s.max_us, 100_000.0);
+        // log-bucket estimate within 25% above the true nearest-rank value
+        assert!((50_000.0..=62_500.0).contains(&s.p50_us), "p50 = {}", s.p50_us);
+        assert!((99_000.0..=123_750.0).contains(&s.p99_us), "p99 = {}", s.p99_us);
+        assert!((s.mean_us - 50_000.5).abs() < 1.0);
     }
 }

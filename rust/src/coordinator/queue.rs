@@ -16,6 +16,8 @@ pub struct BoundedQueue<T> {
 struct Inner<T> {
     items: VecDeque<T>,
     closed: bool,
+    /// Deepest the queue has ever been — backlog high-water telemetry.
+    max_depth: usize,
 }
 
 impl<T> BoundedQueue<T> {
@@ -24,6 +26,7 @@ impl<T> BoundedQueue<T> {
             inner: Mutex::new(Inner {
                 items: VecDeque::new(),
                 closed: false,
+                max_depth: 0,
             }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
@@ -42,6 +45,7 @@ impl<T> BoundedQueue<T> {
             return false;
         }
         g.items.push_back(item);
+        g.max_depth = g.max_depth.max(g.items.len());
         self.not_empty.notify_one();
         true
     }
@@ -53,6 +57,7 @@ impl<T> BoundedQueue<T> {
             return Err(item);
         }
         g.items.push_back(item);
+        g.max_depth = g.max_depth.max(g.items.len());
         self.not_empty.notify_one();
         Ok(())
     }
@@ -109,6 +114,11 @@ impl<T> BoundedQueue<T> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// High-water mark: the deepest the queue has ever been.
+    pub fn max_depth(&self) -> usize {
+        self.inner.lock().unwrap().max_depth
     }
 }
 
@@ -198,6 +208,21 @@ mod tests {
         assert!(q.try_push(1).is_ok(), "clamped capacity admits one item");
         assert!(q.try_push(2).is_err(), "…and exactly one");
         assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn max_depth_tracks_high_water() {
+        let q = BoundedQueue::new(4);
+        assert_eq!(q.max_depth(), 0);
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.try_push(4).unwrap();
+        // depth peaked at 3 even though the queue now holds 2
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.max_depth(), 3);
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     pub policy: BatchPolicy,
     pub seed: u64,
+    /// File to write a Prometheus text-format metrics snapshot to at the
+    /// end of the run (the fleet path rewrites its file periodically;
+    /// the single-model loop writes once, after the last reply).
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -69,6 +73,7 @@ impl Default for ServeConfig {
             queue_capacity: 64,
             policy: BatchPolicy::default(),
             seed: 42,
+            metrics_out: None,
         }
     }
 }
@@ -85,6 +90,8 @@ pub struct ServeReport {
     /// DMO-planned on-device arena of the served model, for the report
     pub arena_original: usize,
     pub arena_dmo: usize,
+    /// High-water mark of the admission queue over the run.
+    pub queue_max_depth: usize,
 }
 
 /// Run the full loop: a producer thread emits a Poisson stream of
@@ -248,7 +255,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         "output checksum {checksum} far from {expect} — model output is not a distribution"
     );
 
-    Ok(ServeReport {
+    let report = ServeReport {
         completed,
         shed: metrics.shed,
         wall,
@@ -257,5 +264,57 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         platform,
         arena_original,
         arena_dmo,
-    })
+        queue_max_depth: queue.max_depth(),
+    };
+    if let Some(path) = &cfg.metrics_out {
+        let text = render_prometheus(&cfg.plan_model, &report);
+        std::fs::write(path, text)
+            .with_context(|| format!("writing metrics snapshot to {}", path.display()))?;
+    }
+    Ok(report)
+}
+
+/// Prometheus text-exposition snapshot of a finished single-model run.
+fn render_prometheus(model: &str, report: &ServeReport) -> String {
+    let mut p = crate::obs::prom::PromText::new();
+    let labels: &[(&str, &str)] = &[("model", model)];
+    p.family(
+        "dmo_requests_completed_total",
+        "Requests completed per model.",
+        "counter",
+    );
+    p.sample(
+        "dmo_requests_completed_total",
+        labels,
+        report.completed as f64,
+    );
+    p.family(
+        "dmo_requests_shed_total",
+        "Requests shed at admission per model.",
+        "counter",
+    );
+    p.sample("dmo_requests_shed_total", labels, report.shed as f64);
+    p.family(
+        "dmo_queue_depth_max",
+        "High-water mark of the admission queue.",
+        "gauge",
+    );
+    p.sample("dmo_queue_depth_max", labels, report.queue_max_depth as f64);
+    p.family(
+        "dmo_arena_bytes",
+        "Planned arena bytes of the served model.",
+        "gauge",
+    );
+    p.sample("dmo_arena_bytes", labels, report.arena_dmo as f64);
+    p.family(
+        "dmo_request_latency_seconds",
+        "End-to-end request latency (enqueue to reply).",
+        "histogram",
+    );
+    p.latency_histogram(
+        "dmo_request_latency_seconds",
+        labels,
+        report.metrics.histogram(),
+    );
+    p.finish()
 }

@@ -11,9 +11,13 @@
 use super::admission::Admission;
 use super::registry::{ModelSpec, Registry, ReloadInfo};
 use crate::coordinator::Metrics;
+use crate::obs::prom::PromText;
+use crate::obs::trace as otrace;
+use crate::obs::log as obs_log;
 use crate::planner::PlanArtifact;
+use crate::util::json;
 use anyhow::{Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -54,6 +58,7 @@ pub struct Fleet {
     metrics: Arc<Vec<Mutex<Metrics>>>,
     workers: Vec<thread::JoinHandle<Result<()>>>,
     watcher: Option<(Arc<AtomicBool>, thread::JoinHandle<()>)>,
+    metrics_writer: Option<(Arc<AtomicBool>, thread::JoinHandle<()>, PathBuf)>,
 }
 
 impl Fleet {
@@ -78,15 +83,31 @@ impl Fleet {
                     .name(format!("fleet-worker-{w}"))
                     .spawn(move || -> Result<()> {
                         while let Some((m, req)) = adm.take() {
+                            // time spent queued before a worker picked it up
+                            let queue_us = req.enqueued.elapsed().as_micros() as u64;
+                            let mut sp = otrace::span("request", "fleet");
                             // the Arc pins this request to one generation;
                             // a concurrent reload drains behind it
                             let state = reg.current(m);
-                            let mut arena = state.acquire_arena();
-                            let output = state
-                                .execute(&mut arena, &req.data)
-                                .with_context(|| format!("serving `{}`", state.name))?;
+                            let mut arena = {
+                                let _acquire = otrace::span("arena_acquire", "fleet");
+                                state.acquire_arena()
+                            };
+                            let output = {
+                                let _exec = otrace::span("exec", "fleet");
+                                state
+                                    .execute(&mut arena, &req.data)
+                                    .with_context(|| format!("serving `{}`", state.name))?
+                            };
                             drop(arena); // back to the pool before bookkeeping
                             let latency = req.enqueued.elapsed();
+                            if sp.is_active() {
+                                sp.arg("model", json::s(&state.name));
+                                sp.arg("id", json::num(req.id as usize));
+                                sp.arg("generation", json::num(state.generation as usize));
+                                sp.arg("queue_us", json::num(queue_us as usize));
+                            }
+                            drop(sp); // the reply send is outside the span
                             met[m].lock().unwrap().record(latency);
                             let _ = req.reply.send(FleetReply {
                                 id: req.id,
@@ -107,6 +128,7 @@ impl Fleet {
             metrics,
             workers: handles,
             watcher: None,
+            metrics_writer: None,
         }
     }
 
@@ -163,19 +185,19 @@ impl Fleet {
                             match PlanArtifact::load(path).map_err(anyhow::Error::from)
                                 .and_then(|a| registry.reload(m, a))
                             {
-                                Ok(info) => eprintln!(
+                                Ok(info) => obs_log::info(format_args!(
                                     "fleet: hot-reloaded `{}` → generation {} (arena {} → {})",
                                     registry.names()[m],
                                     info.generation,
                                     info.old_peak,
                                     info.new_peak
-                                ),
-                                Err(e) => eprintln!(
+                                )),
+                                Err(e) => obs_log::warn(format_args!(
                                     "fleet: reload of `{}` from {} rejected ({e:#}); old \
                                      generation keeps serving",
                                     registry.names()[m],
                                     path.display()
-                                ),
+                                )),
                             }
                         }
                     }
@@ -191,6 +213,47 @@ impl Fleet {
         self.admission.depth(m)
     }
 
+    /// Render a Prometheus text-exposition snapshot of the fleet's
+    /// current state: per-model request counters, latency histograms,
+    /// queue-depth and arena-pool gauges, generation/reload counters.
+    pub fn prometheus_snapshot(&self) -> String {
+        render_prometheus(&self.registry, &self.admission, &self.metrics)
+    }
+
+    /// Write the current snapshot to `path` atomically (tmp + rename, so
+    /// a concurrent scraper never reads a torn file).
+    pub fn write_metrics(&self, path: &Path) -> std::io::Result<()> {
+        write_atomic(path, &self.prometheus_snapshot())
+    }
+
+    /// Rewrite `path` with a fresh snapshot every `period` until
+    /// shutdown, which writes one final snapshot after the last request
+    /// drains (`dmo serve --metrics-out=FILE`).
+    pub fn metrics_writer(&mut self, path: PathBuf, period: Duration) {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let registry = self.registry.clone();
+        let admission = self.admission.clone();
+        let metrics = self.metrics.clone();
+        let out = path.clone();
+        let handle = thread::Builder::new()
+            .name("fleet-metrics-writer".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    let text = render_prometheus(&registry, &admission, &metrics);
+                    if let Err(e) = write_atomic(&out, &text) {
+                        obs_log::warn(format_args!(
+                            "fleet: writing metrics snapshot to {} failed: {e}",
+                            out.display()
+                        ));
+                    }
+                    thread::sleep(period);
+                }
+            })
+            .expect("spawning metrics writer");
+        self.metrics_writer = Some((stop, handle, path));
+    }
+
     /// Stop admitting, drain the queues, join every worker and the
     /// watcher, and assemble the per-model reports.
     pub fn shutdown(mut self) -> Result<Vec<ModelReport>> {
@@ -202,6 +265,17 @@ impl Fleet {
         for h in self.workers.drain(..) {
             h.join().expect("fleet worker panicked")?;
         }
+        if let Some((stop, handle, path)) = self.metrics_writer.take() {
+            stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+            // final snapshot: every request drained, counters settled
+            if let Err(e) = self.write_metrics(&path) {
+                obs_log::warn(format_args!(
+                    "fleet: final metrics snapshot to {} failed: {e}",
+                    path.display()
+                ));
+            }
+        }
         let max_depths = self.admission.max_depths();
         let reports = (0..self.registry.len())
             .map(|m| {
@@ -209,13 +283,16 @@ impl Fleet {
                 let state = self.registry.current(m);
                 ModelReport {
                     model: state.name.clone(),
-                    completed: metrics.latencies.len(),
+                    completed: metrics.count(),
                     shed: metrics.shed,
                     arena_bytes: state.plan.peak(),
                     pool_hits: state.pool.hits(),
                     pool_allocs: state.pool.allocs(),
                     pool_hit_rate: state.pool.hit_rate(),
+                    pool_capacity: state.pool.capacity(),
+                    pool_idle: state.pool.idle(),
                     max_queue_depth: max_depths[m],
+                    queue_capacity: self.admission.capacity(),
                     generation: state.generation,
                     reloads: self.registry.reloads(m),
                     metrics,
@@ -224,6 +301,122 @@ impl Fleet {
             .collect();
         Ok(reports)
     }
+}
+
+/// Atomic file replace: write to `<path>.tmp`, then rename over `path`,
+/// so a concurrent reader (a Prometheus scraper tailing the file) never
+/// observes a half-written snapshot.
+fn write_atomic(path: &Path, text: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Render the fleet's live state in Prometheus text-exposition format.
+fn render_prometheus<T>(
+    registry: &Registry,
+    admission: &Admission<T>,
+    metrics: &[Mutex<Metrics>],
+) -> String {
+    let mut p = PromText::new();
+    let max_depths = admission.max_depths();
+    p.family(
+        "dmo_requests_completed_total",
+        "Requests completed per model.",
+        "counter",
+    );
+    p.family(
+        "dmo_requests_shed_total",
+        "Requests shed at admission per model.",
+        "counter",
+    );
+    p.family("dmo_queue_depth", "Current admission queue depth.", "gauge");
+    p.family(
+        "dmo_queue_depth_max",
+        "High-water mark of the admission queue.",
+        "gauge",
+    );
+    p.family(
+        "dmo_queue_capacity",
+        "Configured admission queue bound.",
+        "gauge",
+    );
+    p.family(
+        "dmo_arena_bytes",
+        "Planned arena bytes of the serving generation.",
+        "gauge",
+    );
+    p.family(
+        "dmo_arena_pool_hits_total",
+        "Arena acquisitions served from the pool.",
+        "counter",
+    );
+    p.family(
+        "dmo_arena_pool_allocs_total",
+        "Arena acquisitions that had to allocate.",
+        "counter",
+    );
+    p.family("dmo_arena_pool_idle", "Arenas idle in the pool.", "gauge");
+    p.family(
+        "dmo_arena_pool_capacity",
+        "Arenas held by the pool in total.",
+        "gauge",
+    );
+    p.family(
+        "dmo_model_generation",
+        "Hot-reload generation currently serving.",
+        "gauge",
+    );
+    p.family(
+        "dmo_model_reloads_total",
+        "Accepted hot reloads per model.",
+        "counter",
+    );
+    for m in 0..registry.len() {
+        let state = registry.current(m);
+        let name = state.name.clone();
+        let labels: &[(&str, &str)] = &[("model", &name)];
+        let (completed, shed) = {
+            let g = metrics[m].lock().unwrap();
+            (g.count(), g.shed)
+        };
+        p.sample("dmo_requests_completed_total", labels, completed as f64);
+        p.sample("dmo_requests_shed_total", labels, shed as f64);
+        p.sample("dmo_queue_depth", labels, admission.depth(m) as f64);
+        p.sample("dmo_queue_depth_max", labels, max_depths[m] as f64);
+        p.sample("dmo_queue_capacity", labels, admission.capacity() as f64);
+        p.sample("dmo_arena_bytes", labels, state.plan.peak() as f64);
+        p.sample("dmo_arena_pool_hits_total", labels, state.pool.hits() as f64);
+        p.sample(
+            "dmo_arena_pool_allocs_total",
+            labels,
+            state.pool.allocs() as f64,
+        );
+        p.sample("dmo_arena_pool_idle", labels, state.pool.idle() as f64);
+        p.sample(
+            "dmo_arena_pool_capacity",
+            labels,
+            state.pool.capacity() as f64,
+        );
+        p.sample("dmo_model_generation", labels, state.generation as f64);
+        p.sample(
+            "dmo_model_reloads_total",
+            labels,
+            registry.reloads(m) as f64,
+        );
+    }
+    p.family(
+        "dmo_request_latency_seconds",
+        "End-to-end request latency (enqueue to reply).",
+        "histogram",
+    );
+    for m in 0..registry.len() {
+        let state = registry.current(m);
+        let name = state.name.clone();
+        let hist = metrics[m].lock().unwrap().histogram().clone();
+        p.latency_histogram("dmo_request_latency_seconds", &[("model", &name)], &hist);
+    }
+    p.finish()
 }
 
 /// Per-model serving summary. `shed` and `completed` both come out of
@@ -239,7 +432,13 @@ pub struct ModelReport {
     pub pool_hits: usize,
     pub pool_allocs: usize,
     pub pool_hit_rate: f64,
+    /// Arenas the pool holds in total / idle at shutdown (gauges).
+    pub pool_capacity: usize,
+    pub pool_idle: usize,
+    /// High-water mark of the model's admission queue over the run.
     pub max_queue_depth: usize,
+    /// Configured per-model admission queue bound (clamped to ≥ 1).
+    pub queue_capacity: usize,
     pub generation: u64,
     pub reloads: usize,
 }
@@ -265,6 +464,9 @@ pub struct FleetConfig {
     pub jobs: usize,
     /// Directory to watch for `<model>.plan.json` hot-reload drops.
     pub reload_watch: Option<PathBuf>,
+    /// File to (re)write Prometheus text-format metric snapshots to,
+    /// periodically while serving and once more at shutdown.
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for FleetConfig {
@@ -280,6 +482,7 @@ impl Default for FleetConfig {
             seed: 42,
             jobs: 0,
             reload_watch: None,
+            metrics_out: None,
         }
     }
 }
@@ -308,6 +511,9 @@ pub fn fleet_serve(cfg: &FleetConfig) -> Result<FleetReport> {
     let mut fleet = Fleet::start(registry, cfg.workers, cfg.queue_capacity);
     if let Some(dir) = &cfg.reload_watch {
         fleet.watch(dir.clone(), Duration::from_millis(100));
+    }
+    if let Some(path) = &cfg.metrics_out {
+        fleet.metrics_writer(path.clone(), Duration::from_millis(500));
     }
 
     let n_models = elems.len();

@@ -10,8 +10,11 @@
 //! library call used by the test suite on every model.
 
 use crate::ir::graph::{Graph, TensorId};
+use crate::obs::trace as otrace;
+use crate::obs::watermark::{ExecProfile, OpProfile, WatermarkSink};
 use crate::ops::exec::{execute_op, gen_weights, Arena, OpIo, Region};
 use crate::planner::{Plan, PlanArtifact};
+use crate::util::json;
 use anyhow::{ensure, Context, Result};
 
 /// Deterministic synthetic input for a tensor.
@@ -40,6 +43,119 @@ pub fn run_plan(graph: &Graph, plan: &Plan, inputs: &[Vec<f32>], seed: u64) -> R
         })
         .collect();
     run_with_regions(graph, &plan.order.0, &regions, plan.peak(), inputs, seed)
+}
+
+/// Execute `graph` in `plan`'s layout like [`run_plan`], but with the
+/// arena's event sink feeding an [`crate::obs::watermark::WatermarkSink`]:
+/// every traced load/store/update updates the observed high-water mark and
+/// touched-byte bitmap, per op and run-wide. Per-op wall time and byte
+/// traffic are recorded as tracing spans (when [`crate::obs::trace`] is
+/// enabled) and returned in the [`ExecProfile`] — the in-process analogue
+/// of the paper's Valgrind observation, letting callers *assert*
+/// `observed_peak ≤ plan.peak()` instead of trusting it.
+pub fn run_plan_profiled(
+    model: &str,
+    graph: &Graph,
+    plan: &Plan,
+    inputs: &[Vec<f32>],
+    seed: u64,
+) -> Result<(Vec<Vec<f32>>, ExecProfile)> {
+    let graph = plan.graph_for(graph);
+    let regions: Vec<Option<Region>> = (0..graph.tensors.len())
+        .map(|t| {
+            plan.alloc.offsets[t]
+                .map(|off| Region::new(off, graph.tensor(TensorId(t)).size_bytes()))
+        })
+        .collect();
+    let arena_size = plan.peak();
+    ensure!(inputs.len() == graph.inputs.len(), "wrong input count");
+    let mut arena = Arena::new(arena_size);
+    for (&t, data) in graph.inputs.iter().zip(inputs) {
+        let info = graph.tensor(t);
+        ensure!(
+            data.len() == info.shape.num_elements(),
+            "input {} wrong length",
+            info.name
+        );
+        let r = regions[t.0].context("input tensor unplaced")?;
+        arena.write_tensor(info.dtype, r, data);
+    }
+    let sink = WatermarkSink::new(arena_size);
+    arena.set_sink(Some(Box::new(sink.clone())));
+    let mut run_span = otrace::span(&format!("run:{model}"), "interp");
+    if run_span.is_active() {
+        run_span.arg("planned_peak", json::num(arena_size));
+        run_span.arg("ops", json::num(plan.order.0.len()));
+    }
+    let mut op_profiles = Vec::with_capacity(plan.order.0.len());
+    for (step, &opid) in plan.order.0.iter().enumerate() {
+        let op = graph.op(opid);
+        let in_shapes: Vec<&crate::ir::Shape> =
+            op.inputs.iter().map(|&t| &graph.tensor(t).shape).collect();
+        let in_regions: Vec<Region> = op
+            .inputs
+            .iter()
+            .map(|&t| regions[t.0].context("op input unplaced"))
+            .collect::<Result<_>>()?;
+        let out_region = regions[op.output.0].context("op output unplaced")?;
+        let weights = gen_weights(op, seed ^ op.weight_key(opid.0) as u64);
+        let io = OpIo {
+            in_shapes: &in_shapes,
+            in_regions: &in_regions,
+            out_shape: &graph.tensor(op.output).shape,
+            out_region,
+            dtype: graph.tensor(op.output).dtype,
+            weights: &weights,
+        };
+        sink.0.borrow_mut().begin_op();
+        let mut sp = otrace::span(&format!("exec:{}", op.name), "interp");
+        let t0 = std::time::Instant::now();
+        execute_op(&op.kind, &io, &mut arena)
+            .with_context(|| format!("executing {}", op.name))?;
+        let wall_us = t0.elapsed().as_micros() as u64;
+        let (bytes_read, bytes_written, high_water) = {
+            let st = sink.0.borrow();
+            (st.op_bytes_read, st.op_bytes_written, st.op_high_water)
+        };
+        if sp.is_active() {
+            sp.arg("op", json::num(opid.0));
+            sp.arg("bytes_read", json::num(bytes_read as usize));
+            sp.arg("bytes_written", json::num(bytes_written as usize));
+            sp.arg("high_water", json::num(high_water));
+            sp.arg("planned_extent", json::num(out_region.end()));
+        }
+        drop(sp);
+        op_profiles.push(OpProfile {
+            step,
+            op: opid.0,
+            name: op.name.clone(),
+            wall_us,
+            bytes_read,
+            bytes_written,
+            high_water,
+            planned_extent: out_region.end(),
+        });
+    }
+    drop(run_span);
+    arena.set_sink(None);
+    let outputs: Vec<Vec<f32>> = graph
+        .outputs
+        .iter()
+        .map(|&t| {
+            let info = graph.tensor(t);
+            arena.read_tensor(info.dtype, regions[t.0].unwrap(), info.shape.num_elements())
+        })
+        .collect();
+    let st = sink.0.borrow();
+    let profile = ExecProfile {
+        model: model.to_string(),
+        planned_peak: plan.peak(),
+        observed_peak: st.high_water,
+        touched_bytes: st.touched_bytes(),
+        arena_bytes: arena_size,
+        ops: op_profiles,
+    };
+    Ok((outputs, profile))
 }
 
 /// Execute with every live tensor in its own disjoint buffer (reference).
@@ -213,6 +329,25 @@ mod tests {
         plan.alloc.offsets[1] = o2;
         let r = validate_plan(&g, &plan, 42);
         assert!(r.is_err(), "clobbering layout must be detected");
+    }
+
+    #[test]
+    fn profiled_run_matches_and_stays_within_plan() {
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let inputs: Vec<Vec<f32>> = g.inputs.iter().map(|&t| gen_input(&g, t, 42)).collect();
+        let want = run_plan(&g, &plan, &inputs, 42).unwrap();
+        let (got, prof) = run_plan_profiled("tiny", &g, &plan, &inputs, 42).unwrap();
+        assert_eq!(got, want, "profiling must not change results");
+        assert!(
+            prof.within_plan(),
+            "observed {} exceeds planned {}",
+            prof.observed_peak,
+            prof.planned_peak
+        );
+        assert!(prof.observed_peak > 0, "the run must touch the arena");
+        assert_eq!(prof.ops.len(), plan.order.0.len());
+        assert!(prof.touched_bytes <= prof.arena_bytes);
     }
 
     #[test]

@@ -246,6 +246,7 @@ pub mod interp;
 pub mod ir;
 pub mod mcu;
 pub mod models;
+pub mod obs;
 pub mod ops;
 pub mod overlap;
 pub mod planner;

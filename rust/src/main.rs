@@ -117,12 +117,18 @@ fn run(argv: &[String]) -> Result<()> {
                     opt("--os-cache", "persisted O_s cache file (loaded if present, saved after planning)"),
                     opt("--export", "write the plan as a reusable artifact"),
                     opt("--import", "load a plan artifact instead of planning"),
+                    flag("--profile", "execute the plan under the watermark profiler; print observed vs planned per op"),
+                    opt("--trace-out", "Chrome trace-event JSON of the session (planner spans + --profile execution)"),
                 ],
             )?;
             let name = args
                 .pos(0)
-                .context("usage: dmo plan <model> [--baseline] [--map] [--strategy=search] [--splits N] [--export PATH] [--import PATH]")?
+                .context("usage: dmo plan <model> [--baseline] [--map] [--strategy=search] [--splits N] [--profile] [--trace-out PATH] [--export PATH] [--import PATH]")?
                 .to_string();
+            let trace_out = args.value("--trace-out").map(PathBuf::from);
+            if trace_out.is_some() {
+                dmo::obs::trace::enable();
+            }
             let g = models::build(&name)?;
             let os_cache = std::sync::Arc::new(dmo::overlap::OsCache::new());
             let os_cache_path = args.value("--os-cache").map(str::to_string);
@@ -244,6 +250,26 @@ fn run(argv: &[String]) -> Result<()> {
             }
             if args.flag("--map") {
                 println!("{}", trace::render::alloc_map_ascii(&g, &plan, 100));
+            }
+            let profile = if args.flag("--profile") {
+                let prof = profile_plan(&name, &g, &plan, 42)?;
+                print_profile(&prof);
+                Some(prof)
+            } else {
+                None
+            };
+            // the trace file is written even on a watermark violation —
+            // it is exactly the evidence needed to debug one
+            if let Some(p) = &trace_out {
+                write_trace(p)?;
+            }
+            if let Some(prof) = profile {
+                anyhow::ensure!(
+                    prof.within_plan(),
+                    "watermark violation: observed peak {} > planned {}",
+                    report::fmt_bytes(prof.observed_peak),
+                    report::fmt_bytes(prof.planned_peak)
+                );
             }
             Ok(())
         }
@@ -455,6 +481,46 @@ fn run(argv: &[String]) -> Result<()> {
             println!("{}", r.to_ascii());
             Ok(())
         }
+        "trace-run" => {
+            let args = Args::parse(
+                rest,
+                &[
+                    opt("--trace-out", "trace file (default results/<model>_trace.json)"),
+                    opt("--seed", "synthetic input seed (default 42)"),
+                    flag("--baseline", "plan without DMO"),
+                ],
+            )?;
+            let name = args
+                .pos(0)
+                .context("usage: dmo trace-run <model> [--trace-out PATH] [--seed N]")?
+                .to_string();
+            let seed: u64 = args.parsed("--seed", 42u64)?;
+            let trace_path: PathBuf = match args.value("--trace-out") {
+                Some(p) => PathBuf::from(p),
+                None => PathBuf::from("results").join(format!("{name}_trace.json")),
+            };
+            // enable before planning so the planner's sweep/beam spans land
+            // in the same timeline as the per-op execution spans
+            dmo::obs::trace::enable();
+            let g = models::build(&name)?;
+            let plan = Planner::for_graph(&g).dmo(!args.flag("--baseline")).plan()?;
+            println!(
+                "{name}: peak {} ({} strategy, {} overlaps applied)",
+                report::fmt_bytes(plan.peak()),
+                plan.strategy.name(),
+                plan.alloc.applied.len()
+            );
+            let prof = profile_plan(&name, &g, &plan, seed)?;
+            print_profile(&prof);
+            write_trace(&trace_path)?;
+            anyhow::ensure!(
+                prof.within_plan(),
+                "watermark violation: observed peak {} > planned {}",
+                report::fmt_bytes(prof.observed_peak),
+                report::fmt_bytes(prof.planned_peak)
+            );
+            Ok(())
+        }
         "serve" => {
             let args = Args::parse(rest, dmo::coordinator::cli::SERVE_SPEC)?;
             dmo::coordinator::cli::serve_main(&args)
@@ -543,6 +609,70 @@ fn emit_c(args: &Args) -> Result<()> {
             r.elems, r.cc
         );
     }
+    Ok(())
+}
+
+/// Execute `plan` under the watermark profiler on deterministic synthetic
+/// inputs, returning the observed-vs-planned [`ExecProfile`].
+fn profile_plan(
+    name: &str,
+    g: &dmo::ir::graph::Graph,
+    plan: &dmo::planner::Plan,
+    seed: u64,
+) -> Result<dmo::obs::watermark::ExecProfile> {
+    let inputs: Vec<Vec<f32>> = g
+        .inputs
+        .iter()
+        .map(|&t| interp::gen_input(g, t, seed))
+        .collect();
+    let (_outputs, prof) = interp::run_plan_profiled(name, g, plan, &inputs, seed)?;
+    Ok(prof)
+}
+
+/// Per-op observed-vs-planned table for `dmo plan --profile` / `trace-run`.
+fn print_profile(p: &dmo::obs::watermark::ExecProfile) {
+    println!(
+        "profile: observed peak {} (planned {}) — {} of {} arena bytes touched",
+        report::fmt_bytes(p.observed_peak),
+        report::fmt_bytes(p.planned_peak),
+        report::fmt_bytes(p.touched_bytes),
+        report::fmt_bytes(p.arena_bytes)
+    );
+    println!(
+        "  {:>4} {:>4}  {:<28} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "step", "op", "name", "µs", "read", "written", "observed", "planned≤"
+    );
+    for op in &p.ops {
+        println!(
+            "  {:>4} {:>4}  {:<28} {:>8} {:>10} {:>10} {:>10} {:>10}",
+            op.step,
+            op.op,
+            op.name,
+            op.wall_us,
+            report::fmt_bytes(op.bytes_read as usize),
+            report::fmt_bytes(op.bytes_written as usize),
+            report::fmt_bytes(op.high_water),
+            report::fmt_bytes(op.planned_extent)
+        );
+    }
+}
+
+/// Drain the process tracer and write a Chrome trace-event JSON file.
+fn write_trace(path: &Path) -> Result<()> {
+    dmo::obs::trace::disable();
+    let events = dmo::obs::trace::drain();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    fs::write(path, dmo::obs::trace::export_chrome(&events).to_string())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    println!(
+        "trace: {} events → {} (load in Perfetto / chrome://tracing)",
+        events.len(),
+        path.display()
+    );
     Ok(())
 }
 
@@ -660,6 +790,7 @@ COMMANDS:
   plan <model> [--baseline] [--map] [--verbose]
        [--strategy=sweep|eager|lazy|search] [--beam N] [--budget N]
        [--jobs N] [--splits N] [--os-cache PATH]
+       [--profile] [--trace-out PATH]
        [--export PATH] [--import PATH]
                               plan a model's arena (or reload an exported
                               plan artifact); print overlaps and O_s
@@ -675,7 +806,11 @@ COMMANDS:
                               unsplit layout, and then flows through
                               --export / validate / emit-c unchanged.
                               --os-cache persists the O_s cache across
-                              processes (cold runs start warm)
+                              processes (cold runs start warm).
+                              --profile executes the plan under the runtime
+                              watermark verifier and prints observed vs
+                              planned arena use per op; --trace-out writes
+                              the session as Chrome trace-event JSON
   orders [<model>] [--beam N] [--budget N] [--jobs N] [--splits N]
          [--os-cache PATH] [--out DIR]
                               eager vs lazy vs searched execution order:
@@ -704,6 +839,12 @@ COMMANDS:
                               `dmo plan --splits=N` applies it for real
   trace-op <relu|matmul|dwconv|conv>
                               ASCII access-pattern trace (Fig 3)
+  trace-run <model> [--trace-out PATH] [--seed N] [--baseline]
+                              plan + execute under the observatory: planner
+                              spans, per-op execution spans, and runtime
+                              watermark verification (asserts observed peak
+                              ≤ planned peak); writes Chrome trace-event
+                              JSON loadable in Perfetto / chrome://tracing
   serve [--requests N] [--rate R] [--batch B] [--plan PATH] [--model M]
         [--jobs N] [--os-cache PATH]
                               end-to-end serving on the AOT'd model,
@@ -721,6 +862,12 @@ COMMANDS:
                               --rate>0 sheds on overload (open loop),
                               default blocks (closed loop);
                               --reload-watch hot-swaps <model>.plan.json
-                              artifacts without dropping requests"
+                              artifacts without dropping requests.
+                              Both serve modes take --metrics-out FILE
+                              (Prometheus text snapshot; the fleet rewrites
+                              it every 500 ms) and --trace-out FILE
+                              (Chrome trace of the request lifecycle);
+                              DMO_LOG=error|warn|info|debug|trace filters
+                              runtime logging (default warn)"
     );
 }

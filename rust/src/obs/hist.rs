@@ -1,0 +1,233 @@
+//! Fixed-size log-bucket latency histogram.
+//!
+//! Replaces the unbounded `Vec<Duration>` sample store in serve metrics:
+//! memory is O(1) in the request count (a few hundred `u64` counters), while
+//! `count`, `sum`, and `max` stay exact and percentiles are bounded by the
+//! bucket's relative width (25% worst-case, from 4 sub-buckets per
+//! power-of-two octave).
+//!
+//! Bucket layout over microsecond values:
+//! - bucket `0`: the value `0`
+//! - buckets `1 ..= OCTAVES*SUB`: octave `o = floor(log2(v))` split into
+//!   `SUB = 4` equal-width sub-buckets
+//! - the last bucket: overflow (`v ≥ 2^OCTAVES` µs ≈ 12.7 days)
+
+/// log2 of the per-octave sub-bucket count.
+const SUB_BITS: u32 = 2;
+/// Sub-buckets per power-of-two octave.
+const SUB: u64 = 1 << SUB_BITS;
+/// Octaves covered before the overflow bucket (2^40 µs ≈ 12.7 days).
+const OCTAVES: u64 = 40;
+/// Total bucket count: zero bucket + octave sub-buckets + overflow.
+const NBUCKETS: usize = 2 + (OCTAVES * SUB) as usize;
+
+/// Log-bucket histogram of microsecond latencies with exact count/sum/max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: vec![0; NBUCKETS],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+}
+
+/// Bucket index for a microsecond value.
+fn index(us: u64) -> usize {
+    if us == 0 {
+        return 0;
+    }
+    let octave = 63 - us.leading_zeros() as u64;
+    if octave >= OCTAVES {
+        return NBUCKETS - 1;
+    }
+    let sub = ((us - (1 << octave)) * SUB) >> octave;
+    (1 + octave * SUB + sub) as usize
+}
+
+/// Inclusive upper edge of a bucket, in microseconds: the largest integer
+/// value that [`index`] maps into the bucket (or an unreachable filler edge
+/// for the sub-buckets of octaves narrower than `SUB`, kept monotone).
+fn upper_us(idx: usize) -> u64 {
+    if idx == 0 {
+        return 0;
+    }
+    if idx >= NBUCKETS - 1 {
+        return u64::MAX;
+    }
+    let octave = (idx as u64 - 1) / SUB;
+    let sub = (idx as u64 - 1) % SUB;
+    // exclusive boundary is 2^octave * (SUB + sub + 1) / SUB exactly;
+    // ceil(boundary) - 1 == (numerator - 1) >> SUB_BITS gives the largest
+    // integer strictly below it
+    (((1u64 << octave) * (SUB + sub + 1)) - 1) >> SUB_BITS
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, us: u64) {
+        self.counts[index(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    /// Nearest-rank percentile (`p` in `[0, 1]`), as microseconds.
+    ///
+    /// Returns the upper edge of the bucket containing the rank, clamped to
+    /// the exact observed max so the estimate never exceeds reality and the
+    /// sequence p50 ≤ p95 ≤ p99 ≤ max is monotone by construction.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return upper_us(idx).min(self.max_us) as f64;
+            }
+        }
+        self.max_us as f64
+    }
+
+    /// Count of samples in buckets wholly ≤ `le_us` — a lower bound on
+    /// "samples ≤ le_us", exact when `le_us + 1` is a power of two (octave
+    /// boundaries coincide with bucket edges there); callers exporting
+    /// Prometheus `le` buckets use `2^k − 1` boundaries for this reason.
+    pub fn cumulative_le_us(&self, le_us: u64) -> u64 {
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if upper_us(idx) <= le_us {
+                cum += c;
+            }
+        }
+        cum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn exact_scalars() {
+        let mut h = LatencyHistogram::new();
+        for v in [0u64, 1, 5, 1000, 123_456] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_us(), 124_462);
+        assert_eq!(h.max_us(), 123_456);
+    }
+
+    #[test]
+    fn bucket_edges_cover_and_order() {
+        // every value lands in a bucket whose range contains it, and bucket
+        // upper edges are non-decreasing in the index
+        let mut prev = 0u64;
+        for idx in 0..NBUCKETS - 1 {
+            let u = upper_us(idx);
+            assert!(u >= prev, "upper edges must be monotone");
+            prev = u;
+        }
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 100, 1023, 1024, 1_000_000, 1 << 39] {
+            let idx = index(v);
+            assert!(v <= upper_us(idx), "value {v} above bucket {idx} edge");
+            assert!(
+                idx == 0 || v > upper_us(idx - 1),
+                "value {v} below bucket {idx}"
+            );
+        }
+    }
+
+    #[test]
+    fn overflow_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_us(), u64::MAX);
+        assert_eq!(h.percentile_us(0.5), u64::MAX as f64);
+    }
+
+    #[test]
+    fn percentiles_monotone_and_bounded() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.percentile_us(0.50);
+        let p95 = h.percentile_us(0.95);
+        let p99 = h.percentile_us(0.99);
+        let max = h.max_us() as f64;
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= max);
+        // a bucket is at most 25% wide, so the estimate is within 25% above
+        // the true nearest-rank value
+        assert!((5_000.0..=6_250.0).contains(&p50), "p50 = {p50}");
+        assert!((9_500.0..=11_875.0).contains(&p99), "p99 = {p99}");
+        assert_eq!(max, 10_000.0);
+    }
+
+    #[test]
+    fn memory_is_constant() {
+        // the whole point: recording a million samples allocates nothing
+        let mut h = LatencyHistogram::new();
+        let buckets = h.counts.len();
+        for v in 0..1_000_000u64 {
+            h.record(v % 50_000);
+        }
+        assert_eq!(h.counts.len(), buckets);
+        assert_eq!(h.count(), 1_000_000);
+    }
+
+    #[test]
+    fn cumulative_le_exact_at_octave_boundaries() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=4096u64 {
+            h.record(v);
+        }
+        assert_eq!(h.cumulative_le_us(1023), 1023);
+        assert_eq!(h.cumulative_le_us(4095), 4095);
+        assert_eq!(h.cumulative_le_us(u64::MAX), 4096);
+    }
+}

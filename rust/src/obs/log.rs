@@ -1,0 +1,132 @@
+//! Leveled stderr logging with a `DMO_LOG` environment filter.
+//!
+//! Replaces raw `eprintln!` at runtime-event sites (fleet hot-reload,
+//! watcher rejections) so serve output is machine-parseable
+//! (`dmo[LEVEL] message`) and quiet by default: the filter defaults to
+//! `warn`, so info-level chatter never pollutes bench output unless
+//! `DMO_LOG=info` (or lower) is set.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    fn from_u8(v: u8) -> Level {
+        match v {
+            1 => Level::Error,
+            2 => Level::Warn,
+            3 => Level::Info,
+            4 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+fn parse(s: &str) -> Option<Level> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "error" | "e" | "1" => Some(Level::Error),
+        "warn" | "warning" | "w" | "2" => Some(Level::Warn),
+        "info" | "i" | "3" => Some(Level::Info),
+        "debug" | "d" | "4" => Some(Level::Debug),
+        "trace" | "t" | "5" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// `u8::MAX` = not yet resolved from the environment.
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+/// The active filter level: `DMO_LOG` if set and valid, else `warn`.
+/// Parsed once; [`set_level`] overrides (used by tests and `--quiet`-style
+/// callers).
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return Level::from_u8(v);
+    }
+    let resolved = std::env::var("DMO_LOG")
+        .ok()
+        .and_then(|s| parse(&s))
+        .unwrap_or(Level::Warn);
+    LEVEL.store(resolved as u8, Ordering::Relaxed);
+    resolved
+}
+
+/// Override the filter level (takes precedence over `DMO_LOG`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at `l` would be emitted.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Emit a message at `l` if the filter allows it. Prefer the per-level
+/// helpers with `format_args!`:
+/// `obs::log::info(format_args!("reloaded {name}"))`.
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("dmo[{}] {}", l.name(), args);
+    }
+}
+
+pub fn error(args: std::fmt::Arguments<'_>) {
+    log(Level::Error, args);
+}
+
+pub fn warn(args: std::fmt::Arguments<'_>) {
+    log(Level::Warn, args);
+}
+
+pub fn info(args: std::fmt::Arguments<'_>) {
+    log(Level::Info, args);
+}
+
+pub fn debug(args: std::fmt::Arguments<'_>) {
+    log(Level::Debug, args);
+}
+
+pub fn trace(args: std::fmt::Arguments<'_>) {
+    log(Level::Trace, args);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_names_and_numbers() {
+        assert_eq!(parse("info"), Some(Level::Info));
+        assert_eq!(parse("WARN"), Some(Level::Warn));
+        assert_eq!(parse(" trace "), Some(Level::Trace));
+        assert_eq!(parse("4"), Some(Level::Debug));
+        assert_eq!(parse("nonsense"), None);
+    }
+
+    #[test]
+    fn ordering_matches_severity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+}

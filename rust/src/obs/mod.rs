@@ -1,0 +1,28 @@
+//! In-process observability: structured tracing spans, log-bucket latency
+//! histograms, runtime arena watermark verification, leveled logging, and
+//! Prometheus-text metric export.
+//!
+//! The paper proved its overlap claims by watching every load/store under a
+//! modified Valgrind; this module is the runtime analogue. It is
+//! zero-dependency and designed so the disabled path costs one relaxed
+//! atomic load per probe:
+//!
+//! - [`trace`] — per-thread span/event buffers merged at drain, exported as
+//!   Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!   Planner phases, per-op interpreter execution, and the fleet request
+//!   lifecycle are instrumented.
+//! - [`watermark`] — an [`crate::ops::exec::EventSink`] that tracks the
+//!   actual arena high-water mark and touched-byte extent during planned
+//!   execution, so `observed peak ≤ plan.peak()` is *asserted*, not trusted.
+//! - [`hist`] — fixed-size log-bucket latency histogram backing the serve
+//!   [`crate::coordinator::LatencyStats`] API with O(1) memory at any
+//!   request count.
+//! - [`log`] — leveled stderr logging with a `DMO_LOG` env filter
+//!   (`error|warn|info|debug|trace`), quiet (warn) by default.
+//! - [`prom`] — Prometheus text-exposition rendering for serve snapshots.
+
+pub mod hist;
+pub mod log;
+pub mod prom;
+pub mod trace;
+pub mod watermark;

@@ -1,0 +1,127 @@
+//! Prometheus text-exposition rendering.
+//!
+//! A tiny append-only builder for the `text/plain; version=0.0.4` format —
+//! enough for `dmo serve --metrics-out=FILE` to emit a scrape-able snapshot
+//! (rewritten periodically and at shutdown) without any dependency.
+
+use super::hist::LatencyHistogram;
+
+/// Builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Emit `# HELP` / `# TYPE` headers for a metric family.
+    /// `kind` is `counter`, `gauge`, or `histogram`.
+    pub fn family(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n"));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    /// Emit one sample line with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// Emit the `_bucket`/`_sum`/`_count` series of a latency histogram as
+    /// a Prometheus histogram in **seconds**. Bucket boundaries are
+    /// `2^k − 1` µs (where [`LatencyHistogram::cumulative_le_us`] is
+    /// exact), from ~128 µs to ~34 s, plus `+Inf`.
+    pub fn latency_histogram(&mut self, name: &str, labels: &[(&str, &str)], h: &LatencyHistogram) {
+        let mut with_le = |le: &str, v: u64| {
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", le));
+            self.sample(&format!("{name}_bucket"), &ls, v as f64);
+        };
+        // octaves 7, 10, 13, 16, 19, 22, 25 → 127 µs … ~33.6 s
+        for k in (7..=25).step_by(3) {
+            let le_us = (1u64 << k) - 1;
+            let le_s = format!("{}", le_us as f64 / 1e6);
+            with_le(&le_s, h.cumulative_le_us(le_us));
+        }
+        with_le("+Inf", h.count());
+        self.sample(&format!("{name}_sum"), labels, h.sum_us() as f64 / 1e6);
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_families_and_samples() {
+        let mut p = PromText::new();
+        p.family("dmo_requests_total", "Completed requests.", "counter");
+        p.sample("dmo_requests_total", &[("model", "tiny")], 42.0);
+        p.sample("dmo_queue_depth", &[], 3.5);
+        let text = p.finish();
+        assert!(text.contains("# TYPE dmo_requests_total counter\n"));
+        assert!(text.contains("dmo_requests_total{model=\"tiny\"} 42\n"));
+        assert!(text.contains("dmo_queue_depth 3.5\n"));
+    }
+
+    #[test]
+    fn label_values_escaped() {
+        let mut p = PromText::new();
+        p.sample("m", &[("path", "a\"b\\c")], 1.0);
+        assert!(p.finish().contains("m{path=\"a\\\"b\\\\c\"} 1\n"));
+    }
+
+    #[test]
+    fn histogram_series_cumulative() {
+        let mut h = LatencyHistogram::new();
+        for us in [100u64, 1000, 10_000, 100_000] {
+            h.record(us);
+        }
+        let mut p = PromText::new();
+        p.latency_histogram("dmo_latency_seconds", &[("model", "tiny")], &h);
+        let text = p.finish();
+        assert!(text.contains("dmo_latency_seconds_bucket{model=\"tiny\",le=\"+Inf\"} 4\n"));
+        assert!(text.contains("dmo_latency_seconds_count{model=\"tiny\"} 4\n"));
+        // sum: 111.1 ms in seconds
+        assert!(text.contains("dmo_latency_seconds_sum{model=\"tiny\"} 0.1111\n"));
+        // cumulative counts never decrease across le lines
+        let counts: Vec<f64> = text
+            .lines()
+            .filter(|l| l.contains("_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,223 @@
+//! Low-overhead structured tracing: spans and instants recorded into
+//! per-thread buffers, merged at drain, exportable as Chrome trace-event
+//! JSON (loadable in Perfetto or `chrome://tracing`).
+//!
+//! Disabled (the default) the cost per probe is one relaxed atomic load and
+//! no allocation. Enabled, each span costs two `Instant` reads and one
+//! push into a thread-local buffer behind an uncontended mutex (the mutex
+//! is only contended at [`drain`], which merges all buffers).
+//!
+//! ```
+//! use dmo::obs::trace;
+//! trace::enable();
+//! {
+//!     let mut sp = trace::span("exec:conv1", "interp");
+//!     if sp.is_active() {
+//!         sp.arg("bytes", dmo::util::json::num(4096));
+//!     }
+//! } // recorded on drop
+//! let events = trace::drain();
+//! assert_eq!(events.len(), 1);
+//! let json = trace::export_chrome(&events).to_string();
+//! assert!(json.contains("traceEvents"));
+//! trace::disable();
+//! ```
+
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// One recorded event: a complete span (`ph == 'X'`) or an instant
+/// (`ph == 'i'`). Timestamps are microseconds since the tracer epoch.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: &'static str,
+    pub ph: char,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+type Buffer = Arc<Mutex<Vec<TraceEvent>>>;
+
+/// Global registry of per-thread buffers. Holding an `Arc` here keeps
+/// events from threads that have since exited alive until [`drain`].
+fn registry() -> &'static Mutex<Vec<Buffer>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Buffer>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn next_tid() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+thread_local! {
+    static LOCAL: (u64, Buffer) = {
+        let buf: Buffer = Arc::new(Mutex::new(Vec::new()));
+        registry().lock().unwrap().push(buf.clone());
+        (next_tid(), buf)
+    };
+}
+
+fn record(mut ev: TraceEvent) {
+    LOCAL.with(|(tid, buf)| {
+        ev.tid = *tid;
+        buf.lock().unwrap().push(ev);
+    });
+}
+
+/// Turn recording on (process-wide). Sets the timestamp epoch on first use.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Turn recording off. Already-buffered events stay until [`drain`].
+pub fn disable() {
+    ENABLED.store(false, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Whether the tracer is currently recording.
+pub fn is_enabled() -> bool {
+    ENABLED.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// RAII span guard: records a complete (`ph: "X"`) event on drop. Inactive
+/// (when tracing is disabled at creation) guards cost nothing on drop.
+pub struct Span {
+    active: bool,
+    name: String,
+    cat: &'static str,
+    start_us: u64,
+    args: Vec<(&'static str, Json)>,
+}
+
+impl Span {
+    /// Whether this span will record — guard expensive argument
+    /// construction behind this on hot paths.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Attach a key/value argument (shown in the trace viewer).
+    pub fn arg(&mut self, key: &'static str, value: Json) {
+        if self.active {
+            self.args.push((key, value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = now_us();
+        record(TraceEvent {
+            name: std::mem::take(&mut self.name),
+            cat: self.cat,
+            ph: 'X',
+            ts_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            tid: 0,
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+/// Open a span. `cat` groups rows in the trace viewer (`planner`,
+/// `interp`, `fleet`). Records on drop; a no-op when tracing is disabled.
+pub fn span(name: &str, cat: &'static str) -> Span {
+    if !is_enabled() {
+        return Span {
+            active: false,
+            name: String::new(),
+            cat,
+            start_us: 0,
+            args: Vec::new(),
+        };
+    }
+    Span {
+        active: true,
+        name: name.to_string(),
+        cat,
+        start_us: now_us(),
+        args: Vec::new(),
+    }
+}
+
+/// Record a zero-duration instant event (`ph: "i"`).
+pub fn instant(name: &str, cat: &'static str, args: Vec<(&'static str, Json)>) {
+    if !is_enabled() {
+        return;
+    }
+    record(TraceEvent {
+        name: name.to_string(),
+        cat,
+        ph: 'i',
+        ts_us: now_us(),
+        dur_us: 0,
+        tid: 0,
+        args,
+    });
+}
+
+/// Take every buffered event from every thread, sorted by timestamp.
+/// Buffers are left empty; recording state is unchanged.
+pub fn drain() -> Vec<TraceEvent> {
+    let mut all = Vec::new();
+    for buf in registry().lock().unwrap().iter() {
+        all.append(&mut buf.lock().unwrap());
+    }
+    all.sort_by_key(|e| (e.ts_us, e.tid));
+    all
+}
+
+/// Render events as Chrome trace-event JSON:
+/// `{"traceEvents": [{"name", "cat", "ph", "ts", "dur", "pid", "tid",
+/// "args"}, …]}` — the format Perfetto and `chrome://tracing` load
+/// directly. `ts`/`dur` are microseconds.
+pub fn export_chrome(events: &[TraceEvent]) -> Json {
+    let rows = events
+        .iter()
+        .map(|e| {
+            let mut fields = vec![
+                ("name", json::s(&e.name)),
+                ("cat", json::s(e.cat)),
+                ("ph", json::s(&e.ph.to_string())),
+                ("ts", json::num(e.ts_us as usize)),
+                ("pid", json::num(1)),
+                ("tid", json::num(e.tid as usize)),
+            ];
+            if e.ph == 'X' {
+                fields.push(("dur", json::num(e.dur_us as usize)));
+            } else {
+                // instant scope: thread
+                fields.push(("s", json::s("t")));
+            }
+            if !e.args.is_empty() {
+                let args = e.args.iter().map(|(k, v)| (*k, v.clone())).collect();
+                fields.push(("args", json::obj(args)));
+            }
+            json::obj(fields)
+        })
+        .collect();
+    json::obj(vec![("traceEvents", Json::Arr(rows))])
+}

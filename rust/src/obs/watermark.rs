@@ -1,0 +1,177 @@
+//! Runtime arena watermark verification.
+//!
+//! The paper proved overlap safety by watching every load/store under a
+//! modified Valgrind. This module is the in-process analogue: a
+//! [`WatermarkSink`] installed on the execution [`crate::ops::exec::Arena`]
+//! observes every traced memory event and tracks the *actual* high-water
+//! mark (max `addr + len` touched) and the touched-byte extent, per op and
+//! for the whole run. `interp::run_plan_profiled` packages the result as an
+//! [`ExecProfile`] so callers can assert `observed_peak ≤ plan.peak()` —
+//! the plan's promise, checked against reality instead of trusted.
+//!
+//! Observed can be legitimately *below* planned: input tensors are written
+//! through the untraced `write_tensor` fast path, and a plan's peak also
+//! covers scopes whose extents a particular input may not exercise.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::ops::exec::{EventKind, EventSink};
+
+/// Mutable watermark state shared between the sink (owned by the arena)
+/// and the profiler that reads it between ops.
+#[derive(Debug, Default)]
+pub struct WmState {
+    /// Max `addr + len` over every traced event in the run.
+    pub high_water: usize,
+    /// Total bytes read (loads + the read half of updates).
+    pub bytes_read: u64,
+    /// Total bytes written (stores + the write half of updates).
+    pub bytes_written: u64,
+    /// Per-op accumulators, reset by [`WmState::begin_op`].
+    pub op_high_water: usize,
+    pub op_bytes_read: u64,
+    pub op_bytes_written: u64,
+    /// Bitmap over arena bytes: which were touched by any traced event.
+    touched: Vec<u64>,
+}
+
+impl WmState {
+    pub fn new(arena_len: usize) -> WmState {
+        WmState {
+            touched: vec![0u64; arena_len.div_ceil(64)],
+            ..WmState::default()
+        }
+    }
+
+    /// Reset the per-op accumulators (call before each op executes).
+    pub fn begin_op(&mut self) {
+        self.op_high_water = 0;
+        self.op_bytes_read = 0;
+        self.op_bytes_written = 0;
+    }
+
+    fn on_event(&mut self, kind: EventKind, addr: usize, len: usize) {
+        let end = addr + len;
+        self.high_water = self.high_water.max(end);
+        self.op_high_water = self.op_high_water.max(end);
+        match kind {
+            EventKind::Load => {
+                self.bytes_read += len as u64;
+                self.op_bytes_read += len as u64;
+            }
+            EventKind::Store => {
+                self.bytes_written += len as u64;
+                self.op_bytes_written += len as u64;
+            }
+            EventKind::Update => {
+                // read-modify-write touches the range twice
+                self.bytes_read += len as u64;
+                self.bytes_written += len as u64;
+                self.op_bytes_read += len as u64;
+                self.op_bytes_written += len as u64;
+            }
+        }
+        for b in addr..end.min(self.touched.len() * 64) {
+            self.touched[b / 64] |= 1u64 << (b % 64);
+        }
+    }
+
+    /// Number of distinct arena bytes touched by any traced event.
+    pub fn touched_bytes(&self) -> usize {
+        self.touched.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+/// [`EventSink`] forwarding into a shared [`WmState`]. Clone one handle
+/// into the arena via `set_sink`, keep the other to read results.
+#[derive(Clone)]
+pub struct WatermarkSink(pub Rc<RefCell<WmState>>);
+
+impl WatermarkSink {
+    pub fn new(arena_len: usize) -> WatermarkSink {
+        WatermarkSink(Rc::new(RefCell::new(WmState::new(arena_len))))
+    }
+}
+
+impl EventSink for WatermarkSink {
+    fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
+        self.0.borrow_mut().on_event(kind, addr, len);
+    }
+}
+
+/// Observed execution profile of one op under a planned arena.
+#[derive(Debug, Clone)]
+pub struct OpProfile {
+    /// Position in the plan's execution order.
+    pub step: usize,
+    /// Graph op id.
+    pub op: usize,
+    /// Op display name from the graph.
+    pub name: String,
+    /// Wall-clock execution time.
+    pub wall_us: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Max `addr + len` this op touched.
+    pub high_water: usize,
+    /// The planned extent available to this op: end of its output region
+    /// (the allocator's placement promise for the step).
+    pub planned_extent: usize,
+}
+
+/// Observed execution profile of a full planned run.
+#[derive(Debug, Clone)]
+pub struct ExecProfile {
+    pub model: String,
+    /// `plan.peak()` — what the planner promised.
+    pub planned_peak: usize,
+    /// Max traced `addr + len` over the run — what actually happened.
+    pub observed_peak: usize,
+    /// Distinct arena bytes touched by traced events.
+    pub touched_bytes: usize,
+    /// Size of the arena the run executed in.
+    pub arena_bytes: usize,
+    pub ops: Vec<OpProfile>,
+}
+
+impl ExecProfile {
+    /// The watermark invariant: every traced access stayed within the
+    /// planned peak. (`observed ≤ planned` — observed may be lower because
+    /// inputs are written untraced and not every extent is exercised.)
+    pub fn within_plan(&self) -> bool {
+        self.observed_peak <= self.planned_peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_high_water_and_touched() {
+        let mut sink = WatermarkSink::new(128);
+        sink.event(EventKind::Store, 0, 16);
+        sink.event(EventKind::Load, 8, 16);
+        sink.event(EventKind::Update, 100, 4);
+        let st = sink.0.borrow();
+        assert_eq!(st.high_water, 104);
+        assert_eq!(st.bytes_read, 16 + 4);
+        assert_eq!(st.bytes_written, 16 + 4);
+        // [0,24) plus [100,104) touched
+        assert_eq!(st.touched_bytes(), 24 + 4);
+    }
+
+    #[test]
+    fn per_op_resets() {
+        let mut sink = WatermarkSink::new(64);
+        sink.event(EventKind::Store, 0, 32);
+        sink.0.borrow_mut().begin_op();
+        sink.event(EventKind::Load, 4, 8);
+        let st = sink.0.borrow();
+        assert_eq!(st.op_high_water, 12);
+        assert_eq!(st.op_bytes_read, 8);
+        assert_eq!(st.op_bytes_written, 0);
+        assert_eq!(st.high_water, 32, "global watermark survives the reset");
+    }
+}

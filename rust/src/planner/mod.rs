@@ -354,6 +354,12 @@ impl<'a> Planner<'a> {
 
         let jobs = self.effective_jobs();
 
+        let mut plan_span = crate::obs::trace::span(&format!("plan:{}", graph.name), "planner");
+        if plan_span.is_active() {
+            plan_span.arg("ops", crate::util::json::num(graph.ops.len()));
+            plan_span.arg("jobs", crate::util::json::num(jobs));
+        }
+
         // O_s depends only on op geometry, never on serialisation order —
         // build each variant's table once for the whole sweep (perf
         // pass, §Perf), always through a cache: the attached one when
@@ -369,6 +375,10 @@ impl<'a> Planner<'a> {
             }
         };
         let build_os = |g: &Graph| -> OsTable {
+            let mut sp = crate::obs::trace::span("os_table", "planner");
+            if sp.is_active() {
+                sp.arg("ops", crate::util::json::num(g.ops.len()));
+            }
             if self.dmo {
                 OsTable::build_cached(g, self.method, cache_ref)
             } else {
@@ -480,6 +490,12 @@ impl<'a> Planner<'a> {
         if parallel {
             precomputed = crate::util::par::par_map_indexed(cells.len(), jobs, |i| {
                 let (vi, ci, h) = cells[i];
+                let mut sp = crate::obs::trace::span("cell", "planner");
+                if sp.is_active() {
+                    sp.arg("index", crate::util::json::num(i));
+                    sp.arg("variant", crate::util::json::num(vi));
+                    sp.arg("candidate", crate::util::json::num(ci));
+                }
                 allocate(
                     vgraph(&variants, graph, vi),
                     &variants[vi].cands[ci].scopes,
@@ -502,7 +518,15 @@ impl<'a> Planner<'a> {
             let cand = &v.cands[ci];
             let a = match precomputed.get_mut(index) {
                 Some(slot) => slot.take().expect("every sweep cell allocated"),
-                None => allocate(vgraph(&variants, graph, vi), &cand.scopes, &v.os, h),
+                None => {
+                    let mut sp = crate::obs::trace::span("cell", "planner");
+                    if sp.is_active() {
+                        sp.arg("index", crate::util::json::num(index));
+                        sp.arg("variant", crate::util::json::num(vi));
+                        sp.arg("candidate", crate::util::json::num(ci));
+                    }
+                    allocate(vgraph(&variants, graph, vi), &cand.scopes, &v.os, h)
+                }
             };
             let peak = a.peak;
             // strict `<`: a split rewrite must *beat* the best unsplit
@@ -545,6 +569,14 @@ impl<'a> Planner<'a> {
         };
         check(plan.graph_for(graph), &plan.scopes, &plan.os, &plan.alloc)
             .map_err(|e| PlanError::InvalidLayout(format!("{e:#}")))?;
+        if plan_span.is_active() {
+            let cs = cache_ref.stats();
+            plan_span.arg("cells", crate::util::json::num(total));
+            plan_span.arg("peak", crate::util::json::num(plan.peak()));
+            plan_span.arg("os_cache_hits", crate::util::json::num(cs.hits));
+            plan_span.arg("os_cache_misses", crate::util::json::num(cs.misses));
+        }
+        drop(plan_span);
         Ok(plan)
     }
 }

@@ -234,9 +234,16 @@ pub fn search_with(
     };
 
     let mut level: Vec<State> = vec![init];
-    for _depth in 0..n {
+    for depth in 0..n {
         // budget spent: fall back to greedy (width-1) completion
         let width = if stats.expanded >= budget { 1 } else { beam };
+
+        let mut level_span = crate::obs::trace::span("beam_level", "planner");
+        if level_span.is_active() {
+            level_span.arg("level", crate::util::json::num(depth));
+            level_span.arg("width", crate::util::json::num(width));
+            level_span.arg("frontier", crate::util::json::num(level.len()));
+        }
 
         // flatten this level's expansion into (frontier state, ready op)
         // tasks, in the order the serial loop would visit them
@@ -261,6 +268,9 @@ pub fn search_with(
         // them in task order — identical to the serial loop's pruning
         let succs = expand_level(&level, &tasks, &ctx, jobs);
         stats.expanded += succs.len();
+        if level_span.is_active() {
+            level_span.arg("expanded", crate::util::json::num(succs.len()));
+        }
         let mut next: HashMap<Vec<u64>, State> = HashMap::new();
         for s2 in succs {
             match next.entry(s2.done.clone()) {

@@ -1,0 +1,153 @@
+//! Observability integration tests: structural validity of the Chrome
+//! trace export (golden-free — asserts shape, not timings) and zoo-wide
+//! runtime watermark verification (`observed peak ≤ planned peak`).
+
+use dmo::interp;
+use dmo::models;
+use dmo::obs::trace;
+use dmo::obs::watermark::ExecProfile;
+use dmo::planner::Planner;
+use dmo::util::json::Json;
+use std::sync::Mutex;
+
+/// The tracer is process-global; any test that executes a profiled run
+/// while another has it enabled would leak spans into that test's drain.
+/// Every test that runs `run_plan_profiled` holds this gate.
+static TRACER_GATE: Mutex<()> = Mutex::new(());
+
+fn profiled_run(name: &str, seed: u64) -> ExecProfile {
+    let g = models::build(name).unwrap();
+    let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+    let inputs: Vec<Vec<f32>> = g
+        .inputs
+        .iter()
+        .map(|&t| interp::gen_input(&g, t, seed))
+        .collect();
+    let (_out, prof) = interp::run_plan_profiled(name, &g, &plan, &inputs, seed).unwrap();
+    prof
+}
+
+fn assert_within(prof: &ExecProfile) {
+    assert!(
+        prof.within_plan(),
+        "{}: observed peak {} exceeds planned {}",
+        prof.model,
+        prof.observed_peak,
+        prof.planned_peak
+    );
+    assert!(prof.observed_peak > 0, "{}: nothing was traced", prof.model);
+    assert!(
+        prof.touched_bytes <= prof.arena_bytes,
+        "{}: touched {} > arena {}",
+        prof.model,
+        prof.touched_bytes,
+        prof.arena_bytes
+    );
+    assert!(!prof.ops.is_empty());
+    for op in &prof.ops {
+        assert!(
+            op.high_water <= prof.planned_peak,
+            "{} op {}: high water {} > planned peak {}",
+            prof.model,
+            op.name,
+            op.high_water,
+            prof.planned_peak
+        );
+    }
+}
+
+/// The `dmo trace-run tiny` pipeline, in-process: plan + profiled
+/// execution under the tracer must export Chrome trace-event JSON that
+/// re-parses, covers the planner and every plan op exactly once, and
+/// nests execution spans inside the run span.
+#[test]
+fn trace_of_tiny_is_valid_chrome_trace_json() {
+    let _gate = TRACER_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    trace::enable();
+    let g = models::build("tiny").unwrap();
+    let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+    let inputs: Vec<Vec<f32>> = g
+        .inputs
+        .iter()
+        .map(|&t| interp::gen_input(&g, t, 42))
+        .collect();
+    let (_out, prof) = interp::run_plan_profiled("tiny", &g, &plan, &inputs, 42).unwrap();
+    trace::disable();
+    let events = trace::drain();
+    assert!(trace::drain().is_empty(), "drain must empty the buffers");
+    assert_within(&prof);
+
+    // the export must survive a round-trip through the JSON parser
+    let text = trace::export_chrome(&events).to_string();
+    let doc = Json::parse(&text).unwrap();
+    let rows = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("top-level traceEvents array");
+    assert!(!rows.is_empty());
+
+    // every event carries the Chrome trace-event required fields
+    for r in rows {
+        assert!(r.get("name").and_then(|v| v.as_str()).is_some());
+        assert!(r.get("cat").and_then(|v| v.as_str()).is_some());
+        assert!(r.get("ts").and_then(|v| v.as_f64()).is_some());
+        assert!(r.get("pid").and_then(|v| v.as_f64()).is_some());
+        assert!(r.get("tid").and_then(|v| v.as_f64()).is_some());
+        match r.get("ph").and_then(|v| v.as_str()) {
+            Some("X") => assert!(r.get("dur").and_then(|v| v.as_f64()).is_some()),
+            Some("i") => assert_eq!(r.get("s").and_then(|v| v.as_str()), Some("t")),
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+
+    let spans_named = |name: &str| -> Vec<(u64, u64)> {
+        rows.iter()
+            .filter(|r| r.get("name").and_then(|v| v.as_str()) == Some(name))
+            .map(|r| {
+                let ts = r.get("ts").unwrap().as_f64().unwrap() as u64;
+                let dur = r.get("dur").unwrap().as_f64().unwrap() as u64;
+                (ts, ts + dur)
+            })
+            .collect()
+    };
+
+    // planner and run spans appear exactly once
+    assert_eq!(spans_named("plan:tiny").len(), 1, "one planner span");
+    let runs = spans_named("run:tiny");
+    assert_eq!(runs.len(), 1, "one run span");
+    let (run_start, run_end) = runs[0];
+
+    // every plan op's exec span appears exactly once, inside the run span
+    let pg = plan.graph_for(&g);
+    assert!(!plan.order.0.is_empty());
+    for &opid in &plan.order.0 {
+        let name = format!("exec:{}", pg.op(opid).name);
+        let execs = spans_named(&name);
+        assert_eq!(execs.len(), 1, "span {name} must appear exactly once");
+        let (s, e) = execs[0];
+        assert!(
+            run_start <= s && e <= run_end,
+            "{name} [{s},{e}] outside run [{run_start},{run_end}]"
+        );
+    }
+}
+
+/// Runtime watermark verification over a zoo sample, including the
+/// paper's deployable MobileNet at full size. The full zoo runs under
+/// `--ignored` (and in CI's release-mode pass).
+#[test]
+fn observed_peak_within_plan_zoo_sample() {
+    let _gate = TRACER_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    for name in ["tiny", "tiny_int8", "tiny_wide", "mobilenet_v1_0.25_128_int8"] {
+        assert_within(&profiled_run(name, 7));
+    }
+}
+
+#[test]
+#[ignore = "slow: profiled execution of every zoo model (run with --ignored)"]
+fn observed_peak_within_plan_full_zoo() {
+    let _gate = TRACER_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    for name in models::all_names() {
+        assert_within(&profiled_run(name, 11));
+    }
+}
