@@ -1,18 +1,19 @@
-//! Bench: §II-A operation splitting as a planning action, per zoo model.
+//! Bench: §II-A rewrites as a planning action, per zoo model.
 //!
-//! For every Table III model this plans twice with DMO on — the plain
-//! searched plan and the searched+split plan (`allow_splits`) — and
-//! records the best split vs no-split peak plus the recompute/reassembly
-//! overhead the winning rewrite pays. Asserts the headline properties:
-//! the split session is never worse than the unsplit one, and at least
-//! one model's split plan strictly beats its best unsplit layout (the
-//! §II-A MobileNet case). Results go to `BENCH_split.json`, uploaded by
-//! CI as part of the perf trajectory.
+//! For every Table III model (plus the `hourglass` chain witness) this
+//! plans three ways with DMO on — the plain searched plan, the
+//! searched + single-pair-split plan (`RewriteBudget::pairs`), and the
+//! generalised plan (multi-split + depth-3 chains) — and records the
+//! peaks plus the recompute/reassembly overhead the winning rewrite
+//! pays. Asserts the headline properties: each wider budget is never
+//! worse than the narrower one, at least one model's split plan
+//! strictly beats its best unsplit layout (the §II-A MobileNet case),
+//! and at least one model's chain rewrite strictly beats its best pair
+//! split (the hourglass case). Results go to `BENCH_split.json`,
+//! uploaded by CI as part of the perf trajectory.
 
-use dmo::ir::graph::OpId;
 use dmo::models;
-use dmo::planner::split::analyse_pair;
-use dmo::planner::{Planner, DEFAULT_BEAM, DEFAULT_BUDGET};
+use dmo::planner::{Planner, RewriteBudget, DEFAULT_BEAM, DEFAULT_BUDGET};
 use dmo::report::fmt_bytes;
 use dmo::util::json::{num, obj, s, Json};
 use std::time::Instant;
@@ -20,63 +21,102 @@ use std::time::Instant;
 const MAX_PARTS: usize = 4;
 
 fn main() {
-    println!("=== §II-A operation splitting: searched split vs no-split (DMO on) ===\n");
+    println!("=== §II-A rewrites: searched pair / multi+chain vs no-rewrite (DMO on) ===\n");
     println!(
-        "{:32} {:>10} {:>10} {:>8} {:>12} {:>12} {:>9}",
-        "model", "no-split", "split", "Δ", "recomputed", "reassembled", "wall"
+        "{:32} {:>10} {:>10} {:>10} {:>8} {:>12} {:>12} {:>9}",
+        "model", "none", "pair", "general", "Δ", "recomputed", "reassembled", "wall"
     );
 
+    let general_budget = RewriteBudget {
+        max_parts: MAX_PARTS,
+        max_splits: 2,
+        max_chain_depth: 3,
+    };
+
+    let mut names = models::table3_names();
+    names.push("hourglass");
     let mut entries: Vec<Json> = Vec::new();
     let mut wins = 0usize;
-    for name in models::table3_names() {
+    let mut chain_wins = 0usize;
+    for name in names {
         let g = models::build(name).unwrap();
         let unsplit = Planner::for_graph(&g)
             .dmo(true)
             .search(DEFAULT_BEAM, DEFAULT_BUDGET)
             .plan()
             .unwrap();
-        let t0 = Instant::now();
-        let split = Planner::for_graph(&g)
+        let pair = Planner::for_graph(&g)
             .dmo(true)
             .search(DEFAULT_BEAM, DEFAULT_BUDGET)
-            .allow_splits(MAX_PARTS)
+            .rewrites(RewriteBudget::pairs(MAX_PARTS))
+            .plan()
+            .unwrap();
+        let t0 = Instant::now();
+        let general = Planner::for_graph(&g)
+            .dmo(true)
+            .search(DEFAULT_BEAM, DEFAULT_BUDGET)
+            .rewrites(general_budget)
             .plan()
             .unwrap();
         let wall = t0.elapsed();
         assert!(
-            split.peak() <= unsplit.peak(),
-            "{name}: split-enabled session {} worse than unsplit {}",
-            split.peak(),
+            pair.peak() <= unsplit.peak(),
+            "{name}: pair-split session {} worse than unsplit {}",
+            pair.peak(),
             unsplit.peak()
         );
+        assert!(
+            general.peak() <= pair.peak(),
+            "{name}: generalised session {} worse than single-pair best {}",
+            general.peak(),
+            pair.peak()
+        );
 
-        // recompute overhead of the winning rewrite, if one won
-        let (recomputed, assembled, spec) = match &split.rewrite {
+        // overhead + shape of the winning generalised rewrite, if one won
+        let (recomputed, assembled, spec, has_chain, n_splits) = match &general.rewrite {
             Some(rw) => {
-                let sp = rw.splits[0];
-                let rep = analyse_pair(&g, OpId(sp.first), OpId(sp.second), sp.parts).unwrap();
                 wins += 1;
-                (
-                    rep.recomputed_elems,
-                    rep.assembled_elems,
-                    format!("{}→{}×{}", sp.first, sp.second, sp.parts),
-                )
+                let mut recomputed = 0usize;
+                let mut assembled = 0usize;
+                for sp in &rw.specs {
+                    let ops = sp.op_indices();
+                    let rep = dmo::planner::split::analyse_chain(
+                        &g,
+                        &ops.iter().map(|&i| dmo::ir::OpId(i)).collect::<Vec<_>>(),
+                        sp.parts(),
+                    )
+                    .unwrap();
+                    recomputed += rep.recomputed_elems;
+                    assembled += rep.assembled_elems;
+                }
+                let described = rw
+                    .specs
+                    .iter()
+                    .map(|sp| sp.describe())
+                    .collect::<Vec<_>>()
+                    .join(" + ");
+                let has_chain = rw.specs.iter().any(|sp| sp.depth() >= 3);
+                (recomputed, assembled, described, has_chain, rw.specs.len())
             }
-            None => (0, 0, "-".to_string()),
+            None => (0, 0, "-".to_string(), false, 0),
         };
-        let delta = if split.peak() < unsplit.peak() {
+        if has_chain && general.peak() < pair.peak() {
+            chain_wins += 1;
+        }
+        let delta = if general.peak() < unsplit.peak() {
             format!(
                 "-{:.1}%",
-                100.0 * (unsplit.peak() - split.peak()) as f64 / unsplit.peak() as f64
+                100.0 * (unsplit.peak() - general.peak()) as f64 / unsplit.peak() as f64
             )
         } else {
             "=".to_string()
         };
         println!(
-            "{:32} {:>10} {:>10} {:>8} {:>12} {:>12} {:>8.2}s",
+            "{:32} {:>10} {:>10} {:>10} {:>8} {:>12} {:>12} {:>8.2}s",
             name,
             fmt_bytes(unsplit.peak()),
-            fmt_bytes(split.peak()),
+            fmt_bytes(pair.peak()),
+            fmt_bytes(general.peak()),
             delta,
             recomputed,
             assembled,
@@ -86,23 +126,32 @@ fn main() {
         entries.push(obj(vec![
             ("model", s(name)),
             ("no_split_peak_bytes", num(unsplit.peak())),
-            ("split_peak_bytes", num(split.peak())),
-            ("split_won", Json::Bool(split.rewrite.is_some())),
+            ("split_peak_bytes", num(pair.peak())),
+            ("general_peak_bytes", num(general.peak())),
+            ("split_won", Json::Bool(general.rewrite.is_some())),
+            ("chain_beat_pair", Json::Bool(has_chain && general.peak() < pair.peak())),
+            ("rewrite_count", num(n_splits)),
             ("split_spec", s(&spec)),
             ("recomputed_elems", num(recomputed)),
             ("assembled_elems", num(assembled)),
             ("max_parts", num(MAX_PARTS)),
+            ("max_splits", num(general_budget.max_splits)),
+            ("max_chain_depth", num(general_budget.max_chain_depth)),
             ("split_plan_wall_ms", num(wall.as_millis() as usize)),
         ]));
     }
 
     assert!(
         wins >= 1,
-        "at least one zoo model's searched+split plan must beat its best unsplit order"
+        "at least one zoo model's searched+rewrite plan must beat its best unsplit order"
+    );
+    assert!(
+        chain_wins >= 1,
+        "at least one zoo model's chain rewrite must beat its best pair split"
     );
 
     let doc = obj(vec![("bench", s("split_savings")), ("models", Json::Arr(entries))]);
     let path = "BENCH_split.json";
     std::fs::write(path, doc.to_string()).unwrap();
-    println!("\nwrote {path} ({wins} models improved by splitting)");
+    println!("\nwrote {path} ({wins} models improved by rewriting, {chain_wins} by chains over pairs)");
 }

@@ -281,6 +281,36 @@ mod tests {
     }
 
     #[test]
+    fn chain_banded_plan_emitted_c_is_bit_identical() {
+        if cc_or_skip().is_none() {
+            return;
+        }
+        // the generalised rewrite: a depth-3 chain (conv → dw → pool)
+        // banded end-to-end, every level emitted as banded kernels with
+        // one reassembly point — still bit-identical to the unrewritten
+        // interpreter reference
+        use crate::planner::RewriteBudget;
+        let g = models::build("hourglass").unwrap();
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .rewrites(RewriteBudget {
+                max_parts: 4,
+                max_splits: 1,
+                max_chain_depth: 3,
+            })
+            .plan()
+            .unwrap();
+        let rw = plan.rewrite.as_ref().expect("the chain must win on hourglass");
+        assert!(rw.specs.iter().any(|sp| sp.depth() >= 3));
+        let unit = emit(&g, &plan, &EmitOptions::new("hourglass_model")).unwrap();
+        assert!(unit.source.contains("dmo_band_conv2d"), "banded conv kernel emitted");
+        assert!(unit.source.contains("dmo_band_dwconv2d"), "banded dw kernel emitted");
+        assert!(unit.source.contains("dmo_band_pool"), "banded pool kernel emitted");
+        let r = differential_test(&g, &plan, 42).unwrap();
+        assert_eq!(r.arena_bytes, plan.peak());
+    }
+
+    #[test]
     fn generator_mode_matches_embedded_weights() {
         if cc_or_skip().is_none() {
             return;

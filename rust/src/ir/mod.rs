@@ -16,5 +16,5 @@ pub mod shape;
 pub use dtype::DType;
 pub use graph::{Graph, GraphBuilder, OpId, OpNode, TensorId, TensorInfo, TensorKind, WeightInfo};
 pub use op::{Activation, BandParams, OpKind, Padding};
-pub use rewrite::{split_pair, Provenance, SplitSpec};
+pub use rewrite::{apply, split_chain, split_pair, Provenance, RewriteSpec, SplitSpec};
 pub use shape::Shape;

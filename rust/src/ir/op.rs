@@ -105,8 +105,8 @@ pub enum UnaryKind {
 /// frame (`full_in_h` / `full_out_h`), so each output element of a band
 /// is produced by exactly the arithmetic the unsplit op would use —
 /// banded execution is bit-identical to full execution by construction
-/// (the invariant `ir::rewrite::split_pair` and the interpreter's
-/// split-safety proofs rely on).
+/// (the invariant `ir::rewrite::split_chain` — and its depth-2 shim
+/// `split_pair` — and the interpreter's split-safety proofs rely on).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BandParams {
     /// The full op this band is a slice of. Restricted to the window
@@ -206,8 +206,8 @@ pub enum OpKind {
     /// §II-A banded slice of a window op — computes only the output
     /// rows in [`BandParams::out_row0`], reading the input rows the
     /// receptive-field halo requires. Produced by
-    /// [`crate::ir::rewrite::split_pair`]; never emitted by the model
-    /// builders.
+    /// [`crate::ir::rewrite::split_chain`] (and its `split_pair` shim);
+    /// never emitted by the model builders.
     Band(BandParams),
     /// Concatenate along the row (H) axis — reassembles the banded
     /// outputs of a split pair into the full tensor downstream
@@ -263,7 +263,7 @@ impl OpKind {
     }
 
     /// Can this kind be sliced into horizontal bands by
-    /// [`crate::ir::rewrite::split_pair`]? The window family: output
+    /// [`crate::ir::rewrite::split_chain`]? The window family: output
     /// row `r` depends only on a contiguous input-row window, so a band
     /// of output rows needs only a band of input rows.
     pub fn bandable(&self) -> bool {

@@ -1,28 +1,37 @@
-//! Graph rewrites — §II-A operation splitting as a first-class,
-//! executable transform.
+//! Graph rewrites — §II-A operation splitting as a composable,
+//! executable pass surface.
 //!
 //! The paper splits a chained window-op pair into `k` vertical bands by
 //! hand (MobileNet v1: 96 KB → 66 KB peak) and calls automatic
-//! application future work. [`split_pair`] *is* that application: it
-//! materialises the banded computation as real graph ops —
+//! application future work. This module *is* that application,
+//! generalised past the paper: a rewrite is described by a
+//! [`RewriteSpec`] — a pair split, or a whole chain of depth ≥ 2 banded
+//! end-to-end (Pex-style partial execution, arXiv 2211.17246) — and a
+//! plan may carry *several* independent specs. The single entry point
+//! [`apply`] materialises a spec sequence as real graph ops:
 //! [`OpKind::Band`] slices whose halo recomputation is explicit in
 //! their shapes, plus an [`OpKind::ConcatRows`] reassembly — so the
 //! rewritten graph plans, interprets, emits as C and fit-checks through
 //! every downstream layer unchanged.
 //!
-//! Structure of the rewrite for a pair `first → second` split `parts`
-//! ways (`in → first → mid → second → out` becomes):
+//! Structure of the rewrite for a chain `o_1 → … → o_d` split `parts`
+//! ways (`in → o_1 → t_1 → … → o_d → out` becomes):
 //!
 //! ```text
-//! in ─┬─ band(first, rows m0p..m1p) ─ mid_band_p ─ band(second, rows o0p..o1p) ─ out_band_p ─┐
-//!     └─ … one chain per part p …                                                           ├─ concat-rows → out
-//!                                                                                           ┘
+//! in ─┬─ band(o_1) ─ t_1_band_p ─ … ─ band(o_d) ─ out_band_p ─┐
+//!     └─ … one banded chain per part p …                      ├─ concat-rows → out
+//!                                                             ┘
 //! ```
 //!
-//! Only one intermediate band is live at a time, so the peak drops to
-//! roughly `in + band + out` — at the price of recomputing the
-//! receptive-field halo rows shared by adjacent bands (§II-A's memory ↔
-//! compute trade, quantified by [`crate::planner::split::analyse_pair`]).
+//! Only one band per level is live at a time, so the peak drops to
+//! roughly `in + Σ level bands + out` — at the price of recomputing the
+//! receptive-field halo rows adjacent bands share at *every*
+//! intermediate level. For depth 2 this is exactly the paper's §II-A
+//! pair split; for depth ≥ 3 the halo recompute is amortised across the
+//! chain (no intermediate level is ever fully materialised), which is
+//! where chains beat pairs on hourglass-shaped regions (small input,
+//! fat intermediates, small output). The memory ↔ compute trade is
+//! quantified by [`crate::planner::split::analyse_chain`].
 //!
 //! Every rewritten op records where it came from ([`Provenance`]) and
 //! points its synthetic weight stream at the original op
@@ -35,10 +44,11 @@ use super::op::{BandParams, OpKind};
 use super::shape::Shape;
 use anyhow::{ensure, Result};
 
-/// One recorded split application: ops `first → second` of the graph it
-/// is applied to, banded into (up to) `parts` row bands. Serialised in
-/// [`crate::planner::PlanArtifact`] v3 so a split plan can be re-derived
-/// from the base graph in another process.
+/// One recorded pair split: ops `first → second` of the graph it is
+/// applied to, banded into (up to) `parts` row bands. The pair-shaped
+/// special case of [`RewriteSpec`], kept as a named struct because the
+/// pair is the paper's §II-A unit and artifact v3 serialised exactly
+/// this shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SplitSpec {
     /// Producer op index in the graph the spec applies to.
@@ -47,6 +57,62 @@ pub struct SplitSpec {
     pub second: usize,
     /// Number of row bands.
     pub parts: usize,
+}
+
+/// One composable graph rewrite, applied by [`apply`]. Op indices refer
+/// to the graph the spec is applied to (for a sequence, the graph
+/// produced by the previous application). Serialised in
+/// [`crate::planner::PlanArtifact`] v4 so a rewritten plan can be
+/// re-derived from the base graph in another process; v3 artifacts'
+/// single pair splits load as [`RewriteSpec::PairSplit`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum RewriteSpec {
+    /// The §II-A pair split: `first → second` banded `parts` ways.
+    PairSplit(SplitSpec),
+    /// A chain of `ops.len() ≥ 2` ops banded end-to-end into `parts`
+    /// row bands (Pex-style). `ops` must be a producer→consumer chain
+    /// in increasing index order; depth 2 is exactly `PairSplit`.
+    ChainSplit { ops: Vec<OpId>, parts: usize },
+}
+
+impl RewriteSpec {
+    /// The op indices this spec bands, producer first.
+    pub fn op_indices(&self) -> Vec<usize> {
+        match self {
+            RewriteSpec::PairSplit(s) => vec![s.first, s.second],
+            RewriteSpec::ChainSplit { ops, .. } => ops.iter().map(|o| o.0).collect(),
+        }
+    }
+
+    /// Number of row bands.
+    pub fn parts(&self) -> usize {
+        match self {
+            RewriteSpec::PairSplit(s) => s.parts,
+            RewriteSpec::ChainSplit { parts, .. } => *parts,
+        }
+    }
+
+    /// Chain depth (2 for a pair).
+    pub fn depth(&self) -> usize {
+        match self {
+            RewriteSpec::PairSplit(_) => 2,
+            RewriteSpec::ChainSplit { ops, .. } => ops.len(),
+        }
+    }
+
+    /// Human-readable one-liner for reports and the CLI.
+    pub fn describe(&self) -> String {
+        let ops = self
+            .op_indices()
+            .iter()
+            .map(|i| i.to_string())
+            .collect::<Vec<_>>()
+            .join("→");
+        match self {
+            RewriteSpec::PairSplit(_) => format!("ops {ops} banded ×{}", self.parts()),
+            RewriteSpec::ChainSplit { .. } => format!("chain {ops} banded ×{}", self.parts()),
+        }
+    }
 }
 
 /// Where a rewritten op came from.
@@ -87,9 +153,10 @@ pub struct SplitResult {
     pub provenance: Provenance,
 }
 
-/// Per-part banded geometry: output rows `[out0, out1)` of the pair's
-/// final output, and the intermediate rows `[mid0, mid1)` the part must
-/// compute (adjacent parts' mid ranges overlap by the halo).
+/// Per-part banded geometry of a *pair* split: output rows
+/// `[out0, out1)` of the pair's final output, and the intermediate rows
+/// `[mid0, mid1)` the part must compute (adjacent parts' mid ranges
+/// overlap by the halo). The pair view of [`ChainBandPlan`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BandPlan {
     pub out0: usize,
@@ -98,42 +165,66 @@ pub struct BandPlan {
     pub mid1: usize,
 }
 
-/// Check whether the chain `first → second` can be split. Errors
-/// describe the first violated precondition.
-pub fn split_eligible(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<()> {
+/// Per-part banded geometry of a chain split: `rows[j]` is the row
+/// range `[r0, r1)` of chain op `j`'s output this part computes. The
+/// last entry is the part's slice of the final output (exact
+/// partition); every earlier level overlaps its neighbours by the
+/// receptive-field halo.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainBandPlan {
+    pub rows: Vec<(usize, usize)>,
+}
+
+/// Check whether the op sequence `ops` forms a bandable chain that can
+/// be split `parts` ways. Errors describe the first violated
+/// precondition.
+pub fn chain_eligible(graph: &Graph, ops: &[OpId], parts: usize) -> Result<()> {
     ensure!(parts >= 2, "parts must be >= 2");
-    ensure!(
-        first.0 < graph.ops.len() && second.0 < graph.ops.len(),
-        "op id out of range"
-    );
-    ensure!(
-        first.0 < second.0,
-        "producer must precede consumer in op order"
-    );
-    let f = graph.op(first);
-    let s = graph.op(second);
-    ensure!(f.kind.bandable(), "first op `{}` is not bandable", f.name);
-    ensure!(s.kind.bandable(), "second op `{}` is not bandable", s.name);
-    ensure!(
-        f.inputs.len() == 1 && s.inputs.len() == 1 && s.inputs[0] == f.output,
-        "second op must consume exactly the first op's output"
-    );
-    ensure!(
-        graph.consumers(f.output) == vec![second],
-        "intermediate `{}` must have exactly one consumer",
-        graph.tensor(f.output).name
-    );
-    ensure!(
-        graph.tensor(f.output).kind == TensorKind::Intermediate,
-        "cannot band through a graph input/output tensor"
-    );
-    let inp = graph.tensor(f.inputs[0]);
-    let mid = graph.tensor(f.output);
-    let out = graph.tensor(s.output);
-    ensure!(
-        inp.shape.rank() == 4 && mid.shape.rank() == 4 && out.shape.rank() == 4,
-        "need an NHWC chain"
-    );
+    ensure!(ops.len() >= 2, "a chain needs at least 2 ops");
+    for w in ops.windows(2) {
+        ensure!(
+            w[0].0 < w[1].0,
+            "producer must precede consumer in op order"
+        );
+    }
+    for &o in ops {
+        ensure!(o.0 < graph.ops.len(), "op id out of range");
+        let op = graph.op(o);
+        ensure!(op.kind.bandable(), "op `{}` is not bandable", op.name);
+        ensure!(
+            op.inputs.len() == 1,
+            "op `{}` must have exactly one activation input",
+            op.name
+        );
+    }
+    for w in ops.windows(2) {
+        let f = graph.op(w[0]);
+        let s = graph.op(w[1]);
+        ensure!(
+            s.inputs[0] == f.output,
+            "op `{}` must consume exactly `{}`'s output",
+            s.name,
+            f.name
+        );
+        ensure!(
+            graph.consumers(f.output) == vec![w[1]],
+            "intermediate `{}` must have exactly one consumer",
+            graph.tensor(f.output).name
+        );
+        ensure!(
+            graph.tensor(f.output).kind == TensorKind::Intermediate,
+            "cannot band through a graph input/output tensor"
+        );
+    }
+    let inp = graph.tensor(graph.op(ops[0]).inputs[0]);
+    ensure!(inp.shape.rank() == 4, "need an NHWC chain");
+    for &o in ops {
+        ensure!(
+            graph.tensor(graph.op(o).output).shape.rank() == 4,
+            "need an NHWC chain"
+        );
+    }
+    let out = graph.tensor(graph.op(*ops.last().unwrap()).output);
     ensure!(
         out.shape.h() >= parts,
         "output has {} rows, cannot split into {} bands",
@@ -143,151 +234,166 @@ pub fn split_eligible(graph: &Graph, first: OpId, second: OpId, parts: usize) ->
     Ok(())
 }
 
-/// The balanced row partition a `parts`-way split of `first → second`
-/// uses: part `p` produces output rows `[p·O_h/parts, (p+1)·O_h/parts)`
-/// through the intermediate rows its receptive field needs. Shared by
-/// the rewrite itself and the §II-A analysis
-/// ([`crate::planner::split::analyse_pair`]), so predicted and
-/// materialised geometry can never diverge.
-pub fn band_plan(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<Vec<BandPlan>> {
-    split_eligible(graph, first, second, parts)?;
-    let s = graph.op(second);
-    let mh = graph.tensor(graph.op(first).output).shape.h();
-    let oh = graph.tensor(s.output).shape.h();
+/// Check whether the pair `first → second` can be split. Thin shim over
+/// [`chain_eligible`] at depth 2, kept for the §II-A pair surface.
+pub fn split_eligible(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<()> {
+    chain_eligible(graph, &[first, second], parts)
+}
+
+/// The balanced row partition a `parts`-way split of the chain uses:
+/// part `p` produces output rows `[p·O_h/parts, (p+1)·O_h/parts)` of
+/// the final output, and the row range of every earlier level is
+/// derived backwards through each op's receptive field
+/// ([`BandParams::in_rows_needed`]). Shared by the rewrite itself and
+/// the analysis ([`crate::planner::split::analyse_chain`]), so
+/// predicted and materialised geometry can never diverge.
+pub fn chain_band_plan(graph: &Graph, ops: &[OpId], parts: usize) -> Result<Vec<ChainBandPlan>> {
+    chain_eligible(graph, ops, parts)?;
+    let d = ops.len();
+    // full frame height of each level's output (and the chain input)
+    let level_h: Vec<usize> = ops
+        .iter()
+        .map(|&o| graph.tensor(graph.op(o).output).shape.h())
+        .collect();
+    let oh = level_h[d - 1];
     let mut plans = Vec::with_capacity(parts);
     for p in 0..parts {
-        let out0 = p * oh / parts;
-        let out1 = (p + 1) * oh / parts;
-        let probe = BandParams {
-            inner: Box::new(s.kind.clone()),
-            full_in_h: mh,
-            in_row0: 0,
-            full_out_h: oh,
-            out_row0: out0,
-            out_rows: out1 - out0,
-        };
-        let (mid0, mid1) = probe.in_rows_needed();
-        ensure!(
-            mid1 > mid0,
-            "band {p} of `{}` reads no intermediate rows (degenerate geometry)",
-            s.name
-        );
-        plans.push(BandPlan {
-            out0,
-            out1,
-            mid0,
-            mid1,
-        });
+        let mut rows = vec![(0usize, 0usize); d];
+        rows[d - 1] = (p * oh / parts, (p + 1) * oh / parts);
+        for j in (0..d - 1).rev() {
+            // rows of op j's output that op j+1's band reads
+            let s = graph.op(ops[j + 1]);
+            let probe = BandParams {
+                inner: Box::new(s.kind.clone()),
+                full_in_h: level_h[j],
+                in_row0: 0,
+                full_out_h: level_h[j + 1],
+                out_row0: rows[j + 1].0,
+                out_rows: rows[j + 1].1 - rows[j + 1].0,
+            };
+            let (r0, r1) = probe.in_rows_needed();
+            ensure!(
+                r1 > r0,
+                "band {p} of `{}` reads no input rows (degenerate geometry)",
+                s.name
+            );
+            rows[j] = (r0, r1);
+        }
+        plans.push(ChainBandPlan { rows });
     }
     Ok(plans)
 }
 
-/// Materialise the §II-A split of `first → second` into `parts` bands.
+/// Pair view of [`chain_band_plan`], kept for the §II-A surface and the
+/// pair-shaped analysis/report code.
+pub fn band_plan(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<Vec<BandPlan>> {
+    let plans = chain_band_plan(graph, &[first, second], parts)?;
+    Ok(plans
+        .into_iter()
+        .map(|p| BandPlan {
+            out0: p.rows[1].0,
+            out1: p.rows[1].1,
+            mid0: p.rows[0].0,
+            mid1: p.rows[0].1,
+        })
+        .collect())
+}
+
+/// Materialise the end-to-end banding of a bandable chain into `parts`
+/// bands — the executable form of [`RewriteSpec::ChainSplit`] (and, at
+/// depth 2, of the §II-A pair split).
 ///
 /// The returned graph keeps every original tensor id (the bypassed
-/// intermediate becomes an orphan the planner skips) and appends the
-/// band tensors; downstream consumers of the pair's output are
-/// untouched because the reassembled tensor keeps its id. All ops carry
-/// explicit [`OpNode::weight_seed`] provenance so weight streams — and
-/// therefore numerics — match the unsplit graph exactly.
-pub fn split_pair(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<SplitResult> {
-    let plans = band_plan(graph, first, second, parts)?;
-    let f = graph.op(first).clone();
-    let s = graph.op(second).clone();
-    let fin = f.inputs[0];
-    let mid_info = graph.tensor(f.output).clone();
-    let out_info = graph.tensor(s.output).clone();
-    let in_h = graph.tensor(fin).shape.h();
-    let (mh, mw, mc) = (mid_info.shape.h(), mid_info.shape.w(), mid_info.shape.c());
-    let (oh, ow, oc) = (out_info.shape.h(), out_info.shape.w(), out_info.shape.c());
+/// intermediates become orphans the planner skips) and appends the band
+/// tensors; downstream consumers of the chain's output are untouched
+/// because the reassembled tensor keeps its id. All ops carry explicit
+/// [`OpNode::weight_seed`] provenance so weight streams — and therefore
+/// numerics — match the unsplit graph exactly.
+pub fn split_chain(graph: &Graph, ops: &[OpId], parts: usize) -> Result<SplitResult> {
+    let plans = chain_band_plan(graph, ops, parts)?;
+    let d = ops.len();
+    let chain_ops: Vec<OpNode> = ops.iter().map(|&o| graph.op(o).clone()).collect();
+    let cin = chain_ops[0].inputs[0];
+    let in_h = graph.tensor(cin).shape.h();
+    let infos: Vec<TensorInfo> = chain_ops
+        .iter()
+        .map(|o| graph.tensor(o.output).clone())
+        .collect();
+    let last = *ops.last().unwrap();
 
     let mut g = Graph {
         name: graph.name.clone(),
         tensors: graph.tensors.clone(),
-        ops: Vec::with_capacity(graph.ops.len() + 2 * plans.len() - 1),
+        ops: Vec::with_capacity(graph.ops.len() + d * parts + 1 - d),
         inputs: graph.inputs.clone(),
         outputs: graph.outputs.clone(),
     };
     let mut per_op: Vec<OpOrigin> = Vec::with_capacity(g.ops.capacity());
 
-    // band tensors, appended past the existing ids
-    let mut mid_bands = Vec::with_capacity(plans.len());
-    let mut out_bands = Vec::with_capacity(plans.len());
-    for (p, bp) in plans.iter().enumerate() {
-        let mt = TensorId(g.tensors.len());
-        g.tensors.push(TensorInfo {
-            name: format!("{}_band{p}", mid_info.name),
-            shape: Shape::hwc(bp.mid1 - bp.mid0, mw, mc),
-            dtype: mid_info.dtype,
-            kind: TensorKind::Intermediate,
-        });
-        mid_bands.push(mt);
-        let ot = TensorId(g.tensors.len());
-        g.tensors.push(TensorInfo {
-            name: format!("{}_band{p}", out_info.name),
-            shape: Shape::hwc(bp.out1 - bp.out0, ow, oc),
-            dtype: out_info.dtype,
-            kind: TensorKind::Intermediate,
-        });
-        out_bands.push(ot);
+    // band tensors, appended past the existing ids: per part, one band
+    // of every level's output (the last level's band is the part's
+    // slice of the final output, reassembled below)
+    let mut bands: Vec<Vec<TensorId>> = Vec::with_capacity(parts);
+    for (p, cp) in plans.iter().enumerate() {
+        let mut level = Vec::with_capacity(d);
+        for j in 0..d {
+            let (r0, r1) = cp.rows[j];
+            let t = TensorId(g.tensors.len());
+            g.tensors.push(TensorInfo {
+                name: format!("{}_band{p}", infos[j].name),
+                shape: Shape::hwc(r1 - r0, infos[j].shape.w(), infos[j].shape.c()),
+                dtype: infos[j].dtype,
+                kind: TensorKind::Intermediate,
+            });
+            level.push(t);
+        }
+        bands.push(level);
     }
 
     for (i, op) in graph.ops.iter().enumerate() {
-        if i == first.0 {
-            continue; // re-emitted as bands at `second`'s slot
+        if ops.iter().any(|o| o.0 == i) && i != last.0 {
+            continue; // re-emitted as bands at the chain tail's slot
         }
-        if i == second.0 {
-            for (p, bp) in plans.iter().enumerate() {
-                g.ops.push(OpNode {
-                    name: format!("{}_band{p}", f.name),
-                    kind: OpKind::Band(BandParams {
-                        inner: Box::new(f.kind.clone()),
-                        full_in_h: in_h,
-                        in_row0: 0,
-                        full_out_h: mh,
-                        out_row0: bp.mid0,
-                        out_rows: bp.mid1 - bp.mid0,
-                    }),
-                    inputs: vec![fin],
-                    output: mid_bands[p],
-                    weights: f.weights.clone(),
-                    weight_seed: Some(f.weight_key(first.0)),
-                });
-                per_op.push(OpOrigin::Band {
-                    of: first,
-                    part: p,
-                    parts: plans.len(),
-                });
-                g.ops.push(OpNode {
-                    name: format!("{}_band{p}", s.name),
-                    kind: OpKind::Band(BandParams {
-                        inner: Box::new(s.kind.clone()),
-                        full_in_h: mh,
-                        in_row0: bp.mid0,
-                        full_out_h: oh,
-                        out_row0: bp.out0,
-                        out_rows: bp.out1 - bp.out0,
-                    }),
-                    inputs: vec![mid_bands[p]],
-                    output: out_bands[p],
-                    weights: s.weights.clone(),
-                    weight_seed: Some(s.weight_key(second.0)),
-                });
-                per_op.push(OpOrigin::Band {
-                    of: second,
-                    part: p,
-                    parts: plans.len(),
-                });
+        if i == last.0 {
+            for (p, cp) in plans.iter().enumerate() {
+                for j in 0..d {
+                    let (r0, r1) = cp.rows[j];
+                    let (src, in_row0, full_in_h) = if j == 0 {
+                        (cin, 0, in_h)
+                    } else {
+                        (bands[p][j - 1], cp.rows[j - 1].0, infos[j - 1].shape.h())
+                    };
+                    g.ops.push(OpNode {
+                        name: format!("{}_band{p}", chain_ops[j].name),
+                        kind: OpKind::Band(BandParams {
+                            inner: Box::new(chain_ops[j].kind.clone()),
+                            full_in_h,
+                            in_row0,
+                            full_out_h: infos[j].shape.h(),
+                            out_row0: r0,
+                            out_rows: r1 - r0,
+                        }),
+                        inputs: vec![src],
+                        output: bands[p][j],
+                        weights: chain_ops[j].weights.clone(),
+                        weight_seed: Some(chain_ops[j].weight_key(ops[j].0)),
+                    });
+                    per_op.push(OpOrigin::Band {
+                        of: ops[j],
+                        part: p,
+                        parts,
+                    });
+                }
             }
             g.ops.push(OpNode {
-                name: format!("{}_assemble", s.name),
+                name: format!("{}_assemble", chain_ops[d - 1].name),
                 kind: OpKind::ConcatRows,
-                inputs: out_bands.clone(),
-                output: s.output,
+                inputs: bands.iter().map(|level| level[d - 1]).collect(),
+                output: chain_ops[d - 1].output,
                 weights: Vec::new(),
-                weight_seed: Some(s.weight_key(second.0)),
+                weight_seed: Some(chain_ops[d - 1].weight_key(last.0)),
             });
-            per_op.push(OpOrigin::Assemble { of: second });
+            per_op.push(OpOrigin::Assemble { of: last });
             continue;
         }
         let mut kept = op.clone();
@@ -303,14 +409,28 @@ pub fn split_pair(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Res
     })
 }
 
-/// Apply a recorded sequence of splits (each spec indexes into the graph
-/// produced by the previous application) and return the final graph with
-/// provenance composed back to the base graph where possible.
-pub fn apply_splits(graph: &Graph, splits: &[SplitSpec]) -> Result<(Graph, Provenance)> {
+/// Materialise the §II-A split of `first → second` into `parts` bands.
+/// Thin shim over [`split_chain`] at depth 2 — there is one code path
+/// that executes rewrites.
+pub fn split_pair(graph: &Graph, first: OpId, second: OpId, parts: usize) -> Result<SplitResult> {
+    split_chain(graph, &[first, second], parts)
+}
+
+/// Apply a recorded sequence of rewrites (each spec indexes into the
+/// graph produced by the previous application) and return the final
+/// graph with provenance composed back to the base graph where
+/// possible. This is the single entry point every rewrite consumer —
+/// the planner, artifact revalidation, the CLI — goes through.
+pub fn apply(graph: &Graph, specs: &[RewriteSpec]) -> Result<(Graph, Provenance)> {
     let mut g = graph.clone();
     let mut prov = Provenance::identity(graph.ops.len());
-    for spec in splits {
-        let r = split_pair(&g, OpId(spec.first), OpId(spec.second), spec.parts)?;
+    for spec in specs {
+        let r = match spec {
+            RewriteSpec::PairSplit(s) => {
+                split_chain(&g, &[OpId(s.first), OpId(s.second)], s.parts)?
+            }
+            RewriteSpec::ChainSplit { ops, parts } => split_chain(&g, ops, *parts)?,
+        };
         let per_op = r
             .provenance
             .per_op
@@ -323,7 +443,7 @@ pub fn apply_splits(graph: &Graph, splits: &[SplitSpec]) -> Result<(Graph, Prove
                         part,
                         parts,
                     },
-                    // splitting an already-rewritten op: keep the nearest
+                    // rewriting an already-rewritten op: keep the nearest
                     // ancestor id (weight provenance still composes via
                     // `weight_seed`, which chains through `weight_key`)
                     _ => OpOrigin::Band { of, part, parts },
@@ -338,6 +458,14 @@ pub fn apply_splits(graph: &Graph, splits: &[SplitSpec]) -> Result<(Graph, Prove
         g = r.graph;
     }
     Ok((g, prov))
+}
+
+/// Apply a recorded sequence of pair splits. Thin shim over [`apply`]
+/// with every spec mapped to [`RewriteSpec::PairSplit`] — kept for the
+/// §II-A surface and artifact-v3 revalidation.
+pub fn apply_splits(graph: &Graph, splits: &[SplitSpec]) -> Result<(Graph, Provenance)> {
+    let specs: Vec<RewriteSpec> = splits.iter().map(|&s| RewriteSpec::PairSplit(s)).collect();
+    apply(graph, &specs)
 }
 
 #[cfg(test)]
@@ -355,6 +483,16 @@ mod tests {
         let c = b.conv2d(x, 8, (1, 1), (1, 1), Padding::Same, Activation::Relu6);
         let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
         b.finish(&[d])
+    }
+
+    /// A depth-3 bandable chain: conv → dwconv → pool.
+    fn chain_graph(dtype: DType) -> Graph {
+        let mut b = GraphBuilder::new("chain", dtype);
+        let x = b.input(Shape::hwc(16, 16, 2));
+        let c = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let d = b.dwconv2d(c, (3, 3), (1, 1), Padding::Same, Activation::Relu6);
+        let p = b.maxpool(d, (2, 2), (2, 2), Padding::Valid);
+        b.finish(&[p])
     }
 
     #[test]
@@ -394,6 +532,60 @@ mod tests {
                     assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} parts={parts}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn chain_split_is_the_one_code_path_for_pairs() {
+        // split_pair is a shim: the depth-2 chain must produce the
+        // byte-identical graph (this is also what keeps v3 artifacts'
+        // split fingerprints loading unchanged)
+        let g = pair_graph(DType::F32);
+        let via_pair = split_pair(&g, OpId(0), OpId(1), 3).unwrap();
+        let via_chain = split_chain(&g, &[OpId(0), OpId(1)], 3).unwrap();
+        assert_eq!(
+            crate::planner::graph_fingerprint(&via_pair.graph),
+            crate::planner::graph_fingerprint(&via_chain.graph)
+        );
+        assert_eq!(via_pair.provenance, via_chain.provenance);
+    }
+
+    #[test]
+    fn chain_banded_execution_is_bit_identical_to_unsplit() {
+        for dtype in [DType::F32, DType::I8] {
+            let g = chain_graph(dtype);
+            let ops = [OpId(0), OpId(1), OpId(2)];
+            let inputs: Vec<Vec<f32>> =
+                g.inputs.iter().map(|&t| gen_input(&g, t, 13)).collect();
+            let want = run_reference(&g, &inputs, 13).unwrap();
+            for parts in [2usize, 3, 4] {
+                let r = split_chain(&g, &ops, parts).unwrap();
+                // d bands per part + concat, original chain ops gone
+                assert_eq!(r.graph.ops.len(), g.ops.len() - 3 + 3 * parts + 1);
+                let got = run_reference(&r.graph, &inputs, 13).unwrap();
+                for (a, b) in got.iter().flatten().zip(want.iter().flatten()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} parts={parts}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_band_plan_halos_overlap_at_every_level() {
+        let g = chain_graph(DType::F32);
+        let plans = chain_band_plan(&g, &[OpId(0), OpId(1), OpId(2)], 4).unwrap();
+        assert_eq!(plans.len(), 4);
+        // final level is an exact partition
+        assert_eq!(plans[0].rows[2].0, 0);
+        assert_eq!(plans[3].rows[2].1, 8);
+        let covered: usize = plans.iter().map(|p| p.rows[2].1 - p.rows[2].0).sum();
+        assert_eq!(covered, 8);
+        // intermediate levels overlap between adjacent parts (halo)
+        for level in 0..2 {
+            assert!(
+                plans[1].rows[level].0 < plans[0].rows[level].1,
+                "level {level} has no halo"
+            );
         }
     }
 
@@ -445,6 +637,47 @@ mod tests {
     }
 
     #[test]
+    fn ineligible_chains_are_rejected() {
+        let g = chain_graph(DType::F32);
+        // non-consecutive ops are not a chain
+        assert!(chain_eligible(&g, &[OpId(0), OpId(2)], 2).is_err());
+        // depth 1 is not a chain
+        assert!(chain_eligible(&g, &[OpId(0)], 2).is_err());
+        // chain through a non-bandable op
+        let mut b = GraphBuilder::new("nb", DType::F32);
+        let x = b.input(Shape::hwc(8, 8, 2));
+        let c = b.conv2d(x, 2, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let r = b.reshape(c, Shape::new(&[1, 8 * 8 * 2]));
+        let f = b.fully_connected(r, 4, Activation::None);
+        let g2 = b.finish(&[f]);
+        assert!(chain_eligible(&g2, &[OpId(0), OpId(1), OpId(2)], 2).is_err());
+    }
+
+    #[test]
+    fn apply_composes_mixed_specs_deterministically() {
+        let g = chain_graph(DType::F32);
+        let specs = [RewriteSpec::ChainSplit {
+            ops: vec![OpId(0), OpId(1), OpId(2)],
+            parts: 2,
+        }];
+        let (a, prov_a) = apply(&g, &specs).unwrap();
+        let (b, prov_b) = apply(&g, &specs).unwrap();
+        assert_eq!(
+            crate::planner::graph_fingerprint(&a),
+            crate::planner::graph_fingerprint(&b)
+        );
+        assert_eq!(prov_a, prov_b);
+        // every band op maps back to a base chain op
+        for o in &prov_a.per_op {
+            match *o {
+                OpOrigin::Band { of, .. } => assert!(of.0 <= 2),
+                OpOrigin::Assemble { of } => assert_eq!(of, OpId(2)),
+                OpOrigin::Kept(_) => {}
+            }
+        }
+    }
+
+    #[test]
     fn apply_splits_round_trips_deterministically() {
         let g = pair_graph(DType::F32);
         let spec = SplitSpec {
@@ -460,5 +693,26 @@ mod tests {
         );
         assert_eq!(prov_a, prov_b);
         assert_eq!(a.ops.len(), g.ops.len() + 2 * 3 + 1 - 2);
+        // … and the shim agrees with the generic entry point
+        let (c, prov_c) = apply(&g, &[RewriteSpec::PairSplit(spec)]).unwrap();
+        assert_eq!(
+            crate::planner::graph_fingerprint(&a),
+            crate::planner::graph_fingerprint(&c)
+        );
+        assert_eq!(prov_a, prov_c);
+    }
+
+    #[test]
+    fn describe_names_pairs_and_chains() {
+        let p = RewriteSpec::PairSplit(SplitSpec { first: 3, second: 4, parts: 4 });
+        assert_eq!(p.describe(), "ops 3→4 banded ×4");
+        assert_eq!(p.depth(), 2);
+        let c = RewriteSpec::ChainSplit {
+            ops: vec![OpId(1), OpId(2), OpId(3)],
+            parts: 2,
+        };
+        assert_eq!(c.describe(), "chain 1→2→3 banded ×2");
+        assert_eq!(c.depth(), 3);
+        assert_eq!(c.op_indices(), vec![1, 2, 3]);
     }
 }

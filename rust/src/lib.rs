@@ -76,27 +76,34 @@
 //! model zoo, and `cargo bench --bench order_search` records it (plus
 //! search wall time) to `BENCH_order_search.json`.
 //!
-//! ## When to split (§II-A)
+//! ## When to rewrite (§II-A, generalised)
 //!
-//! Reordering only rearranges which tensors are live together. When one
-//! chained window-op pair dominates the peak — MobileNet's channel-
-//! expanding 1×1 conv feeding a downsampling depthwise conv — §II-A
-//! *operation splitting* bands the pair into `k` horizontal slices so
-//! only `≈ 1/k` of the intermediate is live at once, recomputing the
-//! halo rows adjacent bands share. [`ir::rewrite::split_pair`]
-//! materialises the rewrite as real [`ir::op::OpKind::Band`] /
-//! [`ir::op::OpKind::ConcatRows`] ops, and
-//! [`planner::Planner::allow_splits`] folds it into the plan search:
-//! split candidates compete with every unsplit order and win only on a
-//! strictly lower allocator-scored peak. Split when the intermediate
-//! dominates and the pair's output is small (reassembly keeps `2×out`
-//! live for one step); prefer the fewest parts that clear the SRAM
-//! target, since the recompute overhead grows with `k`:
+//! Reordering only rearranges which tensors are live together. When
+//! fat intermediates dominate the peak, §II-A *operation splitting*
+//! bands producer/consumer regions into `k` horizontal slices so only
+//! `≈ 1/k` of each intermediate is live at once, recomputing the halo
+//! rows adjacent bands share. The rewrite surface is a composable pass
+//! API: [`ir::rewrite::RewriteSpec`] names one rewrite — a
+//! `PairSplit` of a single producer/consumer pair, or a `ChainSplit`
+//! banding a whole chain of depth ≥ 3 end-to-end — and
+//! [`ir::rewrite::apply`] composes any sequence of them into real
+//! [`ir::op::OpKind::Band`] / [`ir::op::OpKind::ConcatRows`] ops.
+//! [`planner::Planner::rewrites`] folds the whole family into the plan
+//! search under a [`planner::RewriteBudget`]: `max_parts` bounds the
+//! bands per split, `max_splits` lets several independent pair splits
+//! compose in one plan, and `max_chain_depth ≥ 3` adds chain
+//! candidates. Rewritten candidates compete with every unrewritten
+//! order and win only on a strictly lower allocator-scored peak, so a
+//! bigger budget is never worse — pick pairs when one pair dominates
+//! (recompute stays local), chains when an hourglass of fat
+//! intermediates must never be materialised in full, and prefer the
+//! fewest parts that clear the SRAM target, since recompute grows
+//! with `k`:
 //!
 //! ```
 //! use dmo::ir::op::{Activation, Padding};
 //! use dmo::ir::{DType, GraphBuilder, Shape};
-//! use dmo::planner::Planner;
+//! use dmo::planner::{Planner, RewriteBudget};
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! // the §II-A shape: 32 KB input → 64 KB intermediate → 16 KB output
@@ -107,23 +114,41 @@
 //! let graph = b.finish(&[d]);
 //!
 //! let unsplit = Planner::for_graph(&graph).dmo(true).plan()?;
-//! let split = Planner::for_graph(&graph).dmo(true).allow_splits(4).plan()?;
+//! let split = Planner::for_graph(&graph)
+//!     .dmo(true)
+//!     .rewrites(RewriteBudget::pairs(4)) // pairs:4 — up to 4 bands
+//!     .plan()?;
 //! assert!(split.peak() < unsplit.peak(), "banding beats every unsplit order here");
 //! let rewrite = split.rewrite.as_ref().expect("the winning plan carries the rewrite");
-//! assert_eq!(rewrite.splits.len(), 1);
+//! assert_eq!(rewrite.specs.len(), 1);
 //!
-//! // the banded plan executes bit-identically to the *unsplit* reference
+//! // chains band whole subgraphs: on the zoo's hourglass model a
+//! // depth-3 chain strictly beats the best single pair split
+//! let hourglass = dmo::models::build("hourglass")?;
+//! let pairs = Planner::for_graph(&hourglass)
+//!     .dmo(true)
+//!     .rewrites(RewriteBudget::pairs(4))
+//!     .plan()?;
+//! let chains = Planner::for_graph(&hourglass)
+//!     .dmo(true)
+//!     .rewrites(RewriteBudget { max_parts: 4, max_splits: 1, max_chain_depth: 3 })
+//!     .plan()?;
+//! assert!(chains.peak() < pairs.peak(), "the chain avoids both fat intermediates");
+//!
+//! // banded plans execute bit-identically to the *unrewritten* reference
 //! dmo::interp::validate_plan(&graph, &split, 42)?;
+//! dmo::interp::validate_plan(&hourglass, &chains, 42)?;
 //! # Ok(())
 //! # }
 //! ```
 //!
-//! The winning plan, split or not, flows unchanged through
-//! [`planner::PlanArtifact`] (format v3 records the split specs and
-//! re-derives the rewrite on load), [`interp`], [`codegen`] (banded
-//! kernels; each split op's weights stored in flash once) and
-//! [`mcu::deploy_matrix_planned`] — where §II-A is what puts the
-//! smallest MobileNet on a 64 KB-SRAM part that DMO alone just misses.
+//! The winning plan, rewritten or not, flows unchanged through
+//! [`planner::PlanArtifact`] (format v4 records the rewrite specs and
+//! re-derives the rewrite on load; v3 pair-split artifacts still
+//! load), [`interp`], [`codegen`] (banded kernels; each split op's
+//! weights stored in flash once) and [`mcu::deploy_matrix_planned`] —
+//! where §II-A is what puts the smallest MobileNet on a 64 KB-SRAM
+//! part that DMO alone just misses.
 //!
 //! ## Planning at scale
 //!

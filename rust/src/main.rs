@@ -41,8 +41,11 @@ fn write_out(dir: &str, file: &str, content: &str) -> Result<()> {
 
 /// Stderr progress line for `--verbose` planning sessions.
 fn report_candidate(c: &PlanCandidate) {
-    let split = match c.split {
-        Some(sp) => format!(" + split({}→{}×{})", sp.first, sp.second, sp.parts),
+    let split = match &c.rewrite {
+        Some(specs) => format!(
+            " + rewrite({})",
+            specs.iter().map(|sp| sp.describe()).collect::<Vec<_>>().join(", ")
+        ),
         None => String::new(),
     };
     eprintln!(
@@ -54,6 +57,30 @@ fn report_candidate(c: &PlanCandidate) {
         report::fmt_bytes(c.peak),
         report::fmt_bytes(c.best_peak)
     );
+}
+
+/// Resolve the §II-A rewrite budget from `--rewrites=pairs:N[,chains:D]
+/// [,multi:K]`. The legacy `--splits=N` spelling is still accepted,
+/// mapped onto `pairs:N`, and warned about via `obs::log`.
+fn rewrite_budget(args: &Args) -> Result<Option<dmo::planner::RewriteBudget>> {
+    use dmo::planner::RewriteBudget;
+    match (args.value("--rewrites"), args.value("--splits")) {
+        (Some(_), Some(_)) => {
+            bail!("--rewrites and --splits are the same knob — pass only --rewrites")
+        }
+        (Some(spec), None) => {
+            let b = RewriteBudget::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+            Ok(Some(b))
+        }
+        (None, Some(_)) => {
+            let n: usize = args.parsed("--splits", 0usize)?;
+            dmo::obs::log::warn(format_args!(
+                "--splits={n} is deprecated; use --rewrites=pairs:{n}"
+            ));
+            Ok(if n > 0 { Some(RewriteBudget::pairs(n)) } else { None })
+        }
+        (None, None) => Ok(None),
+    }
 }
 
 /// Load a persisted `O_s` cache if the flagged file exists; a corrupt or
@@ -113,7 +140,8 @@ fn run(argv: &[String]) -> Result<()> {
                     opt("--beam", "beam width for --strategy=search (default 8)"),
                     opt("--budget", "expansion budget for --strategy=search (default 50000)"),
                     opt("--jobs", "planner worker threads (default: all cores; plans are identical at any count)"),
-                    opt("--splits", "allow §II-A operation splitting into up to N bands (0 = off)"),
+                    opt("--rewrites", "sweep §II-A rewrites: pairs:N[,chains:D][,multi:K]"),
+                    opt("--splits", "deprecated alias: --splits=N maps to --rewrites=pairs:N"),
                     opt("--os-cache", "persisted O_s cache file (loaded if present, saved after planning)"),
                     opt("--export", "write the plan as a reusable artifact"),
                     opt("--import", "load a plan artifact instead of planning"),
@@ -141,11 +169,12 @@ fn run(argv: &[String]) -> Result<()> {
                         || args.value("--budget").is_some()
                         || args.value("--jobs").is_some()
                         || args.value("--splits").is_some()
+                        || args.value("--rewrites").is_some()
                         || args.value("--os-cache").is_some();
                     if planning_only {
                         bail!(
                             "--import loads a finished plan; --baseline/--verbose/--strategy/\
-                             --beam/--budget/--jobs/--splits/--os-cache only apply when \
+                             --beam/--budget/--jobs/--rewrites/--os-cache only apply when \
                              planning from scratch"
                         );
                     }
@@ -170,7 +199,6 @@ fn run(argv: &[String]) -> Result<()> {
                     }
                     let beam: usize = args.parsed("--beam", dmo::planner::DEFAULT_BEAM)?;
                     let budget: usize = args.parsed("--budget", dmo::planner::DEFAULT_BUDGET)?;
-                    let splits: usize = args.parsed("--splits", 0usize)?;
                     session = match strategy {
                         None | Some("sweep") => session,
                         Some("eager") => session.strategies(&[dmo::planner::Strategy::Eager]),
@@ -180,8 +208,8 @@ fn run(argv: &[String]) -> Result<()> {
                             "unknown strategy `{other}` (sweep | eager | lazy | search)"
                         ),
                     };
-                    if splits > 0 {
-                        session = session.allow_splits(splits);
+                    if let Some(rb) = rewrite_budget(&args)? {
+                        session = session.rewrites(rb);
                     }
                     if args.flag("--verbose") {
                         session = session.on_candidate(report_candidate);
@@ -223,12 +251,10 @@ fn run(argv: &[String]) -> Result<()> {
                 );
             }
             if let Some(rw) = &plan.rewrite {
-                for sp in &rw.splits {
+                for sp in &rw.specs {
                     println!(
-                        "  split: ops {}→{} banded ×{} ({} ops → {}; §II-A rewrite carried in the plan)",
-                        sp.first,
-                        sp.second,
-                        sp.parts,
+                        "  rewrite: {} ({} ops → {}; §II-A rewrite carried in the plan)",
+                        sp.describe(),
                         g.ops.len(),
                         rw.graph.ops.len()
                     );
@@ -281,14 +307,15 @@ fn run(argv: &[String]) -> Result<()> {
                     opt("--beam", "search beam width (default 8)"),
                     opt("--budget", "search expansion budget (default 50000)"),
                     opt("--jobs", "planner worker threads (default: all cores)"),
-                    opt("--splits", "add a searched+split session per row, up to N bands (0 = off)"),
+                    opt("--rewrites", "add a searched+rewritten session per row: pairs:N[,chains:D][,multi:K]"),
+                    opt("--splits", "deprecated alias: --splits=N maps to --rewrites=pairs:N"),
                     opt("--os-cache", "persisted O_s cache file (loaded if present, saved after the report)"),
                 ],
             )?;
             let beam: usize = args.parsed("--beam", dmo::planner::DEFAULT_BEAM)?;
             let budget: usize = args.parsed("--budget", dmo::planner::DEFAULT_BUDGET)?;
             let jobs: usize = args.parsed("--jobs", 0usize)?;
-            let splits: usize = args.parsed("--splits", 0usize)?;
+            let rb = rewrite_budget(&args)?.unwrap_or_default();
             let names: Vec<&str> = match args.pos(0) {
                 Some(n) => vec![n],
                 None => models::table3_names(),
@@ -302,14 +329,14 @@ fn run(argv: &[String]) -> Result<()> {
             let mut rows = Vec::new();
             for name in names {
                 let row =
-                    report::order_search_row_splits(name, beam, budget, jobs, &cache, splits)?;
+                    report::order_search_row_rewrites(name, beam, budget, jobs, &cache, &rb)?;
                 eprintln!(
                     "  {name}: eager {}, lazy {}, search {}{} (O_s cache {} hits / {} misses)",
                     report::fmt_bytes(row.eager),
                     report::fmt_bytes(row.lazy),
                     report::fmt_bytes(row.search),
                     match row.split {
-                        Some(p) => format!(", split {}", report::fmt_bytes(p)),
+                        Some(p) => format!(", rewritten {}", report::fmt_bytes(p)),
                         None => String::new(),
                     },
                     row.cache_hits,
@@ -350,12 +377,15 @@ fn run(argv: &[String]) -> Result<()> {
         "fit" => {
             let args = Args::parse(
                 rest,
-                &[opt(
-                    "--splits",
-                    "also plan with §II-A splitting (up to N bands) and add a deploy(split) column",
-                )],
+                &[
+                    opt(
+                        "--rewrites",
+                        "also plan with §II-A rewrites (pairs:N[,chains:D][,multi:K]) and add a deploy(split) column",
+                    ),
+                    opt("--splits", "deprecated alias: --splits=N maps to --rewrites=pairs:N"),
+                ],
             )?;
-            let splits: usize = args.parsed("--splits", 0usize)?;
+            let rb = rewrite_budget(&args)?.unwrap_or_default();
             let names: Vec<&str> = match args.pos(0) {
                 Some(n) => vec![n],
                 None => models::table3_names(),
@@ -365,8 +395,8 @@ fn run(argv: &[String]) -> Result<()> {
                 "model", "mcu", "arena0", "arenaD", "flash"
             );
             for name in names {
-                let pm = if splits >= 2 {
-                    PlannedModel::new_split(models::build(name)?, splits, 0, None)?
+                let pm = if rb.enabled() {
+                    PlannedModel::new_rewrites(models::build(name)?, rb, 0, None)?
                 } else {
                     PlannedModel::new(models::build(name)?)?
                 };
@@ -411,31 +441,80 @@ fn run(argv: &[String]) -> Result<()> {
         "split" => {
             let args = Args::parse(
                 rest,
-                &[opt("--parts", "max bands to consider (default 8)")],
+                &[
+                    opt("--parts", "max bands to consider (default 8)"),
+                    opt(
+                        "--rewrites",
+                        "candidate budget pairs:N[,chains:D][,multi:K] (default pairs:8,chains:4)",
+                    ),
+                ],
             )?;
-            let parts: usize = args.parsed("--parts", 8usize)?;
-            let name = args.pos(0).context("usage: dmo split <model> [--parts N]")?;
-            let g = models::build(name)?;
-            match dmo::planner::split::best_split(&g, parts) {
-                Some(r) => {
-                    println!(
-                        "{name}: split ops {}→{} into {} bands: {} → {} pair peak, \
-                         {} elems recomputed + {} copied by reassembly",
-                        r.first.0,
-                        r.second.0,
-                        r.parts,
-                        report::fmt_bytes(r.peak_before),
-                        report::fmt_bytes(r.peak_after),
-                        r.recomputed_elems,
-                        r.assembled_elems
-                    );
-                    println!(
-                        "  plan it end-to-end with `dmo plan {name} --splits={}` — the winning \
-                         plan carries the rewrite through artifact/interp/emit-c",
-                        r.parts
-                    );
+            let rb = match args.value("--rewrites") {
+                Some(spec) => {
+                    dmo::planner::RewriteBudget::parse(spec).map_err(|e| anyhow::anyhow!(e))?
                 }
-                None => println!("{name}: no profitable split found"),
+                None => dmo::planner::RewriteBudget {
+                    max_parts: args.parsed("--parts", 8usize)?,
+                    max_splits: 2,
+                    max_chain_depth: 4,
+                },
+            };
+            let name = args
+                .pos(0)
+                .context("usage: dmo split <model> [--parts N] [--rewrites pairs:N,chains:D]")?;
+            let g = models::build(name)?;
+            let mut any = false;
+            if let Some(r) = dmo::planner::split::best_split(&g, rb.max_parts) {
+                any = true;
+                println!(
+                    "{name}: split ops {}→{} into {} bands: {} → {} pair peak, \
+                     {} elems recomputed + {} copied by reassembly",
+                    r.first.0,
+                    r.second.0,
+                    r.parts,
+                    report::fmt_bytes(r.peak_before),
+                    report::fmt_bytes(r.peak_after),
+                    r.recomputed_elems,
+                    r.assembled_elems
+                );
+            }
+            let chains = dmo::planner::split::chain_candidates(
+                &g,
+                rb.max_parts,
+                rb.max_chain_depth,
+                8,
+            );
+            for c in &chains {
+                any = true;
+                let ops = c
+                    .ops
+                    .iter()
+                    .map(|o| o.0.to_string())
+                    .collect::<Vec<_>>()
+                    .join("→");
+                println!(
+                    "{name}: chain ops {ops} banded ×{}: {} → {} chain peak, \
+                     {} elems recomputed + {} copied by reassembly",
+                    c.parts,
+                    report::fmt_bytes(c.peak_before),
+                    report::fmt_bytes(c.peak_after),
+                    c.recomputed_elems,
+                    c.assembled_elems
+                );
+            }
+            if any {
+                println!(
+                    "  plan them end-to-end with `dmo plan {name} --rewrites=pairs:{}{}` — the \
+                     winning plan carries the rewrite through artifact/interp/emit-c",
+                    rb.max_parts,
+                    if rb.max_chain_depth >= 3 {
+                        format!(",chains:{}", rb.max_chain_depth)
+                    } else {
+                        String::new()
+                    }
+                );
+            } else {
+                println!("{name}: no profitable rewrite found");
             }
             Ok(())
         }
@@ -789,8 +868,8 @@ COMMANDS:
   models                      list the model zoo
   plan <model> [--baseline] [--map] [--verbose]
        [--strategy=sweep|eager|lazy|search] [--beam N] [--budget N]
-       [--jobs N] [--splits N] [--os-cache PATH]
-       [--profile] [--trace-out PATH]
+       [--jobs N] [--rewrites pairs:N[,chains:D][,multi:K]]
+       [--os-cache PATH] [--profile] [--trace-out PATH]
        [--export PATH] [--import PATH]
                               plan a model's arena (or reload an exported
                               plan artifact); print overlaps and O_s
@@ -799,24 +878,28 @@ COMMANDS:
                               execution-order search (never worse than
                               the eager/lazy sweep); --jobs parallelises
                               the sweep + search without changing the plan.
-                              --splits=N additionally sweeps §II-A
-                              operation-splitting rewrites (peak pairs
-                              banded into up to N row bands) — a split
-                              plan wins only when it strictly beats every
-                              unsplit layout, and then flows through
-                              --export / validate / emit-c unchanged.
+                              --rewrites additionally sweeps §II-A
+                              rewrites: pairs:N bands single pair splits,
+                              multi:K composes up to K independent pair
+                              splits, chains:D bands whole chains of depth
+                              ≤ D end-to-end — a rewritten plan wins only
+                              when it strictly beats every unrewritten
+                              layout, and then flows through --export /
+                              validate / emit-c unchanged. (--splits=N is
+                              a deprecated alias for --rewrites=pairs:N.)
                               --os-cache persists the O_s cache across
                               processes (cold runs start warm).
                               --profile executes the plan under the runtime
                               watermark verifier and prints observed vs
                               planned arena use per op; --trace-out writes
                               the session as Chrome trace-event JSON
-  orders [<model>] [--beam N] [--budget N] [--jobs N] [--splits N]
+  orders [<model>] [--beam N] [--budget N] [--jobs N]
+         [--rewrites pairs:N[,chains:D][,multi:K]]
          [--os-cache PATH] [--out DIR]
                               eager vs lazy vs searched execution order:
                               DMO-overlapped peaks across the zoo, with
-                              per-row O_s cache savings; --splits adds a
-                              searched+split session and split columns
+                              per-row O_s cache savings; --rewrites adds
+                              a searched+rewritten session and columns
   validate <model> [--import PATH]
                               execute the DMO plan (or a loaded artifact),
                               prove bit-exact safety
@@ -824,10 +907,11 @@ COMMANDS:
   table3 [--out DIR]          memory savings, 11 models (paper Table III)
   figures [--fig N] [--out DIR]
                               regenerate paper figures 1,2,3,6,8,9
-  fit [<model>] [--splits N]  MCU deployment matrix (§IV), incl. emitted
+  fit [<model>] [--rewrites pairs:N[,chains:D][,multi:K]]
+                              MCU deployment matrix (§IV), incl. emitted
                               flash image (weights + code estimate);
-                              --splits adds a deploy(split) column showing
-                              targets rescued by §II-A banding
+                              --rewrites adds a deploy(split) column
+                              showing targets rescued by §II-A rewriting
   emit-c <model> [--out PATH] [--seed N] [--embed-limit N] [--check]
   emit-c --import plan.json [--out PATH] [--check]
                               emit a standalone C99 firmware unit from a
@@ -835,8 +919,10 @@ COMMANDS:
                               offsets verbatim, flash-resident weights;
                               --check compiles + runs it and diffs
                               against the interpreter bit-for-bit
-  split <model> [--parts N]   best operation-splitting report (§II-A);
-                              `dmo plan --splits=N` applies it for real
+  split <model> [--parts N] [--rewrites pairs:N,chains:D]
+                              best pair-split and chain-banding report
+                              (§II-A generalised); `dmo plan
+                              --rewrites=pairs:N,chains:D` applies them
   trace-op <relu|matmul|dwconv|conv>
                               ASCII access-pattern trace (Fig 3)
   trace-run <model> [--trace-out PATH] [--seed N] [--baseline]

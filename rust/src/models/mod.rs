@@ -69,6 +69,7 @@ pub fn build(name: &str) -> anyhow::Result<Graph> {
         "tiny" => tiny::build(DType::F32),
         "tiny_int8" => tiny::build(DType::I8),
         "tiny_wide" => tiny::build_wide(DType::F32),
+        "hourglass" => tiny::build_hourglass(DType::I8),
         other => anyhow::bail!("unknown model `{other}` (see `dmo models`)"),
     })
 }
@@ -76,7 +77,7 @@ pub fn build(name: &str) -> anyhow::Result<Graph> {
 /// All buildable names (catalog + extras).
 pub fn all_names() -> Vec<&'static str> {
     let mut v = table3_names();
-    v.extend(["mobilenet_v1_0.25_128", "tiny", "tiny_int8", "tiny_wide"]);
+    v.extend(["mobilenet_v1_0.25_128", "tiny", "tiny_int8", "tiny_wide", "hourglass"]);
     v
 }
 

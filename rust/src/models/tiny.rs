@@ -52,6 +52,22 @@ pub fn build_wide(dtype: DType) -> Graph {
     b.finish(&[out])
 }
 
+/// Build `hourglass`: tiny input (2 KB), two fat 16 KB intermediates,
+/// tiny output — conv3×3×16 → dw3×3 → maxpool4×4s4 on a 32×32×2 i8
+/// input. Any unsplit or single-pair-split plan must materialise at
+/// least one fat intermediate in full, while banding the whole depth-3
+/// chain keeps only row bands of each level live. This is the zoo's
+/// witness that chain rewrites strictly beat every pair split
+/// (§II-A generalised; cf. Pex end-to-end banding).
+pub fn build_hourglass(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("hourglass", dtype);
+    let x = b.input(Shape::hwc(RES, RES, 2));
+    let h = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, Activation::Relu); // 32x32x16
+    let h = b.dwconv2d(h, (3, 3), (1, 1), Padding::Same, Activation::None); // 32x32x16
+    let out = b.maxpool(h, (4, 4), (4, 4), Padding::Valid); // 8x8x16
+    b.finish(&[out])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,6 +79,18 @@ mod tests {
         assert_eq!(g.tensor(g.ops[4].output).shape, Shape::hwc(8, 8, 32));
         assert_eq!(g.ops.len(), 9);
         assert_eq!(g.outputs.len(), 1);
+    }
+
+    #[test]
+    fn hourglass_shapes_pin_the_fat_intermediates() {
+        let g = build_hourglass(DType::I8);
+        assert_eq!(g.ops.len(), 3);
+        // input 2 KB, both intermediates exactly 16 KB, output 1 KB
+        assert_eq!(g.tensor(g.inputs[0]).size_bytes(), 2 * 1024);
+        assert_eq!(g.tensor(g.ops[0].output).size_bytes(), 16 * 1024);
+        assert_eq!(g.tensor(g.ops[1].output).size_bytes(), 16 * 1024);
+        assert_eq!(g.tensor(g.ops[2].output).shape, Shape::hwc(8, 8, 16));
+        assert_eq!(g.tensor(g.ops[2].output).size_bytes(), 1024);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use super::scope::analyse;
 use super::search::SearchStats;
 use super::{Plan, PlanRewrite};
 use crate::ir::graph::{Graph, OpId, TensorId};
-use crate::ir::rewrite::{self, SplitSpec};
+use crate::ir::rewrite::{self, RewriteSpec, SplitSpec};
 use crate::overlap::Method;
 use crate::util::fnv::Fnv;
 use crate::util::json::{num, obj, s, Json};
@@ -126,23 +126,43 @@ pub struct PlanArtifact {
     /// Search provenance, present iff `strategy` is the order search
     /// (format v2; absent from v1 artifacts, which predate search).
     pub search: Option<SearchStats>,
-    /// §II-A split rewrites the plan was computed on, in application
-    /// order (format v3; empty for unsplit plans and for v1/v2
-    /// artifacts). When non-empty, `order`/`offsets`/`os` index the
-    /// re-derived rewritten graph, and `fingerprint` still names the
-    /// *base* graph the consumer passes to [`PlanArtifact::to_plan`].
-    pub splits: Vec<SplitSpec>,
-    /// Fingerprint of the rewritten graph (v3, present iff `splits` is
+    /// §II-A rewrite passes the plan was computed on, in application
+    /// order (format v4; empty for unrewritten plans and for v1/v2
+    /// artifacts; v3 files stored pair splits under a `splits` key,
+    /// which loads into the same field). When non-empty,
+    /// `order`/`offsets`/`os` index the re-derived rewritten graph, and
+    /// `fingerprint` still names the *base* graph the consumer passes
+    /// to [`PlanArtifact::to_plan`].
+    pub rewrites: Vec<RewriteSpec>,
+    /// Fingerprint of the rewritten graph (present iff `rewrites` is
     /// non-empty) — re-verified after re-deriving the rewrite on load.
-    pub split_fingerprint: Option<u64>,
+    pub rewrite_fingerprint: Option<u64>,
+}
+
+/// Serialise one rewrite spec in the v4 `rewrites` array shape.
+fn rewrite_spec_json(spec: &RewriteSpec) -> Json {
+    match spec {
+        RewriteSpec::PairSplit(sp) => obj(vec![
+            ("kind", s("pair")),
+            ("first", num(sp.first)),
+            ("second", num(sp.second)),
+            ("parts", num(sp.parts)),
+        ]),
+        RewriteSpec::ChainSplit { ops, parts } => obj(vec![
+            ("kind", s("chain")),
+            ("ops", Json::Arr(ops.iter().map(|o| num(o.0)).collect())),
+            ("parts", num(*parts)),
+        ]),
+    }
 }
 
 impl PlanArtifact {
     /// Artifact format version this build reads and writes. Version 1
-    /// (pre order-search, no `search` field) and version 2 (no split
-    /// rewrites) are still accepted by [`PlanArtifact::load`] /
+    /// (pre order-search, no `search` field), version 2 (no split
+    /// rewrites) and version 3 (pair splits only, stored under a
+    /// `splits` key) are still accepted by [`PlanArtifact::load`] /
     /// [`PlanArtifact::to_plan`].
-    pub const VERSION: u64 = 3;
+    pub const VERSION: u64 = 4;
 
     /// Marker stored in the `kind` field of every artifact file.
     pub const KIND: &'static str = "dmo-plan-artifact";
@@ -171,12 +191,12 @@ impl PlanArtifact {
             os_per_op: plan.os.per_op.clone(),
             os_hash: os_table_hash(plan.os.method, &plan.os.per_op),
             search: plan.search,
-            splits: plan
+            rewrites: plan
                 .rewrite
                 .as_ref()
-                .map(|r| r.splits.clone())
+                .map(|r| r.specs.clone())
                 .unwrap_or_default(),
-            split_fingerprint: plan.rewrite.as_ref().map(|r| graph_fingerprint(&r.graph)),
+            rewrite_fingerprint: plan.rewrite.as_ref().map(|r| graph_fingerprint(&r.graph)),
         }
     }
 
@@ -238,24 +258,43 @@ impl PlanArtifact {
                 ]),
             ));
         }
-        if !self.splits.is_empty() {
-            fields.push((
-                "splits",
-                Json::Arr(
-                    self.splits
-                        .iter()
-                        .map(|sp| {
-                            obj(vec![
-                                ("first", num(sp.first)),
-                                ("second", num(sp.second)),
-                                ("parts", num(sp.parts)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ));
-            if let Some(fp) = self.split_fingerprint {
-                fields.push(("split_fingerprint", s(&hex(fp))));
+        if !self.rewrites.is_empty() {
+            // a v3 (or older) artifact can only describe pair splits,
+            // and wrote them under the legacy `splits` key — keep that
+            // byte shape so downgraded files stay readable by v3 tools
+            let legacy = self.version <= 3
+                && self
+                    .rewrites
+                    .iter()
+                    .all(|r| matches!(r, RewriteSpec::PairSplit(_)));
+            if legacy {
+                fields.push((
+                    "splits",
+                    Json::Arr(
+                        self.rewrites
+                            .iter()
+                            .map(|r| match r {
+                                RewriteSpec::PairSplit(sp) => obj(vec![
+                                    ("first", num(sp.first)),
+                                    ("second", num(sp.second)),
+                                    ("parts", num(sp.parts)),
+                                ]),
+                                RewriteSpec::ChainSplit { .. } => unreachable!(),
+                            })
+                            .collect(),
+                    ),
+                ));
+                if let Some(fp) = self.rewrite_fingerprint {
+                    fields.push(("split_fingerprint", s(&hex(fp))));
+                }
+            } else {
+                fields.push((
+                    "rewrites",
+                    Json::Arr(self.rewrites.iter().map(rewrite_spec_json).collect()),
+                ));
+                if let Some(fp) = self.rewrite_fingerprint {
+                    fields.push(("rewrite_fingerprint", s(&hex(fp))));
+                }
             }
         }
         obj(fields)
@@ -293,8 +332,58 @@ impl PlanArtifact {
             });
         }
 
-        // v3: split rewrite specs (absent from v1/v2 and unsplit plans)
-        let splits = match v.get("splits") {
+        // v4: general rewrite specs; v3 stored pair splits under the
+        // legacy `splits` key — both load into `rewrites`.
+        let mut rewrites = match v.get("rewrites") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| PlanError::Malformed("field `rewrites` must be an array".into()))?
+                .iter()
+                .map(|entry| {
+                    let part = |key: &str| {
+                        entry
+                            .get(key)
+                            .and_then(|x| x.as_usize())
+                            .ok_or_else(|| PlanError::Malformed(format!("bad `rewrites.{key}`")))
+                    };
+                    let kind = entry
+                        .get("kind")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| PlanError::Malformed("bad `rewrites.kind`".into()))?;
+                    match kind {
+                        "pair" => Ok(RewriteSpec::PairSplit(SplitSpec {
+                            first: part("first")?,
+                            second: part("second")?,
+                            parts: part("parts")?,
+                        })),
+                        "chain" => {
+                            let ops = entry
+                                .get("ops")
+                                .and_then(|x| x.as_arr())
+                                .ok_or_else(|| {
+                                    PlanError::Malformed("bad `rewrites.ops`".into())
+                                })?
+                                .iter()
+                                .map(|x| {
+                                    x.as_usize().map(OpId).ok_or_else(|| {
+                                        PlanError::Malformed("bad `rewrites.ops` entry".into())
+                                    })
+                                })
+                                .collect::<Result<Vec<_>, PlanError>>()?;
+                            Ok(RewriteSpec::ChainSplit {
+                                ops,
+                                parts: part("parts")?,
+                            })
+                        }
+                        other => Err(PlanError::Malformed(format!(
+                            "unknown rewrite kind `{other}`"
+                        ))),
+                    }
+                })
+                .collect::<Result<Vec<_>, PlanError>>()?,
+        };
+        let legacy_splits = match v.get("splits") {
             None | Some(Json::Null) => Vec::new(),
             Some(arr) => arr
                 .as_arr()
@@ -307,23 +396,35 @@ impl PlanArtifact {
                             .and_then(|x| x.as_usize())
                             .ok_or_else(|| PlanError::Malformed(format!("bad `splits.{key}`")))
                     };
-                    Ok(SplitSpec {
+                    Ok(RewriteSpec::PairSplit(SplitSpec {
                         first: part("first")?,
                         second: part("second")?,
                         parts: part("parts")?,
-                    })
+                    }))
                 })
                 .collect::<Result<Vec<_>, PlanError>>()?,
         };
-        let split_fingerprint = match v.get("split_fingerprint") {
-            None | Some(Json::Null) => None,
-            Some(x) => Some(parse_hex(x.as_str().ok_or_else(|| {
-                PlanError::Malformed("field `split_fingerprint` must be a string".into())
-            })?)?),
-        };
-        if !splits.is_empty() && split_fingerprint.is_none() {
+        if !rewrites.is_empty() && !legacy_splits.is_empty() {
             return Err(PlanError::Malformed(
-                "split artifact is missing `split_fingerprint`".into(),
+                "artifact carries both `rewrites` and legacy `splits`".into(),
+            ));
+        }
+        rewrites.extend(legacy_splits);
+        let fp_field = |key: &str| match v.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(x) => x
+                .as_str()
+                .ok_or_else(|| PlanError::Malformed(format!("field `{key}` must be a string")))
+                .and_then(parse_hex)
+                .map(Some),
+        };
+        let rewrite_fingerprint = match fp_field("rewrite_fingerprint")? {
+            Some(fp) => Some(fp),
+            None => fp_field("split_fingerprint")?,
+        };
+        if !rewrites.is_empty() && rewrite_fingerprint.is_none() {
+            return Err(PlanError::Malformed(
+                "rewritten-plan artifact is missing `rewrite_fingerprint`".into(),
             ));
         }
 
@@ -434,8 +535,8 @@ impl PlanArtifact {
             os_per_op,
             os_hash: parse_hex(&str_field("os_hash")?)?,
             search,
-            splits,
-            split_fingerprint,
+            rewrites,
+            rewrite_fingerprint,
         })
     }
 
@@ -516,23 +617,23 @@ impl PlanArtifact {
             ));
         }
 
-        // v3 split plans: re-derive the rewrite from the (verified) base
-        // graph — the banded graph is never trusted from the file, only
-        // its fingerprint is, so a tampered spec cannot smuggle in a
-        // different computation.
-        let rewrite_info = if self.splits.is_empty() {
+        // Rewritten plans: re-derive the rewrite from the (verified)
+        // base graph — the banded graph is never trusted from the file,
+        // only its fingerprint is, so a tampered spec cannot smuggle in
+        // a different computation.
+        let rewrite_info = if self.rewrites.is_empty() {
             None
         } else {
-            let (rw_graph, provenance) = rewrite::apply_splits(graph, &self.splits)
-                .map_err(|e| PlanError::Malformed(format!("re-deriving split rewrite: {e:#}")))?;
+            let (rw_graph, provenance) = rewrite::apply(graph, &self.rewrites)
+                .map_err(|e| PlanError::Malformed(format!("re-deriving rewrite: {e:#}")))?;
             let fp = graph_fingerprint(&rw_graph);
-            if Some(fp) != self.split_fingerprint {
+            if Some(fp) != self.rewrite_fingerprint {
                 return Err(PlanError::Malformed(
-                    "re-derived split graph does not match its recorded fingerprint".into(),
+                    "re-derived rewritten graph does not match its recorded fingerprint".into(),
                 ));
             }
             Some(PlanRewrite {
-                splits: self.splits.clone(),
+                specs: self.rewrites.clone(),
                 graph: rw_graph,
                 provenance,
             })
@@ -745,11 +846,11 @@ mod tests {
     }
 
     #[test]
-    fn split_plan_round_trips_through_v3() {
+    fn split_plan_round_trips_through_v4() {
         use crate::ir::op::{Activation, Padding};
         use crate::ir::{DType, GraphBuilder, Shape};
         // the §II-A pair: splitting strictly beats every unsplit layout
-        let mut b = GraphBuilder::new("v3pair", DType::I8);
+        let mut b = GraphBuilder::new("v4pair", DType::I8);
         let x = b.input(Shape::hwc(64, 64, 8));
         let c = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Same, Activation::None);
         let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
@@ -757,40 +858,106 @@ mod tests {
         let plan = Planner::for_graph(&g).dmo(true).allow_splits(4).plan().unwrap();
         assert!(plan.rewrite.is_some(), "split must win the §II-A pair");
         let art = PlanArtifact::from_plan(&g, &plan);
-        assert_eq!(art.version, 3);
-        assert!(!art.splits.is_empty());
-        assert!(art.split_fingerprint.is_some());
+        assert_eq!(art.version, 4);
+        assert!(!art.rewrites.is_empty());
+        assert!(art.rewrite_fingerprint.is_some());
         // fingerprint names the *base* graph the consumer holds
         assert_eq!(art.fingerprint, graph_fingerprint(&g));
         let text = art.to_json().to_string();
-        assert!(text.contains("\"splits\""));
+        assert!(text.contains("\"rewrites\""));
         let back = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(art, back);
         let re = back.to_plan(&g).unwrap();
         assert_eq!(re.peak(), plan.peak());
         assert_eq!(re.order, plan.order);
         assert_eq!(re.alloc.offsets, plan.alloc.offsets);
-        let rw = re.rewrite.expect("split rewrite must be re-derived on load");
-        assert_eq!(rw.splits, plan.rewrite.as_ref().unwrap().splits);
+        let rw = re.rewrite.expect("rewrite must be re-derived on load");
+        assert_eq!(rw.specs, plan.rewrite.as_ref().unwrap().specs);
         // a tampered spec re-derives a different graph and is refused
         let mut bad = art.clone();
-        bad.splits[0].parts = 2;
+        match &mut bad.rewrites[0] {
+            RewriteSpec::PairSplit(sp) => sp.parts = 2,
+            RewriteSpec::ChainSplit { parts, .. } => *parts = 2,
+        }
         assert!(matches!(bad.to_plan(&g), Err(PlanError::Malformed(_))));
-        // a split artifact without its fingerprint is malformed
+        // a rewritten-plan artifact without its fingerprint is malformed
         let mut no_fp = art.clone();
-        no_fp.split_fingerprint = None;
+        no_fp.rewrite_fingerprint = None;
         let bad_text = no_fp.to_json().to_string();
         assert!(PlanArtifact::from_json(&Json::parse(&bad_text).unwrap()).is_err());
     }
 
     #[test]
-    fn unsplit_v3_artifacts_match_v2_shape() {
+    fn v3_legacy_split_artifacts_still_load() {
+        use crate::ir::op::{Activation, Padding};
+        use crate::ir::{DType, GraphBuilder, Shape};
+        let mut b = GraphBuilder::new("v3pair", DType::I8);
+        let x = b.input(Shape::hwc(64, 64, 8));
+        let c = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Same, Activation::None);
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None);
+        let g = b.finish(&[d]);
+        let plan = Planner::for_graph(&g).dmo(true).allow_splits(4).plan().unwrap();
+        assert!(plan.rewrite.is_some());
+        // downgrade to the v3 writer: pair splits go under `splits`
+        let mut art = PlanArtifact::from_plan(&g, &plan);
+        art.version = 3;
+        let text = art.to_json().to_string();
+        assert!(text.contains("\"splits\"") && text.contains("\"split_fingerprint\""));
+        assert!(!text.contains("\"rewrites\""));
+        let back = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.version, 3);
+        assert_eq!(back.rewrites, art.rewrites, "legacy splits map onto PairSplit");
+        assert_eq!(back.rewrite_fingerprint, art.rewrite_fingerprint);
+        let re = back.to_plan(&g).unwrap();
+        assert_eq!(re.peak(), plan.peak());
+        assert_eq!(re.order, plan.order);
+    }
+
+    #[test]
+    fn chain_plan_round_trips_through_v4() {
+        use crate::ir::op::{Activation, Padding};
+        use crate::ir::{DType, GraphBuilder, Shape};
+        use crate::planner::RewriteBudget;
+        // hourglass: a fat 16 KB intermediate only a depth-3 chain avoids
+        let mut b = GraphBuilder::new("v4chain", DType::I8);
+        let x = b.input(Shape::hwc(32, 32, 2));
+        let c = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let d = b.dwconv2d(c, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let p = b.maxpool(d, (4, 4), (4, 4), Padding::Valid);
+        let g = b.finish(&[p]);
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .rewrites(RewriteBudget { max_parts: 4, max_splits: 1, max_chain_depth: 3 })
+            .plan()
+            .unwrap();
+        let rw = plan.rewrite.as_ref().expect("chain must win the hourglass");
+        assert!(
+            rw.specs.iter().any(|r| r.depth() >= 3),
+            "expected a depth-3 chain, got {:?}",
+            rw.specs
+        );
+        let art = PlanArtifact::from_plan(&g, &plan);
+        let text = art.to_json().to_string();
+        assert!(text.contains("\"rewrites\"") && text.contains("\"chain\""));
+        let back = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(art, back, "chain specs must round-trip");
+        let re = back.to_plan(&g).unwrap();
+        assert_eq!(re.peak(), plan.peak());
+        assert_eq!(re.order, plan.order);
+        assert_eq!(re.rewrite.unwrap().specs, rw.specs);
+    }
+
+    #[test]
+    fn unrewritten_v4_artifacts_match_v2_shape() {
         let g = models::build("tiny").unwrap();
         let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
         let art = PlanArtifact::from_plan(&g, &plan);
-        assert!(art.splits.is_empty() && art.split_fingerprint.is_none());
+        assert!(art.rewrites.is_empty() && art.rewrite_fingerprint.is_none());
         let text = art.to_json().to_string();
-        assert!(!text.contains("\"splits\""), "unsplit plans carry no split fields");
+        assert!(
+            !text.contains("\"splits\"") && !text.contains("\"rewrites\""),
+            "unrewritten plans carry no rewrite fields"
+        );
         // a v2 reader field-set still loads (we parse our own v2 files)
         let mut v2 = art.clone();
         v2.version = 2;

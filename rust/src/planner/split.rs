@@ -1,35 +1,45 @@
-//! Operation-splitting analysis (§II-A) — the planning side of
-//! [`crate::ir::rewrite::split_pair`].
+//! Operation-splitting analysis (§II-A, generalised) — the planning
+//! side of [`crate::ir::rewrite::apply`].
 //!
-//! A pair of chained window ops whose intermediate tensor dominates peak
+//! A chain of window ops whose intermediate tensors dominate peak
 //! memory can be split into `k` horizontal bands executed sequentially:
-//! each band computes a slice of the final output through a slice of the
-//! intermediate tensor, so only `≈ 1/k` of the intermediate values are
+//! each band computes a slice of the final output through slices of
+//! every intermediate level, so only `≈ 1/k` of each intermediate is
 //! live at once — at the price of recomputing the receptive-field halo
-//! rows adjacent bands share, plus one copy of the output during
-//! reassembly.
+//! rows adjacent bands share at every level, plus one copy of the
+//! output during reassembly.
 //!
-//! The paper demonstrates this manually on MobileNet v1 (§II-A: 96 KB →
-//! 66 KB with 6144 elements computed twice) and calls for automatic
-//! application as future work. Here the analysis and the transform share
-//! one geometry ([`crate::ir::rewrite::band_plan`]): [`analyse_pair`]
-//! predicts the banded schedule's exact live-set watermark — the peak
-//! the allocator measures on the materialised rewrite (asserted zoo-wide
-//! by `rust/tests/split_rewrite.rs`) — and
-//! [`candidates`] ranks the graph's peak-defining pairs so
-//! [`super::Planner::allow_splits`] can propose splitting as a search
-//! action alongside reordering.
+//! The paper demonstrates the depth-2 case manually on MobileNet v1
+//! (§II-A: 96 KB → 66 KB with 6144 elements computed twice) and calls
+//! for automatic application as future work; Pex (arXiv 2211.17246)
+//! bands whole subgraphs end-to-end, amortising the halo across the
+//! chain. Here the analysis and the transform share one geometry
+//! ([`crate::ir::rewrite::chain_band_plan`]): [`analyse_chain`]
+//! predicts the banded schedule's live-set watermark — exact for pairs,
+//! where it is what the allocator measures on the materialised rewrite
+//! (asserted zoo-wide by `rust/tests/split_rewrite.rs`) — and
+//! [`proposals`] turns a [`super::RewriteBudget`] into the ranked spec
+//! sequences [`super::Planner::rewrites`] sweeps as variants: single
+//! pair splits, multiple *independent* pair splits composed in one
+//! plan, and depth-≥3 chains banded end-to-end.
 //!
 //! Note the §II-A caveat is *modelled*, not assumed away: the split
-//! tensors' longer scopes (the pair's input spans every band) suppress
+//! tensors' longer scopes (the chain's input spans every band) suppress
 //! DMO overlap on the banded region, which the planner sees through the
-//! ordinary scope analysis of the rewritten graph.
+//! ordinary scope analysis of the rewritten graph. The same effect is
+//! why chains do **not** always beat pairs: the chain input stays live
+//! across all `k·d` band steps, so a fat chain input (mnv1's 32 KB
+//! head) can cost more than the pair's shorter scopes save — the
+//! planner decides per graph on allocator-scored terms.
 
+use super::RewriteBudget;
 use crate::ir::graph::{Graph, OpId};
-use crate::ir::rewrite::{self, SplitSpec};
+use crate::ir::rewrite::{self, RewriteSpec, SplitSpec};
 use crate::ir::GraphBuilder;
 
-/// Result of splitting a two-op chain into `parts` bands.
+/// Result of splitting a two-op chain into `parts` bands — the pair
+/// view of [`ChainReport`], kept as a named struct because the pair is
+/// the paper's §II-A unit and the report/CLI tables are built on it.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SplitReport {
     pub first: OpId,
@@ -60,7 +70,7 @@ impl SplitReport {
     }
 
     /// The spec that materialises this report via
-    /// [`crate::ir::rewrite::split_pair`].
+    /// [`crate::ir::rewrite::apply`].
     pub fn spec(&self) -> SplitSpec {
         SplitSpec {
             first: self.first.0,
@@ -70,61 +80,149 @@ impl SplitReport {
     }
 }
 
-/// Analyse splitting the chain `first → second` (second consumes first's
-/// output) into `parts` horizontal bands. Errors when the pair is not
-/// splittable (see [`crate::ir::rewrite::split_eligible`]).
+/// Result of banding a whole chain of depth ≥ 2 into `parts` bands.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainReport {
+    /// The chain's ops, producer first.
+    pub ops: Vec<OpId>,
+    pub parts: usize,
+    /// Peak bytes of the fused chain without banding: the largest
+    /// adjacent-tensor sum along input → levels.
+    pub peak_before: usize,
+    /// Live-set watermark of the banded schedule: per band step, the
+    /// chain input (live until the last part's first level) + the level
+    /// being read + the level being written + already-materialised
+    /// output bands; plus the reassembly step's output bands + full
+    /// output. Reduces to the §II-A pair watermark at depth 2.
+    pub peak_after: usize,
+    /// Intermediate elements computed more than once, summed over every
+    /// intermediate level (halo rows shared by adjacent bands).
+    pub recomputed_elems: usize,
+    /// Output elements copied once by the concat-rows reassembly.
+    pub assembled_elems: usize,
+}
+
+impl ChainReport {
+    pub fn saving_pct(&self) -> f64 {
+        if self.peak_before == 0 {
+            return 0.0;
+        }
+        100.0 * (self.peak_before.saturating_sub(self.peak_after)) as f64 / self.peak_before as f64
+    }
+
+    /// Chain depth (2 = a §II-A pair).
+    pub fn depth(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// The spec that materialises this report via
+    /// [`crate::ir::rewrite::apply`]. Depth-2 chains map onto
+    /// [`RewriteSpec::PairSplit`] so they serialise in the legacy
+    /// artifact shape.
+    pub fn spec(&self) -> RewriteSpec {
+        if self.ops.len() == 2 {
+            RewriteSpec::PairSplit(SplitSpec {
+                first: self.ops[0].0,
+                second: self.ops[1].0,
+                parts: self.parts,
+            })
+        } else {
+            RewriteSpec::ChainSplit {
+                ops: self.ops.clone(),
+                parts: self.parts,
+            }
+        }
+    }
+}
+
+/// Analyse banding the chain `ops` (each op consuming its predecessor's
+/// output) end-to-end into `parts` horizontal bands. Errors when the
+/// chain is not bandable (see [`crate::ir::rewrite::chain_eligible`]).
+///
+/// The model walks the banded schedule's emission order (part 0's
+/// levels, part 1's levels, …, reassembly) and tracks the live set at
+/// every step: the chain input is consumed by every part's first level,
+/// so it dies at the last part's; within a part only two adjacent
+/// levels are live at once (band `j−1` dies as band `j` completes);
+/// final-level bands accumulate until the concat copies them out. At
+/// depth 2 this reduces term-for-term to [`analyse_pair`]'s §II-A
+/// watermark.
+pub fn analyse_chain(graph: &Graph, ops: &[OpId], parts: usize) -> anyhow::Result<ChainReport> {
+    let plans = rewrite::chain_band_plan(graph, ops, parts)?;
+    let d = ops.len();
+    let input = graph.tensor(graph.op(ops[0]).inputs[0]);
+    let levels: Vec<_> = ops
+        .iter()
+        .map(|&o| graph.tensor(graph.op(o).output))
+        .collect();
+
+    let mut sizes = vec![input.size_bytes()];
+    sizes.extend(levels.iter().map(|t| t.size_bytes()));
+    let peak_before = sizes.windows(2).map(|w| w[0] + w[1]).max().unwrap();
+
+    let row_bytes: Vec<usize> = levels
+        .iter()
+        .map(|t| t.shape.w() * t.shape.c() * t.dtype.size_bytes())
+        .collect();
+    let in_bytes = input.size_bytes();
+    let out_bytes = levels[d - 1].size_bytes();
+
+    let last = parts - 1;
+    let mut peak_after = 0usize;
+    let mut out_prefix = 0usize; // bytes of final-level bands already live
+    let mut rows_total = vec![0usize; d];
+    for (p, cp) in plans.iter().enumerate() {
+        let mut prev_band = 0usize;
+        for j in 0..d {
+            let rows = cp.rows[j].1 - cp.rows[j].0;
+            rows_total[j] += rows;
+            let band = rows * row_bytes[j];
+            // the chain input is live while any future part still needs
+            // it (p < last), and during the step that reads it (j == 0)
+            let in_live = if j == 0 || p < last { in_bytes } else { 0 };
+            peak_after = peak_after.max(in_live + prev_band + band + out_prefix);
+            prev_band = band;
+        }
+        out_prefix += prev_band;
+    }
+    // reassembly: every final-level band + the full output
+    peak_after = peak_after.max(out_prefix + out_bytes);
+
+    let recomputed_elems = (0..d - 1)
+        .map(|j| {
+            rows_total[j].saturating_sub(levels[j].shape.h())
+                * levels[j].shape.w()
+                * levels[j].shape.c()
+        })
+        .sum();
+    Ok(ChainReport {
+        ops: ops.to_vec(),
+        parts,
+        peak_before,
+        peak_after,
+        recomputed_elems,
+        assembled_elems: levels[d - 1].shape.num_elements(),
+    })
+}
+
+/// Analyse splitting the pair `first → second` into `parts` bands. Thin
+/// shim over [`analyse_chain`] at depth 2 — one watermark model covers
+/// every depth.
 pub fn analyse_pair(
     graph: &Graph,
     first: OpId,
     second: OpId,
     parts: usize,
 ) -> anyhow::Result<SplitReport> {
-    let plans = rewrite::band_plan(graph, first, second, parts)?;
-    let f = graph.op(first);
-    let s = graph.op(second);
-    let input = graph.tensor(f.inputs[0]);
-    let mid = graph.tensor(f.output);
-    let out = graph.tensor(s.output);
-
-    let peak_before = (input.size_bytes() + mid.size_bytes()).max(mid.size_bytes() + out.size_bytes());
-
-    let in_bytes = input.size_bytes();
-    let mid_row_bytes = mid.shape.w() * mid.shape.c() * mid.dtype.size_bytes();
-    let out_row_bytes = out.shape.w() * out.shape.c() * out.dtype.size_bytes();
-    let out_bytes = out.size_bytes();
-
-    // Exact live-set watermark of the banded schedule
-    // A_0 B_0 A_1 B_1 … A_{k-1} B_{k-1} concat. The pair's input is
-    // consumed by every A band, so it dies at A_{k-1}; output bands
-    // accumulate until the reassembly copies them into the full tensor.
-    let last = plans.len() - 1;
-    let mut peak_after = 0usize;
-    let mut out_prefix = 0usize; // bytes of output bands already live
-    let mut mid_rows_total = 0usize;
-    for (p, bp) in plans.iter().enumerate() {
-        let band_mid = (bp.mid1 - bp.mid0) * mid_row_bytes;
-        let band_out = (bp.out1 - bp.out0) * out_row_bytes;
-        mid_rows_total += bp.mid1 - bp.mid0;
-        // during A_p: input + this intermediate band + prior output bands
-        peak_after = peak_after.max(in_bytes + band_mid + out_prefix);
-        // during B_p: input (unless this is the last band — the input
-        // died at A_{k-1}) + the band + output bands incl. this one
-        let in_live = if p < last { in_bytes } else { 0 };
-        peak_after = peak_after.max(in_live + band_mid + out_prefix + band_out);
-        out_prefix += band_out;
-    }
-    // reassembly: every output band + the full output
-    peak_after = peak_after.max(out_prefix + out_bytes);
-
-    let recomputed_rows = mid_rows_total.saturating_sub(mid.shape.h());
+    let r = analyse_chain(graph, &[first, second], parts)?;
     Ok(SplitReport {
         first,
         second,
         parts,
-        peak_before,
-        peak_after,
-        recomputed_elems: recomputed_rows * mid.shape.w() * mid.shape.c(),
-        assembled_elems: out.shape.num_elements(),
+        peak_before: r.peak_before,
+        peak_after: r.peak_after,
+        recomputed_elems: r.recomputed_elems,
+        assembled_elems: r.assembled_elems,
     })
 }
 
@@ -150,9 +248,9 @@ pub fn isolate_pair(graph: &Graph, first: OpId, second: OpId) -> anyhow::Result<
     Ok(b.finish(&[o]))
 }
 
-/// The graph's most promising split candidates: every eligible pair
-/// whose banded schedule beats its fused peak, each at its best `parts`
-/// in `2..=max_parts`, ranked by the pair's memory pressure
+/// The graph's most promising pair-split candidates: every eligible
+/// pair whose banded schedule beats its fused peak, each at its best
+/// `parts` in `2..=max_parts`, ranked by the pair's memory pressure
 /// (`peak_before`, descending) and truncated to `limit`. The
 /// peak-defining pair of the graph — §II-A's target — ranks first.
 pub fn candidates(graph: &Graph, max_parts: usize, limit: usize) -> Vec<SplitReport> {
@@ -186,8 +284,116 @@ pub fn candidates(graph: &Graph, max_parts: usize, limit: usize) -> Vec<SplitRep
     per_pair
 }
 
+/// The graph's most promising chain candidates of depth 3..=`max_depth`:
+/// every bandable chain whose end-to-end banded watermark beats its
+/// fused peak, each at its best `parts` in `2..=max_parts`, ranked by
+/// the chain's memory pressure (`peak_before`, descending) and
+/// truncated to `limit`. Depth-2 chains are [`candidates`]' job.
+pub fn chain_candidates(
+    graph: &Graph,
+    max_parts: usize,
+    max_depth: usize,
+    limit: usize,
+) -> Vec<ChainReport> {
+    if max_depth < 3 {
+        return Vec::new();
+    }
+    let mut out: Vec<ChainReport> = Vec::new();
+    for start in 0..graph.ops.len() {
+        // grow the chain link by link; every prefix of depth ≥ 3 is a
+        // candidate of its own (the watermark is not monotone in depth)
+        let mut ops = vec![OpId(start)];
+        while ops.len() < max_depth {
+            let tail = *ops.last().unwrap();
+            let consumers = graph.consumers(graph.op(tail).output);
+            if consumers.len() != 1 {
+                break;
+            }
+            let next = consumers[0];
+            if rewrite::chain_eligible(graph, &[tail, next], 2).is_err() {
+                break;
+            }
+            ops.push(next);
+            if ops.len() < 3 {
+                continue;
+            }
+            let oh = graph.tensor(graph.op(next).output).shape.h();
+            let mut best: Option<ChainReport> = None;
+            for parts in 2..=max_parts.min(oh) {
+                if let Ok(r) = analyse_chain(graph, &ops, parts) {
+                    if r.peak_after < r.peak_before
+                        && best.as_ref().map_or(true, |b| r.peak_after < b.peak_after)
+                    {
+                        best = Some(r);
+                    }
+                }
+            }
+            if let Some(b) = best {
+                out.push(b);
+            }
+        }
+    }
+    out.sort_by_key(|r| (usize::MAX - r.peak_before, r.ops[0].0));
+    out.truncate(limit);
+    out
+}
+
+/// Turn a [`RewriteBudget`] into the spec sequences the planner sweeps
+/// as variants, in deterministic order: single pair splits (ranked by
+/// pressure), then one multi-split composition of the top *disjoint*
+/// pairs (up to `max_splits`, recorded in descending op order so each
+/// spec's indices stay valid in the graph the previous one produced),
+/// then depth-≥3 chains. Every returned sequence is directly applicable
+/// via [`crate::ir::rewrite::apply`].
+pub fn proposals(graph: &Graph, budget: &RewriteBudget, limit: usize) -> Vec<Vec<RewriteSpec>> {
+    if !budget.enabled() {
+        return Vec::new();
+    }
+    let mut out: Vec<Vec<RewriteSpec>> = Vec::new();
+    let pairs = candidates(graph, budget.max_parts, limit);
+    for r in &pairs {
+        out.push(vec![RewriteSpec::PairSplit(r.spec())]);
+    }
+    if budget.max_splits >= 2 && pairs.len() >= 2 {
+        // greedy by rank, keeping only pairs whose op ranges don't
+        // interleave an already-chosen pair (disjoint ranges are what
+        // makes sequential application index-stable)
+        let mut chosen: Vec<&SplitReport> = Vec::new();
+        for r in &pairs {
+            if chosen.len() >= budget.max_splits {
+                break;
+            }
+            let disjoint = chosen
+                .iter()
+                .all(|c| r.second.0 < c.first.0 || c.second.0 < r.first.0);
+            if disjoint {
+                chosen.push(r);
+            }
+        }
+        if chosen.len() >= 2 {
+            // apply from the highest op indices down: a split only
+            // renumbers ops after its first index, so every later spec
+            // (strictly lower indices) stays valid
+            chosen.sort_by_key(|r| usize::MAX - r.first.0);
+            out.push(
+                chosen
+                    .iter()
+                    .map(|r| RewriteSpec::PairSplit(r.spec()))
+                    .collect(),
+            );
+        }
+    }
+    for c in chain_candidates(graph, budget.max_parts, budget.max_chain_depth, limit) {
+        out.push(vec![c.spec()]);
+    }
+    out
+}
+
 /// Scan a graph for its most profitable 2-op split (exhaustive over
-/// eligible pairs and `2..=max_parts`) — the `dmo split` report.
+/// eligible pairs and `2..=max_parts`) — the pair row of the `dmo
+/// split` report. Thin shim over [`candidates`], which itself rides the
+/// [`analyse_chain`] model; prefer [`proposals`] +
+/// [`crate::ir::rewrite::apply`] for anything that executes rewrites.
 pub fn best_split(graph: &Graph, max_parts: usize) -> Option<SplitReport> {
     candidates(graph, max_parts, usize::MAX)
         .into_iter()
@@ -227,6 +433,53 @@ mod tests {
         // halo: 1 recomputed row × 64·16 elems × 3 boundaries
         assert_eq!(r.recomputed_elems, 3 * 64 * 16);
         assert_eq!(r.assembled_elems, 32 * 32 * 16);
+    }
+
+    /// Extending the §II-A pair by the next pointwise conv into a
+    /// depth-3 chain does NOT pay on the mnv1 head shape: the 32 KB
+    /// chain input stays live across every part's sub-chain while the
+    /// final level's bands accumulate, so the watermark lands at 72 KB —
+    /// above the pair's 61 KB. (The chain wins on hourglass shapes
+    /// instead — small input, fat intermediates; see the hourglass zoo
+    /// model.) Pinned by hand: part 3's first level reads 16 rows of the
+    /// 64 KB intermediate with 24 KB of output bands already live:
+    /// 32 + 16 + 24 = 72 KB.
+    #[test]
+    fn mnv1_depth3_chain_is_correctly_beaten_by_the_pair() {
+        let mut b = GraphBuilder::new("chain3", DType::I8);
+        let x = b.input(Shape::hwc(64, 64, 8)); // 32 KB
+        let c = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Same, Activation::None); // 64 KB
+        let d = b.dwconv2d(c, (3, 3), (2, 2), Padding::Same, Activation::None); // 16 KB
+        let e = b.conv2d(d, 32, (1, 1), (1, 1), Padding::Same, Activation::None); // 32 KB
+        let g = b.finish(&[e]);
+        let chain = analyse_chain(&g, &[OpId(0), OpId(1), OpId(2)], 4).unwrap();
+        assert_eq!(chain.peak_before, 96 * 1024);
+        assert_eq!(chain.peak_after, 72 * 1024);
+        // same halo as the pair: only level 0 recomputes (level 1's
+        // stride-2 bands partition its input exactly here)
+        assert_eq!(chain.recomputed_elems, 3 * 64 * 16);
+        let pair = analyse_pair(&g, OpId(0), OpId(1), 4).unwrap();
+        assert!(pair.peak_after < chain.peak_after);
+    }
+
+    /// One watermark model: the depth-2 chain analysis must equal the
+    /// pair analysis field for field.
+    #[test]
+    fn analyse_chain_reduces_to_analyse_pair_at_depth_2() {
+        let mut b = GraphBuilder::new("red", DType::F32);
+        let x = b.input(Shape::hwc(24, 20, 3));
+        let c = b.conv2d(x, 12, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let d = b.maxpool(c, (2, 2), (2, 2), Padding::Valid);
+        let g = b.finish(&[d]);
+        for parts in [2usize, 3, 4, 5] {
+            let pair = analyse_pair(&g, OpId(0), OpId(1), parts).unwrap();
+            let chain = analyse_chain(&g, &[OpId(0), OpId(1)], parts).unwrap();
+            assert_eq!(chain.peak_before, pair.peak_before, "parts={parts}");
+            assert_eq!(chain.peak_after, pair.peak_after, "parts={parts}");
+            assert_eq!(chain.recomputed_elems, pair.recomputed_elems);
+            assert_eq!(chain.assembled_elems, pair.assembled_elems);
+            assert!(matches!(chain.spec(), RewriteSpec::PairSplit(_)));
+        }
     }
 
     /// The analysis must predict exactly what the baseline allocator
@@ -275,6 +528,7 @@ mod tests {
         let g = b.finish(&[s]);
         // ops 0 and 1 are siblings, not a chain
         assert!(analyse_pair(&g, OpId(0), OpId(1), 2).is_err());
+        assert!(analyse_chain(&g, &[OpId(0), OpId(1)], 2).is_err());
     }
 
     #[test]
@@ -294,6 +548,70 @@ mod tests {
         assert_eq!(cands[0].peak_before, max_pressure);
         // limit is respected
         assert_eq!(candidates(&g, 4, 1).len(), 1);
+    }
+
+    #[test]
+    fn chain_candidates_walk_every_bandable_prefix() {
+        // conv → dw → pool is bandable end-to-end; the hourglass shape
+        // (tiny input, fat intermediates, tiny output) is where chains
+        // shine: no un-banded schedule can avoid materialising a fat
+        // intermediate in full
+        let mut b = GraphBuilder::new("cc", DType::I8);
+        let x = b.input(Shape::hwc(32, 32, 2));
+        let c = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+        let d = b.dwconv2d(c, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let p = b.maxpool(d, (4, 4), (4, 4), Padding::Valid);
+        let g = b.finish(&[p]);
+        let chains = chain_candidates(&g, 4, 3, 8);
+        assert!(!chains.is_empty());
+        let best = &chains[0];
+        assert_eq!(best.depth(), 3);
+        assert!(best.peak_after < best.peak_before);
+        // the chain's watermark must undercut every single-pair option:
+        // a pair split still materialises one fat intermediate in full
+        let pair_best = best_split(&g, 4).map_or(usize::MAX, |r| r.peak_after);
+        assert!(best.peak_after < pair_best);
+        // depth guard: max_depth < 3 yields nothing
+        assert!(chain_candidates(&g, 4, 2, 8).is_empty());
+    }
+
+    #[test]
+    fn proposals_cover_pairs_multi_splits_and_chains() {
+        // two disjoint eligible pairs and bandable depth-3 chains
+        let mut b = GraphBuilder::new("props", DType::F32);
+        let x = b.input(Shape::hwc(32, 32, 4));
+        let big = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let shr = b.maxpool(big, (2, 2), (2, 2), Padding::Valid);
+        let small = b.conv2d(shr, 8, (3, 3), (1, 1), Padding::Same, Activation::None);
+        let tail = b.maxpool(small, (2, 2), (2, 2), Padding::Valid);
+        let g = b.finish(&[tail]);
+        let budget = RewriteBudget {
+            max_parts: 4,
+            max_splits: 2,
+            max_chain_depth: 3,
+        };
+        let props = proposals(&g, &budget, 8);
+        let multi = props.iter().find(|p| p.len() == 2).expect("multi-split");
+        // recorded in descending op order so sequential application is
+        // index-stable …
+        assert!(multi[0].op_indices()[0] > multi[1].op_indices()[0]);
+        let chain = props
+            .iter()
+            .find(|p| matches!(p[0], RewriteSpec::ChainSplit { .. }))
+            .expect("chain proposal");
+        assert!(chain[0].depth() >= 3);
+        // … and every proposal must actually apply and validate
+        for p in &props {
+            let (rg, _) = rewrite::apply(&g, p).unwrap();
+            assert!(rg.ops.len() > g.ops.len());
+        }
+        // a pairs-only budget proposes no chains and no multis
+        let pairs_only = proposals(&g, &RewriteBudget::pairs(4), 8);
+        assert!(pairs_only
+            .iter()
+            .all(|p| p.len() == 1 && matches!(p[0], RewriteSpec::PairSplit(_))));
+        // a disabled budget proposes nothing
+        assert!(proposals(&g, &RewriteBudget::disabled(), 8).is_empty());
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::ir::graph::Graph;
 use crate::ir::DType;
 use crate::models;
 use crate::overlap::{compute_os, Method, OsCache};
-use crate::planner::{PlannedModel, Planner, SavingRow, SearchStats, Strategy};
+use crate::planner::{PlannedModel, Planner, RewriteBudget, SavingRow, SearchStats, Strategy};
 use anyhow::Result;
 use std::fmt::Write as _;
 use std::sync::Arc;
@@ -241,12 +241,14 @@ pub struct OrderSearchRow {
     pub cache_hits: usize,
     /// `O_s` engine runs charged to this row (distinct new signatures).
     pub cache_misses: usize,
-    /// Overlapped peak of the search session with §II-A splitting
-    /// allowed (`--splits=N`); `None` when the row ran without splits.
+    /// Overlapped peak of the search session with §II-A rewrites
+    /// allowed (`--rewrites=...`); `None` when the row ran without a
+    /// rewrite budget.
     pub split: Option<usize>,
-    /// The winning split rewrite of that session, when one beat every
-    /// unsplit order.
-    pub split_spec: Option<crate::planner::SplitSpec>,
+    /// The winning rewrite passes of that session (pair splits and/or
+    /// banded chains), when they beat every unrewritten order. Empty
+    /// when no rewrite was profitable.
+    pub rewrite_specs: Vec<crate::planner::RewriteSpec>,
 }
 
 impl OrderSearchRow {
@@ -267,9 +269,10 @@ impl OrderSearchRow {
             .min(self.split.unwrap_or(usize::MAX))
     }
 
-    /// Did the split session strictly beat the best *unsplit* order?
+    /// Did the rewrite session strictly beat the best *unrewritten*
+    /// order?
     pub fn split_wins(&self) -> bool {
-        self.split_spec.is_some()
+        !self.rewrite_specs.is_empty()
             && self.split.is_some_and(|s| s < self.eager.min(self.lazy).min(self.search))
     }
 }
@@ -294,13 +297,12 @@ pub fn order_search_row_with(
     jobs: usize,
     cache: &Arc<OsCache>,
 ) -> Result<OrderSearchRow> {
-    order_search_row_splits(name, beam, budget, jobs, cache, 0)
+    order_search_row_rewrites(name, beam, budget, jobs, cache, &RewriteBudget::disabled())
 }
 
-/// [`order_search_row_with`] plus, when `max_parts >= 2`, a fourth
-/// session that searches orders *and* §II-A splits jointly
-/// ([`Planner::allow_splits`]) — the row then reports whether banding a
-/// peak-defining pair beat every unsplit execution order.
+/// [`order_search_row_with`] for callers still thinking in `--splits=N`
+/// terms — a thin shim over [`order_search_row_rewrites`] with a
+/// pair-only [`RewriteBudget`].
 pub fn order_search_row_splits(
     name: &str,
     beam: usize,
@@ -308,6 +310,27 @@ pub fn order_search_row_splits(
     jobs: usize,
     cache: &Arc<OsCache>,
     max_parts: usize,
+) -> Result<OrderSearchRow> {
+    let rb = if max_parts < 2 {
+        RewriteBudget::disabled()
+    } else {
+        RewriteBudget::pairs(max_parts)
+    };
+    order_search_row_rewrites(name, beam, budget, jobs, cache, &rb)
+}
+
+/// [`order_search_row_with`] plus, when the [`RewriteBudget`] is
+/// enabled, a fourth session that searches orders *and* §II-A rewrites
+/// (pair splits, multi-splits, banded chains) jointly
+/// ([`Planner::rewrites`]) — the row then reports whether a rewrite
+/// beat every unrewritten execution order.
+pub fn order_search_row_rewrites(
+    name: &str,
+    beam: usize,
+    budget: usize,
+    jobs: usize,
+    cache: &Arc<OsCache>,
+    rewrite_budget: &RewriteBudget,
 ) -> Result<OrderSearchRow> {
     let g = models::build(name)?;
     let before = cache.stats();
@@ -325,22 +348,26 @@ pub fn order_search_row_splits(
     let stats = searched
         .search
         .expect("a search-strategy win always carries stats");
-    let (split, split_spec) = if max_parts < 2 {
-        (None, None)
-    } else if crate::planner::split::candidates(&g, max_parts, 1).is_empty() {
-        // no eligible pair: the split session would repeat the search
+    let (split, rewrite_specs) = if !rewrite_budget.enabled() {
+        (None, Vec::new())
+    } else if crate::planner::split::proposals(&g, rewrite_budget, 1).is_empty() {
+        // no eligible rewrite: the session would repeat the search
         // session verbatim — reuse its peak and report "none profitable"
-        (Some(searched.peak()), None)
+        (Some(searched.peak()), Vec::new())
     } else {
         let plan = Planner::for_graph(&g)
             .dmo(true)
             .jobs(jobs)
             .os_cache(cache.clone())
             .strategies(&[Strategy::Search { beam, budget }])
-            .allow_splits(max_parts)
+            .rewrites(*rewrite_budget)
             .plan()?;
-        let spec = plan.rewrite.as_ref().and_then(|r| r.splits.first().copied());
-        (Some(plan.peak()), spec)
+        let specs = plan
+            .rewrite
+            .as_ref()
+            .map(|r| r.specs.clone())
+            .unwrap_or_default();
+        (Some(plan.peak()), specs)
     };
     let after = cache.stats();
     Ok(OrderSearchRow {
@@ -352,7 +379,7 @@ pub fn order_search_row_splits(
         cache_hits: after.hits - before.hits,
         cache_misses: after.misses - before.misses,
         split,
-        split_spec,
+        rewrite_specs,
     })
 }
 
@@ -360,18 +387,26 @@ pub fn order_search_row_splits(
 /// peak against the paper's fixed serialisations.
 pub fn order_search_markdown(rows: &[OrderSearchRow]) -> String {
     let mut s = String::from(
-        "| Model | Eager (KB) | Lazy (KB) | Search (KB) | vs best-of-two | Split (KB) | split pair | states expanded | O_s cache (hit/miss) |\n|---|---:|---:|---:|---:|---:|---|---:|---:|\n",
+        "| Model | Eager (KB) | Lazy (KB) | Search (KB) | vs best-of-two | Rewritten (KB) | rewrites | states expanded | O_s cache (hit/miss) |\n|---|---:|---:|---:|---:|---:|---|---:|---:|\n",
     );
     for r in rows {
         let (split_kb, split_pair) = match r.split {
             Some(p) => (
                 format!("{}", p / 1024),
-                match &r.split_spec {
-                    Some(sp) if r.split_wins() => {
-                        format!("ops {}→{} ×{}", sp.first, sp.second, sp.parts)
+                if r.rewrite_specs.is_empty() {
+                    "none profitable".to_string()
+                } else {
+                    let described = r
+                        .rewrite_specs
+                        .iter()
+                        .map(|sp| sp.describe())
+                        .collect::<Vec<_>>()
+                        .join(" + ");
+                    if r.split_wins() {
+                        described
+                    } else {
+                        format!("{described} (no win)")
                     }
-                    Some(sp) => format!("ops {}→{} ×{} (no win)", sp.first, sp.second, sp.parts),
-                    None => "none profitable".to_string(),
                 },
             ),
             None => ("-".to_string(), "-".to_string()),
@@ -511,7 +546,7 @@ mod tests {
         let cache = Arc::new(OsCache::new());
         let r =
             order_search_row_splits("mobilenet_v1_0.25_128_int8", 4, 2_000, 1, &cache, 4).unwrap();
-        let split = r.split.expect("--splits row must carry a split peak");
+        let split = r.split.expect("rewrite row must carry a rewritten peak");
         assert!(split <= r.search);
         assert!(
             r.split_wins(),
@@ -523,13 +558,37 @@ mod tests {
         );
         assert_eq!(r.best_peak(), split);
         let md = order_search_markdown(&[r]);
-        assert!(md.contains("Split (KB)"), "{md}");
+        assert!(md.contains("Rewritten (KB)"), "{md}");
         assert!(md.contains("ops "), "{md}");
-        // rows without splits render placeholders
+        // rows without a rewrite budget render placeholders
         let plain = order_search_row_with("tiny", 2, 500, 1, &Arc::new(OsCache::new())).unwrap();
         assert!(plain.split.is_none());
         let md2 = order_search_markdown(&[plain]);
         assert!(md2.contains("| - | - |"), "{md2}");
+    }
+
+    #[test]
+    fn chain_order_row_reports_a_chain_rewrite() {
+        // hourglass: only a depth-3 chain beats the fat intermediates
+        let cache = Arc::new(OsCache::new());
+        let rb = RewriteBudget { max_parts: 4, max_splits: 1, max_chain_depth: 3 };
+        let r = order_search_row_rewrites("hourglass", 4, 2_000, 1, &cache, &rb).unwrap();
+        let rewritten = r.split.expect("rewrite row must carry a peak");
+        assert!(
+            r.split_wins(),
+            "chain {} must beat eager {} / lazy {} / search {}",
+            rewritten,
+            r.eager,
+            r.lazy,
+            r.search
+        );
+        assert!(
+            r.rewrite_specs.iter().any(|sp| sp.depth() >= 3),
+            "expected a chain spec, got {:?}",
+            r.rewrite_specs
+        );
+        let md = order_search_markdown(&[r]);
+        assert!(md.contains("chain "), "chain rewrites render in the table: {md}");
     }
 
     #[test]

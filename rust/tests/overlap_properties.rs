@@ -8,7 +8,9 @@ use dmo::ir::op::{
     Activation, BinaryKind, Conv2DParams, DepthwiseParams, OpKind, Padding, PoolKind, PoolParams,
     UnaryKind,
 };
-use dmo::ir::{DType, Shape};
+use dmo::ir::rewrite::{self, RewriteSpec};
+use dmo::ir::{DType, OpId, Shape};
+use dmo::models;
 use dmo::ops::infer_output;
 use dmo::overlap::algorithmic::{os_paper_arrays, os_streaming};
 use dmo::overlap::analytic::os_analytic;
@@ -170,6 +172,57 @@ fn softmax_and_gap_fully_overlap()
     let out = infer_output(&OpKind::GlobalAvgPool, &[&x]).unwrap();
     let os = os_streaming(&OpKind::GlobalAvgPool, &[&x], &out, DType::F32);
     assert_eq!(os.single(), out.num_elements() * 4);
+}
+
+/// The three engines stay coherent on *chain-banded* graphs too: for
+/// every op of a depth-3 chain rewrite (Band-of-conv, Band-of-dwconv,
+/// Band-of-pool, ConcatRows and the untouched remainder), bottom-up ==
+/// streaming == paper arrays, and the analytic bound never exceeds them.
+/// This is the engine-level half of the generalised-rewrite acceptance:
+/// the banded graph the planner prices is priced identically by all
+/// three `O_s` implementations.
+#[test]
+fn three_engines_agree_on_every_op_of_a_chain_banded_graph() {
+    let g = models::build("hourglass").unwrap();
+    let spec = RewriteSpec::ChainSplit {
+        ops: vec![OpId(0), OpId(1), OpId(2)],
+        parts: 2,
+    };
+    let (banded, _) = rewrite::apply(&g, &[spec]).unwrap();
+    banded.validate().unwrap();
+    assert!(banded.ops.iter().any(|op| matches!(op.kind, OpKind::Band(_))));
+
+    let mut band_ops = 0usize;
+    for op in &banded.ops {
+        let in_shapes: Vec<&Shape> = op
+            .inputs
+            .iter()
+            .map(|&t| &banded.tensor(t).shape)
+            .collect();
+        let out_shape = &banded.tensor(op.output).shape;
+        let dtype = banded.tensor(op.output).dtype;
+
+        let exact = os_streaming(&op.kind, &in_shapes, out_shape, dtype);
+        let arrays = os_paper_arrays(&op.kind, &in_shapes, out_shape, dtype);
+        let observed = os_bottom_up(&op.kind, &in_shapes, out_shape, dtype);
+        let bound = os_analytic(&op.kind, &in_shapes, out_shape, dtype);
+
+        assert_eq!(exact, arrays, "streaming != paper arrays for {:?}", op.kind);
+        assert_eq!(exact, observed, "streaming != bottom-up for {:?}", op.kind);
+        for (j, (&b, &e)) in bound.per_input.iter().zip(&exact.per_input).enumerate() {
+            assert!(
+                b <= e,
+                "analytic {} > exact {} on input {j} of {:?}",
+                b,
+                e,
+                op.kind
+            );
+        }
+        if matches!(op.kind, OpKind::Band(_)) {
+            band_ops += 1;
+        }
+    }
+    assert!(band_ops >= 6, "expected ≥2 bands × 3 chain levels, got {band_ops}");
 }
 
 /// Stride-2 window ops read ahead of their writes, so O_s equals the
