@@ -75,8 +75,7 @@ fn main() {
         mix: Vec::new(),
         seed,
         jobs: 0,
-        reload_watch: None,
-        metrics_out: None,
+        ..FleetConfig::default()
     };
     let report = fleet_serve(&cfg).unwrap();
 

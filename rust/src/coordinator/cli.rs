@@ -7,7 +7,8 @@
 
 use super::server::{serve, ServeConfig};
 use super::BatchPolicy;
-use crate::fleet::{fleet_serve, FleetConfig, ModelSpec};
+use crate::fault::FaultSpec;
+use crate::fleet::{fleet_serve, BreakerConfig, FleetConfig, ModelSpec};
 use crate::util::args::{opt, ArgSpec, Args};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -32,6 +33,11 @@ pub const SERVE_SPEC: &[ArgSpec] = &[
     opt("--reload-watch", "fleet: directory watched for `<model>.plan.json` hot-reload drops"),
     opt("--metrics-out", "Prometheus text snapshot file (fleet: rewritten every 500 ms + at shutdown)"),
     opt("--trace-out", "Chrome trace-event JSON of the run (load in Perfetto / chrome://tracing)"),
+    opt("--faults", "fleet: deterministic fault spec `kind:count[@model],…` (kinds: panic, corrupt-arena, corrupt-reload, stall, delay); implies fleet mode"),
+    opt("--deadline-us", "fleet: per-request deadline in µs (0 = none; expiry is a retryable failure)"),
+    opt("--retries", "fleet: client retries per failed request, exponential backoff (default 0)"),
+    opt("--breaker-k", "fleet: consecutive failures that quarantine a model (default 3)"),
+    opt("--breaker-cooldown", "fleet: quarantine sheds before a half-open probe (default 8)"),
 ];
 
 /// Entry point used by `main.rs`.
@@ -57,7 +63,9 @@ pub fn serve_main(args: &Args) -> Result<()> {
 }
 
 fn serve_dispatch(args: &Args) -> Result<()> {
-    if args.value("--models").is_some() {
+    // fault injection only exists in the fleet path, so --faults alone
+    // (CI chaos smoke) selects fleet mode over the default single model
+    if args.value("--models").is_some() || args.value("--faults").is_some() {
         return fleet_main(args);
     }
     let cfg = ServeConfig {
@@ -117,7 +125,7 @@ fn serve_dispatch(args: &Args) -> Result<()> {
 fn fleet_main(args: &Args) -> Result<()> {
     let names: Vec<String> = args
         .value("--models")
-        .unwrap_or_default()
+        .unwrap_or("tiny")
         .split(',')
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
@@ -147,6 +155,14 @@ fn fleet_main(args: &Args) -> Result<()> {
             })
             .collect::<Result<_>>()?,
     };
+    let faults = match args.value("--faults") {
+        None => None,
+        Some(s) => {
+            let spec = FaultSpec::parse(s).map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+            if spec.is_empty() { None } else { Some(spec) }
+        }
+    };
+    let deadline_us = args.parsed("--deadline-us", 0u64)?;
     let cfg = FleetConfig {
         models,
         arenas: args.parsed("--arenas", 4usize)?,
@@ -159,6 +175,14 @@ fn fleet_main(args: &Args) -> Result<()> {
         jobs: args.parsed("--jobs", 0usize)?,
         reload_watch,
         metrics_out: args.value("--metrics-out").map(PathBuf::from),
+        faults,
+        deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
+        retries: args.parsed("--retries", 0u32)?,
+        breaker: BreakerConfig {
+            threshold: args.parsed("--breaker-k", BreakerConfig::default().threshold)?,
+            cooldown: args.parsed("--breaker-cooldown", BreakerConfig::default().cooldown)?,
+        },
+        ..FleetConfig::default()
     };
     println!(
         "fleet: {} models × {} arenas, {} workers, queue {}/model, {} requests ({})",
@@ -176,24 +200,55 @@ fn fleet_main(args: &Args) -> Result<()> {
     if let Some(d) = &cfg.reload_watch {
         println!("hot-reload      : watching {} for <model>.plan.json", d.display());
     }
+    if let Some(spec) = &cfg.faults {
+        println!(
+            "fault injection : {spec} (seed {}, breaker K={} cooldown={}, {} retries{})",
+            cfg.seed,
+            cfg.breaker.threshold,
+            cfg.breaker.cooldown,
+            cfg.retries,
+            match cfg.deadline {
+                Some(d) => format!(", deadline {d:?}"),
+                None => String::new(),
+            }
+        );
+    }
     let report = fleet_serve(&cfg)?;
     println!(
-        "completed       : {} ({} shed) in {:.3} s — {:.0} req/s",
+        "completed       : {} ({} shed, {} failed) in {:.3} s — {:.0} req/s",
         report.completed,
         report.shed,
+        report.failed,
         report.wall.as_secs_f64(),
         report.throughput_rps
     );
+    if cfg.faults.is_some() || report.failed + report.retried + report.quarantine_shed > 0 {
+        println!(
+            "resilience      : {} faults injected | {} retried | {} quarantine-shed | {} served degraded",
+            report.faults_injected, report.retried, report.quarantine_shed, report.degraded_served
+        );
+    }
+    for e in &report.worker_errors {
+        println!("worker error    : {e}");
+    }
     for m in &report.per_model {
         let l = m.metrics.latency();
+        let status = if m.quarantined {
+            " [quarantined]"
+        } else if m.degraded {
+            " [degraded]"
+        } else {
+            ""
+        };
         println!(
-            "  {:<14} gen {} ({} reloads): {} done, {} shed | p50 {:.0} p95 {:.0} p99 {:.0} µs \
-             | arena {} | pool hit {:.1}% ({} allocs) | max queue {}/{}",
+            "  {:<14} gen {} ({} reloads): {} done, {} shed, {} failed | p50 {:.0} p95 {:.0} \
+             p99 {:.0} µs | arena {} | pool hit {:.1}% ({} allocs) | max queue {}/{}{status}",
             m.model,
             m.generation,
             m.reloads,
             m.completed,
             m.shed,
+            m.failed,
             l.p50_us,
             l.p95_us,
             l.p99_us,

@@ -62,6 +62,20 @@ pub struct Metrics {
     batch_real: usize,
     batch_lanes: usize,
     pub shed: usize,
+    /// Sheds caused by the circuit breaker (subset of `shed`).
+    pub shed_quarantined: usize,
+    /// Requests that settled as failures (panic, exec error, watermark
+    /// violation, deadline) with no retry budget left.
+    pub failed: usize,
+    /// Failed attempts that were handed back for a client retry (not
+    /// settled — the retried attempt settles elsewhere).
+    pub retries: usize,
+    /// Failures whose cause was a blown deadline (subset of
+    /// `failed + retries`).
+    pub deadline_expired: usize,
+    /// Completed requests served by a degraded generation (pinned
+    /// previous or safe plan); subset of the completed count.
+    pub degraded: usize,
 }
 
 impl Metrics {
@@ -73,6 +87,34 @@ impl Metrics {
     /// single source of truth for shedding — reports read it from here.
     pub fn record_shed(&mut self) {
         self.shed += 1;
+    }
+
+    /// Count one breaker-quarantine shed (also counts into `shed`, so
+    /// the accounting identity keeps a single shed total).
+    pub fn record_shed_quarantined(&mut self) {
+        self.shed += 1;
+        self.shed_quarantined += 1;
+    }
+
+    /// Count one finally-failed request.
+    pub fn record_failed(&mut self) {
+        self.failed += 1;
+    }
+
+    /// Count one failed attempt handed back for retry.
+    pub fn record_retry(&mut self) {
+        self.retries += 1;
+    }
+
+    /// Count one blown deadline (call alongside `record_failed` or
+    /// `record_retry`).
+    pub fn record_deadline_expired(&mut self) {
+        self.deadline_expired += 1;
+    }
+
+    /// Count one completed request that a degraded generation served.
+    pub fn record_degraded_served(&mut self) {
+        self.degraded += 1;
     }
 
     pub fn record_batch(&mut self, actual: usize, padded: usize) {

@@ -1,0 +1,23 @@
+//! Deterministic fault injection for the serving fleet.
+//!
+//! DMO deliberately aliases input and output buffers in one arena, so a
+//! single out-of-spec store, corrupted artifact, or buggy rewrite silently
+//! clobbers live data. This module makes every such failure *injectable on
+//! purpose*, seeded and reproducible, so the chaos suite
+//! (`rust/tests/chaos.rs`) can prove the fleet sheds, quarantines,
+//! degrades, or recovers without ever losing accounting:
+//! `completed + shed + failed == requests`.
+//!
+//! A [`FaultSpec`] is the user-facing grammar (`panic:2@0,corrupt-reload:1`)
+//! parsed from `dmo serve --faults=SPEC`; a [`FaultPlan`] resolves it
+//! against a seed into concrete trigger points — contiguous windows over a
+//! model's per-model *dispatch sequence*, which is assigned under the
+//! admission lock and therefore identical across runs with the same seed
+//! and workload. Contiguity is deliberate: K consecutive injected failures
+//! are exactly what a K-threshold circuit breaker must observe to open.
+
+mod plan;
+mod spec;
+
+pub use plan::{ArenaCorrupt, ExecFaults, FaultPlan, GarbleMode, ReloadFault, StallWindow};
+pub use spec::{FaultClause, FaultKind, FaultSpec};

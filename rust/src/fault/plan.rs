@@ -1,0 +1,270 @@
+//! Seeded resolution of a [`FaultSpec`] into concrete trigger points.
+//!
+//! Determinism contract: two [`FaultPlan`]s built from the same spec,
+//! seed, request count and model count trigger at *identical* points.
+//! Exec-class faults (panic / corrupt-arena / delay) key off a model's
+//! per-model **dispatch sequence number** — assigned under the admission
+//! lock, so it is the same across runs regardless of worker count or
+//! thread timing. Reload and stall faults key off the load generator's
+//! request id, which is likewise a single deterministic sequence.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::spec::{FaultKind, FaultSpec};
+use crate::planner::PlanArtifact;
+use crate::util::rng::Rng;
+
+/// A contiguous window of per-model dispatch sequence numbers.
+#[derive(Debug, Clone, Copy)]
+struct Window {
+    kind: FaultKind,
+    model: usize,
+    start: u64,
+    len: u64,
+}
+
+impl Window {
+    fn hits(&self, model: usize, seq: u64) -> bool {
+        model == self.model && seq >= self.start && seq < self.start + self.len
+    }
+}
+
+/// How a reload-injected artifact is garbled. Both garbles are caught by
+/// `PlanArtifact::to_plan`'s defensive checks, so the reload is rejected
+/// and the serving generation stays untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GarbleMode {
+    /// Flip the recorded graph fingerprint → `PlanError::GraphMismatch`.
+    FingerprintFlip,
+    /// Flip the recorded `O_s` table hash → `PlanError::Malformed`.
+    OsHashFlip,
+}
+
+/// A scheduled corrupt-reload: at generator request id `at_request`,
+/// garble `model`'s current artifact and hot-reload it.
+#[derive(Debug, Clone, Copy)]
+pub struct ReloadFault {
+    pub model: usize,
+    pub at_request: u64,
+    pub mode: GarbleMode,
+}
+
+/// A scheduled admission-queue stall for `model`, entered at generator
+/// request id `at_request` and held for `hold`.
+#[derive(Debug, Clone, Copy)]
+pub struct StallWindow {
+    pub model: usize,
+    pub at_request: u64,
+    pub hold: Duration,
+}
+
+/// Arena corruption order: poke `len` seeded garbage bytes at a seeded
+/// offset and emit a synthetic store event past the arena end, so the
+/// watermark check observes a rogue out-of-bounds write.
+#[derive(Debug, Clone, Copy)]
+pub struct ArenaCorrupt {
+    /// Salt for the in-arena offset/bytes (resolved against arena size
+    /// at injection time).
+    pub salt: u64,
+    pub len: usize,
+}
+
+/// Everything to inject into one dispatched request's execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecFaults {
+    pub panic: bool,
+    pub corrupt: Option<ArenaCorrupt>,
+    pub delay: Option<Duration>,
+}
+
+impl ExecFaults {
+    pub fn any(&self) -> bool {
+        self.panic || self.corrupt.is_some() || self.delay.is_some()
+    }
+}
+
+/// A resolved, seeded fault schedule plus injection counters.
+#[derive(Debug)]
+pub struct FaultPlan {
+    windows: Vec<Window>,
+    reloads: Vec<ReloadFault>,
+    stalls: Vec<StallWindow>,
+    /// Exec delay applied per `delay`-window request.
+    pub delay: Duration,
+    /// How long a `stall` window holds its queue.
+    pub stall_hold: Duration,
+    injected: [AtomicU64; FaultKind::ALL.len()],
+}
+
+impl FaultPlan {
+    /// Resolve `spec` against `seed` for a run of `requests` ids over
+    /// `models` models.
+    pub fn new(spec: &FaultSpec, seed: u64, requests: u64, models: usize) -> FaultPlan {
+        let models = models.max(1);
+        let mut rng = Rng::new(seed ^ 0xFA_17_5EED);
+        let mut windows = Vec::new();
+        let mut reloads = Vec::new();
+        let mut stalls = Vec::new();
+        let mut garble_flip = false;
+        for clause in &spec.clauses {
+            let model = clause.model.unwrap_or_else(|| rng.below(models)).min(models - 1);
+            match clause.kind {
+                FaultKind::ArenaCorrupt | FaultKind::WorkerPanic | FaultKind::ExecDelay => {
+                    // start low (seq 1..=4) so short runs still hit the
+                    // window, but never at seq 0: the first dispatch
+                    // always succeeds, which keeps "some traffic served
+                    // before the fault" an invariant tests can lean on
+                    windows.push(Window {
+                        kind: clause.kind,
+                        model,
+                        start: 1 + rng.below(4) as u64,
+                        len: clause.count,
+                    });
+                }
+                FaultKind::CorruptReload => {
+                    for i in 0..clause.count {
+                        let third = (requests / 3).max(1);
+                        let at = third + rng.below(third as usize) as u64 + i;
+                        reloads.push(ReloadFault {
+                            model,
+                            at_request: at.min(requests.saturating_sub(1)),
+                            mode: if garble_flip {
+                                GarbleMode::OsHashFlip
+                            } else {
+                                GarbleMode::FingerprintFlip
+                            },
+                        });
+                        garble_flip = !garble_flip;
+                    }
+                }
+                FaultKind::QueueStall => {
+                    let quarter = (requests / 4).max(1);
+                    let at = quarter + rng.below(quarter as usize) as u64;
+                    stalls.push(StallWindow {
+                        model,
+                        at_request: at.min(requests.saturating_sub(1)),
+                        hold: Duration::from_millis(25),
+                    });
+                }
+            }
+        }
+        FaultPlan {
+            windows,
+            reloads,
+            stalls,
+            delay: Duration::from_millis(10),
+            stall_hold: Duration::from_millis(25),
+            injected: Default::default(),
+        }
+    }
+
+    /// Faults to inject into the request dispatched as `model`'s
+    /// `seq`-th (0-based) — called by the worker with the sequence number
+    /// the admission queue assigned.
+    pub fn exec_faults(&self, model: usize, seq: u64) -> ExecFaults {
+        let mut f = ExecFaults::default();
+        for w in &self.windows {
+            if !w.hits(model, seq) {
+                continue;
+            }
+            match w.kind {
+                FaultKind::WorkerPanic => f.panic = true,
+                FaultKind::ArenaCorrupt => {
+                    f.corrupt = Some(ArenaCorrupt {
+                        salt: (seq << 8) ^ w.start,
+                        len: 64,
+                    })
+                }
+                FaultKind::ExecDelay => f.delay = Some(self.delay),
+                _ => {}
+            }
+        }
+        f
+    }
+
+    /// Reload faults scheduled at generator request `id`.
+    pub fn reloads_at(&self, id: u64) -> impl Iterator<Item = &ReloadFault> {
+        self.reloads.iter().filter(move |r| r.at_request == id)
+    }
+
+    /// Stall windows entered at generator request `id`.
+    pub fn stalls_at(&self, id: u64) -> impl Iterator<Item = &StallWindow> {
+        self.stalls.iter().filter(move |s| s.at_request == id)
+    }
+
+    /// Garble `artifact` per `mode` — the result must be *rejected* by
+    /// the registry's revalidating reload.
+    pub fn garble(artifact: &PlanArtifact, mode: GarbleMode) -> PlanArtifact {
+        let mut bad = artifact.clone();
+        match mode {
+            GarbleMode::FingerprintFlip => bad.fingerprint ^= 1,
+            GarbleMode::OsHashFlip => bad.os_hash ^= 1,
+        }
+        bad
+    }
+
+    /// Record one injected fault of `kind` (feeds
+    /// `dmo_faults_injected_total`).
+    pub fn note(&self, kind: FaultKind) {
+        self.injected[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Injections recorded so far for `kind`.
+    pub fn injected(&self, kind: FaultKind) -> u64 {
+        self.injected[kind.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total injections across all kinds.
+    pub fn total_injected(&self) -> u64 {
+        FaultKind::ALL.iter().map(|k| self.injected(*k)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(spec: &str, seed: u64) -> FaultPlan {
+        FaultPlan::new(&FaultSpec::parse(spec).unwrap(), seed, 100, 2)
+    }
+
+    #[test]
+    fn same_seed_same_triggers() {
+        let a = plan("panic:3@0,corrupt-reload:1,stall:5@1,delay:2", 7);
+        let b = plan("panic:3@0,corrupt-reload:1,stall:5@1,delay:2", 7);
+        for model in 0..2 {
+            for seq in 0..40 {
+                let (fa, fb) = (a.exec_faults(model, seq), b.exec_faults(model, seq));
+                assert_eq!(fa.panic, fb.panic);
+                assert_eq!(fa.corrupt.is_some(), fb.corrupt.is_some());
+                assert_eq!(fa.delay, fb.delay);
+            }
+        }
+        for id in 0..100 {
+            assert_eq!(a.reloads_at(id).count(), b.reloads_at(id).count());
+            assert_eq!(a.stalls_at(id).count(), b.stalls_at(id).count());
+        }
+    }
+
+    #[test]
+    fn panic_window_is_contiguous_and_spares_seq_zero() {
+        let p = plan("panic:3@0", 42);
+        let hit: Vec<u64> = (0..20).filter(|&s| p.exec_faults(0, s).panic).collect();
+        assert_eq!(hit.len(), 3, "window length equals the clause count");
+        assert!(hit[0] >= 1, "seq 0 always succeeds");
+        assert!(hit.windows(2).all(|w| w[1] == w[0] + 1), "contiguous");
+        // pinned to model 0: model 1 is untouched
+        assert!((0..20).all(|s| !p.exec_faults(1, s).any()));
+    }
+
+    #[test]
+    fn injection_counters_accumulate() {
+        let p = plan("panic:1", 1);
+        p.note(FaultKind::WorkerPanic);
+        p.note(FaultKind::WorkerPanic);
+        p.note(FaultKind::CorruptReload);
+        assert_eq!(p.injected(FaultKind::WorkerPanic), 2);
+        assert_eq!(p.total_injected(), 3);
+    }
+}

@@ -1,0 +1,195 @@
+//! The `--faults=SPEC` grammar.
+//!
+//! A spec is a comma-separated list of clauses, each
+//! `kind:count[@model]`:
+//!
+//! ```text
+//! panic:2              panic a worker on 2 consecutive requests (any model)
+//! corrupt-arena:1@0    corrupt arena bytes mid-exec for model 0, once
+//! corrupt-reload:1     garble an artifact and hot-reload it mid-run
+//! stall:20@1           stall model 1's admission queue around 20 requests
+//! delay:5              slow-walk 5 requests through exec (blows deadlines)
+//! ```
+//!
+//! `count` must be ≥ 1; `@model` pins the clause to one model index,
+//! otherwise the [`super::FaultPlan`] seed picks a model.
+
+use std::fmt;
+
+/// The classes of fault the injector knows how to cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// Poke garbage bytes into the arena mid-exec and emit a synthetic
+    /// out-of-bounds store event — a rogue kernel write past the planned
+    /// peak, the exact defect the watermark check exists to catch.
+    ArenaCorrupt,
+    /// Panic the worker thread at a chosen request.
+    WorkerPanic,
+    /// Garble a model's artifact and hot-reload it mid-run (load-time
+    /// corruption is covered by the artifact-corpus tests).
+    CorruptReload,
+    /// Stall a model's admission queue so it backs up and sheds/blocks.
+    QueueStall,
+    /// Sleep mid-exec so queued requests blow their deadlines.
+    ExecDelay,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::ArenaCorrupt,
+        FaultKind::WorkerPanic,
+        FaultKind::CorruptReload,
+        FaultKind::QueueStall,
+        FaultKind::ExecDelay,
+    ];
+
+    /// Stable spec/metrics label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::ArenaCorrupt => "corrupt-arena",
+            FaultKind::WorkerPanic => "panic",
+            FaultKind::CorruptReload => "corrupt-reload",
+            FaultKind::QueueStall => "stall",
+            FaultKind::ExecDelay => "delay",
+        }
+    }
+
+    /// Index into per-kind counter arrays.
+    pub fn index(&self) -> usize {
+        match self {
+            FaultKind::ArenaCorrupt => 0,
+            FaultKind::WorkerPanic => 1,
+            FaultKind::CorruptReload => 2,
+            FaultKind::QueueStall => 3,
+            FaultKind::ExecDelay => 4,
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One `kind:count[@model]` clause.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultClause {
+    pub kind: FaultKind,
+    /// How many requests the clause hits (window length / stall span).
+    pub count: u64,
+    /// Pin to a model index; `None` lets the plan seed choose.
+    pub model: Option<usize>,
+}
+
+/// A parsed `--faults` specification.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub clauses: Vec<FaultClause>,
+}
+
+impl FaultSpec {
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// Parse `kind:count[@model],...`; empty input parses to an empty spec.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut clauses = Vec::new();
+        for raw in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (head, model) = match raw.split_once('@') {
+                Some((head, m)) => {
+                    let idx = m
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad model index in fault clause `{raw}`"))?;
+                    (head, Some(idx))
+                }
+                None => (raw, None),
+            };
+            let (kind_s, count_s) = head
+                .split_once(':')
+                .ok_or_else(|| format!("fault clause `{raw}` is not kind:count[@model]"))?;
+            let kind = FaultKind::parse(kind_s).ok_or_else(|| {
+                let known: Vec<&str> = FaultKind::ALL.iter().map(|k| k.name()).collect();
+                format!(
+                    "unknown fault kind `{kind_s}` (known: {})",
+                    known.join(", ")
+                )
+            })?;
+            let count = count_s
+                .parse::<u64>()
+                .map_err(|_| format!("bad count in fault clause `{raw}`"))?;
+            if count == 0 {
+                return Err(format!("fault clause `{raw}` has count 0"));
+            }
+            clauses.push(FaultClause { kind, count, model });
+        }
+        Ok(FaultSpec { clauses })
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, c) in self.clauses.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{}:{}", c.kind, c.count)?;
+            if let Some(m) = c.model {
+                write!(f, "@{m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let spec = FaultSpec::parse("panic:2@0, corrupt-reload:1,stall:20@1").unwrap();
+        assert_eq!(
+            spec.clauses,
+            vec![
+                FaultClause {
+                    kind: FaultKind::WorkerPanic,
+                    count: 2,
+                    model: Some(0)
+                },
+                FaultClause {
+                    kind: FaultKind::CorruptReload,
+                    count: 1,
+                    model: None
+                },
+                FaultClause {
+                    kind: FaultKind::QueueStall,
+                    count: 20,
+                    model: Some(1)
+                },
+            ]
+        );
+        // round-trips through Display (modulo whitespace)
+        assert_eq!(spec.to_string(), "panic:2@0,corrupt-reload:1,stall:20@1");
+    }
+
+    #[test]
+    fn empty_spec_is_empty() {
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+        assert!(FaultSpec::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        assert!(FaultSpec::parse("panic").is_err());
+        assert!(FaultSpec::parse("panic:zero").is_err());
+        assert!(FaultSpec::parse("panic:0").is_err());
+        assert!(FaultSpec::parse("frobnicate:1").is_err());
+        assert!(FaultSpec::parse("panic:1@x").is_err());
+    }
+}

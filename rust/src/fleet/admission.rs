@@ -8,9 +8,27 @@
 //! behaviour per call: [`Admission::try_submit`] sheds (open-loop
 //! traffic keeps its arrival clock honest), [`Admission::submit`]
 //! blocks (closed-loop backpressure).
+//!
+//! Two additions for the fault-tolerant fleet:
+//!
+//! * every pop is stamped with the model's **dispatch sequence number**
+//!   ([`Admission::take_seq`]) — assigned under the admission lock, so it
+//!   is identical across runs regardless of worker timing; the
+//!   deterministic fault injector keys exec faults off it;
+//! * a queue can be **stalled** ([`Admission::stall_for`]) — skipped by
+//!   the dispatcher for a bounded wall-clock window — so chaos tests can
+//!   make a queue back up and prove backpressure/shedding still account
+//!   for every request. Stalls are ignored once the admission is closed,
+//!   so shutdown always drains.
+//!
+//! All locking is poison-tolerant ([`crate::util::sync`]): a worker
+//! panic must not cascade into every later submit/take.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::sync::{lock, wait, wait_timeout};
 
 struct AdmState<T> {
     queues: Vec<VecDeque<T>>,
@@ -18,13 +36,30 @@ struct AdmState<T> {
     cursor: usize,
     /// High-water mark per queue (reported by the serve metrics).
     max_depth: Vec<usize>,
+    /// Dispatches so far per queue — the next pop's sequence number.
+    popped: Vec<u64>,
+    /// Queue skipped by the dispatcher until this instant.
+    stalled_until: Vec<Option<Instant>>,
     closed: bool,
+}
+
+impl<T> AdmState<T> {
+    /// True while `i` must be skipped (stall active and not closed).
+    fn is_stalled(&self, i: usize) -> bool {
+        if self.closed {
+            return false;
+        }
+        match self.stalled_until[i] {
+            Some(until) => Instant::now() < until,
+            None => false,
+        }
+    }
 }
 
 /// Per-model bounded queues with fair round-robin dispatch.
 pub struct Admission<T> {
     inner: Mutex<AdmState<T>>,
-    /// Consumers sleep here when every queue is empty.
+    /// Consumers sleep here when every queue is empty (or stalled).
     ready: Condvar,
     /// Blocking producers sleep here when their queue is full.
     space: Condvar,
@@ -39,6 +74,8 @@ impl<T> Admission<T> {
                 queues: (0..models).map(|_| VecDeque::new()).collect(),
                 cursor: 0,
                 max_depth: vec![0; models],
+                popped: vec![0; models],
+                stalled_until: vec![None; models],
                 closed: false,
             }),
             ready: Condvar::new(),
@@ -62,7 +99,7 @@ impl<T> Admission<T> {
     /// Non-blocking admit; `Err(item)` when `model`'s queue is full or
     /// the fleet is closed — the caller records the shed.
     pub fn try_submit(&self, model: usize, item: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         if g.closed || g.queues[model].len() >= self.capacity {
             return Err(item);
         }
@@ -73,9 +110,9 @@ impl<T> Admission<T> {
 
     /// Blocking admit (backpressure); `Err(item)` only when closed.
     pub fn submit(&self, model: usize, item: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         while g.queues[model].len() >= self.capacity && !g.closed {
-            g = self.space.wait(g).unwrap();
+            g = wait(&self.space, g);
         }
         if g.closed {
             return Err(item);
@@ -88,27 +125,57 @@ impl<T> Admission<T> {
     /// Fair pop: scan the queues round-robin from the rotating cursor,
     /// blocking while all are empty. `None` once closed and drained.
     pub fn take(&self) -> Option<(usize, T)> {
-        let mut g = self.inner.lock().unwrap();
+        self.take_seq().map(|(m, _, item)| (m, item))
+    }
+
+    /// [`Admission::take`] plus the dispatched item's per-model sequence
+    /// number (0-based, assigned under the lock — deterministic for a
+    /// deterministic submission order).
+    pub fn take_seq(&self) -> Option<(usize, u64, T)> {
+        let mut g = lock(&self.inner);
         loop {
             let n = g.queues.len();
+            let mut stalled_pending = false;
             for k in 0..n {
                 let i = (g.cursor + k) % n;
+                if !g.queues[i].is_empty() && g.is_stalled(i) {
+                    stalled_pending = true;
+                    continue;
+                }
                 if let Some(item) = g.queues[i].pop_front() {
                     g.cursor = (i + 1) % n;
+                    let seq = g.popped[i];
+                    g.popped[i] += 1;
                     self.space.notify_all();
-                    return Some((i, item));
+                    return Some((i, seq, item));
                 }
             }
             if g.closed {
                 return None;
             }
-            g = self.ready.wait(g).unwrap();
+            // a stalled queue holds work nothing will signal for — poll
+            // on a short timeout so its expiry is noticed promptly
+            g = if stalled_pending {
+                wait_timeout(&self.ready, g, Duration::from_millis(1)).0
+            } else {
+                wait(&self.ready, g)
+            };
         }
+    }
+
+    /// Stall `model`'s queue: the dispatcher skips it until `hold`
+    /// elapses (or the admission closes). Fault injection only.
+    pub fn stall_for(&self, model: usize, hold: Duration) {
+        let mut g = lock(&self.inner);
+        g.stalled_until[model] = Some(Instant::now() + hold);
+        // wake dispatchers so ones sleeping on `ready` re-enter the
+        // timeout-polling branch
+        self.ready.notify_all();
     }
 
     /// Close: producers fail from now on, consumers drain then `None`.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         g.closed = true;
         self.ready.notify_all();
         self.space.notify_all();
@@ -116,12 +183,12 @@ impl<T> Admission<T> {
 
     /// Current depth of `model`'s queue.
     pub fn depth(&self, model: usize) -> usize {
-        self.inner.lock().unwrap().queues[model].len()
+        lock(&self.inner).queues[model].len()
     }
 
     /// High-water queue depth per model since construction.
     pub fn max_depths(&self) -> Vec<usize> {
-        self.inner.lock().unwrap().max_depth.clone()
+        lock(&self.inner).max_depth.clone()
     }
 }
 
@@ -207,5 +274,47 @@ mod tests {
         assert_eq!(a.capacity(), 1);
         assert!(a.try_submit(0, 1).is_ok());
         assert!(a.try_submit(0, 2).is_err());
+    }
+
+    #[test]
+    fn take_seq_numbers_each_model_independently() {
+        let a: Admission<u32> = Admission::new(2, 8);
+        a.try_submit(0, 10).unwrap();
+        a.try_submit(1, 20).unwrap();
+        a.try_submit(0, 11).unwrap();
+        let mut seqs = vec![Vec::new(), Vec::new()];
+        for _ in 0..3 {
+            let (m, seq, _) = a.take_seq().unwrap();
+            seqs[m].push(seq);
+        }
+        assert_eq!(seqs[0], vec![0, 1]);
+        assert_eq!(seqs[1], vec![0]);
+    }
+
+    #[test]
+    fn stalled_queue_is_skipped_then_recovers() {
+        let a: Admission<u32> = Admission::new(2, 8);
+        a.try_submit(0, 1).unwrap();
+        a.try_submit(1, 2).unwrap();
+        a.stall_for(0, Duration::from_millis(40));
+        // while stalled, only model 1 is dispatchable
+        assert_eq!(a.take().unwrap(), (1, 2));
+        // the stalled item is still there and dispatches after expiry
+        let t0 = std::time::Instant::now();
+        assert_eq!(a.take().unwrap(), (0, 1));
+        assert!(
+            t0.elapsed() >= Duration::from_millis(25),
+            "dispatch had to wait out the stall"
+        );
+    }
+
+    #[test]
+    fn close_overrides_stall_so_shutdown_drains() {
+        let a: Admission<u32> = Admission::new(1, 8);
+        a.try_submit(0, 5).unwrap();
+        a.stall_for(0, Duration::from_secs(3600));
+        a.close();
+        assert_eq!(a.take(), Some((0, 5)));
+        assert_eq!(a.take(), None);
     }
 }

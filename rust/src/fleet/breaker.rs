@@ -1,0 +1,248 @@
+//! Per-model circuit breaker.
+//!
+//! A model that keeps failing (panicking kernel, corrupted state,
+//! watermark violations) must not keep burning worker time and queue
+//! slots that healthy models could use. After `threshold` *consecutive*
+//! failures the breaker opens and the model is quarantined: submissions
+//! are shed at admission with a distinct reason (`shed_quarantined` in
+//! metrics, `dmo_requests_quarantine_shed_total` in Prometheus) without
+//! ever reaching a queue or worker. Two paths out of quarantine:
+//!
+//! * **cooldown** — after `cooldown` quarantine sheds, the breaker goes
+//!   half-open and admits exactly one probe request; success closes it,
+//!   failure re-opens it for another cooldown. Counting sheds instead of
+//!   wall-clock keeps the schedule deterministic for a seeded workload.
+//! * **reload** — a successful hot-reload of the model (new validated
+//!   generation) moves an open breaker straight to half-open: the fresh
+//!   artifact deserves an immediate probe.
+
+use crate::util::sync::lock;
+use std::sync::Mutex;
+
+/// Breaker tuning knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Consecutive failures that open the breaker (quarantine).
+    pub threshold: usize,
+    /// Quarantine sheds before a half-open probe is allowed.
+    pub cooldown: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            threshold: 3,
+            cooldown: 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Closed,
+    Open { sheds: usize },
+    HalfOpen { probe_inflight: bool },
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: State,
+    consecutive_failures: usize,
+}
+
+/// What the breaker says about a submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// Closed: admit normally.
+    Serve,
+    /// Half-open: admit as the single probe.
+    Probe,
+    /// Open (or probe already in flight): shed with quarantine reason.
+    Shed,
+}
+
+/// One model's breaker. All transitions happen under one small mutex;
+/// the lock is poison-tolerant like every other fleet lock.
+#[derive(Debug)]
+pub struct Breaker {
+    cfg: BreakerConfig,
+    inner: Mutex<Inner>,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Breaker {
+        Breaker {
+            cfg,
+            inner: Mutex::new(Inner {
+                state: State::Closed,
+                consecutive_failures: 0,
+            }),
+        }
+    }
+
+    /// Gate one submission.
+    pub fn admit(&self) -> Admit {
+        let mut g = lock(&self.inner);
+        match g.state {
+            State::Closed => Admit::Serve,
+            State::HalfOpen { probe_inflight: false } => {
+                g.state = State::HalfOpen {
+                    probe_inflight: true,
+                };
+                Admit::Probe
+            }
+            State::HalfOpen { probe_inflight: true } => Admit::Shed,
+            State::Open { sheds } => {
+                let sheds = sheds + 1;
+                if sheds >= self.cfg.cooldown {
+                    g.state = State::HalfOpen {
+                        probe_inflight: true,
+                    };
+                    Admit::Probe
+                } else {
+                    g.state = State::Open { sheds };
+                    Admit::Shed
+                }
+            }
+        }
+    }
+
+    /// A probe admission that never made it into the queue (queue full /
+    /// admission closed) — release the half-open slot so a later
+    /// submission can probe instead.
+    pub fn probe_aborted(&self) {
+        let mut g = lock(&self.inner);
+        if let State::HalfOpen { probe_inflight: true } = g.state {
+            g.state = State::HalfOpen {
+                probe_inflight: false,
+            };
+        }
+    }
+
+    /// A request for this model completed successfully.
+    pub fn on_success(&self) {
+        let mut g = lock(&self.inner);
+        match g.state {
+            State::HalfOpen { .. } => {
+                g.state = State::Closed;
+                g.consecutive_failures = 0;
+            }
+            State::Closed => g.consecutive_failures = 0,
+            // success from a request admitted before the breaker opened:
+            // ignore — recovery goes through the probe path
+            State::Open { .. } => {}
+        }
+    }
+
+    /// A request for this model failed (panic, exec error, watermark
+    /// violation, deadline expiry).
+    pub fn on_failure(&self) {
+        let mut g = lock(&self.inner);
+        g.consecutive_failures += 1;
+        match g.state {
+            State::HalfOpen { .. } => g.state = State::Open { sheds: 0 },
+            State::Closed if g.consecutive_failures >= self.cfg.threshold => {
+                g.state = State::Open { sheds: 0 }
+            }
+            _ => {}
+        }
+    }
+
+    /// A successful hot-reload installed a fresh validated generation:
+    /// an open breaker deserves an immediate probe.
+    pub fn on_reload(&self) {
+        let mut g = lock(&self.inner);
+        if let State::Open { .. } = g.state {
+            g.state = State::HalfOpen {
+                probe_inflight: false,
+            };
+        }
+    }
+
+    /// True while the model is quarantined (open).
+    pub fn is_open(&self) -> bool {
+        matches!(lock(&self.inner).state, State::Open { .. })
+    }
+
+    /// Gauge code for `dmo_model_state`: 0 = serving/closed,
+    /// 2 = quarantined (open), 3 = half-open probe. (1 = degraded is
+    /// owned by the registry and overrides 0 at render time.)
+    pub fn state_code(&self) -> u64 {
+        match lock(&self.inner).state {
+            State::Closed => 0,
+            State::Open { .. } => 2,
+            State::HalfOpen { .. } => 3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker(threshold: usize, cooldown: usize) -> Breaker {
+        Breaker::new(BreakerConfig {
+            threshold,
+            cooldown,
+        })
+    }
+
+    #[test]
+    fn opens_after_k_consecutive_failures_only() {
+        let b = breaker(3, 4);
+        b.on_failure();
+        b.on_failure();
+        b.on_success(); // resets the streak
+        b.on_failure();
+        b.on_failure();
+        assert!(!b.is_open(), "2 consecutive failures stay under K=3");
+        b.on_failure();
+        assert!(b.is_open(), "3rd consecutive failure opens the breaker");
+        assert_eq!(b.admit(), Admit::Shed);
+    }
+
+    #[test]
+    fn cooldown_sheds_then_probe_then_close() {
+        let b = breaker(1, 3);
+        b.on_failure();
+        assert!(b.is_open());
+        assert_eq!(b.admit(), Admit::Shed);
+        assert_eq!(b.admit(), Admit::Shed);
+        // 3rd quarantine decision reaches the cooldown: probe
+        assert_eq!(b.admit(), Admit::Probe);
+        assert_eq!(b.admit(), Admit::Shed, "only one probe in flight");
+        b.on_success();
+        assert_eq!(b.admit(), Admit::Serve, "probe success closes");
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let b = breaker(1, 2);
+        b.on_failure();
+        assert_eq!(b.admit(), Admit::Shed);
+        assert_eq!(b.admit(), Admit::Probe);
+        b.on_failure();
+        assert!(b.is_open(), "probe failure re-opens");
+        assert_eq!(b.admit(), Admit::Shed, "next cooldown restarts");
+    }
+
+    #[test]
+    fn reload_grants_immediate_probe() {
+        let b = breaker(1, 1000);
+        b.on_failure();
+        assert_eq!(b.admit(), Admit::Shed);
+        b.on_reload();
+        assert_eq!(b.admit(), Admit::Probe);
+        b.on_success();
+        assert_eq!(b.state_code(), 0);
+    }
+
+    #[test]
+    fn aborted_probe_releases_the_slot() {
+        let b = breaker(1, 1);
+        b.on_failure();
+        assert_eq!(b.admit(), Admit::Probe);
+        b.probe_aborted();
+        assert_eq!(b.admit(), Admit::Probe, "slot is free again");
+    }
+}

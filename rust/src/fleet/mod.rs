@@ -17,16 +17,27 @@
 //! - [`Fleet`] / [`fleet_serve`] — the running server and the
 //!   deterministic mixed-model load generator behind
 //!   `dmo serve --models a,b,c` and `benches/serve_scale.rs`.
+//! - [`Breaker`] — per-model circuit breaker: K consecutive failures
+//!   quarantine a model (shed with a distinct reason) without touching
+//!   its healthy peers; recovery probes on cooldown or reload.
+//!
+//! Fault tolerance is layered on, not bolted in: every request executes
+//! under `catch_unwind` (a panic settles as a per-request failure, the
+//! worker survives), and a watermark violation degrades the slot to its
+//! last-known-good generation or a freshly proven safe plan
+//! ([`Registry::degrade`]).
 
 pub mod admission;
+pub mod breaker;
 pub mod pool;
 pub mod registry;
 pub mod server;
 
 pub use admission::Admission;
+pub use breaker::{Admit, Breaker, BreakerConfig};
 pub use pool::{ArenaPool, PooledArena};
-pub use registry::{ModelSpec, ModelState, Registry, ReloadInfo};
+pub use registry::{DegradeInfo, DegradeMode, ModelSpec, ModelState, Registry, ReloadInfo};
 pub use server::{
-    fleet_serve, AdmissionPolicy, Fleet, FleetConfig, FleetReply, FleetReport, FleetRequest,
-    ModelReport,
+    fleet_serve, AdmissionPolicy, Fleet, FleetConfig, FleetOptions, FleetReply, FleetReport,
+    FleetRequest, FleetShutdown, ModelReport,
 };

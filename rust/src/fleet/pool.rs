@@ -17,6 +17,7 @@
 //! bit-identical outputs.
 
 use crate::ops::exec::Arena;
+use crate::util::sync::lock;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -62,7 +63,7 @@ impl ArenaPool {
     /// Take an arena, preferring a pooled one; allocates (and counts it)
     /// only when more than `capacity` acquisitions are in flight.
     pub fn acquire(self: &Arc<Self>) -> PooledArena {
-        let pooled = self.free.lock().unwrap().pop();
+        let pooled = lock(&self.free).pop();
         let arena = match pooled {
             Some(a) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -101,11 +102,15 @@ impl ArenaPool {
 
     /// Arenas currently resident and idle.
     pub fn idle(&self) -> usize {
-        self.free.lock().unwrap().len()
+        lock(&self.free).len()
     }
 
-    fn release(&self, arena: Arena) {
-        let mut free = self.free.lock().unwrap();
+    fn release(&self, mut arena: Arena) {
+        // a panicking request can unwind with its profiling sink still
+        // installed — a returned arena must never carry one request's
+        // sink into the next
+        arena.set_sink(None);
+        let mut free = lock(&self.free);
         // never retain beyond K, and never retain a foreign-sized arena
         // (the pool is per model-generation, so sizes only mismatch if a
         // caller moved a guard across pools — drop, don't poison)

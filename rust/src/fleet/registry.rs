@@ -16,9 +16,10 @@ use crate::interp;
 use crate::ir::graph::{Graph, TensorId};
 use crate::ops::exec::{execute_op, gen_weights, OpIo, Region};
 use crate::planner::{Plan, PlanArtifact, Planner};
+use crate::util::sync::lock;
 use anyhow::{ensure, Context, Result};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// How a fleet model is sourced at registration.
@@ -132,6 +133,22 @@ impl ModelState {
     /// before reading it, so stale bytes from the previous request can
     /// never leak into the result.
     pub fn execute(&self, arena: &mut crate::ops::exec::Arena, input: &[f32]) -> Result<Vec<f32>> {
+        self.execute_with(arena, input, |_, _| Ok(()))
+    }
+
+    /// [`ModelState::execute`] with a per-step hook, called with the step
+    /// index before each op executes. The fleet's fault injector uses the
+    /// hook to corrupt/delay/panic at a chosen step; everything else goes
+    /// through [`ModelState::execute`], whose hook is a no-op.
+    pub fn execute_with<F>(
+        &self,
+        arena: &mut crate::ops::exec::Arena,
+        input: &[f32],
+        mut hook: F,
+    ) -> Result<Vec<f32>>
+    where
+        F: FnMut(usize, &mut crate::ops::exec::Arena) -> Result<()>,
+    {
         let pg = self.planned_graph();
         ensure!(
             pg.inputs.len() == 1 && pg.outputs.len() == 1,
@@ -159,7 +176,8 @@ impl ModelState {
             self.regions[in_id.0].context("input tensor unplaced")?,
             input,
         );
-        for &opid in &self.plan.order.0 {
+        for (step, &opid) in self.plan.order.0.iter().enumerate() {
+            hook(step, arena)?;
             let op = pg.op(opid);
             let in_shapes: Vec<&crate::ir::Shape> =
                 op.inputs.iter().map(|&t| &pg.tensor(t).shape).collect();
@@ -197,10 +215,42 @@ pub struct ReloadInfo {
     pub new_peak: usize,
 }
 
+/// How [`Registry::degrade`] recovered the slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradeMode {
+    /// Pinned the last-known-good generation (survived a prior reload).
+    PinnedPrevious,
+    /// No previous generation — freshly planned safe plan (no overlap
+    /// relaxation, no rewrites).
+    SafePlan,
+    /// Slot was already degraded; no further action taken.
+    AlreadyDegraded,
+}
+
+/// Result of a [`Registry::degrade`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct DegradeInfo {
+    pub mode: DegradeMode,
+    /// Generation now serving the slot.
+    pub generation: u64,
+    /// Its arena peak — for a safe plan, the un-overlapped footprint.
+    pub peak: usize,
+}
+
 struct Slot {
     name: String,
     current: Mutex<Arc<ModelState>>,
+    /// Last-known-good generation displaced by the latest successful
+    /// reload — the pin target when `current` must be abandoned.
+    previous: Mutex<Option<Arc<ModelState>>>,
+    /// Slot is serving a degraded generation (pinned previous or safe
+    /// plan); cleared by the next successful reload.
+    degraded: AtomicBool,
     reloads: AtomicUsize,
+    /// Degrade transitions (not per-request; deterministic per fault).
+    degrades: AtomicUsize,
+    /// Reloads rejected by validation, serving generation untouched.
+    reload_rejections: AtomicUsize,
 }
 
 /// The fleet's model table: index-addressed slots, each holding the
@@ -237,7 +287,11 @@ impl Registry {
             slots.push(Slot {
                 name: spec.name.clone(),
                 current: Mutex::new(Arc::new(state)),
+                previous: Mutex::new(None),
+                degraded: AtomicBool::new(false),
                 reloads: AtomicUsize::new(0),
+                degrades: AtomicUsize::new(0),
+                reload_rejections: AtomicUsize::new(0),
             });
         }
         Ok(Registry { slots })
@@ -264,12 +318,27 @@ impl Registry {
     /// The current generation of slot `m`. The clone keeps that
     /// generation alive for the caller even across a concurrent reload.
     pub fn current(&self, m: usize) -> Arc<ModelState> {
-        self.slots[m].current.lock().unwrap().clone()
+        lock(&self.slots[m].current).clone()
     }
 
     /// Times slot `m` was successfully hot-reloaded.
     pub fn reloads(&self, m: usize) -> usize {
         self.slots[m].reloads.load(Ordering::Relaxed)
+    }
+
+    /// True while slot `m` serves a degraded generation.
+    pub fn is_degraded(&self, m: usize) -> bool {
+        self.slots[m].degraded.load(Ordering::Relaxed)
+    }
+
+    /// Degrade transitions slot `m` has performed.
+    pub fn degrades(&self, m: usize) -> usize {
+        self.slots[m].degrades.load(Ordering::Relaxed)
+    }
+
+    /// Reload attempts slot `m` rejected at validation.
+    pub fn reload_rejections(&self, m: usize) -> usize {
+        self.slots[m].reload_rejections.load(Ordering::Relaxed)
     }
 
     /// Atomically swap slot `m` to a re-planned artifact.
@@ -283,7 +352,7 @@ impl Registry {
     pub fn reload(&self, m: usize, artifact: PlanArtifact) -> Result<ReloadInfo> {
         let slot = &self.slots[m];
         let (old_generation, old_peak, graph, arenas, weight_seed) = {
-            let cur = slot.current.lock().unwrap();
+            let cur = lock(&slot.current);
             (
                 cur.generation,
                 cur.plan.peak(),
@@ -294,23 +363,106 @@ impl Registry {
         };
         // validate OUTSIDE the slot lock: a slow (or failing) artifact
         // must never stall or corrupt the serving path
-        let state = ModelState::new(
+        let state = match ModelState::new(
             &slot.name,
             graph,
             artifact,
             old_generation + 1,
             arenas,
             weight_seed,
-        )
-        .with_context(|| format!("hot-reload rejected for `{}`", slot.name))?;
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                slot.reload_rejections.fetch_add(1, Ordering::Relaxed);
+                return Err(e.context(format!("hot-reload rejected for `{}`", slot.name)));
+            }
+        };
         let info = ReloadInfo {
             generation: state.generation,
             old_peak,
             new_peak: state.plan.peak(),
         };
-        *slot.current.lock().unwrap() = Arc::new(state);
+        let old = {
+            let mut cur = lock(&slot.current);
+            std::mem::replace(&mut *cur, Arc::new(state))
+        };
+        // the displaced generation becomes the pin target for degrade,
+        // and a fresh validated generation clears any degraded flag
+        *lock(&slot.previous) = Some(old);
+        slot.degraded.store(false, Ordering::Relaxed);
         slot.reloads.fetch_add(1, Ordering::Relaxed);
         Ok(info)
+    }
+
+    /// Abandon slot `m`'s current generation — its watermark check
+    /// tripped, so its results can no longer be trusted. Pins the
+    /// last-known-good generation when one exists; otherwise plans and
+    /// proves a fresh *safe plan* (no overlap relaxation, no rewrites —
+    /// every buffer disjoint) and installs it. The slot stays flagged
+    /// degraded until a successful reload. Idempotent: a second caller
+    /// (another worker hitting the same fault) is a no-op.
+    pub fn degrade(&self, m: usize) -> Result<DegradeInfo> {
+        let slot = &self.slots[m];
+        if slot.degraded.swap(true, Ordering::SeqCst) {
+            let cur = lock(&slot.current);
+            return Ok(DegradeInfo {
+                mode: DegradeMode::AlreadyDegraded,
+                generation: cur.generation,
+                peak: cur.plan.peak(),
+            });
+        }
+        if let Some(prev) = lock(&slot.previous).take() {
+            let info = DegradeInfo {
+                mode: DegradeMode::PinnedPrevious,
+                generation: prev.generation,
+                peak: prev.plan.peak(),
+            };
+            *lock(&slot.current) = prev;
+            slot.degrades.fetch_add(1, Ordering::Relaxed);
+            return Ok(info);
+        }
+        let (old_generation, graph, arenas, weight_seed) = {
+            let cur = lock(&slot.current);
+            (
+                cur.generation,
+                cur.graph.clone(),
+                cur.pool.capacity(),
+                cur.weight_seed,
+            )
+        };
+        // plan + prove outside the slot lock, like reload
+        let built = Planner::safe_for_graph(&graph)
+            .plan()
+            .with_context(|| format!("planning safe fallback for `{}`", slot.name))
+            .and_then(|plan| {
+                let artifact = PlanArtifact::from_plan(&graph, &plan);
+                ModelState::new(
+                    &slot.name,
+                    graph.clone(),
+                    artifact,
+                    old_generation + 1,
+                    arenas,
+                    weight_seed,
+                )
+            });
+        match built {
+            Ok(state) => {
+                let info = DegradeInfo {
+                    mode: DegradeMode::SafePlan,
+                    generation: state.generation,
+                    peak: state.plan.peak(),
+                };
+                *lock(&slot.current) = Arc::new(state);
+                slot.degrades.fetch_add(1, Ordering::Relaxed);
+                Ok(info)
+            }
+            Err(e) => {
+                // nothing installed — leave the flag clear so a later
+                // attempt (or reload) can still recover the slot
+                slot.degraded.store(false, Ordering::SeqCst);
+                Err(e.context(format!("degrading `{}` failed", slot.name)))
+            }
+        }
     }
 }
 
@@ -353,6 +505,64 @@ mod tests {
         let mut arena = old.acquire_arena();
         let input = vec![0.5f32; old.input_elements()];
         old.execute(&mut arena, &input).unwrap();
+    }
+
+    #[test]
+    fn degrade_without_previous_installs_a_safe_plan() {
+        let reg = Registry::load(&[ModelSpec::planned("tiny")], 2, 1, 42).unwrap();
+        let dmo_peak = reg.current(0).plan.peak();
+        let info = reg.degrade(0).unwrap();
+        assert_eq!(info.mode, DegradeMode::SafePlan);
+        assert!(reg.is_degraded(0));
+        assert_eq!(reg.degrades(0), 1);
+        let cur = reg.current(0);
+        assert_eq!(cur.generation, 1);
+        assert!(
+            cur.plan.peak() >= dmo_peak,
+            "safe plan gives every buffer disjoint placement — never below the DMO peak"
+        );
+        assert!(cur.plan.alloc.applied.is_empty(), "no overlaps in a safe plan");
+        // degraded but still serving, bit-identically provable
+        let mut arena = cur.acquire_arena();
+        let input = vec![0.5f32; cur.input_elements()];
+        cur.execute(&mut arena, &input).unwrap();
+        // second degrade is a no-op
+        let again = reg.degrade(0).unwrap();
+        assert_eq!(again.mode, DegradeMode::AlreadyDegraded);
+        assert_eq!(reg.degrades(0), 1);
+    }
+
+    #[test]
+    fn degrade_pins_previous_generation_and_reload_clears_it() {
+        let reg = Registry::load(&[ModelSpec::planned("tiny")], 2, 1, 42).unwrap();
+        let g = crate::models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .strategies(&[crate::planner::Strategy::Eager])
+            .plan()
+            .unwrap();
+        reg.reload(0, PlanArtifact::from_plan(&g, &plan)).unwrap();
+        assert_eq!(reg.current(0).generation, 1);
+        let info = reg.degrade(0).unwrap();
+        assert_eq!(info.mode, DegradeMode::PinnedPrevious);
+        assert_eq!(reg.current(0).generation, 0, "pinned last-known-good");
+        assert!(reg.is_degraded(0));
+        // a fresh validated reload recovers the slot
+        reg.reload(0, PlanArtifact::from_plan(&g, &plan)).unwrap();
+        assert!(!reg.is_degraded(0), "successful reload clears degraded");
+    }
+
+    #[test]
+    fn rejected_reload_counts_and_leaves_generation_untouched() {
+        let reg = Registry::load(&[ModelSpec::planned("tiny")], 2, 1, 42).unwrap();
+        let bad = crate::fault::FaultPlan::garble(
+            &reg.current(0).artifact,
+            crate::fault::GarbleMode::FingerprintFlip,
+        );
+        assert!(reg.reload(0, bad).is_err());
+        assert_eq!(reg.reload_rejections(0), 1);
+        assert_eq!(reg.current(0).generation, 0);
+        assert_eq!(reg.reloads(0), 0);
     }
 
     #[test]

@@ -7,16 +7,34 @@
 //! [`fleet_serve`] wraps it in a deterministic load generator — the
 //! `dmo serve --models …` entry point and the `serve_scale` bench both
 //! drive that function.
+//!
+//! Fault tolerance: every request executes inside `catch_unwind`, so a
+//! panicking kernel (or an injected [`crate::fault::FaultPlan`] fault)
+//! settles as a per-request failure — the worker thread survives, the
+//! pooled arena returns sink-free, and the reply channel always gets an
+//! answer (success, or an error the client may retry). A per-model
+//! [`Breaker`] quarantines a model after K consecutive failures without
+//! touching its healthy peers, and a watermark violation degrades the
+//! slot to its last-known-good generation or a freshly proven safe plan
+//! ([`Registry::degrade`]).
 
 use super::admission::Admission;
-use super::registry::{ModelSpec, Registry, ReloadInfo};
+use super::breaker::{Admit, Breaker, BreakerConfig};
+use super::registry::{ModelSpec, ModelState, Registry, ReloadInfo};
 use crate::coordinator::Metrics;
+use crate::fault::{ExecFaults, FaultKind, FaultPlan, FaultSpec};
+use crate::ir::DType;
+use crate::obs::log as obs_log;
 use crate::obs::prom::PromText;
 use crate::obs::trace as otrace;
-use crate::obs::log as obs_log;
+use crate::obs::watermark::{WatermarkSink, WatermarkViolation};
+use crate::ops::exec::{Arena, EventKind};
 use crate::planner::PlanArtifact;
 use crate::util::json;
+use crate::util::rng::Rng;
+use crate::util::sync::lock;
 use anyhow::{Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -28,10 +46,13 @@ pub struct FleetRequest {
     pub id: u64,
     pub data: Vec<f32>,
     pub enqueued: Instant,
+    /// Remaining client retries if this attempt fails (0 = final).
+    pub attempts_left: u32,
     pub reply: mpsc::Sender<FleetReply>,
 }
 
-/// One completed fleet inference.
+/// One settled fleet attempt: a successful inference, or a failure the
+/// client may retry while `attempts_left > 0`.
 pub struct FleetReply {
     pub id: u64,
     pub model: usize,
@@ -40,6 +61,12 @@ pub struct FleetReply {
     pub generation: u64,
     pub output: Vec<f32>,
     pub latency: Duration,
+    /// `Some(reason)` when the attempt failed (panic, exec error,
+    /// watermark violation, blown deadline). `output` is empty then.
+    pub error: Option<String>,
+    /// Echo of the request's retry budget, so the client can decide
+    /// whether to resubmit without tracking state per id.
+    pub attempts_left: u32,
 }
 
 /// Overload behaviour at the admission edge.
@@ -51,24 +78,69 @@ pub enum AdmissionPolicy {
     Shed,
 }
 
-/// A running fleet: registry + admission + worker pool (+ watcher).
+/// Fault-tolerance knobs for a running fleet. The default is the
+/// pre-fault behaviour: no injection, no deadline, no watermark
+/// re-checking per request — only the panic isolation and the breaker
+/// (which never opens unless something actually fails) are always on.
+#[derive(Clone, Default)]
+pub struct FleetOptions {
+    /// Per-model circuit-breaker tuning.
+    pub breaker: BreakerConfig,
+    /// Deterministic fault schedule to inject (tests / `--faults`).
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Per-request deadline measured from enqueue; expiry settles the
+    /// attempt as a failure (retryable like any other).
+    pub deadline: Option<Duration>,
+    /// Install a [`WatermarkSink`] per request and fail the attempt when
+    /// the observed high water exceeds the plan's peak — the trigger for
+    /// safe-plan degradation. Costs event tracing per op, so it is
+    /// opt-in (on whenever faults are injected).
+    pub watermark_checks: bool,
+}
+
+/// A running fleet: registry + admission + breakers + worker pool.
 pub struct Fleet {
     pub registry: Arc<Registry>,
     admission: Arc<Admission<FleetRequest>>,
     metrics: Arc<Vec<Mutex<Metrics>>>,
-    workers: Vec<thread::JoinHandle<Result<()>>>,
+    breakers: Arc<Vec<Breaker>>,
+    options: FleetOptions,
+    workers: Vec<thread::JoinHandle<()>>,
     watcher: Option<(Arc<AtomicBool>, thread::JoinHandle<()>)>,
     metrics_writer: Option<(Arc<AtomicBool>, thread::JoinHandle<()>, PathBuf)>,
 }
 
+/// How one attempt went wrong, with enough typing for the settle path.
+struct AttemptError {
+    msg: String,
+    deadline: bool,
+    watermark: bool,
+}
+
 impl Fleet {
-    /// Spawn `workers` threads draining the fair admission queues.
-    /// `queue_capacity` bounds each model's queue.
+    /// Spawn `workers` threads draining the fair admission queues with
+    /// default [`FleetOptions`]. `queue_capacity` bounds each model's
+    /// queue.
     pub fn start(registry: Registry, workers: usize, queue_capacity: usize) -> Fleet {
+        Fleet::start_with(registry, workers, queue_capacity, FleetOptions::default())
+    }
+
+    /// [`Fleet::start`] with explicit fault-tolerance options.
+    pub fn start_with(
+        registry: Registry,
+        workers: usize,
+        queue_capacity: usize,
+        options: FleetOptions,
+    ) -> Fleet {
         let registry = Arc::new(registry);
         let admission = Arc::new(Admission::new(registry.len(), queue_capacity));
         let metrics: Arc<Vec<Mutex<Metrics>>> =
             Arc::new((0..registry.len()).map(|_| Mutex::new(Metrics::default())).collect());
+        let breakers: Arc<Vec<Breaker>> = Arc::new(
+            (0..registry.len())
+                .map(|_| Breaker::new(options.breaker))
+                .collect(),
+        );
         let n = if workers == 0 {
             thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
         } else {
@@ -79,45 +151,14 @@ impl Fleet {
                 let reg = registry.clone();
                 let adm = admission.clone();
                 let met = metrics.clone();
+                let brk = breakers.clone();
+                let opts = options.clone();
                 thread::Builder::new()
                     .name(format!("fleet-worker-{w}"))
-                    .spawn(move || -> Result<()> {
-                        while let Some((m, req)) = adm.take() {
-                            // time spent queued before a worker picked it up
-                            let queue_us = req.enqueued.elapsed().as_micros() as u64;
-                            let mut sp = otrace::span("request", "fleet");
-                            // the Arc pins this request to one generation;
-                            // a concurrent reload drains behind it
-                            let state = reg.current(m);
-                            let mut arena = {
-                                let _acquire = otrace::span("arena_acquire", "fleet");
-                                state.acquire_arena()
-                            };
-                            let output = {
-                                let _exec = otrace::span("exec", "fleet");
-                                state
-                                    .execute(&mut arena, &req.data)
-                                    .with_context(|| format!("serving `{}`", state.name))?
-                            };
-                            drop(arena); // back to the pool before bookkeeping
-                            let latency = req.enqueued.elapsed();
-                            if sp.is_active() {
-                                sp.arg("model", json::s(&state.name));
-                                sp.arg("id", json::num(req.id as usize));
-                                sp.arg("generation", json::num(state.generation as usize));
-                                sp.arg("queue_us", json::num(queue_us as usize));
-                            }
-                            drop(sp); // the reply send is outside the span
-                            met[m].lock().unwrap().record(latency);
-                            let _ = req.reply.send(FleetReply {
-                                id: req.id,
-                                model: m,
-                                generation: state.generation,
-                                output,
-                                latency,
-                            });
+                    .spawn(move || {
+                        while let Some((m, seq, req)) = adm.take_seq() {
+                            handle_one(m, seq, req, &reg, &met, &brk, &opts);
                         }
-                        Ok(())
                     })
                     .expect("spawning fleet worker")
             })
@@ -126,6 +167,8 @@ impl Fleet {
             registry,
             admission,
             metrics,
+            breakers,
+            options,
             workers: handles,
             watcher: None,
             metrics_writer: None,
@@ -135,8 +178,14 @@ impl Fleet {
     /// Admit a request for model `m` under `policy`. Returns `false`
     /// when the request was shed (recorded in that model's [`Metrics`] —
     /// the single source of truth the reports read) or the fleet is
-    /// closed.
+    /// closed. A quarantined model sheds here, at the breaker, before
+    /// the request ever costs a queue slot or a worker.
     pub fn submit(&self, m: usize, req: FleetRequest, policy: AdmissionPolicy) -> bool {
+        let gate = self.breakers[m].admit();
+        if gate == Admit::Shed {
+            lock(&self.metrics[m]).record_shed_quarantined();
+            return false;
+        }
         let outcome = match policy {
             AdmissionPolicy::Block => self.admission.submit(m, req),
             AdmissionPolicy::Shed => self.admission.try_submit(m, req),
@@ -144,16 +193,36 @@ impl Fleet {
         match outcome {
             Ok(()) => true,
             Err(_rejected) => {
-                self.metrics[m].lock().unwrap().record_shed();
+                if gate == Admit::Probe {
+                    // the half-open probe never made it into a queue —
+                    // free the slot for the next submission
+                    self.breakers[m].probe_aborted();
+                }
+                lock(&self.metrics[m]).record_shed();
                 false
             }
         }
     }
 
     /// Hot-reload slot `m` from a re-planned artifact (see
-    /// [`Registry::reload`] for the validation and drain semantics).
+    /// [`Registry::reload`] for the validation and drain semantics). A
+    /// successful reload moves an open breaker to half-open: the fresh
+    /// validated generation deserves an immediate probe.
     pub fn reload(&self, m: usize, artifact: PlanArtifact) -> Result<ReloadInfo> {
-        self.registry.reload(m, artifact)
+        let info = self.registry.reload(m, artifact)?;
+        self.breakers[m].on_reload();
+        Ok(info)
+    }
+
+    /// Stall model `m`'s admission queue for `hold` (fault injection —
+    /// see [`Admission::stall_for`]).
+    pub fn stall(&self, m: usize, hold: Duration) {
+        self.admission.stall_for(m, hold);
+    }
+
+    /// Model `m`'s circuit breaker (tests inspect quarantine state).
+    pub fn breaker(&self, m: usize) -> &Breaker {
+        &self.breakers[m]
     }
 
     /// Watch `dir` for `<model>.plan.json` artifact drops and hot-reload
@@ -165,6 +234,7 @@ impl Fleet {
         let stop = Arc::new(AtomicBool::new(false));
         let flag = stop.clone();
         let registry = self.registry.clone();
+        let breakers = self.breakers.clone();
         let handle = thread::Builder::new()
             .name("fleet-reload-watch".into())
             .spawn(move || {
@@ -185,13 +255,16 @@ impl Fleet {
                             match PlanArtifact::load(path).map_err(anyhow::Error::from)
                                 .and_then(|a| registry.reload(m, a))
                             {
-                                Ok(info) => obs_log::info(format_args!(
-                                    "fleet: hot-reloaded `{}` → generation {} (arena {} → {})",
-                                    registry.names()[m],
-                                    info.generation,
-                                    info.old_peak,
-                                    info.new_peak
-                                )),
+                                Ok(info) => {
+                                    breakers[m].on_reload();
+                                    obs_log::info(format_args!(
+                                        "fleet: hot-reloaded `{}` → generation {} (arena {} → {})",
+                                        registry.names()[m],
+                                        info.generation,
+                                        info.old_peak,
+                                        info.new_peak
+                                    ))
+                                }
                                 Err(e) => obs_log::warn(format_args!(
                                     "fleet: reload of `{}` from {} rejected ({e:#}); old \
                                      generation keeps serving",
@@ -214,10 +287,19 @@ impl Fleet {
     }
 
     /// Render a Prometheus text-exposition snapshot of the fleet's
-    /// current state: per-model request counters, latency histograms,
-    /// queue-depth and arena-pool gauges, generation/reload counters.
+    /// current state: per-model request counters (completed / shed /
+    /// failed / retried / quarantine-shed / deadline / degraded),
+    /// latency histograms, queue-depth and arena-pool gauges,
+    /// generation / reload / degrade counters, the per-model state gauge
+    /// and — when injecting — the fault counters.
     pub fn prometheus_snapshot(&self) -> String {
-        render_prometheus(&self.registry, &self.admission, &self.metrics)
+        render_prometheus(
+            &self.registry,
+            &self.admission,
+            &self.metrics,
+            &self.breakers,
+            self.options.faults.as_deref(),
+        )
     }
 
     /// Write the current snapshot to `path` atomically (tmp + rename, so
@@ -235,12 +317,20 @@ impl Fleet {
         let registry = self.registry.clone();
         let admission = self.admission.clone();
         let metrics = self.metrics.clone();
+        let breakers = self.breakers.clone();
+        let faults = self.options.faults.clone();
         let out = path.clone();
         let handle = thread::Builder::new()
             .name("fleet-metrics-writer".into())
             .spawn(move || {
                 while !flag.load(Ordering::Relaxed) {
-                    let text = render_prometheus(&registry, &admission, &metrics);
+                    let text = render_prometheus(
+                        &registry,
+                        &admission,
+                        &metrics,
+                        &breakers,
+                        faults.as_deref(),
+                    );
                     if let Err(e) = write_atomic(&out, &text) {
                         obs_log::warn(format_args!(
                             "fleet: writing metrics snapshot to {} failed: {e}",
@@ -255,15 +345,24 @@ impl Fleet {
     }
 
     /// Stop admitting, drain the queues, join every worker and the
-    /// watcher, and assemble the per-model reports.
-    pub fn shutdown(mut self) -> Result<Vec<ModelReport>> {
+    /// watcher, and assemble the per-model reports. A worker thread that
+    /// died (it should never: request panics are caught per attempt)
+    /// becomes an entry in [`FleetShutdown::worker_errors`] instead of
+    /// tearing down the whole report.
+    pub fn shutdown(mut self) -> Result<FleetShutdown> {
         self.admission.close();
         if let Some((stop, handle)) = self.watcher.take() {
             stop.store(true, Ordering::Relaxed);
             let _ = handle.join();
         }
-        for h in self.workers.drain(..) {
-            h.join().expect("fleet worker panicked")?;
+        let mut worker_errors = Vec::new();
+        for (w, h) in self.workers.drain(..).enumerate() {
+            if let Err(payload) = h.join() {
+                worker_errors.push(format!(
+                    "fleet-worker-{w} died outside request isolation: {}",
+                    panic_message(payload.as_ref())
+                ));
+            }
         }
         if let Some((stop, handle, path)) = self.metrics_writer.take() {
             stop.store(true, Ordering::Relaxed);
@@ -277,14 +376,15 @@ impl Fleet {
             }
         }
         let max_depths = self.admission.max_depths();
-        let reports = (0..self.registry.len())
+        let per_model = (0..self.registry.len())
             .map(|m| {
-                let metrics = self.metrics[m].lock().unwrap().clone();
+                let metrics = lock(&self.metrics[m]).clone();
                 let state = self.registry.current(m);
                 ModelReport {
                     model: state.name.clone(),
                     completed: metrics.count(),
                     shed: metrics.shed,
+                    failed: metrics.failed,
                     arena_bytes: state.plan.peak(),
                     pool_hits: state.pool.hits(),
                     pool_allocs: state.pool.allocs(),
@@ -295,11 +395,284 @@ impl Fleet {
                     queue_capacity: self.admission.capacity(),
                     generation: state.generation,
                     reloads: self.registry.reloads(m),
+                    reload_rejections: self.registry.reload_rejections(m),
+                    degraded: self.registry.is_degraded(m),
+                    degrades: self.registry.degrades(m),
+                    quarantined: self.breakers[m].is_open(),
                     metrics,
                 }
             })
             .collect();
-        Ok(reports)
+        Ok(FleetShutdown {
+            per_model,
+            worker_errors,
+        })
+    }
+}
+
+/// Everything [`Fleet::shutdown`] hands back.
+#[derive(Debug, Clone)]
+pub struct FleetShutdown {
+    pub per_model: Vec<ModelReport>,
+    /// Worker threads that died outside per-request isolation (expected
+    /// empty; populated instead of panicking the shutdown path).
+    pub worker_errors: Vec<String>,
+}
+
+/// Serve one dispatched request end to end: deadline gates, guarded
+/// execution, breaker/metrics bookkeeping, and **exactly one** reply —
+/// success or failure, the client is never left hanging.
+fn handle_one(
+    m: usize,
+    seq: u64,
+    req: FleetRequest,
+    reg: &Registry,
+    met: &[Mutex<Metrics>],
+    breakers: &[Breaker],
+    opts: &FleetOptions,
+) {
+    // time spent queued before a worker picked it up
+    let queue_us = req.enqueued.elapsed().as_micros() as u64;
+    let mut sp = otrace::span("request", "fleet");
+    // the Arc pins this request to one generation; a concurrent reload
+    // (or degrade) drains behind it
+    let state = reg.current(m);
+    let expired = |stage: &str| AttemptError {
+        msg: format!(
+            "deadline expired {stage} ({:?} elapsed)",
+            req.enqueued.elapsed()
+        ),
+        deadline: true,
+        watermark: false,
+    };
+    let outcome = if matches!(opts.deadline, Some(dl) if req.enqueued.elapsed() >= dl) {
+        Err(expired("before execution"))
+    } else {
+        match execute_guarded(&state, &req.data, m, seq, opts) {
+            Ok(out) if matches!(opts.deadline, Some(dl) if req.enqueued.elapsed() >= dl) => {
+                // the answer arrived too late to be an answer
+                drop(out);
+                Err(expired("during execution"))
+            }
+            other => other,
+        }
+    };
+    let latency = req.enqueued.elapsed();
+    if sp.is_active() {
+        sp.arg("model", json::s(&state.name));
+        sp.arg("id", json::num(req.id as usize));
+        sp.arg("generation", json::num(state.generation as usize));
+        sp.arg("queue_us", json::num(queue_us as usize));
+        sp.arg("seq", json::num(seq as usize));
+        if let Err(e) = &outcome {
+            sp.arg("error", json::s(&e.msg));
+        }
+    }
+    drop(sp); // the settle path is outside the span
+    match outcome {
+        Ok(output) => {
+            breakers[m].on_success();
+            let degraded = reg.is_degraded(m);
+            {
+                let mut g = lock(&met[m]);
+                g.record(latency);
+                if degraded {
+                    g.record_degraded_served();
+                }
+            }
+            let _ = req.reply.send(FleetReply {
+                id: req.id,
+                model: m,
+                generation: state.generation,
+                output,
+                latency,
+                error: None,
+                attempts_left: req.attempts_left,
+            });
+        }
+        Err(err) => {
+            if err.watermark {
+                // the generation's results can no longer be trusted —
+                // pin last-known-good or fall back to a safe plan
+                match reg.degrade(m) {
+                    Ok(info) => obs_log::warn(format_args!(
+                        "fleet: watermark violation on `{}` — degraded to generation {} \
+                         ({:?}, arena {} B)",
+                        state.name, info.generation, info.mode, info.peak
+                    )),
+                    Err(e) => obs_log::warn(format_args!(
+                        "fleet: watermark violation on `{}` but degrade failed: {e:#}",
+                        state.name
+                    )),
+                }
+            }
+            breakers[m].on_failure();
+            let retryable = req.attempts_left > 0;
+            {
+                let mut g = lock(&met[m]);
+                if err.deadline {
+                    g.record_deadline_expired();
+                }
+                if retryable {
+                    g.record_retry();
+                } else {
+                    g.record_failed();
+                }
+            }
+            obs_log::warn(format_args!(
+                "fleet: request {} on `{}` failed ({}retryable): {}",
+                req.id,
+                state.name,
+                if retryable { "" } else { "not " },
+                err.msg
+            ));
+            let _ = req.reply.send(FleetReply {
+                id: req.id,
+                model: m,
+                generation: state.generation,
+                output: Vec::new(),
+                latency,
+                error: Some(err.msg),
+                attempts_left: req.attempts_left,
+            });
+        }
+    }
+}
+
+/// Execute one attempt inside `catch_unwind`: a panic (organic or
+/// injected) unwinds through the pooled-arena guard — which returns the
+/// buffer sink-free — and settles as an [`AttemptError`] instead of
+/// killing the worker.
+fn execute_guarded(
+    state: &ModelState,
+    data: &[f32],
+    m: usize,
+    seq: u64,
+    opts: &FleetOptions,
+) -> std::result::Result<Vec<f32>, AttemptError> {
+    let fault = opts
+        .faults
+        .as_ref()
+        .map(|f| f.exec_faults(m, seq))
+        .unwrap_or_default();
+    let caught = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<f32>> {
+        let mut arena = {
+            let _acquire = otrace::span("arena_acquire", "fleet");
+            state.acquire_arena()
+        };
+        let wm = if opts.watermark_checks {
+            let sink = WatermarkSink::new(arena.len());
+            arena.set_sink(Some(Box::new(sink.clone())));
+            Some(sink)
+        } else {
+            None
+        };
+        // inject at the midpoint op: early enough that every fault class
+        // fires even on short orders, late enough that real stores have
+        // happened and corruption is observable
+        let mid = state.plan.order.0.len() / 2;
+        let out = {
+            let _exec = otrace::span("exec", "fleet");
+            state.execute_with(&mut arena, data, |step, arena| {
+                if step == mid && fault.any() {
+                    inject_exec_faults(&fault, arena, opts.faults.as_deref(), &state.name);
+                }
+                Ok(())
+            })?
+        };
+        arena.set_sink(None);
+        drop(arena); // back to the pool before the watermark verdict
+        if let Some(sink) = wm {
+            let observed = sink.high_water();
+            if observed > state.plan.peak() {
+                return Err(WatermarkViolation {
+                    model: state.name.clone(),
+                    observed_peak: observed,
+                    planned_peak: state.plan.peak(),
+                }
+                .into());
+            }
+        }
+        Ok(out)
+    }));
+    match caught {
+        Ok(Ok(out)) => Ok(out),
+        Ok(Err(e)) => Err(AttemptError {
+            watermark: e.downcast_ref::<WatermarkViolation>().is_some(),
+            msg: format!("serving `{}` failed: {e:#}", state.name),
+            deadline: false,
+        }),
+        Err(payload) => Err(AttemptError {
+            msg: format!(
+                "panic while serving `{}`: {}",
+                state.name,
+                panic_message(payload.as_ref())
+            ),
+            deadline: false,
+            watermark: false,
+        }),
+    }
+}
+
+/// Apply one dispatched request's scheduled exec faults (corruption
+/// first, then delay, panic last — a panicking request still corrupted
+/// and stalled, the worst realistic ordering).
+fn inject_exec_faults(
+    fault: &ExecFaults,
+    arena: &mut Arena,
+    plan: Option<&FaultPlan>,
+    model: &str,
+) {
+    if let Some(c) = fault.corrupt {
+        if let Some(p) = plan {
+            p.note(FaultKind::ArenaCorrupt);
+        }
+        otrace::instant("fault:corrupt-arena", "fault", Vec::new());
+        let len = arena.len();
+        if len > 0 {
+            let mut rng = Rng::new(c.salt);
+            for _ in 0..c.len {
+                let off = rng.below(len);
+                let garbage = (rng.next_u64() % 256) as i64 - 128;
+                arena.poke(DType::I8, off, garbage as f32);
+            }
+        }
+        // a rogue writer does not respect the planned peak: surface the
+        // out-of-bounds store this corruption models, so the watermark
+        // check can convict the run instead of trusting its output
+        if let Some(sink) = arena.sink.as_mut() {
+            sink.event(EventKind::Store, len, c.len.max(1));
+        }
+        obs_log::warn(format_args!(
+            "fault: corrupted {} arena bytes in `{model}`",
+            c.len
+        ));
+    }
+    if let Some(d) = fault.delay {
+        if let Some(p) = plan {
+            p.note(FaultKind::ExecDelay);
+        }
+        otrace::instant("fault:delay", "fault", Vec::new());
+        thread::sleep(d);
+    }
+    if fault.panic {
+        if let Some(p) = plan {
+            p.note(FaultKind::WorkerPanic);
+        }
+        otrace::instant("fault:panic", "fault", Vec::new());
+        panic!("injected fault: worker panic while serving `{model}`");
+    }
+}
+
+/// Human-readable panic payload (panics carry `&str` or `String` in
+/// practice; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -317,6 +690,8 @@ fn render_prometheus<T>(
     registry: &Registry,
     admission: &Admission<T>,
     metrics: &[Mutex<Metrics>],
+    breakers: &[Breaker],
+    faults: Option<&FaultPlan>,
 ) -> String {
     let mut p = PromText::new();
     let max_depths = admission.max_depths();
@@ -328,6 +703,31 @@ fn render_prometheus<T>(
     p.family(
         "dmo_requests_shed_total",
         "Requests shed at admission per model.",
+        "counter",
+    );
+    p.family(
+        "dmo_requests_quarantine_shed_total",
+        "Requests shed by the circuit breaker (subset of shed).",
+        "counter",
+    );
+    p.family(
+        "dmo_requests_failed_total",
+        "Requests settled as failures with no retry budget left.",
+        "counter",
+    );
+    p.family(
+        "dmo_requests_retried_total",
+        "Failed attempts handed back for a client retry.",
+        "counter",
+    );
+    p.family(
+        "dmo_requests_deadline_expired_total",
+        "Attempts that blew their deadline.",
+        "counter",
+    );
+    p.family(
+        "dmo_requests_degraded_total",
+        "Completed requests served by a degraded generation.",
         "counter",
     );
     p.family("dmo_queue_depth", "Current admission queue depth.", "gauge");
@@ -372,16 +772,41 @@ fn render_prometheus<T>(
         "Accepted hot reloads per model.",
         "counter",
     );
+    p.family(
+        "dmo_model_reload_rejections_total",
+        "Hot reloads rejected at validation, serving state untouched.",
+        "counter",
+    );
+    p.family(
+        "dmo_model_degraded_total",
+        "Degrade transitions (pin previous / install safe plan).",
+        "counter",
+    );
+    p.family(
+        "dmo_model_state",
+        "Serving state: 0 serving, 1 degraded, 2 quarantined, 3 half-open probe.",
+        "gauge",
+    );
     for m in 0..registry.len() {
         let state = registry.current(m);
         let name = state.name.clone();
         let labels: &[(&str, &str)] = &[("model", &name)];
-        let (completed, shed) = {
-            let g = metrics[m].lock().unwrap();
-            (g.count(), g.shed)
-        };
-        p.sample("dmo_requests_completed_total", labels, completed as f64);
-        p.sample("dmo_requests_shed_total", labels, shed as f64);
+        let snap = lock(&metrics[m]).clone();
+        p.sample("dmo_requests_completed_total", labels, snap.count() as f64);
+        p.sample("dmo_requests_shed_total", labels, snap.shed as f64);
+        p.sample(
+            "dmo_requests_quarantine_shed_total",
+            labels,
+            snap.shed_quarantined as f64,
+        );
+        p.sample("dmo_requests_failed_total", labels, snap.failed as f64);
+        p.sample("dmo_requests_retried_total", labels, snap.retries as f64);
+        p.sample(
+            "dmo_requests_deadline_expired_total",
+            labels,
+            snap.deadline_expired as f64,
+        );
+        p.sample("dmo_requests_degraded_total", labels, snap.degraded as f64);
         p.sample("dmo_queue_depth", labels, admission.depth(m) as f64);
         p.sample("dmo_queue_depth_max", labels, max_depths[m] as f64);
         p.sample("dmo_queue_capacity", labels, admission.capacity() as f64);
@@ -404,6 +829,41 @@ fn render_prometheus<T>(
             labels,
             registry.reloads(m) as f64,
         );
+        p.sample(
+            "dmo_model_reload_rejections_total",
+            labels,
+            registry.reload_rejections(m) as f64,
+        );
+        p.sample(
+            "dmo_model_degraded_total",
+            labels,
+            registry.degrades(m) as f64,
+        );
+        // the breaker owns the louder states; degraded shows through
+        // only while the breaker is closed
+        let bcode = breakers[m].state_code();
+        let code = if bcode >= 2 {
+            bcode
+        } else if registry.is_degraded(m) {
+            1
+        } else {
+            0
+        };
+        p.sample("dmo_model_state", labels, code as f64);
+    }
+    if let Some(fp) = faults {
+        p.family(
+            "dmo_faults_injected_total",
+            "Deterministically injected faults by kind.",
+            "counter",
+        );
+        for kind in FaultKind::ALL {
+            p.sample(
+                "dmo_faults_injected_total",
+                &[("kind", kind.name())],
+                fp.injected(kind) as f64,
+            );
+        }
     }
     p.family(
         "dmo_request_latency_seconds",
@@ -413,7 +873,7 @@ fn render_prometheus<T>(
     for m in 0..registry.len() {
         let state = registry.current(m);
         let name = state.name.clone();
-        let hist = metrics[m].lock().unwrap().histogram().clone();
+        let hist = lock(&metrics[m]).histogram().clone();
         p.latency_histogram("dmo_request_latency_seconds", &[("model", &name)], &hist);
     }
     p.finish()
@@ -426,6 +886,8 @@ pub struct ModelReport {
     pub model: String,
     pub completed: usize,
     pub shed: usize,
+    /// Requests that settled as failures (retry budget exhausted).
+    pub failed: usize,
     pub metrics: Metrics,
     /// Arena bytes of the *current* generation (post-reload size).
     pub arena_bytes: usize,
@@ -441,6 +903,14 @@ pub struct ModelReport {
     pub queue_capacity: usize,
     pub generation: u64,
     pub reloads: usize,
+    /// Reloads rejected at validation (serving state untouched).
+    pub reload_rejections: usize,
+    /// Slot is serving a degraded generation at shutdown.
+    pub degraded: bool,
+    /// Degrade transitions over the run.
+    pub degrades: usize,
+    /// Breaker is open (model quarantined) at shutdown.
+    pub quarantined: bool,
 }
 
 /// Fleet load-generation configuration (`dmo serve --models …`).
@@ -467,6 +937,17 @@ pub struct FleetConfig {
     /// File to (re)write Prometheus text-format metric snapshots to,
     /// periodically while serving and once more at shutdown.
     pub metrics_out: Option<PathBuf>,
+    /// Deterministic fault schedule (`--faults=panic:1,stall:1@0`);
+    /// implies per-request watermark checks.
+    pub faults: Option<FaultSpec>,
+    /// Per-request deadline from enqueue to reply.
+    pub deadline: Option<Duration>,
+    /// Client retries per failed request (exponential backoff).
+    pub retries: u32,
+    /// Base client backoff, doubled per prior attempt.
+    pub backoff: Duration,
+    /// Per-model circuit-breaker tuning.
+    pub breaker: BreakerConfig,
 }
 
 impl Default for FleetConfig {
@@ -483,6 +964,11 @@ impl Default for FleetConfig {
             jobs: 0,
             reload_watch: None,
             metrics_out: None,
+            faults: None,
+            deadline: None,
+            retries: 0,
+            backoff: Duration::from_micros(200),
+            breaker: BreakerConfig::default(),
         }
     }
 }
@@ -493,22 +979,76 @@ pub struct FleetReport {
     pub wall: Duration,
     pub completed: usize,
     pub shed: usize,
+    /// Requests settled as failures (never completed, never shed).
+    pub failed: usize,
+    /// Failed attempts the client retried (each later settled).
+    pub retried: usize,
+    /// Breaker sheds (subset of `shed`).
+    pub quarantine_shed: usize,
+    /// Completed requests served by degraded generations.
+    pub degraded_served: usize,
+    /// Faults the injector actually fired over the run.
+    pub faults_injected: u64,
     pub throughput_rps: f64,
+    /// Worker threads that died outside request isolation (expected
+    /// empty).
+    pub worker_errors: Vec<String>,
     pub per_model: Vec<ModelReport>,
+}
+
+/// Drive the scheduled generator-side faults due at request `id`:
+/// garbled hot-reloads (which the registry must reject) and admission
+/// queue stalls.
+fn inject_generator_faults(fp: &FaultPlan, id: u64, fleet: &Fleet) {
+    for rf in fp.reloads_at(id) {
+        fp.note(FaultKind::CorruptReload);
+        let bad = FaultPlan::garble(&fleet.registry.current(rf.model).artifact, rf.mode);
+        match fleet.reload(rf.model, bad) {
+            Ok(info) => obs_log::warn(format_args!(
+                "fault: injected corrupt reload (model {}, {:?}) was ACCEPTED as generation \
+                 {} — validation gap!",
+                rf.model, rf.mode, info.generation
+            )),
+            Err(e) => obs_log::info(format_args!(
+                "fault: injected corrupt reload (model {}, {:?}) rejected as designed: {e:#}",
+                rf.model, rf.mode
+            )),
+        }
+    }
+    for st in fp.stalls_at(id) {
+        fp.note(FaultKind::QueueStall);
+        obs_log::info(format_args!(
+            "fault: stalling model {} admission queue for {:?}",
+            st.model, st.hold
+        ));
+        fleet.stall(st.model, st.hold);
+    }
 }
 
 /// Run the fleet under a deterministic mixed-model workload: start a
 /// registry + worker pool, emit `cfg.requests` requests across the
-/// models (weighted by `cfg.mix`), collect every reply, shut down.
-/// Closed-loop runs (`rate <= 0`) use blocking admission, so
-/// `completed == requests`; open-loop runs shed on full queues and the
-/// report proves `completed == requests - shed` either way.
+/// models (weighted by `cfg.mix`), settle every reply — retrying failed
+/// attempts while budget remains — then shut down. The report proves
+/// the three-way accounting identity
+/// `completed + shed + failed == requests` under every fault class:
+/// no request is ever lost, only completed, rejected, or failed.
 pub fn fleet_serve(cfg: &FleetConfig) -> Result<FleetReport> {
     let registry = Registry::load(&cfg.models, cfg.arenas, cfg.jobs, cfg.seed)?;
-    let elems: Vec<usize> = (0..registry.len())
+    let n_models = registry.len();
+    let elems: Vec<usize> = (0..n_models)
         .map(|m| registry.current(m).input_elements())
         .collect();
-    let mut fleet = Fleet::start(registry, cfg.workers, cfg.queue_capacity);
+    let fault_plan = cfg
+        .faults
+        .as_ref()
+        .map(|spec| Arc::new(FaultPlan::new(spec, cfg.seed, cfg.requests, n_models)));
+    let options = FleetOptions {
+        breaker: cfg.breaker,
+        faults: fault_plan.clone(),
+        deadline: cfg.deadline,
+        watermark_checks: fault_plan.is_some(),
+    };
+    let mut fleet = Fleet::start_with(registry, cfg.workers, cfg.queue_capacity, options);
     if let Some(dir) = &cfg.reload_watch {
         fleet.watch(dir.clone(), Duration::from_millis(100));
     }
@@ -516,7 +1056,6 @@ pub fn fleet_serve(cfg: &FleetConfig) -> Result<FleetReport> {
         fleet.metrics_writer(path.clone(), Duration::from_millis(500));
     }
 
-    let n_models = elems.len();
     anyhow::ensure!(
         cfg.mix.is_empty() || cfg.mix.len() == n_models,
         "--mix needs one weight per model ({} given, {} models)",
@@ -537,13 +1076,23 @@ pub fn fleet_serve(cfg: &FleetConfig) -> Result<FleetReport> {
         AdmissionPolicy::Block
     };
     let (reply_tx, reply_rx) = mpsc::channel::<FleetReply>();
-    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xF1EE_7000);
+    let mut rng = Rng::new(cfg.seed ^ 0xF1EE_7000);
+    // deterministic per-(model,id) payload — a retry regenerates the
+    // exact bytes its first attempt carried
+    let payload = |id: u64, m: usize| -> Vec<f32> {
+        let mut pr = Rng::new(cfg.seed ^ (id << 8) ^ m as u64);
+        (0..elems[m]).map(|_| pr.uniform(-1.0, 1.0)).collect()
+    };
     let t0 = Instant::now();
+    let mut outstanding: u64 = 0;
     for id in 0..cfg.requests {
+        if let Some(fp) = &fault_plan {
+            inject_generator_faults(fp, id, &fleet);
+        }
         if cfg.rate > 0.0 {
             thread::sleep(Duration::from_secs_f64(rng.exp(cfg.rate)));
         }
-        // weighted model pick, then a deterministic per-(model,id) payload
+        // weighted model pick
         let mut pick = rng.next_f64() * total_w;
         let mut m = n_models - 1;
         for (i, w) in weights.iter().enumerate() {
@@ -553,35 +1102,87 @@ pub fn fleet_serve(cfg: &FleetConfig) -> Result<FleetReport> {
             }
             pick -= w;
         }
-        let mut pr = crate::util::rng::Rng::new(cfg.seed ^ (id << 8) ^ m as u64);
-        let data: Vec<f32> = (0..elems[m]).map(|_| pr.uniform(-1.0, 1.0)).collect();
         let req = FleetRequest {
             id,
-            data,
+            data: payload(id, m),
             enqueued: Instant::now(),
+            attempts_left: cfg.retries,
             reply: reply_tx.clone(),
         };
-        fleet.submit(m, req, policy);
+        if fleet.submit(m, req, policy) {
+            outstanding += 1;
+        }
+        // a shed settled the request immediately — nothing outstanding
+    }
+
+    // Settle every admitted request: exactly one terminal outcome each.
+    // A failed attempt with retry budget left is resubmitted after an
+    // exponential backoff; a shed at resubmission settles it there.
+    let mut completed: usize = 0;
+    while outstanding > 0 {
+        let rep = match reply_rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(r) => r,
+            // a lost reply would hang the loop forever; break and let
+            // the accounting identity below name the discrepancy
+            Err(_) => break,
+        };
+        match rep.error {
+            None => {
+                completed += 1;
+                outstanding -= 1;
+            }
+            Some(msg) => {
+                if rep.attempts_left > 0 {
+                    let prior = cfg.retries.saturating_sub(rep.attempts_left);
+                    let backoff = cfg.backoff * 2u32.saturating_pow(prior.min(10));
+                    thread::sleep(backoff);
+                    obs_log::info(format_args!(
+                        "fleet: retrying request {} on model {} after {:?} backoff \
+                         ({} attempts left): {msg}",
+                        rep.id, rep.model, backoff, rep.attempts_left
+                    ));
+                    let retry = FleetRequest {
+                        id: rep.id,
+                        data: payload(rep.id, rep.model),
+                        enqueued: Instant::now(),
+                        attempts_left: rep.attempts_left - 1,
+                        reply: reply_tx.clone(),
+                    };
+                    if !fleet.submit(rep.model, retry, policy) {
+                        outstanding -= 1; // settled as a shed at resubmission
+                    }
+                } else {
+                    outstanding -= 1; // settled as failed (worker recorded it)
+                }
+            }
+        }
     }
     drop(reply_tx);
 
-    let completed = reply_rx.iter().count();
     let wall = t0.elapsed();
-    let per_model = fleet.shutdown()?;
+    let shutdown = fleet.shutdown()?;
+    let per_model = shutdown.per_model;
 
     let shed: usize = per_model.iter().map(|r| r.shed).sum();
+    let failed: usize = per_model.iter().map(|r| r.failed).sum();
     let by_metrics: usize = per_model.iter().map(|r| r.completed).sum();
     anyhow::ensure!(
-        completed == by_metrics && completed as u64 + shed as u64 == cfg.requests,
+        completed == by_metrics && (completed + shed + failed) as u64 == cfg.requests,
         "reply accounting broke: {completed} replies, {by_metrics} recorded, \
-         {shed} shed, {} requested",
+         {shed} shed, {failed} failed, {} requested",
         cfg.requests
     );
     Ok(FleetReport {
         wall,
         completed,
         shed,
+        failed,
+        retried: per_model.iter().map(|r| r.metrics.retries).sum(),
+        quarantine_shed: per_model.iter().map(|r| r.metrics.shed_quarantined).sum(),
+        degraded_served: per_model.iter().map(|r| r.metrics.degraded).sum(),
+        faults_injected: fault_plan.as_ref().map(|f| f.total_injected()).unwrap_or(0),
         throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
+        worker_errors: shutdown.worker_errors,
         per_model,
     })
 }

@@ -12,6 +12,7 @@
 use crate::ir::graph::{Graph, TensorId};
 use crate::obs::trace as otrace;
 use crate::obs::watermark::{ExecProfile, OpProfile, WatermarkSink};
+pub use crate::obs::watermark::WatermarkViolation;
 use crate::ops::exec::{execute_op, gen_weights, Arena, OpIo, Region};
 use crate::planner::{Plan, PlanArtifact};
 use crate::util::json;
@@ -107,14 +108,14 @@ pub fn run_plan_profiled(
             dtype: graph.tensor(op.output).dtype,
             weights: &weights,
         };
-        sink.0.borrow_mut().begin_op();
+        crate::util::sync::lock(&sink.0).begin_op();
         let mut sp = otrace::span(&format!("exec:{}", op.name), "interp");
         let t0 = std::time::Instant::now();
         execute_op(&op.kind, &io, &mut arena)
             .with_context(|| format!("executing {}", op.name))?;
         let wall_us = t0.elapsed().as_micros() as u64;
         let (bytes_read, bytes_written, high_water) = {
-            let st = sink.0.borrow();
+            let st = crate::util::sync::lock(&sink.0);
             (st.op_bytes_read, st.op_bytes_written, st.op_high_water)
         };
         if sp.is_active() {
@@ -146,7 +147,7 @@ pub fn run_plan_profiled(
             arena.read_tensor(info.dtype, regions[t.0].unwrap(), info.shape.num_elements())
         })
         .collect();
-    let st = sink.0.borrow();
+    let st = crate::util::sync::lock(&sink.0);
     let profile = ExecProfile {
         model: model.to_string(),
         planned_peak: plan.peak(),

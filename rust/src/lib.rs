@@ -266,6 +266,7 @@
 
 pub mod codegen;
 pub mod coordinator;
+pub mod fault;
 pub mod fleet;
 pub mod interp;
 pub mod ir;

@@ -290,12 +290,7 @@ fn run(argv: &[String]) -> Result<()> {
                 write_trace(p)?;
             }
             if let Some(prof) = profile {
-                anyhow::ensure!(
-                    prof.within_plan(),
-                    "watermark violation: observed peak {} > planned {}",
-                    report::fmt_bytes(prof.observed_peak),
-                    report::fmt_bytes(prof.planned_peak)
-                );
+                prof.verify()?;
             }
             Ok(())
         }
@@ -592,12 +587,7 @@ fn run(argv: &[String]) -> Result<()> {
             let prof = profile_plan(&name, &g, &plan, seed)?;
             print_profile(&prof);
             write_trace(&trace_path)?;
-            anyhow::ensure!(
-                prof.within_plan(),
-                "watermark violation: observed peak {} > planned {}",
-                report::fmt_bytes(prof.observed_peak),
-                report::fmt_bytes(prof.planned_peak)
-            );
+            prof.verify()?;
             Ok(())
         }
         "serve" => {
@@ -949,6 +939,17 @@ COMMANDS:
                               default blocks (closed loop);
                               --reload-watch hot-swaps <model>.plan.json
                               artifacts without dropping requests.
+  serve --faults SPEC [--seed N] [--retries R] [--deadline-us D]
+        [--breaker-k K] [--breaker-cooldown C]
+                              chaos mode (implies fleet serving): inject a
+                              deterministic seeded fault schedule — SPEC is
+                              kind:count[@model],… with kinds panic,
+                              corrupt-arena, corrupt-reload, stall, delay.
+                              Panics are isolated per request, K consecutive
+                              failures quarantine a model (circuit breaker),
+                              watermark violations degrade the slot to a
+                              safe plan, and the report proves
+                              completed + shed + failed == requests.
                               Both serve modes take --metrics-out FILE
                               (Prometheus text snapshot; the fleet rewrites
                               it every 500 ms) and --trace-out FILE

@@ -13,10 +13,10 @@
 //! through the untraced `write_tensor` fast path, and a plan's peak also
 //! covers scopes whose extents a particular input may not exercise.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::ops::exec::{EventKind, EventSink};
+use crate::util::sync::lock;
 
 /// Mutable watermark state shared between the sink (owned by the arena)
 /// and the profiler that reads it between ops.
@@ -84,21 +84,52 @@ impl WmState {
 }
 
 /// [`EventSink`] forwarding into a shared [`WmState`]. Clone one handle
-/// into the arena via `set_sink`, keep the other to read results.
+/// into the arena via `set_sink`, keep the other to read results. The
+/// state is behind `Arc<Mutex>` so the sink can ride a pooled arena
+/// across fleet worker threads.
 #[derive(Clone)]
-pub struct WatermarkSink(pub Rc<RefCell<WmState>>);
+pub struct WatermarkSink(pub Arc<Mutex<WmState>>);
 
 impl WatermarkSink {
     pub fn new(arena_len: usize) -> WatermarkSink {
-        WatermarkSink(Rc::new(RefCell::new(WmState::new(arena_len))))
+        WatermarkSink(Arc::new(Mutex::new(WmState::new(arena_len))))
+    }
+
+    /// Snapshot the run-wide high-water mark.
+    pub fn high_water(&self) -> usize {
+        lock(&self.0).high_water
     }
 }
 
 impl EventSink for WatermarkSink {
     fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
-        self.0.borrow_mut().on_event(kind, addr, len);
+        lock(&self.0).on_event(kind, addr, len);
     }
 }
+
+/// Typed watermark-invariant violation: a traced access went past the
+/// peak the plan promised. In a DMO arena that means a store may have
+/// clobbered a live buffer, so the result cannot be trusted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WatermarkViolation {
+    pub model: String,
+    /// Max traced `addr + len` over the run.
+    pub observed_peak: usize,
+    /// `plan.peak()` — the planner's promise.
+    pub planned_peak: usize,
+}
+
+impl std::fmt::Display for WatermarkViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "watermark violation in model '{}': observed peak {} B exceeds planned peak {} B",
+            self.model, self.observed_peak, self.planned_peak
+        )
+    }
+}
+
+impl std::error::Error for WatermarkViolation {}
 
 /// Observed execution profile of one op under a planned arena.
 #[derive(Debug, Clone)]
@@ -140,7 +171,21 @@ impl ExecProfile {
     /// planned peak. (`observed ≤ planned` — observed may be lower because
     /// inputs are written untraced and not every extent is exercised.)
     pub fn within_plan(&self) -> bool {
-        self.observed_peak <= self.planned_peak
+        self.verify().is_ok()
+    }
+
+    /// Typed form of the invariant check: `Err(WatermarkViolation)` when
+    /// a traced access exceeded the planned peak.
+    pub fn verify(&self) -> Result<(), WatermarkViolation> {
+        if self.observed_peak <= self.planned_peak {
+            Ok(())
+        } else {
+            Err(WatermarkViolation {
+                model: self.model.clone(),
+                observed_peak: self.observed_peak,
+                planned_peak: self.planned_peak,
+            })
+        }
     }
 }
 
@@ -154,7 +199,7 @@ mod tests {
         sink.event(EventKind::Store, 0, 16);
         sink.event(EventKind::Load, 8, 16);
         sink.event(EventKind::Update, 100, 4);
-        let st = sink.0.borrow();
+        let st = lock(&sink.0);
         assert_eq!(st.high_water, 104);
         assert_eq!(st.bytes_read, 16 + 4);
         assert_eq!(st.bytes_written, 16 + 4);
@@ -166,9 +211,9 @@ mod tests {
     fn per_op_resets() {
         let mut sink = WatermarkSink::new(64);
         sink.event(EventKind::Store, 0, 32);
-        sink.0.borrow_mut().begin_op();
+        lock(&sink.0).begin_op();
         sink.event(EventKind::Load, 4, 8);
-        let st = sink.0.borrow();
+        let st = lock(&sink.0);
         assert_eq!(st.op_high_water, 12);
         assert_eq!(st.op_bytes_read, 8);
         assert_eq!(st.op_bytes_written, 0);

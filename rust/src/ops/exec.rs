@@ -35,7 +35,11 @@ pub enum EventKind {
 /// Implementations: [`EventLog`] (raw storage, small ops),
 /// [`crate::overlap::trace::OverlapProbe`] (streaming bottom-up `O_s`),
 /// [`crate::trace::RasterSink`] (down-sampled figure rendering).
-pub trait EventSink {
+///
+/// `Send` is required because an [`Arena`] (which owns its sink) travels
+/// between threads via the fleet's arena pool, and the fleet installs a
+/// watermark sink on worker threads.
+pub trait EventSink: Send {
     /// `addr`/`len` are arena byte offsets.
     fn event(&mut self, kind: EventKind, addr: usize, len: usize);
 }
@@ -70,7 +74,7 @@ impl EventSink for EventLog {
 /// Shared handle to an [`EventLog`], so callers can install it as the
 /// arena's sink and still read the events afterwards.
 #[derive(Debug, Clone, Default)]
-pub struct SharedLog(pub std::rc::Rc<std::cell::RefCell<EventLog>>);
+pub struct SharedLog(pub std::sync::Arc<std::sync::Mutex<EventLog>>);
 
 impl SharedLog {
     pub fn new() -> Self {
@@ -78,13 +82,13 @@ impl SharedLog {
     }
 
     pub fn take_events(&self) -> Vec<Event> {
-        std::mem::take(&mut self.0.borrow_mut().events)
+        std::mem::take(&mut crate::util::sync::lock(&self.0).events)
     }
 }
 
 impl EventSink for SharedLog {
     fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
-        self.0.borrow_mut().event(kind, addr, len);
+        crate::util::sync::lock(&self.0).event(kind, addr, len);
     }
 }
 

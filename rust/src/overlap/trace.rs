@@ -162,22 +162,24 @@ pub fn os_bottom_up(
 /// Shared handle to an [`OverlapProbe`] so it can serve as the arena's
 /// boxed sink and still be recovered afterwards.
 #[derive(Clone)]
-pub struct SharedProbe(std::rc::Rc<std::cell::RefCell<Option<OverlapProbe>>>);
+pub struct SharedProbe(std::sync::Arc<std::sync::Mutex<Option<OverlapProbe>>>);
 
 impl SharedProbe {
     pub fn new(p: OverlapProbe) -> Self {
-        SharedProbe(std::rc::Rc::new(std::cell::RefCell::new(Some(p))))
+        SharedProbe(std::sync::Arc::new(std::sync::Mutex::new(Some(p))))
     }
 
     /// Remove the probe (panics if already taken).
     pub fn take(&self) -> OverlapProbe {
-        self.0.borrow_mut().take().expect("probe already taken")
+        crate::util::sync::lock(&self.0)
+            .take()
+            .expect("probe already taken")
     }
 }
 
 impl EventSink for SharedProbe {
     fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
-        if let Some(p) = self.0.borrow_mut().as_mut() {
+        if let Some(p) = crate::util::sync::lock(&self.0).as_mut() {
             p.event(kind, addr, len);
         }
     }

@@ -269,6 +269,20 @@ impl<'a> Planner<'a> {
         }
     }
 
+    /// Start a *safe-plan* session for `graph`: no overlap relaxation,
+    /// no graph rewrites, plain eager/lazy ordering only. Every buffer
+    /// gets disjoint placement, so a rogue store inside one op's planned
+    /// extent cannot clobber another live tensor — the degradation
+    /// target when a served model's watermark check trips and no
+    /// last-known-good generation exists. Costs the full (un-overlapped)
+    /// arena peak; the fleet flags requests served from it as degraded.
+    pub fn safe_for_graph(graph: &'a Graph) -> Planner<'a> {
+        Planner::for_graph(graph)
+            .dmo(false)
+            .strategies(&[Strategy::Eager, Strategy::Lazy])
+            .rewrites(RewriteBudget::disabled())
+    }
+
     /// Enable or disable diagonal memory optimisation (overlap
     /// relaxation, §II-D).
     pub fn dmo(mut self, enabled: bool) -> Self {

@@ -149,9 +149,9 @@ impl EventSink for EventCounter {
 
 /// Shared handle so counters/rasters can be recovered after execution.
 #[derive(Default)]
-pub struct Shared<T>(pub std::rc::Rc<std::cell::RefCell<T>>);
+pub struct Shared<T>(pub std::sync::Arc<std::sync::Mutex<T>>);
 
-// manual impl: Rc handles are clonable regardless of T
+// manual impl: Arc handles are clonable regardless of T
 impl<T> Clone for Shared<T> {
     fn clone(&self) -> Self {
         Shared(self.0.clone())
@@ -160,13 +160,13 @@ impl<T> Clone for Shared<T> {
 
 impl<T> Shared<T> {
     pub fn new(v: T) -> Self {
-        Shared(std::rc::Rc::new(std::cell::RefCell::new(v)))
+        Shared(std::sync::Arc::new(std::sync::Mutex::new(v)))
     }
 }
 
 impl<T: EventSink> EventSink for Shared<T> {
     fn event(&mut self, kind: EventKind, addr: usize, len: usize) {
-        self.0.borrow_mut().event(kind, addr, len);
+        crate::util::sync::lock(&self.0).event(kind, addr, len);
     }
 }
 

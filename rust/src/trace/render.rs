@@ -86,13 +86,14 @@ pub fn model_raster(
     // pass 1: count
     let counter = Shared::new(EventCounter::default());
     run_traced(graph, plan, &inputs, seed, Box::new(counter.clone()))?;
-    let total = counter.0.borrow().count;
+    let total = crate::util::sync::lock(&counter.0).count;
     // pass 2: raster
     let raster = Shared::new(RasterSink::new(plan.peak(), total, t_buckets, m_buckets));
     run_traced(graph, plan, &inputs, seed, Box::new(raster.clone()))?;
-    let inner = std::rc::Rc::try_unwrap(raster.0)
+    let inner = std::sync::Arc::try_unwrap(raster.0)
         .map_err(|_| anyhow::anyhow!("raster still shared"))?
-        .into_inner();
+        .into_inner()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
     Ok(inner)
 }
 
@@ -181,12 +182,13 @@ pub fn op_raster(
 
     let counter = Shared::new(EventCounter::default());
     run(Box::new(counter.clone()))?;
-    let total = counter.0.borrow().count;
+    let total = crate::util::sync::lock(&counter.0).count;
     let raster = Shared::new(RasterSink::new(arena_size, total, t_buckets, m_buckets));
     run(Box::new(raster.clone()))?;
-    Ok(std::rc::Rc::try_unwrap(raster.0)
+    Ok(std::sync::Arc::try_unwrap(raster.0)
         .map_err(|_| anyhow::anyhow!("raster still shared"))?
-        .into_inner())
+        .into_inner()
+        .unwrap_or_else(|poisoned| poisoned.into_inner()))
 }
 
 /// Fig 6 data: sampled `(step, min_read_offset)` pairs of a window op,

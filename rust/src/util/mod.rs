@@ -11,3 +11,4 @@ pub mod fnv;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod sync;

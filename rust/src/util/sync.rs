@@ -1,0 +1,55 @@
+//! Poison-tolerant synchronisation helpers.
+//!
+//! A panicking thread poisons every `std::sync::Mutex` it holds, and the
+//! default `.lock().unwrap()` idiom then cascades that one panic into a
+//! panic in *every* later locker — one bad request would take down every
+//! metrics recorder and registry reader behind it. The fleet isolates
+//! panics per request (`catch_unwind`), so its shared state must treat
+//! poison as survivable: all the data behind these mutexes (counters,
+//! histograms, queue vectors, `Arc` swaps) is valid at every instruction
+//! boundary, so recovering the guard is sound.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `Condvar::wait` that recovers the guard on poison.
+pub fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `Condvar::wait_timeout` that recovers the guard on poison.
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur)
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        // poison the mutex by panicking while holding it
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock(&m);
+        *g += 1;
+        assert_eq!(*g, 8, "the guarded value survives the poisoning panic");
+    }
+}

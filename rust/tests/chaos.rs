@@ -1,0 +1,553 @@
+//! Chaos suite: deterministic fault injection against the serving fleet.
+//!
+//! Every test here drives the fleet through a seeded [`FaultPlan`] (or a
+//! hand-built corrupt artifact) and proves the same contract from
+//! different angles: **no request is ever lost** — each one settles as
+//! exactly one of completed, shed, or failed
+//! (`completed + shed + failed == requests`), panics stay inside the
+//! request that caused them, a quarantined model never starves its
+//! healthy peers, a watermark violation degrades the slot without
+//! producing a single wrong bit, and two runs with the same seed settle
+//! to identical counters.
+
+use dmo::fault::{FaultPlan, FaultSpec, GarbleMode};
+use dmo::fleet::{
+    fleet_serve, AdmissionPolicy, BreakerConfig, Fleet, FleetConfig, FleetOptions, FleetReply,
+    FleetRequest, ModelSpec, Registry,
+};
+use dmo::interp;
+use dmo::planner::{PlanArtifact, PlanError, Planner};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+const SEED: u64 = 42;
+
+fn deterministic_input(elems: usize, salt: u64) -> Vec<f32> {
+    let mut rng = dmo::util::rng::Rng::new(SEED ^ salt);
+    (0..elems).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+fn assert_bit_identical(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+fn submit_blocking(
+    fleet: &Fleet,
+    id: u64,
+    data: Vec<f32>,
+    attempts_left: u32,
+    tx: &mpsc::Sender<FleetReply>,
+) {
+    let ok = fleet.submit(
+        0,
+        FleetRequest {
+            id,
+            data,
+            enqueued: Instant::now(),
+            attempts_left,
+            reply: tx.clone(),
+        },
+        AdmissionPolicy::Block,
+    );
+    assert!(ok, "blocking submit on an open, unquarantined fleet cannot fail");
+}
+
+/// Injected panics settle as per-request failures — the workers survive,
+/// accounting balances exactly, and a second run with the same seed
+/// lands on identical counters (the CI chaos smoke relies on this).
+#[test]
+fn panic_faults_settle_and_same_seed_runs_match() {
+    let cfg = FleetConfig {
+        models: vec![ModelSpec::planned("tiny"), ModelSpec::planned("tiny_int8")],
+        arenas: 2,
+        workers: 2,
+        queue_capacity: 8,
+        requests: 300,
+        seed: 7,
+        jobs: 1,
+        faults: Some(FaultSpec::parse("panic:2,corrupt-reload:1").unwrap()),
+        ..FleetConfig::default()
+    };
+    let a = fleet_serve(&cfg).unwrap();
+    let b = fleet_serve(&cfg).unwrap();
+    for r in [&a, &b] {
+        assert_eq!(
+            r.completed + r.shed + r.failed,
+            300,
+            "three-way accounting identity"
+        );
+        assert_eq!(r.failed, 2, "exactly the two injected panics fail");
+        assert_eq!(r.shed, 0, "a closed loop under the breaker threshold never sheds");
+        assert!(
+            r.worker_errors.is_empty(),
+            "panics are isolated per request, workers survive: {:?}",
+            r.worker_errors
+        );
+        assert_eq!(r.faults_injected, 3, "2 panics + 1 corrupt reload");
+        let rejections: usize = r.per_model.iter().map(|m| m.reload_rejections).sum();
+        assert_eq!(rejections, 1, "the garbled hot-reload was rejected");
+        for m in &r.per_model {
+            assert_eq!(m.generation, 0, "no corrupt artifact was ever installed");
+            assert!(!m.quarantined, "2 failures stay under the default K=3");
+            assert!(!m.degraded);
+        }
+    }
+    // same seed ⇒ same triggers ⇒ identical settled counters
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.faults_injected, b.faults_injected);
+    for (x, y) in a.per_model.iter().zip(&b.per_model) {
+        assert_eq!(x.completed, y.completed, "per-model completed ({})", x.model);
+        assert_eq!(x.failed, y.failed, "per-model failed ({})", x.model);
+        assert_eq!(x.shed, y.shed, "per-model shed ({})", x.model);
+        assert_eq!(x.reload_rejections, y.reload_rejections);
+    }
+}
+
+/// K consecutive failures quarantine exactly the faulty model: its sheds
+/// carry the distinct quarantine reason, the healthy peer keeps full
+/// throughput, and once the fault window passes a half-open probe closes
+/// the breaker again.
+#[test]
+fn quarantined_model_sheds_distinctly_and_never_starves_its_peer() {
+    let report = fleet_serve(&FleetConfig {
+        models: vec![ModelSpec::planned("tiny"), ModelSpec::planned("tiny_int8")],
+        arenas: 2,
+        workers: 2,
+        queue_capacity: 4,
+        requests: 400,
+        seed: 21,
+        jobs: 1,
+        faults: Some(FaultSpec::parse("panic:4@0").unwrap()),
+        breaker: BreakerConfig {
+            threshold: 2,
+            cooldown: 4,
+        },
+        ..FleetConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.completed + report.shed + report.failed, 400);
+    assert!(report.worker_errors.is_empty());
+    let m0 = &report.per_model[0];
+    let m1 = &report.per_model[1];
+    // the faulty model: every window dispatch fails, the breaker opens,
+    // and quarantine sheds are counted under their own reason
+    assert_eq!(m0.failed, 4, "every injected panic settles as a failure");
+    assert!(
+        report.quarantine_shed > 0,
+        "an open breaker must shed at admission with the quarantine reason"
+    );
+    assert_eq!(
+        m0.metrics.shed_quarantined, report.quarantine_shed,
+        "only the faulty model is quarantined"
+    );
+    // the healthy peer never pays for its neighbour's faults
+    assert_eq!(m1.failed, 0, "healthy peer has zero failures");
+    assert_eq!(m1.shed, 0, "healthy peer sheds nothing");
+    assert_eq!(m1.metrics.shed_quarantined, 0);
+    assert!(
+        m1.completed > 100,
+        "healthy peer keeps its full throughput (completed {})",
+        m1.completed
+    );
+    // recovery: the fault window is finite, so a probe eventually lands
+    // outside it and closes the breaker
+    assert!(!m0.quarantined, "breaker closes once the fault clears");
+    assert!(
+        m0.completed > 100,
+        "the model serves again after recovery (completed {})",
+        m0.completed
+    );
+}
+
+/// An injected arena corruption trips the per-request watermark check;
+/// the generation is abandoned for a freshly proven safe plan (no
+/// overlaps, no rewrites) — and every *successful* reply, before and
+/// after the degrade, stays bit-identical to the disjoint reference.
+#[test]
+fn watermark_violation_degrades_to_a_safe_plan_and_stays_bit_identical() {
+    let spec = FaultSpec::parse("corrupt-arena:1@0").unwrap();
+    let fault_plan = Arc::new(FaultPlan::new(&spec, 5, 30, 1));
+    let reg = Registry::load(&[ModelSpec::planned("tiny")], 1, 1, SEED).unwrap();
+    let fleet = Fleet::start_with(
+        reg,
+        1, // one worker: replies settle in dispatch order
+        64,
+        FleetOptions {
+            breaker: BreakerConfig {
+                threshold: 100, // keep the breaker out of this test
+                cooldown: 8,
+            },
+            faults: Some(fault_plan),
+            deadline: None,
+            watermark_checks: true,
+        },
+    );
+    let elems = fleet.registry.current(0).input_elements();
+    let (tx, rx) = mpsc::channel::<FleetReply>();
+    for id in 0..30u64 {
+        submit_blocking(&fleet, id, deterministic_input(elems, id), 0, &tx);
+    }
+    drop(tx);
+    let replies: Vec<FleetReply> = rx.iter().collect();
+    assert_eq!(replies.len(), 30, "zero lost replies under corruption");
+
+    let failures: Vec<&FleetReply> = replies.iter().filter(|r| r.error.is_some()).collect();
+    assert_eq!(failures.len(), 1, "exactly the corrupted request fails");
+    let msg = failures[0].error.as_deref().unwrap();
+    assert!(msg.contains("watermark"), "failure names the watermark: {msg}");
+
+    // the corrupted generation was abandoned — no previous generation
+    // exists, so a freshly planned + proven safe plan takes the slot
+    assert!(fleet.registry.is_degraded(0), "slot flagged degraded");
+    assert_eq!(fleet.registry.degrades(0), 1, "one degrade transition");
+    let cur = fleet.registry.current(0);
+    assert_eq!(cur.generation, 1, "safe plan serves as the next generation");
+    assert!(
+        cur.plan.alloc.applied.is_empty(),
+        "safe plan relaxes nothing: every buffer disjoint"
+    );
+
+    // correctness under degradation: every successful reply — generation
+    // 0 before the fault, the safe plan after — is bit-identical to the
+    // disjoint reference interpreter
+    let graph = dmo::models::build("tiny").unwrap();
+    for r in replies.iter().filter(|r| r.error.is_none()) {
+        let reference = interp::run_reference(&graph, &[deterministic_input(elems, r.id)], SEED)
+            .unwrap()
+            .remove(0);
+        assert_bit_identical(&r.output, &reference, &format!("request {}", r.id));
+    }
+    let served_degraded = replies
+        .iter()
+        .filter(|r| r.error.is_none() && r.generation == 1)
+        .count();
+    assert!(
+        served_degraded > 0,
+        "requests behind the fault are served by the safe plan"
+    );
+
+    // observability: state gauge 1 (degraded), fault + degrade counters
+    let snap = fleet.prometheus_snapshot();
+    assert!(
+        snap.contains("dmo_model_state{model=\"tiny\"} 1"),
+        "degraded state gauge missing:\n{snap}"
+    );
+    assert!(snap.contains("dmo_faults_injected_total{kind=\"corrupt-arena\"} 1"));
+    assert!(snap.contains("dmo_model_degraded_total{model=\"tiny\"} 1"));
+
+    // a fresh validated reload recovers the slot
+    let replan = Planner::for_graph(&graph).dmo(true).plan().unwrap();
+    fleet
+        .reload(0, PlanArtifact::from_plan(&graph, &replan))
+        .unwrap();
+    assert!(
+        !fleet.registry.is_degraded(0),
+        "a successful reload clears the degraded flag"
+    );
+
+    let down = fleet.shutdown().unwrap();
+    assert!(down.worker_errors.is_empty());
+    let m = &down.per_model[0];
+    assert_eq!(m.completed, 29);
+    assert_eq!(m.failed, 1);
+    assert_eq!(m.degrades, 1);
+    assert!(m.metrics.degraded > 0, "degraded-served counter advanced");
+}
+
+/// A stalled admission queue backs traffic up but loses nothing: the
+/// stall expires, the queue drains, and every request completes.
+#[test]
+fn queue_stall_delays_but_never_drops_requests() {
+    let report = fleet_serve(&FleetConfig {
+        models: vec![ModelSpec::planned("tiny")],
+        arenas: 2,
+        workers: 2,
+        queue_capacity: 4,
+        requests: 120,
+        seed: 13,
+        jobs: 1,
+        faults: Some(FaultSpec::parse("stall:1@0").unwrap()),
+        ..FleetConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.completed, 120, "a stalled queue drains; nothing is lost");
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.faults_injected, 1);
+    assert!(report.per_model[0].max_queue_depth >= 1);
+}
+
+/// Without a deadline an injected exec delay is just latency: every
+/// request still completes.
+#[test]
+fn delay_faults_slow_but_do_not_fail_without_a_deadline() {
+    let report = fleet_serve(&FleetConfig {
+        models: vec![ModelSpec::planned("tiny")],
+        arenas: 2,
+        workers: 2,
+        queue_capacity: 8,
+        requests: 60,
+        seed: 5,
+        jobs: 1,
+        faults: Some(FaultSpec::parse("delay:2@0").unwrap()),
+        ..FleetConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.completed, 60);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.faults_injected, 2);
+}
+
+/// The closed-loop client's retry path: an injected panic is a
+/// *retryable* failure, the resubmitted attempt regenerates the exact
+/// same payload, and with enough budget every request eventually
+/// completes — the failure count stays zero while the retry counter
+/// records exactly the injected faults.
+#[test]
+fn client_retries_with_backoff_recover_every_injected_panic() {
+    let report = fleet_serve(&FleetConfig {
+        models: vec![ModelSpec::planned("tiny")],
+        arenas: 2,
+        workers: 2,
+        queue_capacity: 8,
+        requests: 100,
+        seed: 3,
+        jobs: 1,
+        faults: Some(FaultSpec::parse("panic:2@0").unwrap()),
+        retries: 3,
+        breaker: BreakerConfig {
+            threshold: 10,
+            cooldown: 8,
+        },
+        ..FleetConfig::default()
+    })
+    .unwrap();
+    // each of the 2 window sequence numbers is dispatched exactly once
+    // over the whole run, so exactly 2 attempts fail — and each had
+    // retry budget, so nothing settles as failed
+    assert_eq!(report.completed, 100, "every request settles successfully");
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.retried, 2, "each injected panic burned one retry");
+    assert_eq!(report.faults_injected, 2);
+    assert_eq!(report.shed, 0);
+}
+
+/// Deadlines end to end: an attempt that is already past its deadline
+/// settles as a retryable failure before burning execution time, and an
+/// injected 300 ms exec delay blows a 150 ms deadline even though the
+/// result was computed — the answer arrived too late to be an answer.
+#[test]
+fn injected_delay_blows_the_deadline_and_retries_recover() {
+    let spec = FaultSpec::parse("delay:2@0").unwrap();
+    let mut fp = FaultPlan::new(&spec, 9, 40, 1);
+    fp.delay = Duration::from_millis(300); // dwarfs any honest execution
+    let fleet = Fleet::start_with(
+        Registry::load(&[ModelSpec::planned("tiny")], 1, 1, SEED).unwrap(),
+        1,
+        8,
+        FleetOptions {
+            breaker: BreakerConfig {
+                threshold: 100,
+                cooldown: 8,
+            },
+            faults: Some(Arc::new(fp)),
+            deadline: Some(Duration::from_millis(150)),
+            watermark_checks: false,
+        },
+    );
+    let elems = fleet.registry.current(0).input_elements();
+    let (tx, rx) = mpsc::channel::<FleetReply>();
+    // depth-1 closed loop: queue wait stays ~0, so only the injected
+    // delays can blow the deadline
+    let mut deadline_failures = 0usize;
+    for id in 0..40u64 {
+        submit_blocking(&fleet, id, deterministic_input(elems, id), 2, &tx);
+        loop {
+            let rep = rx.recv().unwrap();
+            match rep.error {
+                None => break,
+                Some(msg) => {
+                    assert!(
+                        msg.contains("deadline"),
+                        "only deadline failures expected: {msg}"
+                    );
+                    assert!(rep.output.is_empty(), "a late answer is not an answer");
+                    deadline_failures += 1;
+                    assert!(
+                        rep.attempts_left > 0,
+                        "the 2-deep retry budget covers the 2-long fault window"
+                    );
+                    submit_blocking(
+                        &fleet,
+                        rep.id,
+                        deterministic_input(elems, rep.id),
+                        rep.attempts_left - 1,
+                        &tx,
+                    );
+                }
+            }
+        }
+    }
+    drop(tx);
+    // the fault window is 2 consecutive sequence numbers, each consumed
+    // exactly once (the retry of the first delayed attempt eats the
+    // second window slot), so exactly 2 attempts expire
+    assert_eq!(deadline_failures, 2);
+    let down = fleet.shutdown().unwrap();
+    assert!(down.worker_errors.is_empty());
+    let m = &down.per_model[0];
+    assert_eq!(m.completed, 40, "every request eventually completed");
+    assert_eq!(m.failed, 0, "both expiries had retry budget left");
+    assert_eq!(m.metrics.retries, 2);
+    assert_eq!(m.metrics.deadline_expired, 2);
+}
+
+/// An attempt born long before its deadline is rejected *before*
+/// execution — the deadline gate runs first and costs no worker time.
+#[test]
+fn pre_expired_deadline_fails_before_execution_and_a_retry_lands() {
+    let fleet = Fleet::start_with(
+        Registry::load(&[ModelSpec::planned("tiny")], 1, 1, SEED).unwrap(),
+        1,
+        8,
+        FleetOptions {
+            breaker: BreakerConfig {
+                threshold: 100,
+                cooldown: 8,
+            },
+            faults: None,
+            deadline: Some(Duration::from_secs(5)),
+            watermark_checks: false,
+        },
+    );
+    let elems = fleet.registry.current(0).input_elements();
+    let (tx, rx) = mpsc::channel::<FleetReply>();
+    // an attempt enqueued a minute ago: already past its 5 s deadline
+    let long_ago = Instant::now()
+        .checked_sub(Duration::from_secs(60))
+        .or_else(|| Instant::now().checked_sub(Duration::from_secs(6)))
+        .expect("the process has been alive for seconds already");
+    let ok = fleet.submit(
+        0,
+        FleetRequest {
+            id: 0,
+            data: deterministic_input(elems, 0),
+            enqueued: long_ago,
+            attempts_left: 1,
+            reply: tx.clone(),
+        },
+        AdmissionPolicy::Block,
+    );
+    assert!(ok);
+    let first = rx.recv().unwrap();
+    let msg = first.error.as_deref().expect("expired attempt must fail");
+    assert!(msg.contains("deadline expired before execution"), "{msg}");
+    assert_eq!(first.attempts_left, 1, "the reply echoes the remaining budget");
+    // the client retries with a fresh clock — and succeeds
+    submit_blocking(&fleet, 0, deterministic_input(elems, 0), 0, &tx);
+    drop(tx);
+    assert!(rx.recv().unwrap().error.is_none(), "the retry lands");
+    let down = fleet.shutdown().unwrap();
+    let m = &down.per_model[0];
+    assert_eq!(m.metrics.deadline_expired, 1);
+    assert_eq!(m.metrics.retries, 1, "budgeted failure settles as a retry");
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.completed, 1);
+}
+
+/// Satellite corpus: truncated, bit-flipped, future-versioned and
+/// wrong-fingerprint artifacts all come back as *typed* [`PlanError`]s —
+/// never a panic — at both `PlanArtifact::load` and fleet reload, and a
+/// rejected reload leaves the serving generation untouched.
+#[test]
+fn corrupt_artifact_corpus_yields_typed_errors_and_never_panics() {
+    let dir = std::env::temp_dir().join(format!("dmo_chaos_corpus_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let g = dmo::models::build("tiny").unwrap();
+    let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+    let art = PlanArtifact::from_plan(&g, &plan);
+    let good = dir.join("good.plan.json");
+    art.save(&good).unwrap();
+    // positive control: the untouched round trip is clean
+    PlanArtifact::load(&good).unwrap().to_plan(&g).unwrap();
+    let text = std::fs::read_to_string(&good).unwrap();
+
+    let mut corpus: Vec<(String, String)> = Vec::new();
+    for pct in [5usize, 25, 50, 75, 90, 99] {
+        // artifact JSON is ASCII, so byte truncation is char-safe
+        corpus.push((
+            format!("truncated-{pct}"),
+            text[..text.len() * pct / 100].to_string(),
+        ));
+    }
+    corpus.push(("empty".into(), String::new()));
+    corpus.push(("bitflip-quotes".into(), text.replace('"', "\u{7}")));
+    corpus.push(("bitflip-braces".into(), text.replace('{', "[")));
+    corpus.push(("not-json".into(), "\u{0}\u{1}\u{2}garbage\u{fe}\u{ff}".into()));
+    for (name, body) in &corpus {
+        let p = dir.join(format!("{name}.plan.json"));
+        std::fs::write(&p, body).unwrap();
+        let err = PlanArtifact::load(&p)
+            .expect_err(&format!("corpus entry `{name}` must not load"));
+        assert!(
+            matches!(err, PlanError::Malformed(_)),
+            "`{name}`: wrong error class: {err}"
+        );
+    }
+    // a missing file is a typed I/O error, not a panic
+    let err = PlanArtifact::load(&dir.join("never-written.plan.json"))
+        .expect_err("missing file must not load");
+    assert!(matches!(err, PlanError::Io(_)), "{err}");
+    // a future version is refused at parse, before any field is trusted
+    let mut future = art.clone();
+    future.version = 99;
+    let p = dir.join("future.plan.json");
+    future.save(&p).unwrap();
+    let err = PlanArtifact::load(&p).expect_err("future version must be refused");
+    assert!(
+        matches!(err, PlanError::UnsupportedVersion { found: 99, .. }),
+        "{err}"
+    );
+    // wrong fingerprint / O_s hash: parse fine, refused at revalidation
+    let err = FaultPlan::garble(&art, GarbleMode::FingerprintFlip)
+        .to_plan(&g)
+        .expect_err("flipped fingerprint must be refused");
+    assert!(matches!(err, PlanError::GraphMismatch { .. }), "{err}");
+    let err = FaultPlan::garble(&art, GarbleMode::OsHashFlip)
+        .to_plan(&g)
+        .expect_err("flipped O_s hash must be refused");
+    assert!(matches!(err, PlanError::Malformed(_)), "{err}");
+
+    // and through the fleet: a rejected reload leaves the serving
+    // generation untouched and the server answering
+    let reg = Registry::load(&[ModelSpec::planned("tiny")], 1, 1, SEED).unwrap();
+    let fleet = Fleet::start(reg, 1, 8);
+    assert!(fleet
+        .reload(0, FaultPlan::garble(&art, GarbleMode::FingerprintFlip))
+        .is_err());
+    assert!(fleet
+        .reload(0, FaultPlan::garble(&art, GarbleMode::OsHashFlip))
+        .is_err());
+    assert_eq!(
+        fleet.registry.current(0).generation,
+        0,
+        "serving generation untouched by rejected reloads"
+    );
+    assert_eq!(fleet.registry.reload_rejections(0), 2);
+    let elems = fleet.registry.current(0).input_elements();
+    let (tx, rx) = mpsc::channel::<FleetReply>();
+    submit_blocking(&fleet, 0, deterministic_input(elems, 0), 0, &tx);
+    drop(tx);
+    let rep = rx.recv().unwrap();
+    assert!(rep.error.is_none(), "still serving after rejected reloads");
+    assert_eq!(rep.generation, 0);
+    fleet.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -130,6 +130,7 @@ fn submit_blocking(fleet: &Fleet, id: u64, data: Vec<f32>, tx: &mpsc::Sender<Fle
             id,
             data,
             enqueued: Instant::now(),
+            attempts_left: 0,
             reply: tx.clone(),
         },
         AdmissionPolicy::Block,
@@ -183,7 +184,9 @@ fn hot_reload_mid_stream_drops_nothing_and_swaps_generation() {
         "post-reload submissions execute on generation 1"
     );
 
-    let reports = fleet.shutdown().unwrap();
+    let down = fleet.shutdown().unwrap();
+    assert!(down.worker_errors.is_empty());
+    let reports = down.per_model;
     assert_eq!(reports[0].completed, 200, "completed == requests - shed");
     assert_eq!(reports[0].shed, 0);
     assert_eq!(reports[0].generation, 1);
@@ -213,7 +216,7 @@ fn stale_fingerprint_artifact_is_rejected_and_serving_continues() {
     let reply = rx.recv().unwrap();
     assert_eq!(reply.generation, 0, "old generation keeps serving");
 
-    let reports = fleet.shutdown().unwrap();
+    let reports = fleet.shutdown().unwrap().per_model;
     assert_eq!(reports[0].completed, 2);
     assert_eq!(reports[0].generation, 0);
     assert_eq!(reports[0].reloads, 0);
@@ -268,7 +271,7 @@ fn reload_watch_picks_up_artifact_drops() {
     drop(tx);
     assert_eq!(rx.recv().unwrap().generation, 1, "server still serving post-rejection");
 
-    let reports = fleet.shutdown().unwrap();
+    let reports = fleet.shutdown().unwrap().per_model;
     assert_eq!(reports[0].reloads, 1);
     let _ = std::fs::remove_dir_all(&dir);
 }
