@@ -1,0 +1,186 @@
+//! Bench: fast-kernel speedups, interpreter and emitted C.
+//!
+//! Two measurement planes, one contract — every fast path is only
+//! allowed to exist because the differential harness proved it
+//! bit-identical, so the numbers here are pure speed:
+//!
+//! * **interpreter**: the CMSIS-NN-idiom i8 path in `ops::exec`
+//!   (i32 accumulate over raw arena bytes, requantise at store) timed
+//!   against the f32-reference path on the int8 zoo models, toggled
+//!   via `ops::exec::set_fast_i8` with outputs asserted bitwise equal;
+//! * **emitted C** (needs a host `cc`): per op class, a unit with every
+//!   class pinned to `Generic` vs a unit with only that class on its
+//!   default fast variant, compiled and timed through
+//!   `codegen::time_unit` — which re-proves bit-identity before timing.
+//!
+//! Asserts the headline: at least one op kind beats the reference by
+//! ≥1.3× on at least one zoo model. Results go to `BENCH_kernels.json`,
+//! uploaded by CI as part of the perf trajectory.
+
+use dmo::codegen::tune::{class_of, TuneTable, Variant};
+use dmo::codegen::{self, EmitOptions};
+use dmo::ops::exec::{fast_i8_hits, set_fast_i8};
+use dmo::planner::Planner;
+use dmo::util::json::{num, obj, s, Json};
+use dmo::{interp, models};
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+const SEED: u64 = 42;
+const INTERP_ITERS: usize = 30;
+const C_ITERS: usize = 2_000;
+/// The acceptance bar: ≥1 op kind beats reference by ≥1.3×.
+const WIN_BAR: f64 = 1.3;
+
+fn interp_ns_per_run(
+    g: &dmo::ir::graph::Graph,
+    plan: &dmo::planner::Plan,
+    inputs: &[Vec<f32>],
+    fast: bool,
+) -> (f64, Vec<Vec<f32>>) {
+    set_fast_i8(fast);
+    // warm-up + the outputs we compare
+    let outputs = interp::run_plan(g, plan, inputs, SEED).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..INTERP_ITERS {
+        let o = interp::run_plan(g, plan, inputs, SEED).unwrap();
+        assert_eq!(o.len(), outputs.len());
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / INTERP_ITERS as f64;
+    set_fast_i8(true);
+    (ns, outputs)
+}
+
+fn main() {
+    println!("=== fast kernels: bit-identical speed, interpreter + emitted C ===\n");
+    let mut entries: Vec<Json> = Vec::new();
+    let mut best_speedup = 0.0f64;
+    let mut best_label = String::new();
+
+    // ---- interpreter: fast-i8 vs reference on the int8 zoo models ----
+    println!(
+        "{:32} {:>14} {:>14} {:>8}",
+        "interp (int8 models)", "reference", "fast-i8", "speedup"
+    );
+    for name in ["tiny_int8", "mobilenet_v1_0.25_128_int8"] {
+        let g = models::build(name).unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let inputs: Vec<Vec<f32>> =
+            g.inputs.iter().map(|&t| interp::gen_input(&g, t, SEED)).collect();
+        let (ref_ns, ref_out) = interp_ns_per_run(&g, &plan, &inputs, false);
+        let hits0 = fast_i8_hits();
+        let (fast_ns, fast_out) = interp_ns_per_run(&g, &plan, &inputs, true);
+        assert!(
+            fast_i8_hits() > hits0,
+            "{name}: the fast-i8 path must actually engage"
+        );
+        // the speedup only counts because the outputs are the same bits
+        assert_eq!(ref_out.len(), fast_out.len());
+        for (a, b) in ref_out.iter().zip(&fast_out) {
+            assert_eq!(a.len(), b.len(), "{name}: output length mismatch");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name}: fast-i8 differs");
+            }
+        }
+        let speedup = ref_ns / fast_ns;
+        if speedup > best_speedup {
+            best_speedup = speedup;
+            best_label = format!("interp fast-i8 on {name}");
+        }
+        println!(
+            "{:32} {:>12.0}ns {:>12.0}ns {:>7.2}x",
+            name, ref_ns, fast_ns, speedup
+        );
+        entries.push(obj(vec![
+            ("plane", s("interp")),
+            ("model", s(name)),
+            ("op_class", s("all-i8")),
+            ("reference_ns", num(ref_ns as usize)),
+            ("fast_ns", num(fast_ns as usize)),
+            ("speedup_x", Json::Num(speedup)),
+        ]));
+    }
+
+    // ---- emitted C: per op class, generic vs default fast variant ----
+    match codegen::cc_available() {
+        None => println!("\nno C compiler on PATH — skipping the emitted-C plane"),
+        Some(cc) => {
+            println!(
+                "\n{:32} {:>14} {:>14} {:>8}   (cc: {cc})",
+                "emitted C (model/class)", "generic", "fast", "speedup"
+            );
+            for name in ["tiny", "tiny_int8"] {
+                let g = models::build(name).unwrap();
+                let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+                let classes: BTreeSet<&'static str> =
+                    g.ops.iter().filter_map(|op| class_of(&op.kind)).collect();
+                // baseline: every class pinned to the generic kernels
+                let mut all_generic = TuneTable::new();
+                for &c in &classes {
+                    all_generic.set(c, Variant::Generic);
+                }
+                let base = codegen::emit(
+                    &g,
+                    &plan,
+                    &EmitOptions::new("bench_ref").seed(SEED).tuning(all_generic.clone()),
+                )
+                .unwrap();
+                let base_ns =
+                    codegen::time_unit(&base, &g, SEED, C_ITERS).unwrap().ns_per_invoke;
+                for &class in &classes {
+                    // only `class` runs its default fast variant
+                    let mut table = all_generic.clone();
+                    table.set(
+                        class,
+                        Variant::Fast { order: dmo::codegen::tune::LoopOrder::Reference, unroll: 1 },
+                    );
+                    let unit = codegen::emit(
+                        &g,
+                        &plan,
+                        &EmitOptions::new("bench_fast").seed(SEED).tuning(table),
+                    )
+                    .unwrap();
+                    // time_unit re-proves bit-identity before timing
+                    let fast_ns =
+                        codegen::time_unit(&unit, &g, SEED, C_ITERS).unwrap().ns_per_invoke;
+                    let speedup = base_ns / fast_ns;
+                    if speedup > best_speedup {
+                        best_speedup = speedup;
+                        best_label = format!("emitted-C {class} on {name}");
+                    }
+                    println!(
+                        "{:32} {:>12.0}ns {:>12.0}ns {:>7.2}x",
+                        format!("{name}/{class}"),
+                        base_ns,
+                        fast_ns,
+                        speedup
+                    );
+                    entries.push(obj(vec![
+                        ("plane", s("emitted-c")),
+                        ("model", s(name)),
+                        ("op_class", s(class)),
+                        ("reference_ns", num(base_ns as usize)),
+                        ("fast_ns", num(fast_ns as usize)),
+                        ("speedup_x", Json::Num(speedup)),
+                    ]));
+                }
+            }
+        }
+    }
+
+    assert!(
+        best_speedup >= WIN_BAR,
+        "no fast path reached the {WIN_BAR}x bar (best: {best_speedup:.2}x via {best_label})"
+    );
+
+    let doc = obj(vec![
+        ("bench", s("kernel_speed")),
+        ("win_bar_x", Json::Num(WIN_BAR)),
+        ("best_speedup_x", Json::Num(best_speedup)),
+        ("best", s(&best_label)),
+        ("rows", Json::Arr(entries)),
+    ]);
+    let path = "BENCH_kernels.json";
+    std::fs::write(path, doc.to_string()).unwrap();
+    println!("\nwrote {path} (best win: {best_speedup:.2}x via {best_label})");
+}

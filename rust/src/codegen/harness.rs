@@ -28,6 +28,32 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// in the docs and enforced in CI.
 pub const CC_FLAGS: &[&str] = &["-std=c99", "-Wall", "-Werror", "-O1", "-ffp-contract=off"];
 
+/// Effective compiler flags: [`CC_FLAGS`] with the optimisation level
+/// overridden by `$DMO_CC_OPT` (e.g. `-O2`, `-Os`) when set. MCU
+/// toolchains ship `-O2`/`-Os`, so CI runs the differential harness at
+/// those levels too, not just the default `-O1`. An unparseable
+/// override is ignored with a warning rather than breaking the build.
+pub fn cc_flags() -> Vec<String> {
+    let mut flags: Vec<String> = CC_FLAGS.iter().map(|s| s.to_string()).collect();
+    if let Ok(opt) = std::env::var("DMO_CC_OPT") {
+        if !opt.is_empty() {
+            let valid = opt.len() <= 8
+                && opt.starts_with("-O")
+                && opt[2..].chars().all(|c| c.is_ascii_alphanumeric());
+            if valid {
+                for f in &mut flags {
+                    if f.starts_with("-O") {
+                        *f = opt.clone();
+                    }
+                }
+            } else {
+                eprintln!("harness: ignoring invalid DMO_CC_OPT `{opt}` (expected -O<level>)");
+            }
+        }
+    }
+    flags
+}
+
 static TEMP_COUNTER: AtomicUsize = AtomicUsize::new(0);
 
 /// First working C compiler: `$CC`, then `cc`, `gcc`, `clang`.
@@ -94,15 +120,47 @@ pub fn differential_test_with(
 /// re-emitting multi-megabyte sources.
 pub fn differential_test_unit(unit: &CUnit, graph: &Graph, seed: u64) -> Result<DiffReport> {
     let cc = cc_available().context("no C compiler found (install cc/gcc/clang or set $CC)")?;
+    let dir = fresh_temp_dir()?;
+    let result = compile_run_compare(&cc, &dir, unit, graph, seed, None);
+    let _ = std::fs::remove_dir_all(&dir);
+    result.map(|(report, _)| report)
+}
+
+/// Timing outcome of a compile-and-run: the differential report (the
+/// run is asserted bit-identical *first*) plus wall-clock ns per
+/// `dmo_invoke`, measured inside the compiled binary over `iters`
+/// invocations.
+#[derive(Debug, Clone)]
+pub struct TimedRun {
+    pub report: DiffReport,
+    pub ns_per_invoke: f64,
+}
+
+/// Compile `unit`, verify bit-identical outputs, then time `iters`
+/// invocations inside the binary — the autotuner's measurement
+/// primitive. A variant must prove correctness before it may win on
+/// speed.
+pub fn time_unit(unit: &CUnit, graph: &Graph, seed: u64, iters: usize) -> Result<TimedRun> {
+    ensure!(iters > 0, "timing iteration count must be positive");
+    let cc = cc_available().context("no C compiler found (install cc/gcc/clang or set $CC)")?;
+    let dir = fresh_temp_dir()?;
+    let result = compile_run_compare(&cc, &dir, unit, graph, seed, Some(iters));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (report, ns) = result?;
+    Ok(TimedRun {
+        report,
+        ns_per_invoke: ns.context("timed binary printed no NSPERITER line")?,
+    })
+}
+
+fn fresh_temp_dir() -> Result<std::path::PathBuf> {
     let dir = std::env::temp_dir().join(format!(
         "dmo-emitc-{}-{}",
         std::process::id(),
         TEMP_COUNTER.fetch_add(1, Ordering::Relaxed)
     ));
     std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
-    let result = compile_run_compare(&cc, &dir, unit, graph, seed);
-    let _ = std::fs::remove_dir_all(&dir);
-    result
+    Ok(dir)
 }
 
 fn compile_run_compare(
@@ -111,16 +169,18 @@ fn compile_run_compare(
     unit: &CUnit,
     graph: &Graph,
     seed: u64,
-) -> Result<DiffReport> {
+    iters: Option<usize>,
+) -> Result<(DiffReport, Option<f64>)> {
     let c_path = dir.join(format!("{}.c", unit.stem));
     unit.write_to(&c_path)?;
     let main_path = dir.join("main.c");
-    std::fs::write(&main_path, generate_main_c(unit, graph, seed))
+    std::fs::write(&main_path, main_c(unit, graph, seed, iters))
         .with_context(|| format!("writing {}", main_path.display()))?;
     let exe = dir.join("run");
 
+    let flags = cc_flags();
     let out = Command::new(cc)
-        .args(CC_FLAGS)
+        .args(&flags)
         .arg(&c_path)
         .arg(&main_path)
         .arg("-lm")
@@ -132,7 +192,7 @@ fn compile_run_compare(
         out.status.success(),
         "emitted C for `{}` failed to compile under `{cc} {}`:\n{}",
         graph.name,
-        CC_FLAGS.join(" "),
+        flags.join(" "),
         String::from_utf8_lossy(&out.stderr)
     );
 
@@ -146,13 +206,25 @@ fn compile_run_compare(
         run.status.code()
     );
 
-    let got: Vec<u32> = String::from_utf8_lossy(&run.stdout)
-        .split_whitespace()
-        .map(|tok| {
+    let stdout = String::from_utf8_lossy(&run.stdout);
+    let mut ns_per_invoke = None;
+    let mut got: Vec<u32> = Vec::new();
+    for tok in stdout.split_whitespace() {
+        if tok == "NSPERITER" {
+            continue;
+        }
+        if ns_per_invoke.is_none() && tok.contains('.') {
+            ns_per_invoke = Some(
+                tok.parse::<f64>()
+                    .with_context(|| format!("unparseable NSPERITER value `{tok}`"))?,
+            );
+            continue;
+        }
+        got.push(
             u32::from_str_radix(tok, 16)
-                .with_context(|| format!("unparseable output line `{tok}`"))
-        })
-        .collect::<Result<_>>()?;
+                .with_context(|| format!("unparseable output line `{tok}`"))?,
+        );
+    }
     let want = interp::reference_outputs(graph, seed)?;
     let want_bits: Vec<u32> = want.iter().flatten().map(|v| v.to_bits()).collect();
     ensure!(
@@ -169,14 +241,22 @@ fn compile_run_compare(
             graph.name
         );
     }
-    Ok(DiffReport {
-        model: graph.name.clone(),
-        cc: cc.to_string(),
-        arena_bytes: unit.arena_bytes,
-        outputs: want.len(),
-        elems: want_bits.len(),
-        weights_embedded: unit.weights_embedded,
-    })
+    ensure!(
+        iters.is_none() || ns_per_invoke.is_some(),
+        "timed binary for `{}` printed no NSPERITER line",
+        graph.name
+    );
+    Ok((
+        DiffReport {
+            model: graph.name.clone(),
+            cc: cc.to_string(),
+            arena_bytes: unit.arena_bytes,
+            outputs: want.len(),
+            elems: want_bits.len(),
+            weights_embedded: unit.weights_embedded,
+        },
+        ns_per_invoke,
+    ))
 }
 
 /// The test driver `main.c` the harness links against an emitted unit:
@@ -184,9 +264,17 @@ fn compile_run_compare(
 /// reference run) baked in as exact literals, outputs printed as f32
 /// bit patterns, one `%08x` per line.
 pub fn generate_main_c(unit: &CUnit, graph: &Graph, seed: u64) -> String {
+    main_c(unit, graph, seed, None)
+}
+
+fn main_c(unit: &CUnit, graph: &Graph, seed: u64, iters: Option<usize>) -> String {
     let mut c = String::new();
     c.push_str(&format!("#include \"{}\"\n\n", unit.header_file_name()));
-    c.push_str("#include <stdint.h>\n#include <stdio.h>\n#include <string.h>\n\n");
+    c.push_str("#include <stdint.h>\n#include <stdio.h>\n#include <string.h>\n");
+    if iters.is_some() {
+        c.push_str("#include <time.h>\n");
+    }
+    c.push('\n');
     for (i, &t) in graph.inputs.iter().enumerate() {
         let vals = interp::gen_input(graph, t, seed);
         let lits: Vec<String> = vals.iter().map(|&v| f32_literal(v)).collect();
@@ -212,6 +300,18 @@ pub fn generate_main_c(unit: &CUnit, graph: &Graph, seed: u64) -> String {
         c.push_str(&format!("        memcpy(&b, &dmo_out{i}[j], sizeof b);\n"));
         c.push_str("        printf(\"%08x\\n\", b);\n");
         c.push_str("    }\n");
+    }
+    if let Some(iters) = iters {
+        // correctness is printed above from the first invocation; the
+        // timing loop then re-invokes on the same staged inputs
+        c.push_str("    clock_t dmo_t0 = clock();\n");
+        c.push_str(&format!("    for (int it = 0; it < {iters}; it++) {{\n"));
+        c.push_str(&format!("        dmo_invoke({});\n", args.join(", ")));
+        c.push_str("    }\n");
+        c.push_str("    clock_t dmo_t1 = clock();\n");
+        c.push_str(&format!(
+            "    printf(\"NSPERITER %.3f\\n\", (double)(dmo_t1 - dmo_t0) * 1e9 / CLOCKS_PER_SEC / {iters}.0);\n"
+        ));
     }
     c.push_str("    return 0;\n}\n");
     c
@@ -320,6 +420,39 @@ mod tests {
         let opts = EmitOptions::new("tiny_model").seed(42).weight_embed_limit(0);
         let r = differential_test_with(&g, &plan, &opts).unwrap();
         assert!(!r.weights_embedded);
+    }
+
+    #[test]
+    fn dmo_cc_opt_overrides_the_optimisation_level() {
+        std::env::set_var("DMO_CC_OPT", "-O2");
+        let f = cc_flags();
+        std::env::remove_var("DMO_CC_OPT");
+        assert!(f.contains(&"-O2".to_string()));
+        assert!(!f.contains(&"-O1".to_string()));
+        assert!(f.contains(&"-ffp-contract=off".to_string()));
+
+        std::env::set_var("DMO_CC_OPT", "-O1; rm -rf /");
+        let f = cc_flags();
+        std::env::remove_var("DMO_CC_OPT");
+        assert_eq!(
+            f,
+            CC_FLAGS.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            "an unparseable override must be ignored, not passed to cc"
+        );
+    }
+
+    #[test]
+    fn timed_run_verifies_then_times() {
+        if cc_or_skip().is_none() {
+            return;
+        }
+        let g = models::build("tiny").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let unit = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
+        let t = time_unit(&unit, &g, 42, 10).unwrap();
+        assert!(t.ns_per_invoke > 0.0);
+        assert_eq!(t.report.elems, 10);
+        assert!(time_unit(&unit, &g, 42, 0).is_err());
     }
 
     #[test]

@@ -16,9 +16,27 @@
 //!   `f32::exp`/`f32::round` lower to on a glibc host;
 //! * the harness compiles with `-ffp-contract=off` so the compiler
 //!   cannot fuse `a * b + c` into an FMA the interpreter did not do.
+//!
+//! Alongside the generic byte-addressed kernels, [`fast_source`]
+//! generates *fast variants* per [`super::tune::Variant`]: typed-pointer
+//! loops (the compiler addresses elements directly instead of calling
+//! `dmo_load`/`dmo_store` per element) whose `Reference` order keeps the
+//! exact element order of the generic kernel — same loads, same stores,
+//! same f32 accumulation sequence — so they stay both bit-identical
+//! *and* safe over planned in-place overlaps. The `ChannelOuter` order
+//! reorders stores and is only emitted where the plan proves the
+//! buffers disjoint. The `i8` (`_q`) variants follow the CMSIS-NN
+//! idiom: accumulate in `int32_t`, requantise at store
+//! ([`REQUANT_HELPER`]); the emitter proves at emit time (from the
+//! actual generated weights) that every accumulator stays below 2^24,
+//! where f32 accumulation of integers is exact — so the integer path is
+//! bit-identical to the float reference, not just close.
 
 use crate::ir::graph::Graph;
 use crate::ir::op::{OpKind, PoolKind, UnaryKind};
+use crate::ir::DType;
+
+use super::tune::{LoopOrder, Variant};
 
 /// One emitted kernel function. Several [`OpKind`]s can share a kernel
 /// (both pool flavours, unary/reshape copies).
@@ -75,6 +93,27 @@ impl Kernel {
             self,
             Kernel::Conv2D | Kernel::DwConv2D | Kernel::Fc | Kernel::BandConv2D | Kernel::BandDwConv2D
         )
+    }
+
+    /// Emitted function name — what the emitter greps call sites for
+    /// to decide whether this kernel body is actually referenced.
+    pub(crate) fn fn_name(self) -> &'static str {
+        match self {
+            Kernel::Conv2D => "dmo_conv2d",
+            Kernel::DwConv2D => "dmo_dwconv2d",
+            Kernel::Pool => "dmo_pool",
+            Kernel::GlobalAvgPool => "dmo_gavgpool",
+            Kernel::Unary => "dmo_unary",
+            Kernel::Binary => "dmo_binary",
+            Kernel::Fc => "dmo_fc",
+            Kernel::MatMul => "dmo_matmul",
+            Kernel::Concat => "dmo_concat",
+            Kernel::Pad => "dmo_pad",
+            Kernel::Softmax => "dmo_softmax",
+            Kernel::BandConv2D => "dmo_band_conv2d",
+            Kernel::BandDwConv2D => "dmo_band_dwconv2d",
+            Kernel::BandPool => "dmo_band_pool",
+        }
     }
 
     /// C source of the kernel function.
@@ -561,6 +600,507 @@ static void dmo_fill_bt(dmo_bt *dst, size_t n, uint64_t *s) {
 }
 ";
 
+/// CMSIS-NN-style requantisation: widen to 64 bit, multiply by the
+/// precomputed fixed-point multiplier, rounding-right-shift, saturate
+/// to the int8 range. The synthetic weight scheme is unit-scale
+/// (multiplier 1, shift 0), where this reduces to pure saturation —
+/// exactly what the reference `roundf`+clamp store does to an integer
+/// accumulator.
+pub(crate) const REQUANT_HELPER: &str = "\
+static int8_t dmo_requant(int32_t acc, int32_t mult, int shift) {
+    int64_t v = (int64_t)acc * mult;
+    if (shift > 0) {
+        v = (v + ((int64_t)1 << (shift - 1))) >> shift;
+    }
+    if (v < -128) {
+        v = -128;
+    }
+    if (v > 127) {
+        v = 127;
+    }
+    return (int8_t)v;
+}
+";
+
+/// Function name of the fast variant for `class` at `dtype`, or `None`
+/// when the generator does not support the combination (the emitter
+/// then downgrades the call site to the generic kernel).
+pub(crate) fn fast_fn_name(class: &str, dtype: DType, variant: Variant) -> Option<String> {
+    let (order, unroll) = match variant {
+        Variant::Generic => return None,
+        Variant::Fast { order, unroll } => (order, unroll),
+    };
+    // ×4 unroll only where there is a long innermost accumulation loop;
+    // channel-outer only for f32 conv2d (i8 keeps reference order so
+    // requantised stores stay in-place safe)
+    if unroll == 4 && !matches!(class, "conv2d" | "fc") {
+        return None;
+    }
+    if order == LoopOrder::ChannelOuter && !(class == "conv2d" && dtype == DType::F32) {
+        return None;
+    }
+    let suffix = match (dtype, order, unroll) {
+        (DType::F32, LoopOrder::Reference, 1) => "_f",
+        (DType::F32, LoopOrder::Reference, 4) => "_f_u4",
+        (DType::F32, LoopOrder::ChannelOuter, 1) => "_f_co",
+        (DType::F32, LoopOrder::ChannelOuter, 4) => "_f_co_u4",
+        (DType::I8, LoopOrder::Reference, 1) => "_q",
+        (DType::I8, LoopOrder::Reference, 4) => "_q_u4",
+        _ => return None,
+    };
+    if !matches!(class, "conv2d" | "dwconv2d" | "pool" | "unary" | "binary" | "fc") {
+        return None;
+    }
+    Some(format!("dmo_{class}{suffix}"))
+}
+
+/// C source of the fast variant for `class` at `dtype`, or `None` when
+/// unsupported (see [`fast_fn_name`]).
+pub(crate) fn fast_source(class: &str, dtype: DType, variant: Variant) -> Option<String> {
+    let name = fast_fn_name(class, dtype, variant)?;
+    let (order, unroll) = match variant {
+        Variant::Fast { order, unroll } => (order, unroll),
+        Variant::Generic => return None,
+    };
+    Some(match (class, dtype) {
+        ("conv2d", DType::I8) => conv2d_q(&name, unroll),
+        ("conv2d", _) => conv2d_f(&name, order, unroll),
+        ("fc", DType::I8) => fc_q(&name, unroll),
+        ("fc", _) => fc_f(&name, unroll),
+        ("dwconv2d", DType::I8) => DWCONV2D_Q.to_string(),
+        ("dwconv2d", _) => DWCONV2D_F.to_string(),
+        ("pool", DType::I8) => POOL_Q.to_string(),
+        ("pool", _) => POOL_F.to_string(),
+        ("unary", DType::I8) => UNARY_Q.to_string(),
+        ("unary", _) => UNARY_F.to_string(),
+        ("binary", DType::I8) => BINARY_Q.to_string(),
+        ("binary", _) => BINARY_F.to_string(),
+        _ => return None,
+    })
+}
+
+fn conv2d_f(name: &str, order: LoopOrder, unroll: u8) -> String {
+    // the reference order is the store order the O_s analysis derives
+    // overlap distances for — safe fully in place; channel-outer is
+    // emitted only for call sites the plan proves disjoint
+    let outer = match order {
+        LoopOrder::Reference => "\
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            for (int oc = 0; oc < od; oc++) {",
+        LoopOrder::ChannelOuter => "\
+    for (int oc = 0; oc < od; oc++) {
+        for (int oy = 0; oy < oh; oy++) {
+            for (int ox = 0; ox < ow; ox++) {",
+    };
+    // unrolled adds stay in sequence into the one accumulator, so the
+    // f32 accumulation order — and therefore every bit — is unchanged
+    let acc = if unroll == 4 {
+        "\
+                        int ic = 0;
+                        for (; ic + 4 <= id; ic += 4) {
+                            total += ip[ic] * (float)wp[ic * od];
+                            total += ip[ic + 1] * (float)wp[(ic + 1) * od];
+                            total += ip[ic + 2] * (float)wp[(ic + 2) * od];
+                            total += ip[ic + 3] * (float)wp[(ic + 3) * od];
+                        }
+                        for (; ic < id; ic++) {
+                            total += ip[ic] * (float)wp[ic * od];
+                        }"
+    } else {
+        "\
+                        for (int ic = 0; ic < id; ic++) {
+                            total += ip[ic] * (float)wp[ic * od];
+                        }"
+    };
+    format!(
+        "static void {name}(const float *in, float *out, int ih, int iw, int id, int oh, int ow, int od,
+                       int kh, int kw, int sh, int sw, int dh, int dw, int ph, int pw, int a,
+                       const dmo_wt *w, const dmo_bt *bias) {{
+{outer}
+                int y0 = oy * sh - ph;
+                int x0 = ox * sw - pw;
+                float total = (float)bias[oc];
+                for (int ky = 0; ky < kh; ky++) {{
+                    int iy = y0 + ky * dh;
+                    if (iy < 0 || iy >= ih) {{
+                        continue;
+                    }}
+                    for (int kx = 0; kx < kw; kx++) {{
+                        int ix = x0 + kx * dw;
+                        if (ix < 0 || ix >= iw) {{
+                            continue;
+                        }}
+                        const float *ip = in + (iy * iw + ix) * id;
+                        const dmo_wt *wp = w + ((ky * kw + kx) * id) * od + oc;
+{acc}
+                    }}
+                }}
+                out[(oy * ow + ox) * od + oc] = dmo_act(total, a);
+            }}
+        }}
+    }}
+}}
+"
+    )
+}
+
+fn conv2d_q(name: &str, unroll: u8) -> String {
+    let acc = if unroll == 4 {
+        "\
+                        int ic = 0;
+                        for (; ic + 4 <= id; ic += 4) {
+                            acc += (int32_t)ip[ic] * wp[ic * od];
+                            acc += (int32_t)ip[ic + 1] * wp[(ic + 1) * od];
+                            acc += (int32_t)ip[ic + 2] * wp[(ic + 2) * od];
+                            acc += (int32_t)ip[ic + 3] * wp[(ic + 3) * od];
+                        }
+                        for (; ic < id; ic++) {
+                            acc += (int32_t)ip[ic] * wp[ic * od];
+                        }"
+    } else {
+        "\
+                        for (int ic = 0; ic < id; ic++) {
+                            acc += (int32_t)ip[ic] * wp[ic * od];
+                        }"
+    };
+    format!(
+        "static void {name}(const int8_t *in, int8_t *out, int ih, int iw, int id, int oh, int ow, int od,
+                       int kh, int kw, int sh, int sw, int dh, int dw, int ph, int pw, int a,
+                       int32_t rm, int rs, const dmo_wt *w, const dmo_bt *bias) {{
+    for (int oy = 0; oy < oh; oy++) {{
+        for (int ox = 0; ox < ow; ox++) {{
+            for (int oc = 0; oc < od; oc++) {{
+                int y0 = oy * sh - ph;
+                int x0 = ox * sw - pw;
+                int32_t acc = bias[oc];
+                for (int ky = 0; ky < kh; ky++) {{
+                    int iy = y0 + ky * dh;
+                    if (iy < 0 || iy >= ih) {{
+                        continue;
+                    }}
+                    for (int kx = 0; kx < kw; kx++) {{
+                        int ix = x0 + kx * dw;
+                        if (ix < 0 || ix >= iw) {{
+                            continue;
+                        }}
+                        const int8_t *ip = in + (iy * iw + ix) * id;
+                        const dmo_wt *wp = w + ((ky * kw + kx) * id) * od + oc;
+{acc}
+                    }}
+                }}
+                if (a >= 1 && acc < 0) {{
+                    acc = 0;
+                }}
+                if (a == 2 && acc > 6) {{
+                    acc = 6;
+                }}
+                out[(oy * ow + ox) * od + oc] = dmo_requant(acc, rm, rs);
+            }}
+        }}
+    }}
+}}
+"
+    )
+}
+
+fn fc_f(name: &str, unroll: u8) -> String {
+    let acc = if unroll == 4 {
+        "\
+        int k = 0;
+        for (; k + 4 <= k_dim; k += 4) {
+            total += in[k] * (float)w[k * nf + o];
+            total += in[k + 1] * (float)w[(k + 1) * nf + o];
+            total += in[k + 2] * (float)w[(k + 2) * nf + o];
+            total += in[k + 3] * (float)w[(k + 3) * nf + o];
+        }
+        for (; k < k_dim; k++) {
+            total += in[k] * (float)w[k * nf + o];
+        }"
+    } else {
+        "\
+        for (int k = 0; k < k_dim; k++) {
+            total += in[k] * (float)w[k * nf + o];
+        }"
+    };
+    format!(
+        "static void {name}(const float *in, float *out, int k_dim, int nf, int a,
+                   const dmo_wt *w, const dmo_bt *bias) {{
+    for (int o = 0; o < nf; o++) {{
+        float total = (float)bias[o];
+{acc}
+        out[o] = dmo_act(total, a);
+    }}
+}}
+"
+    )
+}
+
+fn fc_q(name: &str, unroll: u8) -> String {
+    let acc = if unroll == 4 {
+        "\
+        int k = 0;
+        for (; k + 4 <= k_dim; k += 4) {
+            acc += (int32_t)in[k] * w[k * nf + o];
+            acc += (int32_t)in[k + 1] * w[(k + 1) * nf + o];
+            acc += (int32_t)in[k + 2] * w[(k + 2) * nf + o];
+            acc += (int32_t)in[k + 3] * w[(k + 3) * nf + o];
+        }
+        for (; k < k_dim; k++) {
+            acc += (int32_t)in[k] * w[k * nf + o];
+        }"
+    } else {
+        "\
+        for (int k = 0; k < k_dim; k++) {
+            acc += (int32_t)in[k] * w[k * nf + o];
+        }"
+    };
+    format!(
+        "static void {name}(const int8_t *in, int8_t *out, int k_dim, int nf, int a,
+                   int32_t rm, int rs, const dmo_wt *w, const dmo_bt *bias) {{
+    for (int o = 0; o < nf; o++) {{
+        int32_t acc = bias[o];
+{acc}
+        if (a >= 1 && acc < 0) {{
+            acc = 0;
+        }}
+        if (a == 2 && acc > 6) {{
+            acc = 6;
+        }}
+        out[o] = dmo_requant(acc, rm, rs);
+    }}
+}}
+"
+    )
+}
+
+const DWCONV2D_F: &str = "\
+static void dmo_dwconv2d_f(const float *in, float *out, int ih, int iw, int id, int oh, int ow, int od,
+                           int kh, int kw, int sh, int sw, int dh, int dw, int ph, int pw,
+                           int mult, int bias_n, int a, const dmo_wt *w, const dmo_bt *bias) {
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int ic = 0; ic < id; ic++) {
+                for (int m = 0; m < mult; m++) {
+                    int oc = ic * mult + m;
+                    float total = (float)bias[oc < bias_n ? oc : bias_n - 1];
+                    for (int ky = 0; ky < kh; ky++) {
+                        int iy = y0 + ky * dh;
+                        if (iy < 0 || iy >= ih) {
+                            continue;
+                        }
+                        for (int kx = 0; kx < kw; kx++) {
+                            int ix = x0 + kx * dw;
+                            if (ix < 0 || ix >= iw) {
+                                continue;
+                            }
+                            total += in[(iy * iw + ix) * id + ic] * (float)w[((ky * kw + kx) * id + ic) * mult + m];
+                        }
+                    }
+                    out[(oy * ow + ox) * od + oc] = dmo_act(total, a);
+                }
+            }
+        }
+    }
+}
+";
+
+const DWCONV2D_Q: &str = "\
+static void dmo_dwconv2d_q(const int8_t *in, int8_t *out, int ih, int iw, int id, int oh, int ow, int od,
+                           int kh, int kw, int sh, int sw, int dh, int dw, int ph, int pw,
+                           int mult, int bias_n, int a, int32_t rm, int rs,
+                           const dmo_wt *w, const dmo_bt *bias) {
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int ic = 0; ic < id; ic++) {
+                for (int m = 0; m < mult; m++) {
+                    int oc = ic * mult + m;
+                    int32_t acc = bias[oc < bias_n ? oc : bias_n - 1];
+                    for (int ky = 0; ky < kh; ky++) {
+                        int iy = y0 + ky * dh;
+                        if (iy < 0 || iy >= ih) {
+                            continue;
+                        }
+                        for (int kx = 0; kx < kw; kx++) {
+                            int ix = x0 + kx * dw;
+                            if (ix < 0 || ix >= iw) {
+                                continue;
+                            }
+                            acc += (int32_t)in[(iy * iw + ix) * id + ic] * w[((ky * kw + kx) * id + ic) * mult + m];
+                        }
+                    }
+                    if (a >= 1 && acc < 0) {
+                        acc = 0;
+                    }
+                    if (a == 2 && acc > 6) {
+                        acc = 6;
+                    }
+                    out[(oy * ow + ox) * od + oc] = dmo_requant(acc, rm, rs);
+                }
+            }
+        }
+    }
+}
+";
+
+const POOL_F: &str = "\
+static void dmo_pool_f(const float *in, float *out, int ih, int iw, int id, int oh, int ow, int od,
+                       int kh, int kw, int sh, int sw, int ph, int pw, int kind) {
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int c = 0; c < od; c++) {
+                float acc = kind == 0 ? -INFINITY : 0.0f;
+                int n = 0;
+                for (int ky = 0; ky < kh; ky++) {
+                    int iy = y0 + ky;
+                    if (iy < 0 || iy >= ih) {
+                        continue;
+                    }
+                    for (int kx = 0; kx < kw; kx++) {
+                        int ix = x0 + kx;
+                        if (ix < 0 || ix >= iw) {
+                            continue;
+                        }
+                        float v = in[(iy * iw + ix) * id + c];
+                        if (kind == 0) {
+                            if (v > acc) {
+                                acc = v;
+                            }
+                        } else {
+                            acc += v;
+                        }
+                        n++;
+                    }
+                }
+                out[(oy * ow + ox) * od + c] = kind == 0 ? acc : acc / (float)(n > 0 ? n : 1);
+            }
+        }
+    }
+}
+";
+
+/* int8 pooling: max needs no arithmetic at all (values already int8;
+ * an empty all-padding window yields -128, exactly what the reference's
+ * -INFINITY -> roundf -> clamp produces); avg reproduces the reference
+ * float division bit for bit because the integer sum is exact in f32
+ * below 2^24 (guarded at emit time). */
+const POOL_Q: &str = "\
+static void dmo_pool_q(const int8_t *in, int8_t *out, int ih, int iw, int id, int oh, int ow, int od,
+                       int kh, int kw, int sh, int sw, int ph, int pw, int kind) {
+    for (int oy = 0; oy < oh; oy++) {
+        for (int ox = 0; ox < ow; ox++) {
+            int y0 = oy * sh - ph;
+            int x0 = ox * sw - pw;
+            for (int c = 0; c < od; c++) {
+                int32_t best = -128;
+                int32_t sum = 0;
+                int n = 0;
+                for (int ky = 0; ky < kh; ky++) {
+                    int iy = y0 + ky;
+                    if (iy < 0 || iy >= ih) {
+                        continue;
+                    }
+                    for (int kx = 0; kx < kw; kx++) {
+                        int ix = x0 + kx;
+                        if (ix < 0 || ix >= iw) {
+                            continue;
+                        }
+                        int32_t v = in[(iy * iw + ix) * id + c];
+                        if (v > best) {
+                            best = v;
+                        }
+                        sum += v;
+                        n++;
+                    }
+                }
+                int32_t r = best;
+                if (kind != 0) {
+                    r = (int32_t)roundf((float)sum / (float)(n > 0 ? n : 1));
+                    if (r < -128) {
+                        r = -128;
+                    }
+                    if (r > 127) {
+                        r = 127;
+                    }
+                }
+                out[(oy * ow + ox) * od + c] = (int8_t)r;
+            }
+        }
+    }
+}
+";
+
+const UNARY_F: &str = "\
+static void dmo_unary_f(const float *in, float *out, size_t n, int kind) {
+    for (size_t i = 0; i < n; i++) {
+        float v = in[i];
+        if (kind == 0 && v < 0.0f) {
+            v = 0.0f;
+        }
+        if (kind == 1) {
+            if (v < 0.0f) {
+                v = 0.0f;
+            }
+            if (v > 6.0f) {
+                v = 6.0f;
+            }
+        }
+        out[i] = v;
+    }
+}
+";
+
+const UNARY_Q: &str = "\
+static void dmo_unary_q(const int8_t *in, int8_t *out, size_t n, int kind) {
+    for (size_t i = 0; i < n; i++) {
+        int32_t v = in[i];
+        if (kind == 0 && v < 0) {
+            v = 0;
+        }
+        if (kind == 1) {
+            if (v < 0) {
+                v = 0;
+            }
+            if (v > 6) {
+                v = 6;
+            }
+        }
+        out[i] = (int8_t)v;
+    }
+}
+";
+
+const BINARY_F: &str = "\
+static void dmo_binary_f(const float *a, const float *b, float *out, size_t n, int kind) {
+    for (size_t i = 0; i < n; i++) {
+        out[i] = kind == 0 ? a[i] + b[i] : a[i] * b[i];
+    }
+}
+";
+
+/* int8 add/mul: |a op b| <= 127*127 — exact in f32, so saturating in
+ * the integer domain matches the reference roundf+clamp store. */
+const BINARY_Q: &str = "\
+static void dmo_binary_q(const int8_t *a, const int8_t *b, int8_t *out, size_t n, int kind) {
+    for (size_t i = 0; i < n; i++) {
+        int32_t v = kind == 0 ? (int32_t)a[i] + b[i] : (int32_t)a[i] * b[i];
+        if (v < -128) {
+            v = -128;
+        }
+        if (v > 127) {
+            v = 127;
+        }
+        out[i] = (int8_t)v;
+    }
+}
+";
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -608,6 +1148,79 @@ mod tests {
             assert!(src.starts_with("static void dmo_"), "{src}");
             assert!(src.contains("dmo_store("), "every kernel writes: {src}");
             assert_eq!(k.uses_act(), src.contains("dmo_act("), "{src}");
+        }
+    }
+
+    #[test]
+    fn fast_sources_cover_the_variant_space() {
+        use super::super::tune::variants_for;
+        for class in ["conv2d", "dwconv2d", "pool", "unary", "binary", "fc"] {
+            for dt in [DType::F32, DType::I8] {
+                for v in variants_for(class, dt) {
+                    if v == Variant::Generic {
+                        assert_eq!(fast_source(class, dt, v), None);
+                        continue;
+                    }
+                    let name = fast_fn_name(class, dt, v)
+                        .unwrap_or_else(|| panic!("{class}/{dt}/{}", v.name()));
+                    let src = fast_source(class, dt, v).unwrap();
+                    assert!(
+                        src.starts_with(&format!("static void {name}(")),
+                        "{class}/{dt}: {src}"
+                    );
+                    // typed-pointer loops never go through the byte
+                    // accessors — that indirection is what they remove
+                    assert!(!src.contains("dmo_load("), "{src}");
+                    assert!(!src.contains("dmo_store("), "{src}");
+                    // in-place overlap safety forbids restrict
+                    assert!(!src.contains("restrict"), "{src}");
+                    if dt == DType::I8 && matches!(class, "conv2d" | "dwconv2d" | "fc") {
+                        assert!(src.contains("dmo_requant("), "{src}");
+                        assert!(src.contains("int32_t acc"), "{src}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_fast_combinations_downgrade() {
+        let co = Variant::Fast { order: LoopOrder::ChannelOuter, unroll: 1 };
+        // channel-outer reorders stores: f32 conv2d only
+        assert!(fast_fn_name("conv2d", DType::F32, co).is_some());
+        assert_eq!(fast_fn_name("conv2d", DType::I8, co), None);
+        assert_eq!(fast_fn_name("pool", DType::F32, co), None);
+        let u4 = Variant::Fast { order: LoopOrder::Reference, unroll: 4 };
+        assert_eq!(fast_fn_name("unary", DType::F32, u4), None);
+        assert!(fast_fn_name("fc", DType::I8, u4).is_some());
+        // no fast path at all for i32 activations or untunable classes
+        assert_eq!(
+            fast_fn_name("conv2d", DType::I32, Variant::Fast { order: LoopOrder::Reference, unroll: 1 }),
+            None
+        );
+        assert_eq!(
+            fast_fn_name("softmax", DType::F32, Variant::Fast { order: LoopOrder::Reference, unroll: 1 }),
+            None
+        );
+        assert_eq!(fast_fn_name("conv2d", DType::F32, Variant::Generic), None);
+    }
+
+    #[test]
+    fn unrolled_variants_keep_a_remainder_loop() {
+        for (class, dt) in [
+            ("conv2d", DType::F32),
+            ("conv2d", DType::I8),
+            ("fc", DType::F32),
+            ("fc", DType::I8),
+        ] {
+            let src = fast_source(
+                class,
+                dt,
+                Variant::Fast { order: LoopOrder::Reference, unroll: 4 },
+            )
+            .unwrap();
+            assert!(src.contains("+ 4 <="), "{class}/{dt}: {src}");
+            assert!(src.contains("+ 3]"), "{class}/{dt}: {src}");
         }
     }
 }

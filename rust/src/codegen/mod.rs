@@ -46,12 +46,14 @@
 pub(crate) mod fmt;
 pub mod harness;
 pub(crate) mod kernels;
+pub mod tune;
 mod unit;
 
 pub use harness::{
     cc_available, differential_test, differential_test_unit, differential_test_with,
-    generate_main_c, DiffReport,
+    generate_main_c, time_unit, DiffReport, TimedRun,
 };
+pub use tune::{tune, TuneCache, TuneReport, TuneTable, Variant};
 pub use unit::{emit, emit_artifact, CUnit, EmitOptions};
 
 use crate::ir::graph::Graph;

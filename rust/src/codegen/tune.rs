@@ -1,0 +1,625 @@
+//! Autotuning of emitted kernel variants (loop order × unroll ×
+//! in-place vs generic copy loops).
+//!
+//! The C backend can lower each op class through more than one loop
+//! nest: the `Generic` byte-addressed reference loops, or `Fast`
+//! typed-pointer loops in one of two orders (the reference sweep order,
+//! or a channel-outer order legal only when the op's buffers do not
+//! overlap) with an optional ×4 inner unroll. Which variant is fastest
+//! depends on the compiler, the target and the model's shapes — so we
+//! measure instead of guessing: [`tune`] emits one probe unit per
+//! candidate variant (all *other* op classes pinned to `Generic` so the
+//! timing difference is attributable), compiles and runs it through the
+//! [`super::harness`] compile-and-run differential harness — **a
+//! variant must prove itself bit-identical to the interpreter reference
+//! before its timing counts** — and records the winner per
+//! `(class, dtype, graph fingerprint)`.
+//!
+//! Winners persist in a [`TuneCache`]: the same versioned,
+//! content-hashed disk format as the `O_s` cache
+//! ([`crate::overlap::OsCache`]), so a warm `dmo emit-c --tune` run
+//! skips every compile-and-time probe and re-emits byte-identical C.
+//! [`TuneCache::ENGINE_REV`] is bumped whenever kernel text changes —
+//! a stale cache then degrades to a cold start instead of silently
+//! pinning variants that no longer exist or no longer win.
+
+use crate::ir::graph::Graph;
+use crate::ir::op::OpKind;
+use crate::ir::DType;
+use crate::planner::{graph_fingerprint, Plan};
+use crate::util::json::{num, obj, s, Json};
+use anyhow::{ensure, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Loop order of a fast kernel variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// The interpreter's reference sweep order — element-for-element
+    /// identical store order, which is exactly the diagonal order the
+    /// O_s analysis derives safe-overlap distances for. Always legal,
+    /// including fully in-place over an overlapped input.
+    Reference,
+    /// Output-channel-outer order (better weight locality for conv2d).
+    /// Stores land out of reference order, so this is only legal when
+    /// the plan places input and output in disjoint byte ranges — the
+    /// emitter checks the plan's offsets per call site and downgrades
+    /// to [`LoopOrder::Reference`] otherwise.
+    ChannelOuter,
+}
+
+/// One emittable kernel variant for an op class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// The byte-addressed reference loops (`dmo_load`/`dmo_store`).
+    Generic,
+    /// Typed-pointer loops; `unroll` is the inner-loop unroll factor
+    /// (1 or 4 — unrolled adds stay in sequence, so f32 accumulation
+    /// order and therefore bits are unchanged).
+    Fast { order: LoopOrder, unroll: u8 },
+}
+
+impl Variant {
+    /// Stable spelling used in the tuning cache and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Generic => "generic",
+            Variant::Fast { order: LoopOrder::Reference, unroll: 1 } => "fast",
+            Variant::Fast { order: LoopOrder::Reference, unroll: 4 } => "fast-u4",
+            Variant::Fast { order: LoopOrder::ChannelOuter, unroll: 1 } => "fast-co",
+            Variant::Fast { order: LoopOrder::ChannelOuter, unroll: 4 } => "fast-co-u4",
+            Variant::Fast { .. } => "fast-unknown",
+        }
+    }
+
+    /// Inverse of [`Variant::name`].
+    pub fn parse(text: &str) -> Option<Variant> {
+        Some(match text {
+            "generic" => Variant::Generic,
+            "fast" => Variant::Fast { order: LoopOrder::Reference, unroll: 1 },
+            "fast-u4" => Variant::Fast { order: LoopOrder::Reference, unroll: 4 },
+            "fast-co" => Variant::Fast { order: LoopOrder::ChannelOuter, unroll: 1 },
+            "fast-co-u4" => Variant::Fast { order: LoopOrder::ChannelOuter, unroll: 4 },
+            _ => return None,
+        })
+    }
+}
+
+/// The tunable op class an op kind belongs to, or `None` for kinds the
+/// emitter always lowers generically (band ops, concat, pad, softmax,
+/// matmul-accumulate, global pooling, concat-rows — the last is elided
+/// outright when bands are contiguous, which no tuning knob affects).
+pub fn class_of(kind: &OpKind) -> Option<&'static str> {
+    match kind {
+        OpKind::Conv2D(_) => Some("conv2d"),
+        OpKind::DepthwiseConv2D(_) => Some("dwconv2d"),
+        OpKind::Pool(_) => Some("pool"),
+        OpKind::Unary(_) | OpKind::Reshape { .. } => Some("unary"),
+        OpKind::Binary(_) => Some("binary"),
+        OpKind::FullyConnected { .. } => Some("fc"),
+        _ => None,
+    }
+}
+
+/// Candidate variants for one class at one activation dtype, in the
+/// deterministic order probes run (ties break toward the earlier
+/// entry). Every class starts with [`Variant::Generic`] so the tuner
+/// always has a known-good fallback to time against.
+pub fn variants_for(class: &str, dtype: DType) -> Vec<Variant> {
+    let fast = |order, unroll| Variant::Fast { order, unroll };
+    match (class, dtype) {
+        ("conv2d", DType::I8) => vec![
+            Variant::Generic,
+            fast(LoopOrder::Reference, 1),
+            fast(LoopOrder::Reference, 4),
+        ],
+        ("conv2d", _) => vec![
+            Variant::Generic,
+            fast(LoopOrder::Reference, 1),
+            fast(LoopOrder::Reference, 4),
+            fast(LoopOrder::ChannelOuter, 1),
+            fast(LoopOrder::ChannelOuter, 4),
+        ],
+        ("fc", _) => vec![
+            Variant::Generic,
+            fast(LoopOrder::Reference, 1),
+            fast(LoopOrder::Reference, 4),
+        ],
+        ("dwconv2d" | "pool" | "unary" | "binary", _) => {
+            vec![Variant::Generic, fast(LoopOrder::Reference, 1)]
+        }
+        _ => vec![Variant::Generic],
+    }
+}
+
+/// A per-class variant selection, consumed by
+/// [`super::EmitOptions::tuning`]. Classes absent from the table get
+/// the emitter's default (the plain `fast` variant, downgraded per call
+/// site where legality requires).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TuneTable {
+    choices: BTreeMap<String, Variant>,
+}
+
+impl TuneTable {
+    /// An empty table (every class at the emitter default).
+    pub fn new() -> TuneTable {
+        TuneTable::default()
+    }
+
+    /// Pin `class` to `variant`.
+    pub fn set(&mut self, class: &str, variant: Variant) {
+        self.choices.insert(class.to_string(), variant);
+    }
+
+    /// The pinned variant for `class`, if any.
+    pub fn choice(&self, class: &str) -> Option<Variant> {
+        self.choices.get(class).copied()
+    }
+
+    /// Iterate `(class, variant)` pairs in class order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, Variant)> {
+        self.choices.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Number of pinned classes.
+    pub fn len(&self) -> usize {
+        self.choices.len()
+    }
+
+    /// Is every class at the emitter default?
+    pub fn is_empty(&self) -> bool {
+        self.choices.is_empty()
+    }
+}
+
+/// Lookup/probe counters of a [`TuneCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TuneStats {
+    /// Lookups answered from the cache (no probes ran).
+    pub hits: usize,
+    /// Lookups that had to probe.
+    pub misses: usize,
+    /// Compile-and-time probe runs executed (one per candidate variant
+    /// per miss).
+    pub probes: usize,
+}
+
+/// Thread-safe memo of tuning winners keyed by
+/// `"<class>/<dtype>/<graph fingerprint>"`, with the same versioned,
+/// content-hashed disk persistence as [`crate::overlap::OsCache`].
+#[derive(Debug, Default)]
+pub struct TuneCache {
+    map: Mutex<BTreeMap<String, Variant>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    probes: AtomicUsize,
+}
+
+impl TuneCache {
+    /// An empty cache.
+    pub fn new() -> TuneCache {
+        TuneCache::default()
+    }
+
+    /// The cached winner for `key`, counting a hit or miss.
+    pub fn get(&self, key: &str) -> Option<Variant> {
+        let hit = self.lock().get(key).copied();
+        match hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    /// Record a freshly probed winner.
+    pub fn insert(&self, key: &str, variant: Variant) {
+        self.lock().insert(key.to_string(), variant);
+    }
+
+    /// Count `n` executed probe runs.
+    pub fn count_probes(&self, n: usize) {
+        self.probes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> TuneStats {
+        TuneStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of keys held.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// File-format marker of a persisted tuning cache.
+    pub const DISK_KIND: &'static str = "dmo-tune-cache";
+    /// File-format version; bump when the entry schema changes shape.
+    pub const DISK_VERSION: u64 = 1;
+    /// Revision of the kernel generators the winners were measured on.
+    /// A cached winner pins emitted C text, so **bump this whenever
+    /// kernel text or the variant space changes** — stale files then
+    /// degrade to a cold re-probe instead of pinning vanished variants.
+    pub const ENGINE_REV: u64 = 1;
+
+    /// Load a cache persisted by [`TuneCache::save`] and merge its
+    /// entries (existing in-memory entries win). Returns the number of
+    /// entries loaded; wrong kind/version/engine/hash is an error —
+    /// callers typically warn and start cold.
+    pub fn load(&self, path: &Path) -> Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text)?;
+        ensure!(
+            v.get("kind").and_then(|k| k.as_str()) == Some(Self::DISK_KIND),
+            "{} is not a tuning cache file",
+            path.display()
+        );
+        let version = v.get("version").and_then(|x| x.as_usize()).unwrap_or(0);
+        ensure!(
+            version as u64 == Self::DISK_VERSION,
+            "unsupported tuning cache version {version} (this build reads {})",
+            Self::DISK_VERSION
+        );
+        let engine = v.get("engine").and_then(|x| x.as_usize()).unwrap_or(0);
+        ensure!(
+            engine as u64 == Self::ENGINE_REV,
+            "tuning cache was measured on kernel revision {engine}; this build is revision {} — \
+             refusing stale winners",
+            Self::ENGINE_REV
+        );
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("tuning cache file has no entries array"))?;
+        let mut parsed: Vec<(String, Variant)> = Vec::with_capacity(entries.len());
+        for e in entries {
+            let key = e
+                .get("key")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow::anyhow!("bad `key` in tuning cache entry"))?;
+            let variant = e
+                .get("variant")
+                .and_then(|x| x.as_str())
+                .and_then(Variant::parse)
+                .ok_or_else(|| anyhow::anyhow!("bad `variant` in tuning cache entry"))?;
+            parsed.push((key.to_string(), variant));
+        }
+        let recorded = v
+            .get("hash")
+            .and_then(|x| x.as_str())
+            .and_then(|x| u64::from_str_radix(x, 16).ok())
+            .ok_or_else(|| anyhow::anyhow!("tuning cache file has no content hash"))?;
+        ensure!(
+            entries_hash(&parsed) == recorded,
+            "tuning cache content does not match its recorded hash"
+        );
+        let n = parsed.len();
+        let mut map = self.lock();
+        for (key, variant) in parsed {
+            map.entry(key).or_insert(variant);
+        }
+        Ok(n)
+    }
+
+    /// Persist every entry to `path`, atomically (tmp + rename, like
+    /// `OsCache::save`). Returns the number of entries written.
+    pub fn save(&self, path: &Path) -> Result<usize> {
+        let entries: Vec<(String, Variant)> =
+            self.lock().iter().map(|(k, v)| (k.clone(), *v)).collect();
+        let hash = entries_hash(&entries);
+        let doc = obj(vec![
+            ("kind", s(Self::DISK_KIND)),
+            ("version", num(Self::DISK_VERSION as usize)),
+            ("engine", num(Self::ENGINE_REV as usize)),
+            ("hash", s(&format!("{hash:016x}"))),
+            (
+                "entries",
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|(key, variant)| {
+                            obj(vec![("key", s(key)), ("variant", s(variant.name()))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
+        }
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("{} has no file name", path.display()))?;
+        static SAVE_COUNTER: AtomicUsize = AtomicUsize::new(0);
+        let tmp = path.with_file_name(format!(
+            "{}.tmp.{}.{}",
+            file_name.to_string_lossy(),
+            std::process::id(),
+            SAVE_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, doc.to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            anyhow::anyhow!("renaming {} into place: {e}", path.display())
+        })?;
+        Ok(entries.len())
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Variant>> {
+        self.map.lock().expect("tuning cache lock poisoned")
+    }
+}
+
+/// Content hash of a persisted cache's entry list (order-sensitive —
+/// the `BTreeMap` writer emits in key order).
+fn entries_hash(entries: &[(String, Variant)]) -> u64 {
+    let mut h = crate::util::fnv::Fnv::new();
+    h.word(entries.len());
+    for (key, variant) in entries {
+        h.str(key);
+        h.str(variant.name());
+    }
+    h.finish()
+}
+
+/// One class's tuning outcome.
+#[derive(Debug, Clone)]
+pub struct TuneRow {
+    /// Op class (`"conv2d"`, `"fc"`, …).
+    pub class: String,
+    /// Winning variant.
+    pub chosen: Variant,
+    /// `true` when the winner came from the cache (no probes ran).
+    pub from_cache: bool,
+    /// Per-candidate measured ns/invoke; `None` for candidates that
+    /// failed to compile or were not bit-identical (disqualified), and
+    /// empty on a cache hit.
+    pub timings: Vec<(Variant, Option<f64>)>,
+}
+
+/// Result of [`tune`]: the winning table plus per-class evidence.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// Model tuned.
+    pub model: String,
+    /// Winning variant per class — feed to
+    /// [`super::EmitOptions::tuning`].
+    pub table: TuneTable,
+    /// Per-class outcomes, in class order.
+    pub rows: Vec<TuneRow>,
+    /// Compile-and-time probes this call executed (0 on a fully warm
+    /// cache).
+    pub probes: usize,
+    /// Classes answered from the cache.
+    pub cache_hits: usize,
+}
+
+/// Pick the fastest *proven-bit-identical* kernel variant per op class
+/// for `(graph, plan)`.
+///
+/// For each tunable class present in the (possibly rewritten) graph, a
+/// cache key `"<class>/<dtype>/<graph fingerprint>"` is looked up in
+/// `cache`; on a miss every candidate from [`variants_for`] is emitted
+/// as a probe unit (the probed class pinned to the candidate, every
+/// other class pinned to `Generic` so timing differences are
+/// attributable), compiled, proven bit-identical to the interpreter
+/// reference and timed over `iters` invocations via
+/// [`super::harness::time_unit`]. Candidates that fail to compile or
+/// differ by a single bit are disqualified; the fastest survivor wins
+/// and is cached. Requires a working C compiler
+/// ([`super::cc_available`]).
+pub fn tune(
+    graph: &Graph,
+    plan: &Plan,
+    seed: u64,
+    iters: usize,
+    cache: &TuneCache,
+) -> Result<TuneReport> {
+    ensure!(iters > 0, "--tune-iters must be positive");
+    let resolved = plan.graph_for(graph);
+    let dtype = resolved.tensor(resolved.outputs[0]).dtype;
+    let fp = graph_fingerprint(resolved);
+    let classes: BTreeSet<&'static str> =
+        resolved.ops.iter().filter_map(|op| class_of(&op.kind)).collect();
+    let mut table = TuneTable::new();
+    let mut rows = Vec::new();
+    let (mut probes, mut cache_hits) = (0usize, 0usize);
+    for class in classes {
+        let key = format!("{class}/{}/{fp:016x}", dtype.name());
+        if let Some(v) = cache.get(&key) {
+            cache_hits += 1;
+            table.set(class, v);
+            rows.push(TuneRow {
+                class: class.to_string(),
+                chosen: v,
+                from_cache: true,
+                timings: Vec::new(),
+            });
+            continue;
+        }
+        let mut timings: Vec<(Variant, Option<f64>)> = Vec::new();
+        for candidate in variants_for(class, dtype) {
+            // probe isolation: only the probed class varies
+            let mut probe_table = TuneTable::new();
+            probe_table.set(class, candidate);
+            for op in &resolved.ops {
+                if let Some(c) = class_of(&op.kind) {
+                    if c != class {
+                        probe_table.set(c, Variant::Generic);
+                    }
+                }
+            }
+            let opts = super::EmitOptions::new(&format!("dmo_tune_{class}"))
+                .seed(seed)
+                .tuning(probe_table);
+            probes += 1;
+            let timed = super::emit(graph, plan, &opts)
+                .and_then(|unit| super::harness::time_unit(&unit, graph, seed, iters));
+            match timed {
+                Ok(t) => timings.push((candidate, Some(t.ns_per_invoke))),
+                Err(e) => {
+                    eprintln!(
+                        "  tune: {class}/{} variant `{}` disqualified: {e:#}",
+                        dtype.name(),
+                        candidate.name()
+                    );
+                    timings.push((candidate, None));
+                }
+            }
+        }
+        let chosen = timings
+            .iter()
+            .filter_map(|(v, ns)| ns.map(|ns| (*v, ns)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(v, _)| v)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "tuning {class}: every candidate variant failed the compile-and-run \
+                     differential harness (is a C compiler available?)"
+                )
+            })?;
+        cache.insert(&key, chosen);
+        table.set(class, chosen);
+        rows.push(TuneRow { class: class.to_string(), chosen, from_cache: false, timings });
+    }
+    cache.count_probes(probes);
+    Ok(TuneReport { model: graph.name.clone(), table, rows, probes, cache_hits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Activation, BinaryKind, PoolKind, PoolParams, Padding, UnaryKind};
+
+    #[test]
+    fn variant_names_round_trip() {
+        let all = [
+            Variant::Generic,
+            Variant::Fast { order: LoopOrder::Reference, unroll: 1 },
+            Variant::Fast { order: LoopOrder::Reference, unroll: 4 },
+            Variant::Fast { order: LoopOrder::ChannelOuter, unroll: 1 },
+            Variant::Fast { order: LoopOrder::ChannelOuter, unroll: 4 },
+        ];
+        for v in all {
+            assert_eq!(Variant::parse(v.name()), Some(v), "{}", v.name());
+        }
+        assert_eq!(Variant::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn variant_space_shape() {
+        // every class leads with the known-good generic fallback
+        for class in ["conv2d", "dwconv2d", "pool", "unary", "binary", "fc"] {
+            for dt in [DType::F32, DType::I8] {
+                let vs = variants_for(class, dt);
+                assert_eq!(vs[0], Variant::Generic, "{class}/{dt}");
+                assert!(vs.len() >= 2, "{class}/{dt} must have a fast candidate");
+            }
+        }
+        // channel-outer reorders stores — f32 conv only (i8 keeps the
+        // reference order, where requantised stores are still in-place
+        // safe)
+        assert!(variants_for("conv2d", DType::F32)
+            .contains(&Variant::Fast { order: LoopOrder::ChannelOuter, unroll: 1 }));
+        assert!(!variants_for("conv2d", DType::I8)
+            .iter()
+            .any(|v| matches!(v, Variant::Fast { order: LoopOrder::ChannelOuter, .. })));
+        assert_eq!(variants_for("softmax", DType::F32), vec![Variant::Generic]);
+    }
+
+    #[test]
+    fn class_covers_tunable_kinds_only() {
+        assert_eq!(class_of(&OpKind::Unary(UnaryKind::Relu)), Some("unary"));
+        assert_eq!(
+            class_of(&OpKind::Reshape { to: crate::ir::Shape::new(&[1, 4]) }),
+            Some("unary")
+        );
+        assert_eq!(class_of(&OpKind::Binary(BinaryKind::Add)), Some("binary"));
+        assert_eq!(
+            class_of(&OpKind::Pool(PoolParams {
+                kind: PoolKind::Max,
+                kernel: (2, 2),
+                stride: (2, 2),
+                padding: Padding::Valid,
+            })),
+            Some("pool")
+        );
+        assert_eq!(
+            class_of(&OpKind::FullyConnected { out_features: 4, act: Activation::None }),
+            Some("fc")
+        );
+        // reassembly/copy-shaped kinds are not tuned
+        assert_eq!(class_of(&OpKind::ConcatRows), None);
+        assert_eq!(class_of(&OpKind::Concat), None);
+        assert_eq!(class_of(&OpKind::Softmax), None);
+        assert_eq!(class_of(&OpKind::GlobalAvgPool), None);
+    }
+
+    #[test]
+    fn table_pins_and_reports() {
+        let mut t = TuneTable::new();
+        assert!(t.is_empty());
+        assert_eq!(t.choice("conv2d"), None);
+        t.set("conv2d", Variant::Fast { order: LoopOrder::Reference, unroll: 4 });
+        t.set("fc", Variant::Generic);
+        assert_eq!(t.len(), 2);
+        assert_eq!(
+            t.choice("conv2d"),
+            Some(Variant::Fast { order: LoopOrder::Reference, unroll: 4 })
+        );
+        let pairs: Vec<(&str, Variant)> = t.iter().collect();
+        assert_eq!(pairs[0].0, "conv2d"); // BTreeMap order — deterministic
+        assert_eq!(pairs[1].0, "fc");
+    }
+
+    #[test]
+    fn cache_counts_and_round_trips() {
+        let dir = std::env::temp_dir().join(format!("dmo-tunecache-{}", std::process::id()));
+        let path = dir.join("tune_cache.json");
+        let warm = TuneCache::new();
+        assert_eq!(warm.get("conv2d/i8/0000000000000001"), None);
+        warm.insert(
+            "conv2d/i8/0000000000000001",
+            Variant::Fast { order: LoopOrder::Reference, unroll: 4 },
+        );
+        warm.insert("fc/i8/0000000000000001", Variant::Generic);
+        warm.count_probes(7);
+        assert_eq!(
+            warm.get("conv2d/i8/0000000000000001"),
+            Some(Variant::Fast { order: LoopOrder::Reference, unroll: 4 })
+        );
+        assert_eq!(warm.stats(), TuneStats { hits: 1, misses: 1, probes: 7 });
+        assert_eq!(warm.save(&path).unwrap(), 2);
+
+        // a cold instance answers from the file
+        let cold = TuneCache::new();
+        assert_eq!(cold.load(&path).unwrap(), 2);
+        assert_eq!(cold.get("fc/i8/0000000000000001"), Some(Variant::Generic));
+
+        // a different kernel revision is refused outright (stale winners)
+        let good = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, good.replace("\"engine\":1", "\"engine\":999")).unwrap();
+        assert!(TuneCache::new().load(&path).is_err());
+        // tampered content fails the recorded hash
+        std::fs::write(&path, good.replace("fast-u4", "generic")).unwrap();
+        assert!(TuneCache::new().load(&path).is_err());
+        // and a wrong kind is refused outright
+        std::fs::write(&path, "{\"kind\":\"something-else\",\"version\":1}").unwrap();
+        assert!(TuneCache::new().load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

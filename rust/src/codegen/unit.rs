@@ -7,8 +7,10 @@
 
 use super::fmt::{f32_literal, sanitize_ident, wrap_values};
 use super::kernels::{
-    act_id, kernels_used, load_store_source, pool_kind_id, unary_kind_id, ACT_HELPER, SPLITMIX,
+    act_id, fast_fn_name, fast_source, kernels_used, load_store_source, pool_kind_id,
+    unary_kind_id, ACT_HELPER, REQUANT_HELPER, SPLITMIX,
 };
+use super::tune::{class_of, LoopOrder, TuneTable, Variant};
 use super::FlashFootprint;
 use crate::ir::graph::{Graph, OpNode, TensorId};
 use crate::ir::op::{pad_before, OpKind};
@@ -16,6 +18,7 @@ use crate::ir::DType;
 use crate::ops::exec::gen_weights;
 use crate::planner::{graph_fingerprint, Plan, PlanArtifact};
 use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
@@ -34,15 +37,27 @@ pub struct EmitOptions {
     /// arrays (a 50 M-element initialiser list is not a reviewable or
     /// compilable artifact). The stream is identical either way.
     pub weight_embed_limit: usize,
+    /// Emit fast typed-pointer kernel variants where the per-site
+    /// legality gates allow it (`true` by default). `false` forces the
+    /// byte-addressed generic kernels everywhere — the autotuner's
+    /// baseline and a debugging escape hatch.
+    pub fast: bool,
+    /// Per-op-class variant choices from the autotuner
+    /// ([`super::tune::tune`]). `None` uses the safe default: the
+    /// reference-order fast loop wherever legal.
+    pub tuning: Option<TuneTable>,
 }
 
 impl EmitOptions {
-    /// Defaults: seed 42, embed weights up to one million elements.
+    /// Defaults: seed 42, embed weights up to one million elements,
+    /// fast kernels on, no tuning table.
     pub fn new(stem: &str) -> EmitOptions {
         EmitOptions {
             stem: sanitize_ident(stem),
             seed: 42,
             weight_embed_limit: 1_000_000,
+            fast: true,
+            tuning: None,
         }
     }
 
@@ -55,6 +70,18 @@ impl EmitOptions {
     /// Override the embed-vs-generate threshold (elements).
     pub fn weight_embed_limit(mut self, elems: usize) -> Self {
         self.weight_embed_limit = elems;
+        self
+    }
+
+    /// Enable/disable fast kernel variants.
+    pub fn fast(mut self, fast: bool) -> Self {
+        self.fast = fast;
+        self
+    }
+
+    /// Use autotuned per-class variant choices.
+    pub fn tuning(mut self, table: TuneTable) -> Self {
+        self.tuning = Some(table);
         self
     }
 }
@@ -83,6 +110,14 @@ pub struct CUnit {
     pub input_elems: Vec<usize>,
     /// Element count per model output, in `dmo_invoke` parameter order.
     pub output_elems: Vec<usize>,
+    /// Activation dtype of the unit.
+    pub dtype: DType,
+    /// Call sites emitted as fast typed-pointer variants (counting
+    /// elided concat-rows reassemblies).
+    pub fast_sites: usize,
+    /// Per-inference work estimate (MACs + arena bytes moved) — what
+    /// [`crate::mcu::latency_ms`] scales per deployment target.
+    pub cost: crate::mcu::CostBreakdown,
 }
 
 impl CUnit {
@@ -168,6 +203,11 @@ pub fn emit(graph: &Graph, plan: &Plan, opts: &EmitOptions) -> Result<CUnit> {
         .map(|&t| graph.tensor(t).shape.num_elements())
         .collect();
 
+    let choices = site_choices(graph, plan, opts, dtype);
+    let fast_sites = choices
+        .iter()
+        .filter(|c| !matches!(c, SiteChoice::Generic))
+        .count();
     let e = Emitter {
         graph,
         plan,
@@ -176,6 +216,7 @@ pub fn emit(graph: &Graph, plan: &Plan, opts: &EmitOptions) -> Result<CUnit> {
         embed,
         flash,
         fingerprint,
+        choices,
     };
     Ok(CUnit {
         stem: opts.stem.clone(),
@@ -188,6 +229,9 @@ pub fn emit(graph: &Graph, plan: &Plan, opts: &EmitOptions) -> Result<CUnit> {
         weights_embedded: embed,
         input_elems,
         output_elems,
+        dtype,
+        fast_sites,
+        cost: crate::mcu::graph_cost(graph),
     })
 }
 
@@ -246,6 +290,165 @@ fn check_weight_scheme(op: &OpNode, dtype: DType) -> Result<()> {
     Ok(())
 }
 
+/// How one call site is lowered. Computed up front so kernel emission
+/// knows which function bodies the unit actually references.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SiteChoice {
+    /// Byte-addressed generic kernel (the reference loops).
+    Generic,
+    /// Fast typed-pointer variant of a tunable op class.
+    Fast {
+        class: &'static str,
+        variant: Variant,
+    },
+    /// Concat-rows reassembly whose bands the plan already placed
+    /// contiguously at the output's own offsets — the copy is a no-op
+    /// and is dropped entirely.
+    ElideConcatRows,
+}
+
+/// Per-site legality gates. A fast variant is only chosen where it is
+/// *provably* bit-identical and overlap-safe:
+///
+/// * `Reference`-order variants keep the generic kernel's exact element
+///   order (same loads, same stores, same f32 accumulation sequence),
+///   so the plan's O_s overlap budgets — derived against that order —
+///   still hold in place;
+/// * `ChannelOuter` reorders stores, so it is downgraded to `Reference`
+///   unless the plan placed this op's buffers disjointly;
+/// * f32 typed pointers require 4-byte-aligned arena offsets at every
+///   operand (the backing store is float-aligned; offsets usually are
+///   too, but the plan is allowed to produce odd ones);
+/// * i8 variants accumulate in `int32_t`; they are only exact while the
+///   reference's f32 accumulator stays below 2^24, proven here from the
+///   actual generated weights of this op.
+fn site_choices(graph: &Graph, plan: &Plan, opts: &EmitOptions, dtype: DType) -> Vec<SiteChoice> {
+    let elem = dtype.size_bytes();
+    graph
+        .ops
+        .iter()
+        .enumerate()
+        .map(|(oi, op)| {
+            if !opts.fast {
+                return SiteChoice::Generic;
+            }
+            if matches!(op.kind, OpKind::ConcatRows) {
+                return if concat_rows_contiguous(graph, plan, op, elem) {
+                    SiteChoice::ElideConcatRows
+                } else {
+                    SiteChoice::Generic
+                };
+            }
+            let Some(class) = class_of(&op.kind) else {
+                return SiteChoice::Generic;
+            };
+            let default = Variant::Fast {
+                order: LoopOrder::Reference,
+                unroll: 1,
+            };
+            let mut variant = match opts.tuning.as_ref().and_then(|t| t.choice(class)) {
+                Some(Variant::Generic) => return SiteChoice::Generic,
+                Some(v) => v,
+                None => default,
+            };
+            if let Variant::Fast {
+                order: LoopOrder::ChannelOuter,
+                unroll,
+            } = variant
+            {
+                if !buffers_disjoint(graph, plan, op, elem) {
+                    variant = Variant::Fast {
+                        order: LoopOrder::Reference,
+                        unroll,
+                    };
+                }
+            }
+            if fast_fn_name(class, dtype, variant).is_none() {
+                // a stale/foreign tuning choice the generator cannot
+                // honour at this dtype: fall back to the plain fast loop
+                variant = default;
+            }
+            if fast_fn_name(class, dtype, variant).is_none() {
+                return SiteChoice::Generic;
+            }
+            if dtype == DType::F32 {
+                let aligned = op.inputs.iter().chain([&op.output]).all(|&t| {
+                    plan.alloc.offsets[t.0].is_some_and(|o| o % 4 == 0)
+                });
+                if !aligned {
+                    return SiteChoice::Generic;
+                }
+            }
+            if dtype == DType::I8 && !i8_accumulation_exact(graph, op, oi, opts.seed) {
+                return SiteChoice::Generic;
+            }
+            SiteChoice::Fast { class, variant }
+        })
+        .collect()
+}
+
+/// Are this op's input buffers disjoint from its output buffer in the
+/// planned arena? (The gate for store-reordering loop orders.)
+fn buffers_disjoint(graph: &Graph, plan: &Plan, op: &OpNode, elem: usize) -> bool {
+    let Some(o0) = plan.alloc.offsets[op.output.0] else {
+        return false;
+    };
+    let on = graph.tensor(op.output).shape.num_elements() * elem;
+    op.inputs.iter().all(|&t| {
+        let Some(i0) = plan.alloc.offsets[t.0] else {
+            return false;
+        };
+        let inb = graph.tensor(t).shape.num_elements() * elem;
+        i0 + inb <= o0 || o0 + on <= i0
+    })
+}
+
+/// Did the plan place every concat-rows band exactly where the output
+/// tensor expects it? Then each copy is `memmove(p, p, n)` and the
+/// whole reassembly can be elided.
+fn concat_rows_contiguous(graph: &Graph, plan: &Plan, op: &OpNode, elem: usize) -> bool {
+    let Some(out0) = plan.alloc.offsets[op.output.0] else {
+        return false;
+    };
+    let mut base = 0usize;
+    for &t in &op.inputs {
+        if plan.alloc.offsets[t.0] != Some(out0 + base * elem) {
+            return false;
+        }
+        base += graph.tensor(t).shape.num_elements();
+    }
+    true
+}
+
+/// Does the i8 fast variant's `int32_t` accumulator provably match the
+/// reference f32 accumulation bit for bit? True iff every generated
+/// weight is integral and `|bias| + macs·127·|w|max < 2^24` — below
+/// that bound f32 addition of integers is exact, so the integer and
+/// float paths compute the identical value at every step.
+fn i8_accumulation_exact(graph: &Graph, op: &OpNode, oi: usize, seed: u64) -> bool {
+    let macs_per_out: i64 = match &op.kind {
+        OpKind::Conv2D(p) => {
+            (p.kernel.0 * p.kernel.1 * graph.tensor(op.inputs[0]).shape.c()) as i64
+        }
+        OpKind::DepthwiseConv2D(p) => (p.kernel.0 * p.kernel.1) as i64,
+        OpKind::FullyConnected { .. } => {
+            graph.tensor(op.inputs[0]).shape.num_elements() as i64
+        }
+        // avg-pool sums at most kh·kw int8 values
+        OpKind::Pool(p) => return (p.kernel.0 * p.kernel.1) as i64 * 127 < 1 << 24,
+        // unary/binary never leave the |x| ≤ 127·127 range
+        _ => return true,
+    };
+    let vals = gen_weights(op, seed ^ op.weight_key(oi) as u64);
+    if vals.iter().flatten().any(|v| v.fract() != 0.0) {
+        return false;
+    }
+    let absmax = |tv: &[f32]| tv.iter().fold(0f32, |m, &v| m.max(v.abs())) as i64;
+    let wmax = vals.first().map(|w| absmax(w)).unwrap_or(0);
+    let bmax = vals.get(1).map(|b| absmax(b)).unwrap_or(0);
+    bmax + macs_per_out * 127 * wmax < 1 << 24
+}
+
 struct Emitter<'a> {
     graph: &'a Graph,
     plan: &'a Plan,
@@ -254,6 +457,7 @@ struct Emitter<'a> {
     embed: bool,
     flash: FlashFootprint,
     fingerprint: u64,
+    choices: Vec<SiteChoice>,
 }
 
 impl Emitter<'_> {
@@ -329,7 +533,12 @@ impl Emitter<'_> {
         let _ = writeln!(c, "typedef {wt} dmo_wt;");
         let _ = writeln!(c, "typedef {bt} dmo_bt;");
         c.push('\n');
-        c.push_str("static uint8_t dmo_arena[DMO_ARENA_BYTES];\n\n");
+        c.push_str(
+            "/* float-aligned backing store: fast kernel variants address the\n \
+             * arena through typed float/int8_t pointers */\n",
+        );
+        c.push_str("static float dmo_arena_store[(DMO_ARENA_BYTES + 3) / 4];\n");
+        c.push_str("#define dmo_arena ((uint8_t *)dmo_arena_store)\n\n");
 
         c.push_str("/* Tensor arena offsets in bytes, verbatim from the plan. */\n");
         for (i, info) in self.graph.tensors.iter().enumerate() {
@@ -348,18 +557,52 @@ impl Emitter<'_> {
 
         self.emit_weights(&mut c);
 
+        // call sites first: which kernels (generic or fast) the body
+        // actually references decides which function bodies get
+        // emitted — under -Werror an unused static function is a
+        // build break
+        let mut body = String::new();
+        for &opid in &self.plan.order.0 {
+            let op = self.graph.op(opid);
+            let _ = writeln!(body, "    /* op {}: {} */", opid.0, op.name);
+            let _ = writeln!(body, "    {}", self.call_site(opid.0, op));
+        }
+
+        let mut kblock = String::new();
+        for k in kernels_used(self.graph) {
+            if body.contains(&format!("{}(", k.fn_name())) {
+                kblock.push_str(k.source());
+                kblock.push('\n');
+            }
+        }
+        let mut fast: BTreeMap<String, String> = BTreeMap::new();
+        for choice in &self.choices {
+            if let SiteChoice::Fast { class, variant } = *choice {
+                let name = fast_fn_name(class, self.dtype, variant).expect("gated");
+                fast.entry(name).or_insert_with(|| {
+                    fast_source(class, self.dtype, variant).expect("gated")
+                });
+            }
+        }
+        for src in fast.values() {
+            kblock.push_str(src);
+            kblock.push('\n');
+        }
+
         c.push_str("/* Kernels: loop sweeps and read/write order match the\n");
         c.push_str(" * crate::ops reference kernels - the invariant the overlap\n");
-        c.push_str(" * engines assume. */\n");
-        let used = kernels_used(self.graph);
-        if used.iter().any(|k| k.uses_act()) {
+        c.push_str(" * engines assume. Fast (typed-pointer) variants keep the\n");
+        c.push_str(" * same element order unless the plan proves the buffers\n");
+        c.push_str(" * disjoint. */\n");
+        if kblock.contains("dmo_act(") {
             c.push_str(ACT_HELPER);
             c.push('\n');
         }
-        for k in &used {
-            c.push_str(k.source());
+        if kblock.contains("dmo_requant(") {
+            c.push_str(REQUANT_HELPER);
             c.push('\n');
         }
+        c.push_str(&kblock);
 
         let _ = writeln!(c, "void dmo_invoke({}) {{", self.invoke_params());
         if !self.embed {
@@ -379,11 +622,7 @@ impl Emitter<'_> {
             c.push_str("    }\n");
         }
         c.push('\n');
-        for &opid in &self.plan.order.0 {
-            let op = self.graph.op(opid);
-            let _ = writeln!(c, "    /* op {}: {} */", opid.0, op.name);
-            let _ = writeln!(c, "    {}", self.call_site(opid.0, op));
-        }
+        c.push_str(&body);
         c.push('\n');
         for (i, &t) in self.graph.outputs.iter().enumerate() {
             let _ = writeln!(c, "    for (size_t i = 0; i < DMO_OUTPUT_{i}_ELEMS; i++) {{");
@@ -457,6 +696,123 @@ impl Emitter<'_> {
     }
 
     fn call_site(&self, oi: usize, op: &OpNode) -> String {
+        match self.choices[oi] {
+            SiteChoice::Generic => self.generic_call_site(oi, op),
+            SiteChoice::ElideConcatRows => {
+                "/* concat-rows reassembly elided: bands are contiguous in the arena */;"
+                    .to_string()
+            }
+            SiteChoice::Fast { class, variant } => self.fast_call_site(oi, op, class, variant),
+        }
+    }
+
+    fn fast_call_site(
+        &self,
+        oi: usize,
+        op: &OpNode,
+        class: &'static str,
+        variant: Variant,
+    ) -> String {
+        let name = fast_fn_name(class, self.dtype, variant).expect("gated in site_choices");
+        let ct = if self.dtype == DType::I8 { "int8_t" } else { "float" };
+        let src = |t: TensorId| format!("(const {ct} *)(dmo_arena + DMO_OFF_T{})", t.0);
+        let dst = |t: TensorId| format!("({ct} *)(dmo_arena + DMO_OFF_T{})", t.0);
+        // unit-scale synthetic quantisation: multiplier 1, shift 0
+        let requant = if self.dtype == DType::I8 { ", 1, 0" } else { "" };
+        let in0 = self.graph.tensor(op.inputs[0]);
+        let out = self.graph.tensor(op.output);
+        let wk = op.weight_key(oi);
+        match &op.kind {
+            OpKind::Conv2D(p) => {
+                let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
+                let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
+                format!(
+                    "{name}({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {}, {}, {}{requant}, dmo_w{wk}_0, dmo_w{wk}_1);",
+                    src(op.inputs[0]),
+                    dst(op.output),
+                    p.kernel.0,
+                    p.kernel.1,
+                    p.stride.0,
+                    p.stride.1,
+                    p.dilation.0,
+                    p.dilation.1,
+                    pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0),
+                    pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1),
+                    act_id(p.act),
+                )
+            }
+            OpKind::DepthwiseConv2D(p) => {
+                let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
+                let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
+                format!(
+                    "{name}({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {}, {}, {}, {}, {}{requant}, dmo_w{wk}_0, dmo_w{wk}_1);",
+                    src(op.inputs[0]),
+                    dst(op.output),
+                    p.kernel.0,
+                    p.kernel.1,
+                    p.stride.0,
+                    p.stride.1,
+                    p.dilation.0,
+                    p.dilation.1,
+                    pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0),
+                    pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1),
+                    p.depth_multiplier,
+                    op.weights[1].shape.num_elements(),
+                    act_id(p.act),
+                )
+            }
+            OpKind::Pool(p) => {
+                let (ih, iw, id) = (in0.shape.h(), in0.shape.w(), in0.shape.c());
+                let (oh, ow, od) = (out.shape.h(), out.shape.w(), out.shape.c());
+                format!(
+                    "{name}({}, {}, {ih}, {iw}, {id}, {oh}, {ow}, {od}, {}, {}, {}, {}, {}, {}, {});",
+                    src(op.inputs[0]),
+                    dst(op.output),
+                    p.kernel.0,
+                    p.kernel.1,
+                    p.stride.0,
+                    p.stride.1,
+                    pad_before(ih, oh, p.kernel.0, p.stride.0, 1),
+                    pad_before(iw, ow, p.kernel.1, p.stride.1, 1),
+                    pool_kind_id(p.kind),
+                )
+            }
+            OpKind::Unary(u) => format!(
+                "{name}({}, {}, {}, {});",
+                src(op.inputs[0]),
+                dst(op.output),
+                out.shape.num_elements(),
+                unary_kind_id(*u),
+            ),
+            OpKind::Reshape { .. } => format!(
+                "{name}({}, {}, {}, 2);",
+                src(op.inputs[0]),
+                dst(op.output),
+                out.shape.num_elements(),
+            ),
+            OpKind::Binary(bk) => format!(
+                "{name}({}, {}, {}, {}, {});",
+                src(op.inputs[0]),
+                src(op.inputs[1]),
+                dst(op.output),
+                out.shape.num_elements(),
+                match bk {
+                    crate::ir::op::BinaryKind::Add => 0,
+                    crate::ir::op::BinaryKind::Mul => 1,
+                },
+            ),
+            OpKind::FullyConnected { out_features, act } => format!(
+                "{name}({}, {}, {}, {out_features}, {}{requant}, dmo_w{wk}_0, dmo_w{wk}_1);",
+                src(op.inputs[0]),
+                dst(op.output),
+                in0.shape.num_elements(),
+                act_id(*act),
+            ),
+            other => unreachable!("op kind `{}` has no fast variant", other.name()),
+        }
+    }
+
+    fn generic_call_site(&self, oi: usize, op: &OpNode) -> String {
         let off = |t: TensorId| format!("DMO_OFF_T{}", t.0);
         let in0 = self.graph.tensor(op.inputs[0]);
         let out = self.graph.tensor(op.output);
@@ -773,6 +1129,67 @@ mod tests {
         let b = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
         assert_eq!(a.source, b.source);
         assert_eq!(a.header, b.header);
+    }
+
+    #[test]
+    fn fast_variants_are_on_by_default_and_can_be_disabled() {
+        let (g, plan) = tiny_plan();
+        let fast = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
+        assert!(fast.fast_sites > 0);
+        assert!(fast.source.contains("static float dmo_arena_store["));
+        assert!(fast.source.contains("dmo_conv2d_f("), "f32 conv goes fast");
+        // the generic conv body is dead code once every site is fast —
+        // it must not be emitted (-Werror would reject it)
+        assert!(!fast.source.contains("static void dmo_conv2d("));
+
+        let slow = emit(&g, &plan, &EmitOptions::new("tiny_model").fast(false)).unwrap();
+        assert_eq!(slow.fast_sites, 0);
+        assert!(!slow.source.contains("dmo_conv2d_f("));
+        assert!(slow.source.contains("static void dmo_conv2d("));
+    }
+
+    #[test]
+    fn i8_models_get_requantising_fast_kernels() {
+        let g = models::build("tiny_int8").unwrap();
+        let plan = Planner::for_graph(&g).dmo(true).plan().unwrap();
+        let unit = emit(&g, &plan, &EmitOptions::new("tiny_int8_model")).unwrap();
+        assert!(unit.fast_sites > 0, "i8 zoo model must take the fast path");
+        assert!(unit.source.contains("dmo_conv2d_q("));
+        assert!(unit.source.contains("static int8_t dmo_requant("));
+        assert_eq!(unit.dtype, DType::I8);
+    }
+
+    #[test]
+    fn tuning_table_pins_variants_per_class() {
+        use crate::codegen::tune::TuneTable;
+        let (g, plan) = tiny_plan();
+        let mut t = TuneTable::new();
+        t.set(
+            "conv2d",
+            Variant::Fast {
+                order: LoopOrder::Reference,
+                unroll: 4,
+            },
+        );
+        let u4 = emit(&g, &plan, &EmitOptions::new("tiny_model").tuning(t)).unwrap();
+        assert!(u4.source.contains("dmo_conv2d_f_u4("));
+
+        let mut t = TuneTable::new();
+        t.set("conv2d", Variant::Generic);
+        let gen = emit(&g, &plan, &EmitOptions::new("tiny_model").tuning(t)).unwrap();
+        assert!(gen.source.contains("static void dmo_conv2d("));
+        assert!(!gen.source.contains("dmo_conv2d_f("));
+        // untuned classes still default to the fast reference loop
+        assert!(gen.source.contains("dmo_fc_f("));
+    }
+
+    #[test]
+    fn cost_estimate_is_populated() {
+        let (g, plan) = tiny_plan();
+        let unit = emit(&g, &plan, &EmitOptions::new("tiny_model")).unwrap();
+        assert!(unit.cost.macs > 0);
+        assert!(unit.cost.bytes > 0);
+        assert_eq!(unit.cost, crate::mcu::graph_cost(&g));
     }
 
     #[test]

@@ -103,6 +103,26 @@ fn save_os_cache(cache: &dmo::overlap::OsCache, path: &str) {
     }
 }
 
+/// Load a persisted kernel-tuning cache; corruption degrades to a cold
+/// start with a warning, mirroring [`load_os_cache`].
+fn load_tune_cache(cache: &codegen::TuneCache, path: &str) {
+    if !Path::new(path).exists() {
+        return;
+    }
+    match cache.load(Path::new(path)) {
+        Ok(n) => eprintln!("  tune cache: loaded {n} entries from {path}"),
+        Err(e) => eprintln!("  tune cache: ignoring {path} ({e:#}); starting cold"),
+    }
+}
+
+/// Persist the kernel-tuning cache after a run (best-effort).
+fn save_tune_cache(cache: &codegen::TuneCache, path: &str) {
+    match cache.save(Path::new(path)) {
+        Ok(n) => eprintln!("  tune cache: saved {n} entries to {path}"),
+        Err(e) => eprintln!("  tune cache: could not save to {path}: {e:#}"),
+    }
+}
+
 fn run(argv: &[String]) -> Result<()> {
     let (cmd, rest) = match argv.split_first() {
         None => {
@@ -378,16 +398,32 @@ fn run(argv: &[String]) -> Result<()> {
                         "also plan with §II-A rewrites (pairs:N[,chains:D][,multi:K]) and add a deploy(split) column",
                     ),
                     opt("--splits", "deprecated alias: --splits=N maps to --rewrites=pairs:N"),
+                    opt(
+                        "--budget-ms",
+                        "also gate deployability on estimated latency (milliseconds)",
+                    ),
                 ],
             )?;
             let rb = rewrite_budget(&args)?.unwrap_or_default();
+            let budget_ms: Option<f64> = match args.value("--budget-ms") {
+                Some(v) => {
+                    let b: f64 = v
+                        .parse()
+                        .with_context(|| format!("--budget-ms: `{v}` is not a number"))?;
+                    if b.is_nan() || b <= 0.0 {
+                        bail!("--budget-ms must be positive, got {b}");
+                    }
+                    Some(b)
+                }
+                None => None,
+            };
             let names: Vec<&str> = match args.pos(0) {
                 Some(n) => vec![n],
                 None => models::table3_names(),
             };
             println!(
-                "{:32} {:20} {:>9} {:>9} {:>9}  deploy(orig) deploy(DMO) deploy(split)",
-                "model", "mcu", "arena0", "arenaD", "flash"
+                "{:32} {:20} {:>9} {:>9} {:>9} {:>11}  deploy(orig) deploy(DMO) deploy(split)",
+                "model", "mcu", "arena0", "arenaD", "flash", "latency"
             );
             for name in names {
                 let pm = if rb.enabled() {
@@ -397,21 +433,30 @@ fn run(argv: &[String]) -> Result<()> {
                 };
                 // deployability gates on the emitted unit's full flash
                 // image (weights + code estimate), not weights alone;
-                // the split column gates on the *rewritten* unit's image
+                // the split column gates on the *rewritten* unit's image.
+                // with --budget-ms a part that fits SRAM and flash can
+                // still be rejected for missing the latency budget.
                 let row = pm.row();
                 for r in mcu::deploy_matrix_planned(&pm) {
+                    let in_budget = budget_ms.map_or(true, |b| r.latency_ms <= b);
+                    let verdict = |fits: bool| match (fits, in_budget) {
+                        (true, true) => "yes",
+                        (true, false) => "no (latency)",
+                        (false, _) => "no",
+                    };
                     println!(
-                        "{:32} {:20} {:>9} {:>9} {:>9}  {:12} {:11} {}",
+                        "{:32} {:20} {:>9} {:>9} {:>9} {:>8.2} ms  {:12} {:11} {}",
                         name,
                         r.mcu,
                         report::fmt_bytes(row.original),
                         report::fmt_bytes(row.optimised),
                         report::fmt_bytes(r.flash_bytes),
-                        if r.without_dmo { "yes" } else { "no" },
-                        if r.with_dmo { "yes" } else { "no" },
+                        r.latency_ms,
+                        verdict(r.without_dmo),
+                        verdict(r.with_dmo),
                         match r.with_split {
-                            Some(true) if r.rescued_by_split() => "yes (rescued)",
-                            Some(true) => "yes",
+                            Some(true) if r.rescued_by_split() && in_budget => "yes (rescued)",
+                            Some(true) => verdict(true),
                             Some(false) => "no",
                             None => "-",
                         },
@@ -429,6 +474,9 @@ fn run(argv: &[String]) -> Result<()> {
                     opt("--seed", "synthetic weight/input seed (default 42)"),
                     opt("--embed-limit", "max weight elements embedded as const arrays"),
                     flag("--check", "compile + run the unit, diff against the interpreter"),
+                    flag("--tune", "autotune kernel variants (compile+time, bit-exact gated)"),
+                    opt("--tune-cache", "tuning-cache file to load/persist across runs"),
+                    opt("--tune-iters", "timing iterations per tuning probe (default 50)"),
                 ],
             )?;
             emit_c(&args)
@@ -631,7 +679,7 @@ fn emit_c(args: &Args) -> Result<()> {
         }
         None => {
             let name = args.pos(0).context(
-                "usage: dmo emit-c <model> [--out PATH] [--seed N] [--check]\n\
+                "usage: dmo emit-c <model> [--out PATH] [--seed N] [--check] [--tune]\n\
                  \x20      dmo emit-c --import plan.json [--out PATH]",
             )?;
             let g = models::build(name)?;
@@ -654,7 +702,47 @@ fn emit_c(args: &Args) -> Result<()> {
         .and_then(|s| s.to_str())
         .context("--out path has no usable file stem")?
         .to_string();
-    let opts = EmitOptions::new(&stem).seed(seed).weight_embed_limit(embed_limit);
+    let mut opts = EmitOptions::new(&stem).seed(seed).weight_embed_limit(embed_limit);
+
+    if args.flag("--tune") {
+        let iters: usize = args.parsed("--tune-iters", 50usize)?;
+        if codegen::cc_available().is_none() {
+            eprintln!("  tune: no C compiler on PATH — emitting untuned defaults");
+        } else {
+            let cache = codegen::TuneCache::new();
+            if let Some(path) = args.value("--tune-cache") {
+                load_tune_cache(&cache, path);
+            }
+            let tr = codegen::tune(&graph, &plan, seed, iters, &cache)?;
+            // `probes: 0` on a warm cache is what the CI determinism
+            // smoke greps for — keep this line machine-readable
+            println!(
+                "tuned {} classes (probes: {}, cache hits: {})",
+                tr.rows.len(),
+                tr.probes,
+                tr.cache_hits
+            );
+            for r in &tr.rows {
+                let timings = if r.from_cache {
+                    "cached".to_string()
+                } else {
+                    r.timings
+                        .iter()
+                        .map(|(v, ns)| match ns {
+                            Some(ns) => format!("{} {:.0}ns", v.name(), ns),
+                            None => format!("{} disqualified", v.name()),
+                        })
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                };
+                println!("  {}: {} ({timings})", r.class, r.chosen.name());
+            }
+            if let Some(path) = args.value("--tune-cache") {
+                save_tune_cache(&cache, path);
+            }
+            opts = opts.tuning(tr.table);
+        }
+    }
 
     let unit = codegen::emit(&graph, &plan, &opts)?;
     let header_path = unit.write_to(&out)?;
@@ -897,18 +985,27 @@ COMMANDS:
   table3 [--out DIR]          memory savings, 11 models (paper Table III)
   figures [--fig N] [--out DIR]
                               regenerate paper figures 1,2,3,6,8,9
-  fit [<model>] [--rewrites pairs:N[,chains:D][,multi:K]]
+  fit [<model>] [--rewrites pairs:N[,chains:D][,multi:K]] [--budget-ms MS]
                               MCU deployment matrix (§IV), incl. emitted
-                              flash image (weights + code estimate);
-                              --rewrites adds a deploy(split) column
-                              showing targets rescued by §II-A rewriting
+                              flash image (weights + code estimate) and a
+                              per-target latency estimate; --rewrites adds
+                              a deploy(split) column showing targets
+                              rescued by §II-A rewriting; --budget-ms also
+                              rejects parts whose estimated latency misses
+                              the budget ("no (latency)")
   emit-c <model> [--out PATH] [--seed N] [--embed-limit N] [--check]
+         [--tune] [--tune-cache PATH] [--tune-iters N]
   emit-c --import plan.json [--out PATH] [--check]
                               emit a standalone C99 firmware unit from a
                               plan: static arena at the planned peak,
-                              offsets verbatim, flash-resident weights;
+                              offsets verbatim, flash-resident weights,
+                              overlap-aware fast kernels (CMSIS-NN-style
+                              requantising int8 loops on i8 models);
                               --check compiles + runs it and diffs
-                              against the interpreter bit-for-bit
+                              against the interpreter bit-for-bit;
+                              --tune times each kernel variant through the
+                              same bit-exact harness and pins the winners
+                              (cached across runs via --tune-cache)
   split <model> [--parts N] [--rewrites pairs:N,chains:D]
                               best pair-split and chain-banding report
                               (§II-A generalised); `dmo plan

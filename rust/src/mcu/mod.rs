@@ -7,15 +7,34 @@
 //! mission) plus common contemporary targets.
 
 use crate::ir::graph::Graph;
+use crate::ir::op::OpKind;
+use crate::ir::DType;
 use crate::planner::SavingRow;
 
 /// A micro-controller deployment target.
+///
+/// Beyond the memory capacities that gate *fit*, each entry carries a
+/// coarse first-order performance model: a clock and per-operation
+/// cycle factors that [`latency_ms`] combines with a model's
+/// [`CostBreakdown`]. The factors are calibration-class numbers (an
+/// M7 retires one MAC per cycle from its FPU pipeline; an M0+ without
+/// hardware FP multiplies that by an order of magnitude via soft-float)
+/// — good enough to rank targets and reject hopeless pairings, not a
+/// cycle-accurate simulator.
 #[derive(Debug, Clone)]
 pub struct Mcu {
     pub name: &'static str,
     pub core: &'static str,
     pub flash_bytes: usize,
     pub sram_bytes: usize,
+    /// Core clock in MHz (datasheet maximum).
+    pub mhz: u32,
+    /// Cycles per f32 multiply-accumulate (soft-float cores pay dearly).
+    pub cycles_per_mac_f32: f64,
+    /// Cycles per int8 multiply-accumulate (i32 accumulator).
+    pub cycles_per_mac_i8: f64,
+    /// Cycles per byte of SRAM traffic (load + store amortised).
+    pub cycles_per_byte: f64,
 }
 
 /// Catalog of targets. Flash/SRAM from the referenced datasheets.
@@ -27,6 +46,10 @@ pub fn catalog() -> Vec<Mcu> {
             core: "Cortex-M3",
             flash_bytes: 768 * 1024,
             sram_bytes: 96 * 1024,
+            mhz: 72,
+            cycles_per_mac_f32: 18.0, // no FPU: soft-float f32 MAC
+            cycles_per_mac_i8: 6.0,
+            cycles_per_byte: 2.0,
         },
         Mcu {
             // §IV: ESA ESEO on-board computer; ≥4× more flash than SRAM
@@ -34,36 +57,60 @@ pub fn catalog() -> Vec<Mcu> {
             core: "AVR32",
             flash_bytes: 512 * 1024,
             sram_bytes: 68 * 1024,
+            mhz: 66,
+            cycles_per_mac_f32: 20.0,
+            cycles_per_mac_i8: 8.0,
+            cycles_per_byte: 2.0,
         },
         Mcu {
             name: "STM32F746",
             core: "Cortex-M7",
             flash_bytes: 1024 * 1024,
             sram_bytes: 320 * 1024,
+            mhz: 216,
+            cycles_per_mac_f32: 2.0, // dual-issue FPU pipeline
+            cycles_per_mac_i8: 1.0,  // SMLAD-class dual MAC
+            cycles_per_byte: 0.5,
         },
         Mcu {
             name: "STM32H743",
             core: "Cortex-M7",
             flash_bytes: 2 * 1024 * 1024,
             sram_bytes: 1024 * 1024,
+            mhz: 480,
+            cycles_per_mac_f32: 2.0,
+            cycles_per_mac_i8: 1.0,
+            cycles_per_byte: 0.5,
         },
         Mcu {
             name: "nRF52840",
             core: "Cortex-M4",
             flash_bytes: 1024 * 1024,
             sram_bytes: 256 * 1024,
+            mhz: 64,
+            cycles_per_mac_f32: 4.0, // single-precision FPU
+            cycles_per_mac_i8: 2.0,
+            cycles_per_byte: 1.0,
         },
         Mcu {
             name: "ESP32-WROOM",
             core: "Xtensa LX6",
             flash_bytes: 4 * 1024 * 1024,
             sram_bytes: 520 * 1024,
+            mhz: 240,
+            cycles_per_mac_f32: 6.0,
+            cycles_per_mac_i8: 4.0,
+            cycles_per_byte: 1.0,
         },
         Mcu {
             name: "RP2040 (2MB QSPI)",
             core: "Cortex-M0+",
             flash_bytes: 2 * 1024 * 1024,
             sram_bytes: 264 * 1024,
+            mhz: 133,
+            cycles_per_mac_f32: 30.0, // M0+: soft-float, 32-cycle MUL path
+            cycles_per_mac_i8: 8.0,
+            cycles_per_byte: 2.0,
         },
         Mcu {
             // mid-range M4 with 64 KB SRAM: the class of part the
@@ -74,8 +121,92 @@ pub fn catalog() -> Vec<Mcu> {
             core: "Cortex-M4",
             flash_bytes: 512 * 1024,
             sram_bytes: 64 * 1024,
+            mhz: 72,
+            cycles_per_mac_f32: 4.0,
+            cycles_per_mac_i8: 2.0,
+            cycles_per_byte: 1.0,
         },
     ]
+}
+
+/// Arithmetic + memory-traffic cost of running a graph once, counted
+/// from the reference kernels' loop structure. `macs` is multiply-
+/// accumulates (window comparisons/adds for pools count as one each);
+/// `bytes` is unique tensor bytes read and written per op — a coarse
+/// SRAM-traffic proxy that deliberately ignores window re-reads, which
+/// the MAC term already prices in.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CostBreakdown {
+    pub macs: u64,
+    pub bytes: u64,
+}
+
+/// Per-op cost accounting for one inference over `graph`. Banded ops
+/// scale naturally: a band's tensors hold only the rows it touches, so
+/// the inner-op formulas applied to the band's own shapes give the
+/// band's share of the work.
+pub fn graph_cost(graph: &Graph) -> CostBreakdown {
+    let mut cost = CostBreakdown::default();
+    for op in &graph.ops {
+        let out = graph.tensor(op.output);
+        let out_elems = out.shape.num_elements() as u64;
+        let kind = match &op.kind {
+            OpKind::Band(b) => b.inner.as_ref(),
+            k => k,
+        };
+        cost.macs += match kind {
+            OpKind::Conv2D(p) => {
+                let in_c = graph.tensor(op.inputs[0]).shape.c() as u64;
+                out_elems * (p.kernel.0 * p.kernel.1) as u64 * in_c
+            }
+            OpKind::DepthwiseConv2D(p) => out_elems * (p.kernel.0 * p.kernel.1) as u64,
+            OpKind::Pool(p) => out_elems * (p.kernel.0 * p.kernel.1) as u64,
+            OpKind::GlobalAvgPool => graph.tensor(op.inputs[0]).shape.num_elements() as u64,
+            OpKind::FullyConnected { .. } | OpKind::MatMulAccum { .. } => {
+                graph.tensor(op.inputs[0]).shape.num_elements() as u64 * out.shape.num_elements() as u64
+            }
+            // exp + normalise ≈ a handful of MAC-equivalents per element
+            OpKind::Softmax => 8 * out_elems,
+            OpKind::Binary(_) => out_elems,
+            OpKind::Unary(_)
+            | OpKind::Reshape { .. }
+            | OpKind::Concat
+            | OpKind::ConcatRows
+            | OpKind::Pad { .. }
+            | OpKind::Band(_) => 0,
+        };
+        let in_bytes: u64 = op
+            .inputs
+            .iter()
+            .map(|&t| graph.tensor(t).size_bytes() as u64)
+            .sum();
+        cost.bytes += in_bytes + out.size_bytes() as u64;
+    }
+    cost
+}
+
+/// First-order single-inference latency of `cost` on `mcu`, in
+/// milliseconds: `(macs·cycles_per_mac + bytes·cycles_per_byte) / clock`.
+/// `dtype` selects the MAC cost (the arena dtype decides which
+/// arithmetic the kernels run in).
+pub fn latency_ms(mcu: &Mcu, cost: &CostBreakdown, dtype: DType) -> f64 {
+    let per_mac = match dtype {
+        DType::I8 => mcu.cycles_per_mac_i8,
+        _ => mcu.cycles_per_mac_f32,
+    };
+    let cycles = cost.macs as f64 * per_mac + cost.bytes as f64 * mcu.cycles_per_byte;
+    cycles / (mcu.mhz as f64 * 1e3)
+}
+
+/// [`latency_ms`] for a graph: cost from [`graph_cost`], dtype from the
+/// graph's first tensor (the arena dtype).
+pub fn estimate_latency_ms(graph: &Graph, mcu: &Mcu) -> f64 {
+    let dtype = graph
+        .tensors
+        .first()
+        .map(|t| t.dtype)
+        .unwrap_or(DType::F32);
+    latency_ms(mcu, &graph_cost(graph), dtype)
 }
 
 /// Can `model` deploy on `mcu` given an arena of `arena_bytes`?
@@ -131,6 +262,9 @@ pub struct DeployRow {
     /// Deployability of the best split plan, when one was computed and
     /// a split rewrite won (`None` = no split plan to compare).
     pub with_split: Option<bool>,
+    /// Estimated single-inference latency on this part
+    /// ([`estimate_latency_ms`]).
+    pub latency_ms: f64,
 }
 
 impl DeployRow {
@@ -161,6 +295,12 @@ pub fn deploy_matrix_split(
 ) -> Vec<DeployRow> {
     let flash = crate::codegen::flash_footprint(graph).total();
     let split_flash = split.map(|(_, g)| crate::codegen::flash_footprint(g).total());
+    let cost = graph_cost(graph);
+    let dtype = graph
+        .tensors
+        .first()
+        .map(|t| t.dtype)
+        .unwrap_or(DType::F32);
     catalog()
         .iter()
         .map(|m| DeployRow {
@@ -173,6 +313,7 @@ pub fn deploy_matrix_split(
             with_split: split.map(|(peak, _)| {
                 fit_flash(m, peak, split_flash.unwrap_or(flash)).deployable()
             }),
+            latency_ms: latency_ms(m, &cost, dtype),
         })
         .collect()
 }
@@ -272,6 +413,54 @@ mod tests {
         let rows = deploy_matrix(&pm.graph, &pm.row());
         assert!(rows.iter().all(|r| r.with_split.is_none()));
         assert!(rows.iter().all(|r| !r.rescued_by_split()));
+    }
+
+    #[test]
+    fn cost_model_counts_macs_and_bytes() {
+        let g = models::build("tiny").unwrap();
+        let c = graph_cost(&g);
+        assert!(c.macs > 0, "tiny has convolutions");
+        assert!(c.bytes > 0);
+        // int8 variant moves fewer bytes (1-byte elements), same macs shape
+        let gq = models::build("tiny_int8").unwrap();
+        let cq = graph_cost(&gq);
+        assert!(cq.bytes < c.bytes);
+    }
+
+    /// A slow part can fit a model's SRAM and flash yet miss a latency
+    /// budget a fast part makes easily — the gate `dmo fit --budget-ms`
+    /// applies. Pinned relatively: the soft-float 72 MHz STM32F103xF is
+    /// orders of magnitude slower than the 480 MHz M7.
+    #[test]
+    fn latency_budget_rejects_slow_part_that_fits_sram() {
+        let pm = PlannedModel::new(models::build("tiny").unwrap()).unwrap();
+        let rows = deploy_matrix(&pm.graph, &pm.row());
+        let f103 = rows.iter().find(|r| r.mcu == "STM32F103xF").unwrap();
+        let h743 = rows.iter().find(|r| r.mcu == "STM32H743").unwrap();
+        assert!(f103.with_dmo, "tiny fits the F103's SRAM and flash");
+        assert!(h743.with_dmo);
+        assert!(
+            f103.latency_ms > 10.0 * h743.latency_ms,
+            "soft-float 72 MHz vs FPU 480 MHz: got {} vs {}",
+            f103.latency_ms,
+            h743.latency_ms
+        );
+        // a budget between the two rejects the F103 on latency alone
+        let budget = (f103.latency_ms * h743.latency_ms).sqrt();
+        assert!(h743.latency_ms <= budget && f103.latency_ms > budget);
+    }
+
+    #[test]
+    fn int8_latency_beats_f32_on_every_part() {
+        let f = models::build("tiny").unwrap();
+        let q = models::build("tiny_int8").unwrap();
+        for m in catalog() {
+            assert!(
+                estimate_latency_ms(&q, &m) < estimate_latency_ms(&f, &m),
+                "{}: int8 must be faster",
+                m.name
+            );
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::ir::op::{pad_before, Activation, OpKind, PoolKind};
 use crate::ir::shape::Shape;
 use crate::ir::DType;
 use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// Kind of a recorded memory event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -259,8 +260,190 @@ fn act(v: f32, a: Activation) -> f32 {
     }
 }
 
+/// Fast-i8 kill switch (on by default). The fleet interpreter is the
+/// real serving engine while `xla` is a stub, so the CMSIS-NN-style
+/// integer path matters for throughput; benches flip this to measure
+/// the reference loops.
+static FAST_I8: AtomicBool = AtomicBool::new(true);
+/// Ops actually executed through the fast i8 path (not just eligible).
+static FAST_I8_HITS: AtomicUsize = AtomicUsize::new(0);
+
+/// Enable/disable the fast i8 interpreter path (process-wide).
+pub fn set_fast_i8(on: bool) {
+    FAST_I8.store(on, Ordering::Relaxed);
+}
+
+/// Is the fast i8 interpreter path enabled?
+pub fn fast_i8_enabled() -> bool {
+    FAST_I8.load(Ordering::Relaxed)
+}
+
+/// Count of ops executed through the fast i8 path so far.
+pub fn fast_i8_hits() -> usize {
+    FAST_I8_HITS.load(Ordering::Relaxed)
+}
+
+/// Integer fused activation — identical to [`act`] on integral values
+/// (no `-0.0` subtleties exist in the integer domain).
+#[inline]
+fn i8_act(v: i32, a: Activation) -> i32 {
+    match a {
+        Activation::None => v,
+        Activation::Relu => v.max(0),
+        Activation::Relu6 => v.clamp(0, 6),
+    }
+}
+
+/// Is the int32 accumulator provably bit-identical to the reference f32
+/// accumulation? Requires integral weights and
+/// `|bias| + macs·127·|w|max < 2^24` — below that bound every partial
+/// f32 sum of integers is exact, so both paths compute the same value
+/// at every step (same gate the C emitter applies per site).
+fn fast_i8_bound_ok(macs_per_out: usize, weights: &[Vec<f32>]) -> bool {
+    if weights.len() != 2 {
+        return false;
+    }
+    if weights.iter().flatten().any(|v| v.fract() != 0.0) {
+        return false;
+    }
+    let absmax = |tv: &[f32]| tv.iter().fold(0f32, |m, &v| m.max(v.abs())) as i64;
+    absmax(&weights[1]) + macs_per_out as i64 * 127 * absmax(&weights[0]) < 1 << 24
+}
+
+/// CMSIS-NN-idiom execution for i8 conv/dwconv/fc: accumulate in `i32`
+/// over the raw arena bytes, saturate at store. Element order is
+/// byte-for-byte the reference sweep, so planned in-place overlaps stay
+/// safe. Only taken when no event sink is installed — tracing callers
+/// (watermark verification, O_s probes) always see the reference path.
+/// Returns `false` when ineligible; the caller then runs the reference.
+fn exec_fast_i8(kind: &OpKind, io: &OpIo<'_>, arena: &mut Arena) -> bool {
+    if io.dtype != DType::I8 || arena.sink.is_some() || !fast_i8_enabled() {
+        return false;
+    }
+    match kind {
+        OpKind::Conv2D(p) => {
+            let (xs, os) = (io.in_shapes[0], io.out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            if !fast_i8_bound_ok(p.kernel.0 * p.kernel.1 * id, io.weights) {
+                return false;
+            }
+            let (wts, bias) = (&io.weights[0], &io.weights[1]);
+            if wts.len() != p.kernel.0 * p.kernel.1 * id * od {
+                return false;
+            }
+            let ph = pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0) as isize;
+            let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let y0 = oy as isize * p.stride.0 as isize - ph;
+                    let x0 = ox as isize * p.stride.1 as isize - pw;
+                    for oc in 0..od {
+                        let mut acc = bias[oc] as i32;
+                        for ky in 0..p.kernel.0 {
+                            let iy = y0 + (ky * p.dilation.0) as isize;
+                            if iy < 0 || iy as usize >= ih {
+                                continue;
+                            }
+                            for kx in 0..p.kernel.1 {
+                                let ix = x0 + (kx * p.dilation.1) as isize;
+                                if ix < 0 || ix as usize >= iw {
+                                    continue;
+                                }
+                                for ic in 0..id {
+                                    let v = arena.bytes
+                                        [ib + (iy as usize * iw + ix as usize) * id + ic]
+                                        as i8 as i32;
+                                    acc += v
+                                        * wts[((ky * p.kernel.1 + kx) * id + ic) * od + oc] as i32;
+                                }
+                            }
+                        }
+                        let r = i8_act(acc, p.act).clamp(-128, 127);
+                        arena.bytes[ob + (oy * ow + ox) * od + oc] = r as i8 as u8;
+                    }
+                }
+            }
+        }
+        OpKind::DepthwiseConv2D(p) => {
+            let (xs, os) = (io.in_shapes[0], io.out_shape);
+            let (ih, iw, id) = (xs.h(), xs.w(), xs.c());
+            let (oh, ow, od) = (os.h(), os.w(), os.c());
+            let mult = p.depth_multiplier;
+            if !fast_i8_bound_ok(p.kernel.0 * p.kernel.1, io.weights) {
+                return false;
+            }
+            let (wts, bias) = (&io.weights[0], &io.weights[1]);
+            if wts.len() != p.kernel.0 * p.kernel.1 * id * mult {
+                return false;
+            }
+            let ph = pad_before(ih, oh, p.kernel.0, p.stride.0, p.dilation.0) as isize;
+            let pw = pad_before(iw, ow, p.kernel.1, p.stride.1, p.dilation.1) as isize;
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let y0 = oy as isize * p.stride.0 as isize - ph;
+                    let x0 = ox as isize * p.stride.1 as isize - pw;
+                    for ic in 0..id {
+                        for m in 0..mult {
+                            let oc = ic * mult + m;
+                            let mut acc = bias[oc.min(bias.len() - 1)] as i32;
+                            for ky in 0..p.kernel.0 {
+                                let iy = y0 + (ky * p.dilation.0) as isize;
+                                if iy < 0 || iy as usize >= ih {
+                                    continue;
+                                }
+                                for kx in 0..p.kernel.1 {
+                                    let ix = x0 + (kx * p.dilation.1) as isize;
+                                    if ix < 0 || ix as usize >= iw {
+                                        continue;
+                                    }
+                                    let v = arena.bytes
+                                        [ib + (iy as usize * iw + ix as usize) * id + ic]
+                                        as i8 as i32;
+                                    acc += v
+                                        * wts[((ky * p.kernel.1 + kx) * id + ic) * mult + m]
+                                            as i32;
+                                }
+                            }
+                            let r = i8_act(acc, p.act).clamp(-128, 127);
+                            arena.bytes[ob + (oy * ow + ox) * od + oc] = r as i8 as u8;
+                        }
+                    }
+                }
+            }
+        }
+        OpKind::FullyConnected { out_features, act: a } => {
+            let k_dim = io.in_shapes[0].num_elements();
+            if !fast_i8_bound_ok(k_dim, io.weights) {
+                return false;
+            }
+            let (wts, bias) = (&io.weights[0], &io.weights[1]);
+            if wts.len() != k_dim * out_features {
+                return false;
+            }
+            let (ib, ob) = (io.in_regions[0].base, io.out_region.base);
+            for o in 0..*out_features {
+                let mut acc = bias[o] as i32;
+                for k in 0..k_dim {
+                    acc += (arena.bytes[ib + k] as i8 as i32) * wts[k * out_features + o] as i32;
+                }
+                let r = i8_act(acc, *a).clamp(-128, 127);
+                arena.bytes[ob + o] = r as i8 as u8;
+            }
+        }
+        _ => return false,
+    }
+    FAST_I8_HITS.fetch_add(1, Ordering::Relaxed);
+    true
+}
+
 /// Execute one op. Loop order mirrors [`super::access::for_each_step`].
 pub fn execute_op(kind: &OpKind, io: &OpIo<'_>, arena: &mut Arena) -> Result<()> {
+    if exec_fast_i8(kind, io, arena) {
+        return Ok(());
+    }
     let t = io.dtype.size_bytes();
     match kind {
         OpKind::Conv2D(p) => {

@@ -445,19 +445,20 @@ pub fn emitted_unit_markdown(unit: &crate::codegen::CUnit) -> String {
         fmt_bytes(unit.flash.weight_bytes),
         fmt_bytes(unit.flash.code_bytes),
     );
-    s.push_str("| MCU | SRAM | arena fits | flash | image fits | deployable |\n");
-    s.push_str("|---|---:|---|---:|---|---|\n");
+    s.push_str("| MCU | SRAM | arena fits | flash | image fits | deployable | est. latency |\n");
+    s.push_str("|---|---:|---|---:|---|---|---:|\n");
     for m in crate::mcu::catalog() {
         let f = crate::mcu::fit_flash(&m, unit.arena_bytes, unit.flash.total());
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {:.2} ms |",
             m.name,
             fmt_bytes(m.sram_bytes),
             if f.arena_fits { "yes" } else { "no" },
             fmt_bytes(m.flash_bytes),
             if f.weights_fit { "yes" } else { "no" },
             if f.deployable() { "yes" } else { "no" },
+            crate::mcu::latency_ms(&m, &unit.cost, unit.dtype),
         );
     }
     s
@@ -512,6 +513,9 @@ mod tests {
         assert!(md.contains(&fmt_bytes(unit.arena_bytes)));
         // tiny deploys everywhere
         assert!(!md.contains("| no |"), "{md}");
+        // and every row carries a latency estimate
+        assert!(md.contains("est. latency"), "{md}");
+        assert!(md.contains(" ms |"), "{md}");
     }
 
     #[test]

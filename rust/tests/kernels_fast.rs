@@ -1,0 +1,384 @@
+//! Integration tests for the overlap-aware fast kernels and the tuner.
+//!
+//! The contract every test here enforces from a different angle: a fast
+//! path — typed-pointer C loops, unrolled or channel-outer variants,
+//! the CMSIS-NN-idiom requantising int8 kernels, the interpreter's
+//! raw-byte i8 path — is only allowed to ship if it is **bit-identical**
+//! to `interp::run_reference`. Speed claims live in
+//! `benches/kernel_speed.rs`; correctness lives here.
+//!
+//! Compile-and-run tests gate on a host C compiler exactly like
+//! `codegen_c.rs`: machines without one skip loudly, never fail.
+
+use dmo::codegen::tune::{class_of, variants_for, LoopOrder, TuneTable, Variant};
+use dmo::codegen::{
+    self, cc_available, differential_test, differential_test_unit, emit, EmitOptions, TuneCache,
+};
+use dmo::ir::graph::Graph;
+use dmo::ir::op::Activation;
+use dmo::ir::{DType, GraphBuilder, Padding, Shape};
+use dmo::models;
+use dmo::ops::exec::{fast_i8_hits, set_fast_i8};
+use dmo::planner::{Plan, Planner, RewriteBudget};
+use dmo::{interp, mcu};
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::sync::RwLock;
+
+const SEED: u64 = 42;
+
+/// `ops::exec`'s fast-i8 toggle and hit counter are process-global, and
+/// the test harness runs this binary's tests in parallel. Tests that
+/// merely *bump* the counter (any i8 differential run) hold the lock
+/// shared; tests that assert counter deltas or toggle the path hold it
+/// exclusively.
+static I8_GLOBALS: RwLock<()> = RwLock::new(());
+
+fn i8_shared() -> std::sync::RwLockReadGuard<'static, ()> {
+    I8_GLOBALS.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn i8_exclusive() -> std::sync::RwLockWriteGuard<'static, ()> {
+    I8_GLOBALS.write().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cc_or_skip() -> bool {
+    if cc_available().is_none() {
+        eprintln!("skipping compile-and-run check: no C compiler on PATH (install gcc or set $CC)");
+        return false;
+    }
+    true
+}
+
+fn full_plan(g: &Graph) -> Plan {
+    Planner::for_graph(g).dmo(true).plan().unwrap()
+}
+
+/// A graph holding every tunable op class at once: conv2d, dwconv2d,
+/// both pool flavours, standalone relu, a residual add and a fully
+/// connected head — the fast-kernel kitchen sink.
+fn tunable_kitchen(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new(
+        if dtype == DType::I8 { "tunable_kitchen_i8" } else { "tunable_kitchen" },
+        dtype,
+    );
+    let x = b.input(Shape::hwc(10, 10, 4));
+    let c = b.conv2d(x, 6, (3, 3), (1, 1), Padding::Same, Activation::Relu);
+    let d = b.dwconv2d(c, (3, 3), (1, 1), Padding::Same, Activation::None);
+    let r = b.relu(d);
+    let a = b.add(d, r);
+    let p = b.maxpool(a, (2, 2), (2, 2), Padding::Valid);
+    let v = b.avgpool(a, (2, 2), (2, 2), Padding::Valid);
+    let s = b.add(p, v);
+    let f = b.fully_connected(s, 7, Activation::None);
+    b.finish(&[f])
+}
+
+/// Every candidate variant of every class present, pinned one at a
+/// time and proven bit-identical through the compile-and-run harness —
+/// on an f32 and an i8 kitchen-sink graph plus the int8 zoo sample.
+#[test]
+fn every_variant_is_bit_identical_per_class() {
+    if !cc_or_skip() {
+        return;
+    }
+    let _g = i8_shared();
+    for g in [
+        tunable_kitchen(DType::F32),
+        tunable_kitchen(DType::I8),
+        models::build("tiny_int8").unwrap(),
+    ] {
+        let plan = full_plan(&g);
+        let dtype = g.tensor(g.outputs[0]).dtype;
+        let classes: BTreeSet<&'static str> =
+            g.ops.iter().filter_map(|op| class_of(&op.kind)).collect();
+        assert!(!classes.is_empty());
+        for class in classes {
+            for variant in variants_for(class, dtype) {
+                let mut table = TuneTable::new();
+                table.set(class, variant);
+                let opts = EmitOptions::new("variant_probe").seed(SEED).tuning(table);
+                let unit = emit(&g, &plan, &opts).unwrap();
+                let r = differential_test_unit(&unit, &g, SEED).unwrap_or_else(|e| {
+                    panic!("{}: {class}/{} differs: {e:#}", g.name, variant.name())
+                });
+                assert!(r.elems > 0, "{}: {class}/{}", g.name, variant.name());
+            }
+        }
+    }
+}
+
+/// The default emission (fast variants on) for a sample of the zoo,
+/// bit-identical end to end; the full-zoo sweep runs `--ignored`.
+#[test]
+fn fast_default_zoo_sample_matches_bitwise() {
+    if !cc_or_skip() {
+        return;
+    }
+    let _g = i8_shared();
+    for name in ["tiny", "tiny_int8", "tiny_wide"] {
+        let g = models::build(name).unwrap();
+        let plan = full_plan(&g);
+        let r = differential_test(&g, &plan, SEED).unwrap();
+        assert_eq!(r.arena_bytes, plan.peak(), "{name}");
+    }
+}
+
+#[test]
+#[ignore = "slow: run with --ignored on a release build"]
+fn fast_default_full_zoo_matches_bitwise() {
+    if !cc_or_skip() {
+        return;
+    }
+    let _g = i8_shared();
+    let mut names = models::table3_names();
+    names.extend(["tiny", "tiny_int8", "tiny_wide", "hourglass"]);
+    for name in names {
+        let g = models::build(name).unwrap();
+        let plan = full_plan(&g);
+        let r = differential_test(&g, &plan, SEED).unwrap();
+        eprintln!("{name}: {} elems bit-identical with fast kernels", r.elems);
+    }
+}
+
+/// int8 models get the requantising CMSIS-NN-idiom kernels by default,
+/// and the emitted unit advertises how many sites went fast.
+#[test]
+fn int8_emission_uses_requantising_kernels() {
+    let g = models::build("tiny_int8").unwrap();
+    let plan = full_plan(&g);
+    let unit = emit(&g, &plan, &EmitOptions::new("tiny_q")).unwrap();
+    assert_eq!(unit.dtype, DType::I8);
+    assert!(unit.fast_sites > 0, "at least one site must lower fast");
+    assert!(unit.source.contains("dmo_conv2d_q("), "int8 conv call site");
+    assert!(
+        unit.source.contains("static int8_t dmo_requant("),
+        "requantise helper present"
+    );
+    // the helper accumulates in i32 — the CMSIS-NN idiom
+    assert!(unit.source.contains("int32_t acc"), "i32 accumulator");
+}
+
+/// A split (banded) plan with fast kernels stays bit-identical, and a
+/// contiguous band layout elides the concat-rows reassembly copy.
+#[test]
+fn split_plans_stay_bit_identical_with_fast_kernels() {
+    if !cc_or_skip() {
+        return;
+    }
+    for name in ["hourglass", "tiny"] {
+        let g = models::build(name).unwrap();
+        let plan = Planner::for_graph(&g)
+            .dmo(true)
+            .rewrites(RewriteBudget::pairs(4))
+            .plan()
+            .unwrap();
+        let r = differential_test(&g, &plan, SEED).unwrap();
+        assert!(r.elems > 0, "{name}");
+        if plan.rewrite.is_some() {
+            let unit = emit(&g, &plan, &EmitOptions::new("split_fast").seed(SEED)).unwrap();
+            // elision is a per-site legality decision; when it fires the
+            // unit says so and still passed the differential above
+            if unit.source.contains("concat-rows reassembly elided") {
+                assert!(unit.fast_sites > 0);
+            }
+        }
+    }
+}
+
+/// The interpreter's fast-i8 path: engages on i8 models, counts its
+/// hits, and returns the same bits as the f32-reference path.
+#[test]
+fn interp_fast_i8_is_bitwise_and_counted() {
+    let _g = i8_exclusive();
+    let g = models::build("tiny_int8").unwrap();
+    let inputs: Vec<Vec<f32>> =
+        g.inputs.iter().map(|&t| interp::gen_input(&g, t, SEED)).collect();
+    set_fast_i8(false);
+    let reference = interp::run_reference(&g, &inputs, SEED).unwrap();
+    set_fast_i8(true);
+    let before = fast_i8_hits();
+    let fast = interp::run_reference(&g, &inputs, SEED).unwrap();
+    assert!(fast_i8_hits() > before, "fast path must engage on tiny_int8");
+    assert_eq!(reference.len(), fast.len());
+    for (a, b) in reference.iter().zip(&fast) {
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "fast-i8 output differs");
+        }
+    }
+    // f32 models never take it
+    let gf = models::build("tiny").unwrap();
+    let inf: Vec<Vec<f32>> =
+        gf.inputs.iter().map(|&t| interp::gen_input(&gf, t, SEED)).collect();
+    let h0 = fast_i8_hits();
+    interp::run_reference(&gf, &inf, SEED).unwrap();
+    assert_eq!(fast_i8_hits(), h0, "f32 graphs stay on the reference path");
+}
+
+/// Tracing callers always see the reference path (the fast path would
+/// bypass the watermark sink's byte accounting), and the profiled run
+/// proves in-place execution never exceeds the planned peak.
+#[test]
+fn fast_i8_defers_to_tracing_and_watermark_holds() {
+    let _g = i8_exclusive();
+    let g = models::build("tiny_int8").unwrap();
+    let plan = full_plan(&g);
+    let inputs: Vec<Vec<f32>> =
+        g.inputs.iter().map(|&t| interp::gen_input(&g, t, SEED)).collect();
+    let h0 = fast_i8_hits();
+    let (outputs, prof) =
+        interp::run_plan_profiled("tiny_int8", &g, &plan, &inputs, SEED).unwrap();
+    assert_eq!(
+        fast_i8_hits(),
+        h0,
+        "a profiled (sink-carrying) run must stay on the reference path"
+    );
+    assert!(prof.observed_peak <= plan.peak(), "watermark within plan");
+    prof.verify().unwrap();
+    // and the unprofiled fast run agrees with the profiled reference run
+    let fast = interp::run_plan(&g, &plan, &inputs, SEED).unwrap();
+    for (a, b) in outputs.iter().zip(&fast) {
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+/// Tuning is deterministic and cached: a cold session probes, a warm
+/// session with the same cache probes **zero** times, both pick the
+/// same table, and the two emissions are byte-identical.
+#[test]
+fn tuner_is_deterministic_and_warm_cache_skips_all_probes() {
+    if !cc_or_skip() {
+        return;
+    }
+    let _g = i8_shared();
+    let g = models::build("tiny_int8").unwrap();
+    let plan = full_plan(&g);
+    let cache = TuneCache::new();
+    let cold = codegen::tune(&g, &plan, SEED, 5, &cache).unwrap();
+    assert!(cold.probes > 0, "cold tuning must probe");
+    assert_eq!(cold.cache_hits, 0);
+    let warm = codegen::tune(&g, &plan, SEED, 5, &cache).unwrap();
+    assert_eq!(warm.probes, 0, "warm cache must answer every class");
+    assert_eq!(warm.cache_hits, cold.rows.len());
+    assert_eq!(warm.table, cold.table, "same choices cold and warm");
+    let a = emit(&g, &plan, &EmitOptions::new("tuned").seed(SEED).tuning(cold.table)).unwrap();
+    let b = emit(&g, &plan, &EmitOptions::new("tuned").seed(SEED).tuning(warm.table)).unwrap();
+    assert_eq!(a.source, b.source, "tuned emission is byte-deterministic");
+    assert_eq!(a.header, b.header);
+    let stats = cache.stats();
+    assert!(stats.hits >= cold.rows.len() && stats.misses >= 1 && stats.probes == cold.probes);
+}
+
+/// The tuning cache round-trips through disk, and a tampered file
+/// degrades to a cold start instead of poisoning choices.
+#[test]
+fn tune_cache_round_trips_and_rejects_tampering() {
+    let dir = std::env::temp_dir().join(format!("dmo_tune_cache_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tune.json");
+    let cache = TuneCache::new();
+    cache.insert("conv2d/i8/00000000deadbeef", Variant::Fast {
+        order: LoopOrder::Reference,
+        unroll: 4,
+    });
+    cache.insert("fc/f32/00000000deadbeef", Variant::Generic);
+    assert_eq!(cache.save(&path).unwrap(), 2);
+    let fresh = TuneCache::new();
+    assert_eq!(fresh.load(&path).unwrap(), 2);
+    assert_eq!(
+        fresh.get("conv2d/i8/00000000deadbeef"),
+        Some(Variant::Fast { order: LoopOrder::Reference, unroll: 4 })
+    );
+    assert_eq!(fresh.get("fc/f32/00000000deadbeef"), Some(Variant::Generic));
+    // flip a byte in the payload: the content hash must reject the file
+    let mut text = std::fs::read_to_string(&path).unwrap();
+    text = text.replace("fast-u4", "fast-co");
+    std::fs::write(&path, &text).unwrap();
+    let tampered = TuneCache::new();
+    assert!(
+        tampered.load(&path).is_err(),
+        "a tampered cache must fail closed"
+    );
+    assert!(tampered.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `DMO_CC_OPT` retargets the harness' optimisation level and the
+/// differential proof still holds at `-O2` (the CI matrix also runs
+/// `-Os` legs).
+#[test]
+fn differential_holds_at_o2_via_env_override() {
+    if !cc_or_skip() {
+        return;
+    }
+    let _g = i8_shared();
+    let g = models::build("tiny_int8").unwrap();
+    let plan = full_plan(&g);
+    std::env::set_var("DMO_CC_OPT", "-O2");
+    let r = differential_test(&g, &plan, SEED);
+    std::env::remove_var("DMO_CC_OPT");
+    let r = r.unwrap();
+    assert!(r.elems > 0);
+}
+
+/// The latency gate end to end: `deploy_matrix` carries the new column
+/// and a budget between the slow and fast parts rejects only the slow
+/// one — a model that *fits* SRAM can still miss its deadline.
+#[test]
+fn latency_column_feeds_the_budget_gate() {
+    let pm = dmo::planner::PlannedModel::new(models::build("tiny_int8").unwrap()).unwrap();
+    let rows = mcu::deploy_matrix(&pm.graph, &pm.row());
+    assert!(rows.iter().all(|r| r.latency_ms > 0.0));
+    let f103 = rows.iter().find(|r| r.mcu == "STM32F103xF").unwrap();
+    let h743 = rows.iter().find(|r| r.mcu == "STM32H743").unwrap();
+    assert!(f103.with_dmo && h743.with_dmo, "both parts fit tiny_int8's memory");
+    let budget = (f103.latency_ms * h743.latency_ms).sqrt();
+    assert!(h743.latency_ms <= budget, "fast part makes the budget");
+    assert!(f103.latency_ms > budget, "slow part misses it on latency alone");
+}
+
+/// CLI: `dmo emit-c --tune` prints the greppable probe counter, reuses
+/// the cache across invocations (second run: `probes: 0`) and emits
+/// byte-identical C — the CI determinism smoke in script form.
+#[test]
+fn cli_emit_c_tune_is_cached_and_deterministic() {
+    if !cc_or_skip() {
+        return;
+    }
+    let bin = env!("CARGO_BIN_EXE_dmo");
+    let dir = std::env::temp_dir().join(format!("dmo-cli-tune-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache = dir.join("tune.json");
+    let run = |out: &Path| {
+        let r = std::process::Command::new(bin)
+            .args([
+                "emit-c",
+                "tiny_int8",
+                "--tune",
+                "--tune-iters",
+                "5",
+                "--tune-cache",
+                cache.to_str().unwrap(),
+                "--out",
+                out.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(r.status.success(), "{}", String::from_utf8_lossy(&r.stderr));
+        String::from_utf8_lossy(&r.stdout).to_string()
+    };
+    // same stem in two directories so the units are directly comparable
+    std::fs::create_dir_all(dir.join("run1")).unwrap();
+    std::fs::create_dir_all(dir.join("run2")).unwrap();
+    let first = run(&dir.join("run1/tiny_q.c"));
+    assert!(first.contains("probes: "), "greppable probe count: {first}");
+    assert!(!first.contains("probes: 0,"), "cold run must probe: {first}");
+    let second = run(&dir.join("run2/tiny_q.c"));
+    assert!(second.contains("probes: 0"), "warm run skips all probes: {second}");
+    let a = std::fs::read_to_string(dir.join("run1/tiny_q.c")).unwrap();
+    let b = std::fs::read_to_string(dir.join("run2/tiny_q.c")).unwrap();
+    assert_eq!(a, b, "tuned emission must be byte-identical across runs");
+    let _ = std::fs::remove_dir_all(&dir);
+}
